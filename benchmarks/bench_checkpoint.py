@@ -1,0 +1,49 @@
+"""Paper Fig 6 (§IV-D): checkpoint writes captured on the STDIO layer.
+
+Trains a reduced model for a few steps with a checkpoint per step while a
+profiling session is active; the checkpointer writes through buffered
+file objects (fwrite analogue), so the STDIO module must record the
+writes and the write volume must match the checkpoint bytes on disk."""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import Row, cleanup, make_workspace
+
+
+def run(rows: Row) -> None:
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core import ProfileSession, reset_runtime
+    from repro.models import init_params
+    from repro.train.checkpoint import CheckpointManager
+
+    ws = make_workspace("ckpt_")
+    cfg = get_config("qwen2-7b", reduced=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    mgr = CheckpointManager(os.path.join(ws, "ck"), keep=10)
+    rt = reset_runtime()
+    rt.exclude_prefixes = tuple(p for p in rt.exclude_prefixes)
+    t0 = time.perf_counter()
+    with ProfileSession(rt) as sess:
+        for step in range(1, 4):
+            mgr.save(step, {"params": params}, extra={"step": step})
+    wall = time.perf_counter() - t0
+    rep = sess.reports[0]
+    disk = 0
+    for d in os.listdir(mgr.directory):
+        full = os.path.join(mgr.directory, d)
+        disk += sum(os.path.getsize(os.path.join(full, f))
+                    for f in os.listdir(full))
+    ratio = rep.stdio.bytes_written / max(disk, 1)
+    rows.add("checkpoint_stdio_capture", wall / 3 * 1e6,
+             f"stdio_writes={rep.stdio.writes};"
+             f"stdio_mib={rep.stdio.bytes_written / 2**20:.1f};"
+             f"disk_mib={disk / 2**20:.1f};capture_ratio={ratio:.3f}")
+    cleanup(ws)
+
+
+if __name__ == "__main__":
+    run(Row())

@@ -1,0 +1,70 @@
+"""Paper Figs 11b/12: profile-guided staging.
+
+Malware-like dataset on the throttled HDD tier; one profiled epoch feeds
+the StagingAdvisor, which selects the sub-2MB tail (paper: 40 % of files,
+8 % of bytes); those files are staged to the Optane-class tier and the
+epoch re-run.  The paper reports +19 % POSIX bandwidth.  A third epoch
+with the files packed into JRecord containers (beyond-paper, DESIGN.md
+§8) is also measured."""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import Row, cleanup, make_workspace
+
+
+def _epoch_bw(paths, reader, threads=1):
+    from repro.core import ProfileSession, reset_runtime
+    rt = reset_runtime()
+    with ProfileSession(rt) as sess:
+        for b in __import__("repro.data.pipeline", fromlist=["Pipeline"]) \
+                .Pipeline(paths).map(reader, threads).batch(8).prefetch(4):
+            _ = sum(len(x) for x in b)
+    rep = sess.reports[0]
+    return rep.posix_bandwidth_mb_s, rep
+
+
+def run(rows: Row) -> None:
+    from repro.core import StagingAdvisor, StagingManager
+    from repro.data.jrecord import JRecordReader, pack_files
+    from repro.data.synthetic import make_malware_like
+    from repro.data.tiers import default_tiers, make_tiered_reader
+
+    ws = make_workspace("staging_")
+    tm = default_tiers(ws, throttled=True)
+    paths = make_malware_like(os.path.join(ws, "hdd", "mal"), n_files=48,
+                              median_bytes=2 * 2**20, seed=6)
+
+    reader = make_tiered_reader(tm)
+    bw0, rep = _epoch_bw(paths, reader)
+    rows.add("staging_baseline", 0.0, f"mb_s={bw0:.1f}")
+
+    advisor = StagingAdvisor(size_threshold=1 * 2**20)
+    plan = advisor.plan(rep)
+    mgr = StagingManager(os.path.join(ws, "optane", "staged"))
+    mgr.stage(plan)
+    reader2 = make_tiered_reader(tm, resolver=mgr.resolve)
+    bw1, _ = _epoch_bw(paths, reader2)
+    rows.add("staging_optane", 0.0,
+             f"mb_s={bw1:.1f};gain_pct={100 * (bw1 - bw0) / bw0:.1f};"
+             f"{plan.summary().replace(',', ';')}")
+
+    # beyond-paper: pack everything into one JRecord container on HDD
+    shard = os.path.join(ws, "hdd", "packed.jrec")
+    pack_files(paths, shard)
+    t0 = time.perf_counter()
+    tier = tm.tiers["hdd"]
+    total = 0
+    tier.on_open()
+    for payload in JRecordReader(shard):
+        tier.throttle(len(payload))
+        total += len(payload)
+    bw2 = total / (time.perf_counter() - t0) / 1e6
+    rows.add("staging_jrecord_container", 0.0,
+             f"mb_s={bw2:.1f};gain_pct={100 * (bw2 - bw0) / bw0:.1f}")
+    cleanup(ws)
+
+
+if __name__ == "__main__":
+    run(Row())

@@ -1,0 +1,69 @@
+"""Paper Figs 3-4: STREAM bandwidth validation.
+
+A STREAM benchmark (read + batch, no compute) over the ImageNet-like and
+Malware-like datasets; tf-Darshan sessions restart every 5 batches and
+each windowed bandwidth is compared against the /proc/self/io monitor
+(the dstat analogue).  Validation criterion: total bytes agree exactly
+with the application count and windowed bandwidths agree with the monitor
+within tolerance."""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import Row, cleanup, make_workspace
+
+
+def run(rows: Row) -> None:
+    from repro.core import IOMonitor, reset_runtime
+    from repro.core.session import StepCallback
+    from repro.data.pipeline import Pipeline
+    from repro.data.readers import posix_read_file
+    from repro.data.synthetic import make_imagenet_like, make_malware_like
+
+    ws = make_workspace("stream_")
+    cases = {
+        "imagenet": make_imagenet_like(os.path.join(ws, "img"),
+                                       n_files=480, seed=1),
+        "malware": make_malware_like(os.path.join(ws, "mal"), n_files=48,
+                                     median_bytes=2 * 2**20, seed=2),
+    }
+    batch, steps_every = 32, 5
+    for name, paths in cases.items():
+        rt = reset_runtime()
+        n_steps = (len(paths) + batch - 1) // batch
+        cb = StepCallback(0, n_steps - 1, every=steps_every, runtime=rt)
+        mon = IOMonitor(0.05).start()
+        app_bytes = 0
+        t0 = time.perf_counter()
+        step = 0
+        # profiling must be live BEFORE the pipeline's prefetch threads
+        # issue their first reads, hence begin-step precedes next()
+        it = iter(Pipeline(paths).map(posix_read_file, 16).batch(batch)
+                  .prefetch(10))
+        while True:
+            cb.on_step_begin(step)
+            try:
+                b = next(it)
+            except StopIteration:
+                if cb.session._active:
+                    cb.session.stop()
+                break
+            app_bytes += sum(len(x) for x in b)
+            cb.on_step_end(step)
+            step += 1
+        wall = time.perf_counter() - t0
+        mon.stop()
+        darshan_bytes = sum(r.posix.bytes_read for r in cb.reports)
+        bws = [r.posix_bandwidth_mb_s for r in cb.reports]
+        mon_bw = mon.bandwidth_mb_s()
+        exact = darshan_bytes == app_bytes
+        rel = abs(sum(bws) / max(len(bws), 1) - mon_bw) / max(mon_bw, 1e-9)
+        rows.add(f"stream_{name}_bandwidth", wall / max(step, 1) * 1e6,
+                 f"mb_s={app_bytes / wall / 1e6:.1f};windows={len(bws)};"
+                 f"bytes_exact={exact};vs_monitor_rel={rel:.3f}")
+    cleanup(ws)
+
+
+if __name__ == "__main__":
+    run(Row())

@@ -1,0 +1,33 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def make_workspace(prefix: str = "bench_") -> str:
+    base = os.environ.get("REPRO_BENCH_DIR", tempfile.gettempdir())
+    return tempfile.mkdtemp(prefix=prefix, dir=base)
+
+
+def cleanup(path: str) -> None:
+    shutil.rmtree(path, ignore_errors=True)
+
+
+class Row:
+    """CSV row accumulator: name,us_per_call,derived."""
+
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, us_per_call: float, derived: str = ""):
+        self.rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+    def extend(self, other: "Row"):
+        self.rows.extend(other.rows)

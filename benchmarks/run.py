@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only stream,staging,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (the contract in the repo
+skeleton); per-figure details live in each bench module's docstring.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import Row
+
+BENCHES = ("stream", "overhead", "threads", "staging", "checkpoint",
+           "kernels")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(BENCHES))
+    args = ap.parse_args()
+    chosen = args.only.split(",") if args.only else list(BENCHES)
+
+    print("name,us_per_call,derived")
+    rows = Row()
+    failed = []
+    for name in chosen:
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        try:
+            mod.run(rows)
+        except Exception as e:  # noqa: BLE001 — finish the suite, report
+            failed.append(name)
+            print(f"{name}_FAILED,0.0,{type(e).__name__}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+from repro.configs.base import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES_BY_NAME,
+    TRAIN_4K,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    get_config,
+    list_archs,
+    shapes_for,
+)
+
+__all__ = [
+    "ALL_SHAPES", "DECODE_32K", "LONG_500K", "PREFILL_32K", "SHAPES_BY_NAME",
+    "TRAIN_4K", "ModelConfig", "MoEConfig", "ShapeConfig", "SSMConfig",
+    "get_config", "list_archs", "shapes_for",
+]

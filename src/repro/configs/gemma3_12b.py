@@ -1,0 +1,50 @@
+"""gemma3-12b  [dense]
+
+48L d_model=3840 16H (GQA kv=8) d_ff=15360 vocab=262144 — 5:1 local:global,
+128k context [hf:google/gemma-3-1b-pt; unverified].
+
+head_dim=256 is decoupled from d_model/n_heads (gemma3 convention); local
+layers use a 1024-token sliding window with rope_theta=10k, the global layer
+(every 6th) uses full attention with rope_theta=1M.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="gemma3-12b",
+        family="dense",
+        n_layers=48,
+        d_model=3840,
+        n_heads=16,
+        n_kv_heads=8,
+        d_ff=15360,
+        vocab_size=262144,
+        head_dim=256,
+        qk_norm=True,
+        sliding_window=1024,
+        local_global_ratio=5,
+        rope_theta=10_000.0,
+        rope_theta_global=1_000_000.0,
+        act="gelu",
+        tie_embeddings=True,
+        vocab_chunk=16384,
+        attn_logit_softcap=0.0,
+        remat_group=8,
+    ),
+    reduced=ModelConfig(
+        name="gemma3-12b",
+        family="dense",
+        n_layers=6,              # one full 5:1 local/global period
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab_size=256,
+        head_dim=32,
+        qk_norm=True,
+        sliding_window=16,
+        local_global_ratio=5,
+        act="gelu",
+        tie_embeddings=True,
+    ),
+)

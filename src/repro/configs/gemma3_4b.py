@@ -1,0 +1,45 @@
+"""gemma3-4b  [dense]
+
+34L d_model=2560 8H (GQA kv=4) d_ff=10240 vocab=262144 — 5:1 local:global,
+128k context [hf:google/gemma-3-1b-pt; unverified].
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="gemma3-4b",
+        family="dense",
+        n_layers=34,
+        d_model=2560,
+        n_heads=8,
+        n_kv_heads=4,
+        d_ff=10240,
+        vocab_size=262144,
+        head_dim=256,
+        qk_norm=True,
+        sliding_window=1024,
+        local_global_ratio=5,
+        rope_theta=10_000.0,
+        rope_theta_global=1_000_000.0,
+        act="gelu",
+        tie_embeddings=True,
+        vocab_chunk=16384,
+        remat_group=17,
+    ),
+    reduced=ModelConfig(
+        name="gemma3-4b",
+        family="dense",
+        n_layers=6,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab_size=256,
+        head_dim=32,
+        qk_norm=True,
+        sliding_window=16,
+        local_global_ratio=5,
+        act="gelu",
+        tie_embeddings=True,
+    ),
+)

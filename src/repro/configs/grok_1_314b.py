@@ -1,0 +1,40 @@
+"""grok-1-314b  [moe]
+
+64L d_model=6144 48H (GQA kv=8) d_ff=32768 vocab=131072, MoE 8 experts
+top-2 [hf:xai-org/grok-1; unverified].
+"""
+from repro.configs.base import ModelConfig, MoEConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="grok-1-314b",
+        family="moe",
+        n_layers=64,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        d_ff=32768,
+        vocab_size=131072,
+        moe=MoEConfig(n_experts=8, top_k=2, capacity_factor=1.25),
+        rope_theta=10_000.0,
+        attn_logit_softcap=30.0,     # grok-style logit soft capping
+        act="gelu",
+        optimizer="adafactor",       # 314B params: factored states, bf16 master
+        param_dtype="bfloat16",
+        vocab_chunk=16384,
+        remat_group=8,
+    ),
+    reduced=ModelConfig(
+        name="grok-1-314b",
+        family="moe",
+        n_layers=3,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab_size=256,
+        moe=MoEConfig(n_experts=4, top_k=2, capacity_factor=1.5, n_groups=1),
+        attn_logit_softcap=30.0,
+        act="gelu",
+    ),
+)

@@ -1,0 +1,44 @@
+"""llama-3.2-vision-90b  [vlm]
+
+100L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256 — cross-attn image
+layers [hf:meta-llama/Llama-3.2-11B-Vision; unverified].
+
+100 layers total; every 5th layer (20 of 100) is a gated cross-attention
+layer over precomputed image-patch embeddings (the vision frontend is a stub
+per the assignment: ``input_specs`` supplies patch embeddings directly).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="llama-3.2-vision-90b",
+        family="vlm",
+        n_layers=100,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=28672,
+        vocab_size=128256,
+        rope_theta=500_000.0,
+        cross_attn_every=5,
+        vision_tokens=1024,
+        act="silu",
+        optimizer="adafactor",      # 88B params: factored states for HBM fit
+        param_dtype="float32",
+        vocab_chunk=16384,
+    ),
+    reduced=ModelConfig(
+        name="llama-3.2-vision-90b",
+        family="vlm",
+        n_layers=5,                  # keeps one cross-attn layer in the stack
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab_size=256,
+        rope_theta=500_000.0,
+        cross_attn_every=5,
+        vision_tokens=8,
+        act="silu",
+    ),
+)

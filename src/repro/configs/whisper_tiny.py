@@ -1,0 +1,46 @@
+"""whisper-tiny  [audio]
+
+4L d_model=384 6H (GQA kv=6) d_ff=1536 vocab=51865 — enc-dec, conv frontend
+(stub) [arXiv:2212.04356; unverified].
+
+Encoder: 4 layers over 1500 precomputed mel-frame embeddings (the conv1d
+frontend is a stub per the assignment — ``input_specs`` supplies the frame
+embeddings directly).  Decoder: 4 layers with self + cross attention.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="whisper-tiny",
+        family="encdec",
+        n_layers=4,                  # decoder layers
+        n_encoder_layers=4,
+        encoder_seq=1500,
+        d_model=384,
+        n_heads=6,
+        n_kv_heads=6,
+        d_ff=1536,
+        vocab_size=51865,
+        act="gelu",
+        mlp_gated=False,
+        rope_theta=0.0,              # whisper uses learned/sinusoidal positions
+        tie_embeddings=True,
+        vocab_chunk=16384,
+    ),
+    reduced=ModelConfig(
+        name="whisper-tiny",
+        family="encdec",
+        n_layers=2,
+        n_encoder_layers=2,
+        encoder_seq=32,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=128,
+        vocab_size=256,
+        act="gelu",
+        mlp_gated=False,
+        rope_theta=0.0,
+        tie_embeddings=True,
+    ),
+)

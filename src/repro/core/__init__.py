@@ -1,0 +1,21 @@
+"""jax-darshan: the tf-Darshan reproduction — runtime-attachable I/O
+instrumentation with in-situ extraction, DXT tracing, analysis, export,
+and profile-guided optimization (staging + pipeline autotuning)."""
+from repro.core.advisor import (StagingAdvisor, StagingPlan,
+                                ThreadAutotuneAdvisor, workload_character)
+from repro.core.analysis import SessionReport, analyze, slowest_files
+from repro.core.attach import attach, detach, is_attached
+from repro.core.export import to_chrome_trace, to_darshan_log, to_json_report
+from repro.core.monitor import IOMonitor
+from repro.core.runtime import DarshanRuntime, get_runtime, reset_runtime
+from repro.core.session import ProfileServer, ProfileSession, StepCallback
+from repro.core.staging import StagingManager
+
+__all__ = [
+    "StagingAdvisor", "StagingPlan", "ThreadAutotuneAdvisor",
+    "workload_character", "SessionReport", "analyze", "slowest_files",
+    "attach", "detach", "is_attached", "to_chrome_trace", "to_darshan_log",
+    "to_json_report", "IOMonitor", "DarshanRuntime", "get_runtime",
+    "reset_runtime", "ProfileServer", "ProfileSession", "StepCallback",
+    "StagingManager",
+]

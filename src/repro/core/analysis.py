@@ -1,0 +1,171 @@
+"""In-situ analysis of profile-session deltas — the statistics tf-Darshan
+surfaces in its TensorBoard Input-Pipeline-Analysis extension (paper
+Figs 7/9): per-module bandwidth, operation counts, access-size and
+file-size distributions, sequential/consecutive access patterns, the
+zero-length-read diagnostic, and per-file tables for the TraceViewer.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core import counters as C
+from repro.core.records import FileRecord
+
+
+@dataclass
+class ModuleSummary:
+    module: str
+    files_opened: int = 0
+    read_only_files: int = 0
+    write_only_files: int = 0
+    read_write_files: int = 0
+    opens: int = 0
+    reads: int = 0
+    writes: int = 0
+    seeks: int = 0
+    stats: int = 0
+    flushes: int = 0
+    zero_reads: int = 0
+    bytes_read: int = 0
+    bytes_written: int = 0
+    read_time_s: float = 0.0
+    write_time_s: float = 0.0
+    meta_time_s: float = 0.0
+    consec_reads: int = 0
+    seq_reads: int = 0
+    read_size_hist: List[int] = field(default_factory=lambda: [0] * 10)
+    write_size_hist: List[int] = field(default_factory=lambda: [0] * 10)
+
+
+@dataclass
+class SessionReport:
+    elapsed_s: float
+    posix: ModuleSummary
+    stdio: ModuleSummary
+    per_file: Dict[str, FileRecord]
+    file_sizes: Dict[str, int] = field(default_factory=dict)
+    dxt_segments: int = 0
+    analysis_time_s: float = 0.0
+
+    # ------------------------------------------------------------ derived
+    @property
+    def posix_bandwidth_mb_s(self) -> float:
+        if self.elapsed_s <= 0:
+            return 0.0
+        return (self.posix.bytes_read + self.posix.bytes_written) \
+            / self.elapsed_s / 1e6
+
+    @property
+    def stdio_bandwidth_mb_s(self) -> float:
+        if self.elapsed_s <= 0:
+            return 0.0
+        return (self.stdio.bytes_read + self.stdio.bytes_written) \
+            / self.elapsed_s / 1e6
+
+    @property
+    def reads_per_open(self) -> float:
+        return self.posix.reads / max(self.posix.opens, 1)
+
+    @property
+    def seq_read_frac(self) -> float:
+        return self.posix.seq_reads / max(self.posix.reads, 1)
+
+    @property
+    def consec_read_frac(self) -> float:
+        return self.posix.consec_reads / max(self.posix.reads, 1)
+
+    @property
+    def zero_read_frac(self) -> float:
+        return self.posix.zero_reads / max(self.posix.reads, 1)
+
+    def has_eof_double_read_pattern(self) -> bool:
+        """The paper's ImageNet diagnosis: a read loop that only stops on a
+        zero-length read doubles the read count (reads ~ 2x opens, with
+        ~opens zero-length reads)."""
+        p = self.posix
+        if p.opens == 0:
+            return False
+        return (p.zero_reads >= 0.8 * p.opens
+                and p.reads >= 1.8 * p.opens)
+
+    def file_size_hist(self) -> List[int]:
+        hist = [0] * 10
+        for sz in self.file_sizes.values():
+            hist[C.size_bin(sz)] += 1
+        return hist
+
+
+def summarize_module(module: str, records: Dict[str, FileRecord]) \
+        -> ModuleSummary:
+    s = ModuleSummary(module)
+    pre = module  # "POSIX" | "STDIO"
+    for rec in records.values():
+        g = rec.get
+        opens = g(f"{pre}_OPENS")
+        reads = g(f"{pre}_READS")
+        writes = g(f"{pre}_WRITES")
+        if opens or reads or writes:
+            s.files_opened += 1
+            if reads and not writes:
+                s.read_only_files += 1
+            elif writes and not reads:
+                s.write_only_files += 1
+            elif reads and writes:
+                s.read_write_files += 1
+        s.opens += opens
+        s.reads += reads
+        s.writes += writes
+        s.seeks += g(f"{pre}_SEEKS")
+        if module == "STDIO":
+            s.flushes += g("STDIO_FLUSHES")
+        s.bytes_read += g(f"{pre}_BYTES_READ")
+        s.bytes_written += g(f"{pre}_BYTES_WRITTEN")
+        s.read_time_s += g(f"{pre}_F_READ_TIME")
+        s.write_time_s += g(f"{pre}_F_WRITE_TIME")
+        s.meta_time_s += g(f"{pre}_F_META_TIME")
+        if module == "POSIX":
+            s.stats += g("POSIX_STATS")
+            s.zero_reads += g("POSIX_ZERO_READS")
+            s.consec_reads += g("POSIX_CONSEC_READS")
+            s.seq_reads += g("POSIX_SEQ_READS")
+            for i in range(10):
+                s.read_size_hist[i] += g(C.read_bin_name(i))
+                s.write_size_hist[i] += g(C.write_bin_name(i))
+    return s
+
+
+def analyze(delta_posix: Dict[str, FileRecord],
+            delta_stdio: Dict[str, FileRecord],
+            elapsed_s: float,
+            dxt_segments: int = 0,
+            stat_sizes: bool = True) -> SessionReport:
+    import time
+    t0 = time.perf_counter()
+    posix = summarize_module("POSIX", delta_posix)
+    stdio = summarize_module("STDIO", delta_stdio)
+    per_file = dict(delta_posix)
+    sizes: Dict[str, int] = {}
+    if stat_sizes:
+        from repro.core.attach import originals
+        stat = originals()["os.stat"]
+        for path in per_file:
+            try:
+                sizes[path] = stat(path).st_size
+            except OSError:
+                pass
+    rep = SessionReport(elapsed_s=elapsed_s, posix=posix, stdio=stdio,
+                        per_file=per_file, file_sizes=sizes,
+                        dxt_segments=dxt_segments)
+    rep.analysis_time_s = time.perf_counter() - t0
+    return rep
+
+
+def slowest_files(report: SessionReport, n: int = 10):
+    """Files ranked by read time — the paper's straggler diagnostic
+    (§V-B: same-length reads varying by milliseconds)."""
+    rows = [(rec.get("POSIX_F_READ_TIME", 0.0), path)
+            for path, rec in report.per_file.items()]
+    rows.sort(reverse=True)
+    return rows[:n]

@@ -1,0 +1,248 @@
+"""Runtime attachment of I/O instrumentation — the Python analogue of
+tf-Darshan's Global-Offset-Table patching.
+
+tf-Darshan redirects libc I/O symbols (read/pread/fwrite/...) to the
+Darshan shared library by patching the GOT at runtime — no LD_PRELOAD,
+attachable and detachable while the process runs.  CPython's equivalent
+indirection table for the I/O entry points our data pipeline and
+checkpointer use is the ``os`` module namespace (byte-level = POSIX
+module) and ``builtins.open`` (buffered = STDIO module).  ``attach()``
+swaps those symbols for forwarding wrappers that record into the
+DarshanRuntime; ``detach()`` restores the originals.  Like Darshan, the
+wrappers are transparent: they forward to the saved originals and record
+only fds opened through the instrumented ``os.open`` (plus files from
+``builtins.open``), so foreign fds (sockets, pipes) pass through.
+"""
+from __future__ import annotations
+
+import builtins
+import io
+import os
+import threading
+from typing import Optional
+
+from repro.core.runtime import DarshanRuntime, get_runtime
+
+_PATCH_LOCK = threading.Lock()
+_ORIGINALS: dict = {}
+_ATTACHED = False
+
+
+def is_attached() -> bool:
+    return _ATTACHED
+
+
+def attach(runtime: Optional[DarshanRuntime] = None) -> DarshanRuntime:
+    """Install instrumented I/O entry points.  Idempotent."""
+    global _ATTACHED
+    rt = runtime or get_runtime()
+    with _PATCH_LOCK:
+        if _ATTACHED:
+            return rt
+        _ORIGINALS.update({
+            "os.open": os.open,
+            "os.read": os.read,
+            "os.pread": os.pread,
+            "os.write": os.write,
+            "os.pwrite": os.pwrite,
+            "os.lseek": os.lseek,
+            "os.close": os.close,
+            "os.stat": os.stat,
+            "builtins.open": builtins.open,
+        })
+        _install(rt)
+        _ATTACHED = True
+    return rt
+
+
+def detach() -> None:
+    """Restore the original I/O entry points.  Idempotent."""
+    global _ATTACHED
+    with _PATCH_LOCK:
+        if not _ATTACHED:
+            return
+        os.open = _ORIGINALS["os.open"]
+        os.read = _ORIGINALS["os.read"]
+        os.pread = _ORIGINALS["os.pread"]
+        os.write = _ORIGINALS["os.write"]
+        os.pwrite = _ORIGINALS["os.pwrite"]
+        os.lseek = _ORIGINALS["os.lseek"]
+        os.close = _ORIGINALS["os.close"]
+        os.stat = _ORIGINALS["os.stat"]
+        builtins.open = _ORIGINALS["builtins.open"]
+        _ORIGINALS.clear()
+        _ATTACHED = False
+
+
+def originals() -> dict:
+    """Unwrapped entry points (used internally to avoid self-tracing)."""
+    if _ORIGINALS:
+        return _ORIGINALS
+    return {"os.open": os.open, "os.read": os.read, "os.pread": os.pread,
+            "os.write": os.write, "os.pwrite": os.pwrite,
+            "os.lseek": os.lseek, "os.close": os.close, "os.stat": os.stat,
+            "builtins.open": builtins.open}
+
+
+def _install(rt: DarshanRuntime) -> None:
+    o = dict(_ORIGINALS)
+
+    def w_open(path, flags, mode=0o777, *, dir_fd=None):
+        if dir_fd is not None or not isinstance(path, (str, bytes, os.PathLike)):
+            return o["os.open"](path, flags, mode, dir_fd=dir_fd)
+        spath = os.fspath(path)
+        spath = spath.decode() if isinstance(spath, bytes) else spath
+        if not rt.tracked(spath):
+            return o["os.open"](path, flags, mode)
+        t0 = rt.now()
+        fd = o["os.open"](path, flags, mode)
+        rt.posix_open(fd, spath, t0, rt.now())
+        return fd
+
+    def w_read(fd, n):
+        if rt.fd_state(fd) is None:
+            return o["os.read"](fd, n)
+        t0 = rt.now()
+        data = o["os.read"](fd, n)
+        rt.posix_read(fd, None, len(data), t0, rt.now(), advance=True)
+        return data
+
+    def w_pread(fd, n, offset):
+        if rt.fd_state(fd) is None:
+            return o["os.pread"](fd, n, offset)
+        t0 = rt.now()
+        data = o["os.pread"](fd, n, offset)
+        rt.posix_read(fd, offset, len(data), t0, rt.now(), advance=False)
+        return data
+
+    def w_write(fd, data):
+        if rt.fd_state(fd) is None:
+            return o["os.write"](fd, data)
+        t0 = rt.now()
+        n = o["os.write"](fd, data)
+        rt.posix_write(fd, None, n, t0, rt.now(), advance=True)
+        return n
+
+    def w_pwrite(fd, data, offset):
+        if rt.fd_state(fd) is None:
+            return o["os.pwrite"](fd, data, offset)
+        t0 = rt.now()
+        n = o["os.pwrite"](fd, data, offset)
+        rt.posix_write(fd, offset, n, t0, rt.now(), advance=False)
+        return n
+
+    def w_lseek(fd, pos, how):
+        if rt.fd_state(fd) is None:
+            return o["os.lseek"](fd, pos, how)
+        t0 = rt.now()
+        new = o["os.lseek"](fd, pos, how)
+        rt.posix_seek(fd, new, t0, rt.now())
+        return new
+
+    def w_close(fd):
+        if rt.fd_state(fd) is None:
+            return o["os.close"](fd)
+        t0 = rt.now()
+        r = o["os.close"](fd)
+        rt.posix_close(fd, t0, rt.now())
+        return r
+
+    def w_stat(path, *, dir_fd=None, follow_symlinks=True):
+        try:
+            spath = os.fspath(path)
+            spath = spath.decode() if isinstance(spath, bytes) else spath
+        except TypeError:
+            spath = None
+        if (dir_fd is not None or spath is None
+                or not rt.tracked(spath)):
+            return o["os.stat"](path, dir_fd=dir_fd,
+                                follow_symlinks=follow_symlinks)
+        t0 = rt.now()
+        res = o["os.stat"](path, follow_symlinks=follow_symlinks)
+        rt.posix_stat(spath, t0, rt.now())
+        return res
+
+    def w_builtin_open(file, mode="r", *args, **kwargs):
+        f = o["builtins.open"](file, mode, *args, **kwargs)
+        try:
+            spath = os.fspath(file) if isinstance(
+                file, (str, bytes, os.PathLike)) else None
+            if isinstance(spath, bytes):
+                spath = spath.decode()
+        except TypeError:
+            spath = None
+        if spath is None or not rt.tracked(spath):
+            return f
+        t0 = rt.now()
+        rt.stdio_open(spath, t0, rt.now())
+        return InstrumentedFile(f, spath, rt)
+
+    os.open = w_open
+    os.read = w_read
+    os.pread = w_pread
+    os.write = w_write
+    os.pwrite = w_pwrite
+    os.lseek = w_lseek
+    os.close = w_close
+    os.stat = w_stat
+    builtins.open = w_builtin_open
+
+
+class InstrumentedFile:
+    """Transparent proxy over a Python file object recording STDIO-layer
+    operations (the analogue of Darshan's fread/fwrite interception —
+    TensorFlow's writable files go through fwrite, paper §IV-D)."""
+
+    def __init__(self, f, path: str, rt: DarshanRuntime):
+        self._f = f
+        self._path = path
+        self._rt = rt
+
+    def read(self, *a):
+        t0 = self._rt.now()
+        off = self._tell_safe()
+        data = self._f.read(*a)
+        n = len(data) if data is not None else 0
+        self._rt.stdio_read(self._path, off, n, t0, self._rt.now())
+        return data
+
+    def write(self, data):
+        t0 = self._rt.now()
+        off = self._tell_safe()
+        n = self._f.write(data)
+        self._rt.stdio_write(self._path, off,
+                             n if isinstance(n, int) else len(data),
+                             t0, self._rt.now())
+        return n
+
+    def flush(self):
+        t0 = self._rt.now()
+        r = self._f.flush()
+        self._rt.stdio_flush(self._path, t0, self._rt.now())
+        return r
+
+    def close(self):
+        t0 = self._rt.now()
+        r = self._f.close()
+        self._rt.stdio_close(self._path, t0, self._rt.now())
+        return r
+
+    def _tell_safe(self) -> int:
+        try:
+            return self._f.tell()
+        except (OSError, ValueError):
+            return 0
+
+    # context manager + iteration + everything else forwards
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    def __iter__(self):
+        return iter(self._f)
+
+    def __getattr__(self, name):
+        return getattr(self._f, name)

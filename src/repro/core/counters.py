@@ -1,0 +1,95 @@
+"""Darshan counter model.
+
+Counter names and semantics follow Darshan's POSIX and STDIO modules
+(darshan-runtime 3.2.x), so reports read like darshan-parser output and
+the in-situ analysis can reuse Darshan's access-size histogram bins:
+
+    0-100, 100-1K, 1K-10K, 10K-100K, 100K-1M, 1M-4M, 4M-10M,
+    10M-100M, 100M-1G, 1G+
+"""
+from __future__ import annotations
+
+POSIX_COUNTERS = (
+    "POSIX_OPENS",
+    "POSIX_READS",
+    "POSIX_WRITES",
+    "POSIX_SEEKS",
+    "POSIX_STATS",
+    "POSIX_BYTES_READ",
+    "POSIX_BYTES_WRITTEN",
+    "POSIX_CONSEC_READS",
+    "POSIX_SEQ_READS",
+    "POSIX_CONSEC_WRITES",
+    "POSIX_SEQ_WRITES",
+    "POSIX_MAX_BYTE_READ",
+    "POSIX_MAX_BYTE_WRITTEN",
+    "POSIX_ZERO_READS",          # tf-Darshan extension: zero-length reads
+)
+
+POSIX_F_COUNTERS = (
+    "POSIX_F_READ_TIME",
+    "POSIX_F_WRITE_TIME",
+    "POSIX_F_META_TIME",
+    "POSIX_F_OPEN_START_TIMESTAMP",
+    "POSIX_F_OPEN_END_TIMESTAMP",
+    "POSIX_F_READ_START_TIMESTAMP",
+    "POSIX_F_READ_END_TIMESTAMP",
+    "POSIX_F_WRITE_START_TIMESTAMP",
+    "POSIX_F_WRITE_END_TIMESTAMP",
+    "POSIX_F_CLOSE_START_TIMESTAMP",
+    "POSIX_F_CLOSE_END_TIMESTAMP",
+)
+
+STDIO_COUNTERS = (
+    "STDIO_OPENS",
+    "STDIO_READS",
+    "STDIO_WRITES",
+    "STDIO_SEEKS",
+    "STDIO_FLUSHES",
+    "STDIO_BYTES_READ",
+    "STDIO_BYTES_WRITTEN",
+    "STDIO_MAX_BYTE_READ",
+    "STDIO_MAX_BYTE_WRITTEN",
+)
+
+STDIO_F_COUNTERS = (
+    "STDIO_F_READ_TIME",
+    "STDIO_F_WRITE_TIME",
+    "STDIO_F_META_TIME",
+    "STDIO_F_OPEN_START_TIMESTAMP",
+    "STDIO_F_CLOSE_END_TIMESTAMP",
+)
+
+# Darshan access-size histogram bin upper bounds (bytes), inclusive lower,
+# exclusive upper except the last which is open-ended.
+SIZE_BIN_BOUNDS = (100, 1_000, 10_000, 100_000, 1_000_000, 4_000_000,
+                   10_000_000, 100_000_000, 1_000_000_000)
+
+SIZE_BIN_NAMES = (
+    "SIZE_0_100", "SIZE_100_1K", "SIZE_1K_10K", "SIZE_10K_100K",
+    "SIZE_100K_1M", "SIZE_1M_4M", "SIZE_4M_10M", "SIZE_10M_100M",
+    "SIZE_100M_1G", "SIZE_1G_PLUS",
+)
+
+
+def size_bin(n: int) -> int:
+    """Index of the Darshan histogram bin for an access of n bytes."""
+    for i, ub in enumerate(SIZE_BIN_BOUNDS):
+        if n < ub:
+            return i
+    return len(SIZE_BIN_BOUNDS)
+
+
+def read_bin_name(i: int) -> str:
+    return f"POSIX_SIZE_READ_{SIZE_BIN_NAMES[i][5:]}"
+
+
+def write_bin_name(i: int) -> str:
+    return f"POSIX_SIZE_WRITE_{SIZE_BIN_NAMES[i][5:]}"
+
+
+POSIX_READ_BINS = tuple(read_bin_name(i) for i in range(len(SIZE_BIN_NAMES)))
+POSIX_WRITE_BINS = tuple(write_bin_name(i) for i in range(len(SIZE_BIN_NAMES)))
+
+ALL_POSIX = POSIX_COUNTERS + POSIX_READ_BINS + POSIX_WRITE_BINS
+ALL_STDIO = STDIO_COUNTERS

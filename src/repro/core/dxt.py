@@ -1,0 +1,57 @@
+"""DXT-style extended tracing: one timestamped segment per I/O operation,
+mirroring Darshan's DXT module record layout (module, file, op, offset,
+length, start, end, thread)."""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import List, Optional
+
+
+@dataclass(frozen=True)
+class Segment:
+    module: str          # "POSIX" | "STDIO"
+    path: str
+    op: str              # "read" | "write" | "open" | "stat" | "seek" | ...
+    offset: int
+    length: int
+    start: float         # seconds, runtime-relative clock
+    end: float
+    thread: int
+
+
+class DXTBuffer:
+    """Bounded trace buffer.  When full, the oldest segments are dropped and
+    ``dropped`` counts them (Darshan DXT instead stops tracing per file;
+    dropping-oldest keeps the *profiling window* semantics of tf-Darshan)."""
+
+    def __init__(self, capacity: int = 1 << 20, enabled: bool = True):
+        self.capacity = capacity
+        self.enabled = enabled
+        self.dropped = 0
+        self._segments: List[Segment] = []
+        self._lock = threading.Lock()
+
+    def add(self, seg: Segment) -> None:
+        if not self.enabled:
+            return
+        with self._lock:
+            if len(self._segments) >= self.capacity:
+                # drop the oldest 1/16th in one go (amortized)
+                cut = max(1, self.capacity // 16)
+                del self._segments[:cut]
+                self.dropped += cut
+            self._segments.append(seg)
+
+    def window(self, t0: float, t1: Optional[float] = None) -> List[Segment]:
+        with self._lock:
+            return [s for s in self._segments
+                    if s.start >= t0 and (t1 is None or s.start <= t1)]
+
+    def clear(self) -> None:
+        with self._lock:
+            self._segments.clear()
+            self.dropped = 0
+
+    def __len__(self) -> int:
+        return len(self._segments)

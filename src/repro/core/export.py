@@ -1,0 +1,119 @@
+"""Export of profiling results:
+
+* Chrome trace-event JSON (loads in Perfetto / chrome://tracing /
+  TensorBoard's TraceViewer) — per-file timelines of POSIX/STDIO ops,
+  exactly the paper's TraceViewer integration (Figs 8/10).
+* darshan-parser-style text log.
+* JSON session report (the Input-Pipeline-Analysis panel data, Figs 7/9).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Iterable, Optional
+
+from repro.core import counters as C
+from repro.core.analysis import SessionReport
+from repro.core.dxt import Segment
+
+
+def to_chrome_trace(segments: Iterable[Segment],
+                    path: Optional[str] = None) -> dict:
+    """One TraceViewer row per (module, file): pid=module, tid=file."""
+    tids: dict = {}
+    events = []
+    meta = []
+    for mod in ("POSIX", "STDIO"):
+        meta.append({"ph": "M", "pid": mod, "name": "process_name",
+                     "args": {"name": f"tf-darshan {mod}"}})
+    for seg in segments:
+        key = (seg.module, seg.path)
+        if key not in tids:
+            tids[key] = len(tids) + 1
+            meta.append({"ph": "M", "pid": seg.module, "tid": tids[key],
+                         "name": "thread_name",
+                         "args": {"name": seg.path}})
+        events.append({
+            "ph": "X",
+            "pid": seg.module,
+            "tid": tids[key],
+            "name": f"{seg.op} {os.path.basename(seg.path)}",
+            "ts": seg.start * 1e6,
+            "dur": max((seg.end - seg.start) * 1e6, 0.01),
+            "args": {"offset": seg.offset, "length": seg.length,
+                     "os_thread": seg.thread},
+        })
+    trace = {"traceEvents": meta + events, "displayTimeUnit": "ms"}
+    if path:
+        with open(path, "w") as f:
+            json.dump(trace, f)
+    return trace
+
+
+def to_darshan_log(report: SessionReport, path: Optional[str] = None) -> str:
+    """darshan-parser-style text dump of the per-file POSIX records."""
+    lines = ["# darshan log version: tf-darshan-jax 1.0",
+             f"# elapsed: {report.elapsed_s:.6f} s",
+             f"# POSIX bandwidth: {report.posix_bandwidth_mb_s:.3f} MB/s",
+             "#<module>\t<rank>\t<record>\t<counter>\t<value>\t<file>"]
+    for fpath, rec in sorted(report.per_file.items()):
+        rid = abs(hash(fpath)) % (1 << 32)
+        for k, v in sorted(rec.counters.items()):
+            lines.append(f"POSIX\t0\t{rid}\t{k}\t{v}\t{fpath}")
+        for k, v in sorted(rec.fcounters.items()):
+            lines.append(f"POSIX\t0\t{rid}\t{k}\t{v:.9f}\t{fpath}")
+    text = "\n".join(lines) + "\n"
+    if path:
+        with open(path, "w") as f:
+            f.write(text)
+    return text
+
+
+def to_json_report(report: SessionReport, path: Optional[str] = None) -> dict:
+    """The Input-Pipeline-Analysis panel payload (paper Figs 7/9)."""
+    p, s = report.posix, report.stdio
+    payload = {
+        "elapsed_s": report.elapsed_s,
+        "io_systems": {
+            "POSIX": {"transferred_mib": (p.bytes_read + p.bytes_written)
+                      / 2**20,
+                      "bandwidth_mib_s": (p.bytes_read + p.bytes_written)
+                      / max(report.elapsed_s, 1e-9) / 2**20},
+            "STDIO": {"transferred_mib": (s.bytes_read + s.bytes_written)
+                      / 2**20,
+                      "bandwidth_mib_s": (s.bytes_read + s.bytes_written)
+                      / max(report.elapsed_s, 1e-9) / 2**20},
+        },
+        "posix": {
+            "opens": p.opens, "reads": p.reads, "writes": p.writes,
+            "seeks": p.seeks, "stats": p.stats,
+            "zero_reads": p.zero_reads,
+            "bytes_read": p.bytes_read, "bytes_written": p.bytes_written,
+            "read_time_s": p.read_time_s, "write_time_s": p.write_time_s,
+            "meta_time_s": p.meta_time_s,
+            "files": {"opened": p.files_opened,
+                      "read_only": p.read_only_files,
+                      "write_only": p.write_only_files,
+                      "read_write": p.read_write_files},
+            "access_pattern": {"seq_frac": report.seq_read_frac,
+                               "consec_frac": report.consec_read_frac},
+            "read_size_hist": dict(zip(C.SIZE_BIN_NAMES, p.read_size_hist)),
+            "write_size_hist": dict(zip(C.SIZE_BIN_NAMES, p.write_size_hist)),
+        },
+        "stdio": {"opens": s.opens, "reads": s.reads, "writes": s.writes,
+                  "flushes": s.flushes,
+                  "bytes_read": s.bytes_read,
+                  "bytes_written": s.bytes_written},
+        "file_size_hist": dict(zip(C.SIZE_BIN_NAMES,
+                                   report.file_size_hist())),
+        "diagnostics": {
+            "eof_double_read_pattern": report.has_eof_double_read_pattern(),
+            "reads_per_open": report.reads_per_open,
+            "zero_read_frac": report.zero_read_frac,
+        },
+        "analysis_time_s": report.analysis_time_s,
+    }
+    if path:
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+    return payload

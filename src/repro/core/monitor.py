@@ -1,0 +1,97 @@
+"""Background system I/O monitor — the dstat analogue used to VALIDATE
+tf-Darshan's bandwidth numbers (paper §IV-B, Figs 3-4).
+
+Samples /proc/self/io: ``rchar``/``wchar`` count bytes through read/write
+syscalls of this process (including page-cache hits, matching what the
+instrumentation layer counts); ``read_bytes``/``write_bytes`` count actual
+block-device traffic (what node-wide dstat sees)."""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import List, Optional
+
+
+@dataclass(frozen=True)
+class Sample:
+    t: float
+    rchar: int
+    wchar: int
+    read_bytes: int
+    write_bytes: int
+
+
+def read_proc_io() -> Sample:
+    vals = {}
+    with open("/proc/self/io", "rb") as f:
+        for line in f.read().decode().splitlines():
+            k, _, v = line.partition(":")
+            vals[k.strip()] = int(v)
+    return Sample(time.perf_counter(), vals.get("rchar", 0),
+                  vals.get("wchar", 0), vals.get("read_bytes", 0),
+                  vals.get("write_bytes", 0))
+
+
+class IOMonitor:
+    """Samples /proc/self/io on a background thread (default 100 ms)."""
+
+    def __init__(self, interval_s: float = 0.1):
+        self.interval_s = interval_s
+        self.samples: List[Sample] = []
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self) -> "IOMonitor":
+        self.samples = [read_proc_io()]
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            self.samples.append(read_proc_io())
+
+    def stop(self) -> List[Sample]:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=2)
+        self.samples.append(read_proc_io())
+        return self.samples
+
+    # ------------------------------------------------------------ derived
+    def bytes_read_between(self, t0: Optional[float] = None,
+                           t1: Optional[float] = None) -> int:
+        s = self.samples
+        if len(s) < 2:
+            return 0
+        first = s[0] if t0 is None else min(
+            s, key=lambda x: abs(x.t - t0))
+        last = s[-1] if t1 is None else min(
+            s, key=lambda x: abs(x.t - t1))
+        return last.rchar - first.rchar
+
+    def bandwidth_mb_s(self) -> float:
+        s = self.samples
+        if len(s) < 2 or s[-1].t <= s[0].t:
+            return 0.0
+        return (s[-1].rchar - s[0].rchar + s[-1].wchar - s[0].wchar) \
+            / (s[-1].t - s[0].t) / 1e6
+
+    def series_mb_s(self) -> List[tuple]:
+        """(t, MB/s) per sample interval — the dstat line in Figs 3-4."""
+        out = []
+        for a, b in zip(self.samples, self.samples[1:]):
+            dt = b.t - a.t
+            if dt > 0:
+                out.append((b.t, (b.rchar - a.rchar + b.wchar - a.wchar)
+                            / dt / 1e6))
+        return out
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+        return False

@@ -1,0 +1,109 @@
+"""Per-file counter records and module buffers (the data structures
+tf-Darshan extracts from the Darshan shared library at runtime).
+
+A ``FileRecord`` is the in-memory equivalent of a Darshan module record:
+integer counters + float (timing) counters for one file.  A
+``ModuleBuffer`` maps file paths to records and supports the two
+operations tf-Darshan added to Darshan: ``snapshot()`` (copy the live
+buffers while the application runs) and ``delta()`` (statistics between a
+profile-start and profile-stop snapshot).
+"""
+from __future__ import annotations
+
+import copy
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, Optional
+
+from repro.core import counters as C
+
+
+@dataclass
+class FileRecord:
+    path: str
+    counters: Dict[str, int] = field(default_factory=dict)
+    fcounters: Dict[str, float] = field(default_factory=dict)
+
+    def inc(self, name: str, by: int = 1) -> None:
+        self.counters[name] = self.counters.get(name, 0) + by
+
+    def fadd(self, name: str, by: float) -> None:
+        self.fcounters[name] = self.fcounters.get(name, 0.0) + by
+
+    def fset_min(self, name: str, value: float) -> None:
+        cur = self.fcounters.get(name)
+        if cur is None or value < cur:
+            self.fcounters[name] = value
+
+    def fset_max(self, name: str, value: float) -> None:
+        cur = self.fcounters.get(name)
+        if cur is None or value > cur:
+            self.fcounters[name] = value
+
+    def set_max(self, name: str, value: int) -> None:
+        cur = self.counters.get(name)
+        if cur is None or value > cur:
+            self.counters[name] = value
+
+    def get(self, name: str, default=0):
+        if name.startswith(("POSIX_F_", "STDIO_F_")):
+            return self.fcounters.get(name, float(default))
+        return self.counters.get(name, default)
+
+    def sub(self, other: "FileRecord") -> "FileRecord":
+        """Delta record: self - other (timestamps keep self's values)."""
+        out = FileRecord(self.path)
+        for k, v in self.counters.items():
+            d = v - other.counters.get(k, 0)
+            if k.startswith(("POSIX_MAX_", "STDIO_MAX_")):
+                out.counters[k] = v
+            elif d:
+                out.counters[k] = d
+        for k, v in self.fcounters.items():
+            if k.endswith("_TIMESTAMP"):
+                out.fcounters[k] = v
+            else:
+                d = v - other.fcounters.get(k, 0.0)
+                if d:
+                    out.fcounters[k] = d
+        return out
+
+
+class ModuleBuffer:
+    """Thread-safe path -> FileRecord store for one Darshan module."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._records: Dict[str, FileRecord] = {}
+        self._lock = threading.Lock()
+
+    def record(self, path: str) -> FileRecord:
+        rec = self._records.get(path)
+        if rec is None:
+            with self._lock:
+                rec = self._records.setdefault(path, FileRecord(path))
+        return rec
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def paths(self) -> Iterable[str]:
+        return list(self._records)
+
+    def snapshot(self) -> Dict[str, FileRecord]:
+        """Deep copy of the live records (tf-Darshan's runtime extraction)."""
+        with self._lock:
+            return {p: FileRecord(p, dict(r.counters), dict(r.fcounters))
+                    for p, r in self._records.items()}
+
+
+def delta(stop: Dict[str, FileRecord],
+          start: Dict[str, FileRecord]) -> Dict[str, FileRecord]:
+    """Per-file counter difference between two snapshots."""
+    out: Dict[str, FileRecord] = {}
+    for path, rec in stop.items():
+        base = start.get(path)
+        d = rec.sub(base) if base is not None else rec
+        if d.counters or d.fcounters:
+            out[path] = d
+    return out

@@ -1,0 +1,103 @@
+"""Text renderer for session reports — the terminal analogue of the
+paper's TensorBoard Input-Pipeline-Analysis panel (Figs 7/9).
+
+    PYTHONPATH=src python -m repro.core.report report.json
+renders a saved to_json_report payload; library use:
+    print(render(report))
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.core import counters as C
+from repro.core.analysis import SessionReport, slowest_files
+
+
+def _bar(frac: float, width: int = 24) -> str:
+    n = int(round(max(0.0, min(frac, 1.0)) * width))
+    return "#" * n + "." * (width - n)
+
+
+def render(report: SessionReport) -> str:
+    p = report.posix
+    lines = []
+    add = lines.append
+    add("== tf-darshan session " + "=" * 38)
+    add(f"elapsed {report.elapsed_s:8.3f} s    "
+        f"POSIX {report.posix_bandwidth_mb_s:8.1f} MB/s    "
+        f"STDIO {report.stdio_bandwidth_mb_s:8.1f} MB/s")
+    add(f"files opened {p.files_opened} "
+        f"(ro={p.read_only_files} wo={p.write_only_files} "
+        f"rw={p.read_write_files})   dxt segments {report.dxt_segments}")
+    add(f"ops: opens={p.opens} reads={p.reads} writes={p.writes} "
+        f"seeks={p.seeks} stats={p.stats}")
+    add(f"bytes: read {p.bytes_read / 2**20:10.2f} MiB   "
+        f"written {p.bytes_written / 2**20:10.2f} MiB")
+    add(f"time: read {p.read_time_s:7.3f}s  write {p.write_time_s:7.3f}s  "
+        f"meta {p.meta_time_s:7.3f}s")
+    add(f"pattern: sequential {report.seq_read_frac:6.1%}   "
+        f"consecutive {report.consec_read_frac:6.1%}   "
+        f"zero-len {report.zero_read_frac:6.1%} "
+        f"({p.zero_reads})")
+    if report.has_eof_double_read_pattern():
+        add("!! read-until-EOF double-read pattern detected "
+            f"(reads/open = {report.reads_per_open:.2f}) — "
+            "consider a size-aware reader")
+    add("-- POSIX read-size histogram " + "-" * 31)
+    total = max(p.reads, 1)
+    for name, count in zip(C.SIZE_BIN_NAMES, p.read_size_hist):
+        if count:
+            add(f"  {name:14s} {_bar(count / total)} {count}")
+    if report.file_sizes:
+        add("-- file-size histogram " + "-" * 37)
+        hist = report.file_size_hist()
+        nfiles = max(len(report.file_sizes), 1)
+        for name, count in zip(C.SIZE_BIN_NAMES, hist):
+            if count:
+                add(f"  {name:14s} {_bar(count / nfiles)} {count}")
+    slow = slowest_files(report, 5)
+    if slow and slow[0][0] > 0:
+        add("-- slowest files (read time) " + "-" * 31)
+        for t, path in slow:
+            if t > 0:
+                add(f"  {t * 1e3:9.2f} ms  {path}")
+    return "\n".join(lines)
+
+
+def render_json(payload: dict) -> str:
+    """Render a saved to_json_report payload (subset of render())."""
+    lines = []
+    add = lines.append
+    add("== tf-darshan report " + "=" * 39)
+    add(f"elapsed {payload['elapsed_s']:.3f} s")
+    for sysname, row in payload["io_systems"].items():
+        add(f"  {sysname:6s} {row['transferred_mib']:10.2f} MiB  "
+            f"{row['bandwidth_mib_s']:10.2f} MiB/s")
+    pos = payload["posix"]
+    add(f"ops: opens={pos['opens']} reads={pos['reads']} "
+        f"writes={pos['writes']} zero={pos['zero_reads']}")
+    ap = pos["access_pattern"]
+    add(f"pattern: seq {ap['seq_frac']:.1%} consec {ap['consec_frac']:.1%}")
+    total = max(pos["reads"], 1)
+    add("-- read sizes " + "-" * 46)
+    for name, count in pos["read_size_hist"].items():
+        if count:
+            add(f"  {name:14s} {_bar(count / total)} {count}")
+    diag = payload["diagnostics"]
+    if diag["eof_double_read_pattern"]:
+        add(f"!! EOF double-read pattern "
+            f"(reads/open={diag['reads_per_open']:.2f})")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    if len(sys.argv) != 2:
+        print(__doc__)
+        raise SystemExit(1)
+    with open(sys.argv[1]) as f:
+        print(render_json(json.load(f)))
+
+
+if __name__ == "__main__":
+    main()

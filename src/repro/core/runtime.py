@@ -1,0 +1,209 @@
+"""DarshanRuntime: the in-process instrumentation core.
+
+Holds the module buffers (POSIX, STDIO), the DXT trace buffer, and the
+per-fd state needed to classify accesses (offset tracking for
+sequential/consecutive detection, exactly as Darshan's POSIX module does).
+The attach layer (repro.core.attach) routes intercepted I/O calls here;
+ProfileSession snapshots these buffers in situ.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.core import counters as C
+from repro.core.dxt import DXTBuffer, Segment
+from repro.core.records import FileRecord, ModuleBuffer
+
+DEFAULT_EXCLUDES = ("/proc/", "/sys/", "/dev/", "/etc/")
+
+
+@dataclass
+class FdState:
+    path: str
+    pos: int = 0
+    last_read_end: int = -1
+    last_write_end: int = -1
+
+
+class DarshanRuntime:
+    def __init__(self, exclude_prefixes=DEFAULT_EXCLUDES,
+                 dxt_capacity: int = 1 << 20):
+        self.posix = ModuleBuffer("POSIX")
+        self.stdio = ModuleBuffer("STDIO")
+        self.dxt = DXTBuffer(capacity=dxt_capacity)
+        self.enabled = False
+        self.exclude_prefixes = tuple(exclude_prefixes)
+        self._fds: Dict[int, FdState] = {}
+        self._lock = threading.Lock()
+        self._t0 = time.perf_counter()
+        self.wall_t0 = time.time()
+
+    # ------------------------------------------------------------------ util
+    def now(self) -> float:
+        """Runtime-relative clock (seconds since runtime creation)."""
+        return time.perf_counter() - self._t0
+
+    def tracked(self, path: Optional[str]) -> bool:
+        if not self.enabled or path is None:
+            return False
+        return not any(path.startswith(p) for p in self.exclude_prefixes)
+
+    def fd_state(self, fd: int) -> Optional[FdState]:
+        return self._fds.get(fd)
+
+    # --------------------------------------------------------------- POSIX
+    def posix_open(self, fd: int, path: str, t0: float, t1: float) -> None:
+        with self._lock:
+            self._fds[fd] = FdState(path)
+        rec = self.posix.record(path)
+        rec.inc("POSIX_OPENS")
+        rec.fadd("POSIX_F_META_TIME", t1 - t0)
+        rec.fset_min("POSIX_F_OPEN_START_TIMESTAMP", t0)
+        rec.fset_max("POSIX_F_OPEN_END_TIMESTAMP", t1)
+        self.dxt.add(Segment("POSIX", path, "open", 0, 0, t0, t1,
+                             threading.get_ident()))
+
+    def posix_read(self, fd: int, offset: Optional[int], length: int,
+                   t0: float, t1: float, advance: bool) -> None:
+        st = self._fds.get(fd)
+        if st is None:
+            return
+        off = st.pos if offset is None else offset
+        rec = self.posix.record(st.path)
+        rec.inc("POSIX_READS")
+        rec.inc("POSIX_BYTES_READ", length)
+        if length == 0:
+            rec.inc("POSIX_ZERO_READS")
+        rec.inc(C.read_bin_name(C.size_bin(length)))
+        if st.last_read_end >= 0:
+            if off == st.last_read_end:
+                rec.inc("POSIX_CONSEC_READS")
+            if off >= st.last_read_end:
+                rec.inc("POSIX_SEQ_READS")
+        st.last_read_end = off + length
+        if advance:
+            st.pos = off + length
+        rec.set_max("POSIX_MAX_BYTE_READ", max(off + length - 1, 0))
+        rec.fadd("POSIX_F_READ_TIME", t1 - t0)
+        rec.fset_min("POSIX_F_READ_START_TIMESTAMP", t0)
+        rec.fset_max("POSIX_F_READ_END_TIMESTAMP", t1)
+        self.dxt.add(Segment("POSIX", st.path, "read", off, length, t0, t1,
+                             threading.get_ident()))
+
+    def posix_write(self, fd: int, offset: Optional[int], length: int,
+                    t0: float, t1: float, advance: bool) -> None:
+        st = self._fds.get(fd)
+        if st is None:
+            return
+        off = st.pos if offset is None else offset
+        rec = self.posix.record(st.path)
+        rec.inc("POSIX_WRITES")
+        rec.inc("POSIX_BYTES_WRITTEN", length)
+        rec.inc(C.write_bin_name(C.size_bin(length)))
+        if st.last_write_end >= 0:
+            if off == st.last_write_end:
+                rec.inc("POSIX_CONSEC_WRITES")
+            if off >= st.last_write_end:
+                rec.inc("POSIX_SEQ_WRITES")
+        st.last_write_end = off + length
+        if advance:
+            st.pos = off + length
+        rec.set_max("POSIX_MAX_BYTE_WRITTEN", max(off + length - 1, 0))
+        rec.fadd("POSIX_F_WRITE_TIME", t1 - t0)
+        rec.fset_min("POSIX_F_WRITE_START_TIMESTAMP", t0)
+        rec.fset_max("POSIX_F_WRITE_END_TIMESTAMP", t1)
+        self.dxt.add(Segment("POSIX", st.path, "write", off, length, t0, t1,
+                             threading.get_ident()))
+
+    def posix_seek(self, fd: int, new_pos: int, t0: float, t1: float) -> None:
+        st = self._fds.get(fd)
+        if st is None:
+            return
+        st.pos = new_pos
+        rec = self.posix.record(st.path)
+        rec.inc("POSIX_SEEKS")
+        rec.fadd("POSIX_F_META_TIME", t1 - t0)
+
+    def posix_stat(self, path: str, t0: float, t1: float) -> None:
+        rec = self.posix.record(path)
+        rec.inc("POSIX_STATS")
+        rec.fadd("POSIX_F_META_TIME", t1 - t0)
+        self.dxt.add(Segment("POSIX", path, "stat", 0, 0, t0, t1,
+                             threading.get_ident()))
+
+    def posix_close(self, fd: int, t0: float, t1: float) -> None:
+        st = self._fds.pop(fd, None)
+        if st is None:
+            return
+        rec = self.posix.record(st.path)
+        rec.fadd("POSIX_F_META_TIME", t1 - t0)
+        rec.fset_min("POSIX_F_CLOSE_START_TIMESTAMP", t0)
+        rec.fset_max("POSIX_F_CLOSE_END_TIMESTAMP", t1)
+
+    # --------------------------------------------------------------- STDIO
+    def stdio_open(self, path: str, t0: float, t1: float) -> None:
+        rec = self.stdio.record(path)
+        rec.inc("STDIO_OPENS")
+        rec.fadd("STDIO_F_META_TIME", t1 - t0)
+        rec.fset_min("STDIO_F_OPEN_START_TIMESTAMP", t0)
+
+    def stdio_write(self, path: str, offset: int, length: int,
+                    t0: float, t1: float) -> None:
+        rec = self.stdio.record(path)
+        rec.inc("STDIO_WRITES")
+        rec.inc("STDIO_BYTES_WRITTEN", length)
+        rec.set_max("STDIO_MAX_BYTE_WRITTEN", max(offset + length - 1, 0))
+        rec.fadd("STDIO_F_WRITE_TIME", t1 - t0)
+        self.dxt.add(Segment("STDIO", path, "write", offset, length, t0, t1,
+                             threading.get_ident()))
+
+    def stdio_read(self, path: str, offset: int, length: int,
+                   t0: float, t1: float) -> None:
+        rec = self.stdio.record(path)
+        rec.inc("STDIO_READS")
+        rec.inc("STDIO_BYTES_READ", length)
+        rec.set_max("STDIO_MAX_BYTE_READ", max(offset + length - 1, 0))
+        rec.fadd("STDIO_F_READ_TIME", t1 - t0)
+        self.dxt.add(Segment("STDIO", path, "read", offset, length, t0, t1,
+                             threading.get_ident()))
+
+    def stdio_flush(self, path: str, t0: float, t1: float) -> None:
+        rec = self.stdio.record(path)
+        rec.inc("STDIO_FLUSHES")
+        rec.fadd("STDIO_F_META_TIME", t1 - t0)
+
+    def stdio_close(self, path: str, t0: float, t1: float) -> None:
+        rec = self.stdio.record(path)
+        rec.fadd("STDIO_F_META_TIME", t1 - t0)
+        rec.fset_max("STDIO_F_CLOSE_END_TIMESTAMP", t1)
+
+    # ------------------------------------------------------------- snapshot
+    def snapshot(self) -> dict:
+        """In-situ copy of all module buffers (the tf-Darshan extension)."""
+        return {"POSIX": self.posix.snapshot(),
+                "STDIO": self.stdio.snapshot(),
+                "time": self.now()}
+
+
+_RUNTIME: Optional[DarshanRuntime] = None
+_RT_LOCK = threading.Lock()
+
+
+def get_runtime() -> DarshanRuntime:
+    global _RUNTIME
+    if _RUNTIME is None:
+        with _RT_LOCK:
+            if _RUNTIME is None:
+                _RUNTIME = DarshanRuntime()
+    return _RUNTIME
+
+
+def reset_runtime() -> DarshanRuntime:
+    """Fresh runtime (tests)."""
+    global _RUNTIME
+    with _RT_LOCK:
+        _RUNTIME = DarshanRuntime()
+    return _RUNTIME

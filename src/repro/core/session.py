@@ -1,0 +1,164 @@
+"""ProfileSession: start/stop profiling windows with in-situ extraction.
+
+Mirrors the three tf-Darshan invocation modes (paper §III-A):
+  * manual       — ``session.start()`` / ``session.stop()`` around any code,
+  * automatic    — ``StepCallback`` profiles a [start, stop] step range from
+                   the trainer (the TensorBoard-callback batch window),
+  * interactive  — ``ProfileServer`` accepts start/stop over a local socket
+                   (the tf.profiler.server analogue).
+
+``start()`` performs the runtime attachment if needed (no preload), takes a
+snapshot of the Darshan module buffers; ``stop()`` takes the second
+snapshot, computes the delta and runs the in-situ analysis — the paper's
+key operational difference vs vanilla Darshan, which can only analyze
+after process exit (Table I).
+"""
+from __future__ import annotations
+
+import json
+import os
+import socket
+import threading
+import time
+from typing import Optional
+
+from repro.core.attach import attach as _attach, detach as _detach, is_attached as _is_attached
+from repro.core.analysis import SessionReport, analyze
+from repro.core.records import delta
+from repro.core.runtime import DarshanRuntime, get_runtime
+
+
+class ProfileSession:
+    def __init__(self, runtime: Optional[DarshanRuntime] = None,
+                 auto_attach: bool = True, trace: bool = True):
+        self.rt = runtime or get_runtime()
+        self.auto_attach = auto_attach
+        self.rt.dxt.enabled = trace
+        self._start_snap = None
+        self._t0 = None
+        self._active = False
+        self.reports: list[SessionReport] = []
+        self._detach_on_stop = False
+
+    # ------------------------------------------------------------- manual
+    def start(self) -> None:
+        if self._active:
+            return
+        if self.auto_attach and not _is_attached():
+            _attach(self.rt)
+            self._detach_on_stop = True
+        self.rt.enabled = True
+        self._start_snap = self.rt.snapshot()
+        self._t0 = self._start_snap["time"]
+        self._active = True
+
+    def stop(self) -> SessionReport:
+        if not self._active:
+            raise RuntimeError("session not started")
+        stop_snap = self.rt.snapshot()
+        self.rt.enabled = False
+        if self._detach_on_stop:
+            _detach()
+            self._detach_on_stop = False
+        self._active = False
+        d_posix = delta(stop_snap["POSIX"], self._start_snap["POSIX"])
+        d_stdio = delta(stop_snap["STDIO"], self._start_snap["STDIO"])
+        segs = self.rt.dxt.window(self._t0, stop_snap["time"])
+        report = analyze(d_posix, d_stdio,
+                         elapsed_s=stop_snap["time"] - self._t0,
+                         dxt_segments=len(segs))
+        report.segments = segs          # for export/TraceViewer
+        self.reports.append(report)
+        return report
+
+    def __enter__(self):
+        self.start()
+        return self
+
+    def __exit__(self, *exc):
+        if self._active:
+            self.stop()
+        return False
+
+
+class StepCallback:
+    """Automatic profiling over a step window (TensorBoard-callback mode).
+
+    Wire into a training loop:  cb.on_step_begin(i) / cb.on_step_end(i).
+    Profiles steps in [first, last] inclusive; optionally restarts the
+    session every ``every`` steps (the paper's STREAM validation restarts
+    every 5 batches to derive a bandwidth series)."""
+
+    def __init__(self, first: int, last: int, every: Optional[int] = None,
+                 runtime: Optional[DarshanRuntime] = None):
+        self.first, self.last, self.every = first, last, every
+        self.session = ProfileSession(runtime)
+        self.reports = self.session.reports
+
+    def on_step_begin(self, step: int) -> None:
+        if step == self.first:
+            self.session.start()
+        elif (self.every and self.first < step <= self.last
+              and (step - self.first) % self.every == 0):
+            self.session.stop()
+            self.session.start()
+
+    def on_step_end(self, step: int) -> None:
+        if step == self.last and self.session._active:
+            self.session.stop()
+
+
+class ProfileServer:
+    """Interactive mode: line-oriented local TCP control
+    ("start" / "stop" / "status"), mirroring tf.profiler.server.start()."""
+
+    def __init__(self, port: int = 0, runtime: Optional[DarshanRuntime] = None):
+        self.session = ProfileSession(runtime)
+        self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._srv.bind(("127.0.0.1", port))
+        self._srv.listen(4)
+        self.port = self._srv.getsockname()[1]
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._serve, daemon=True)
+        self._thread.start()
+
+    def _serve(self) -> None:
+        self._srv.settimeout(0.2)
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._srv.accept()
+            except socket.timeout:
+                continue
+            with conn:
+                cmd = conn.recv(256).decode().strip()
+                if cmd == "start":
+                    self.session.start()
+                    conn.sendall(b"ok\n")
+                elif cmd == "stop":
+                    try:
+                        rep = self.session.stop()
+                        conn.sendall(json.dumps({
+                            "posix_bandwidth_mb_s": rep.posix_bandwidth_mb_s,
+                            "reads": rep.posix.reads,
+                            "bytes_read": rep.posix.bytes_read,
+                        }).encode() + b"\n")
+                    except RuntimeError as e:
+                        conn.sendall(f"error: {e}\n".encode())
+                elif cmd == "status":
+                    conn.sendall(
+                        f"active={self.session._active}\n".encode())
+                else:
+                    conn.sendall(b"unknown\n")
+
+    def close(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=2)
+        self._srv.close()
+
+
+def control(port: int, cmd: str) -> str:
+    """Client helper for ProfileServer."""
+    with socket.create_connection(("127.0.0.1", port), timeout=5) as s:
+        s.sendall(cmd.encode() + b"\n")
+        return s.recv(4096).decode().strip()

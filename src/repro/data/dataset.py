@@ -1,0 +1,52 @@
+"""File-backed dataset abstraction with deterministic sharding/shuffling
+for data-parallel training (each DP worker reads a disjoint shard —
+the "independent I/O" pattern of ML workloads the paper contrasts with
+HPC collective I/O)."""
+from __future__ import annotations
+
+import os
+import random
+from dataclasses import dataclass, replace
+from typing import Callable, List, Optional, Sequence
+
+
+@dataclass(frozen=True)
+class FileDataset:
+    files: tuple
+    labels: tuple = ()
+
+    @staticmethod
+    def from_dir(root: str, suffix: str = "") -> "FileDataset":
+        out = []
+        for dirpath, _, names in os.walk(root):
+            for n in sorted(names):
+                if n.endswith(suffix):
+                    out.append(os.path.join(dirpath, n))
+        out.sort()
+        return FileDataset(tuple(out))
+
+    def shard(self, num_shards: int, index: int) -> "FileDataset":
+        """Deterministic round-robin shard; every file appears in exactly
+        one shard (property-tested)."""
+        if not 0 <= index < num_shards:
+            raise ValueError(f"bad shard {index}/{num_shards}")
+        files = self.files[index::num_shards]
+        labels = self.labels[index::num_shards] if self.labels else ()
+        return FileDataset(files, labels)
+
+    def shuffle(self, seed: int) -> "FileDataset":
+        idx = list(range(len(self.files)))
+        random.Random(seed).shuffle(idx)
+        files = tuple(self.files[i] for i in idx)
+        labels = tuple(self.labels[i] for i in idx) if self.labels else ()
+        return FileDataset(files, labels)
+
+    def map_paths(self, fn: Callable[[str], str]) -> "FileDataset":
+        """Apply a path resolver (e.g. StagingManager.resolve)."""
+        return FileDataset(tuple(fn(f) for f in self.files), self.labels)
+
+    def total_bytes(self) -> int:
+        return sum(os.stat(f).st_size for f in self.files)
+
+    def __len__(self) -> int:
+        return len(self.files)

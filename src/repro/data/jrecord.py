@@ -1,0 +1,106 @@
+"""JRecord: a TFRecord-like container format (beyond-paper optimization,
+DESIGN.md §8 — the paper's §VII discussion proposes containers to kill
+the small-file metadata tail).
+
+Layout per record:  u64 length | u32 crc32(payload) | payload bytes.
+A sidecar index file (.idx) stores u64 offsets so readers can seek.
+"""
+from __future__ import annotations
+
+import os
+import struct
+import zlib
+from typing import Iterator, List, Optional
+
+MAGIC = b"JREC0001"
+_LEN = struct.Struct("<Q")
+_CRC = struct.Struct("<I")
+
+
+class JRecordWriter:
+    def __init__(self, path: str):
+        self.path = path
+        self._f = open(path, "wb")
+        self._f.write(MAGIC)
+        self._offsets: List[int] = []
+
+    def write(self, payload: bytes) -> None:
+        self._offsets.append(self._f.tell())
+        self._f.write(_LEN.pack(len(payload)))
+        self._f.write(_CRC.pack(zlib.crc32(payload) & 0xFFFFFFFF))
+        self._f.write(payload)
+
+    def close(self) -> None:
+        self._f.close()
+        with open(self.path + ".idx", "wb") as f:
+            f.write(_LEN.pack(len(self._offsets)))
+            for off in self._offsets:
+                f.write(_LEN.pack(off))
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+class JRecordReader:
+    def __init__(self, path: str):
+        self.path = path
+        self._offsets: Optional[List[int]] = None
+
+    def _load_index(self) -> List[int]:
+        if self._offsets is None:
+            with open(self.path + ".idx", "rb") as f:
+                (n,) = _LEN.unpack(f.read(8))
+                self._offsets = [
+                    _LEN.unpack(f.read(8))[0] for _ in range(n)]
+        return self._offsets
+
+    def __len__(self) -> int:
+        return len(self._load_index())
+
+    def read(self, i: int) -> bytes:
+        off = self._load_index()[i]
+        fd = os.open(self.path, os.O_RDONLY)
+        try:
+            header = os.pread(fd, 12, off)
+            (n,) = _LEN.unpack(header[:8])
+            (crc,) = _CRC.unpack(header[8:12])
+            payload = os.pread(fd, n, off + 12)
+        finally:
+            os.close(fd)
+        if zlib.crc32(payload) & 0xFFFFFFFF != crc:
+            raise IOError(f"crc mismatch in {self.path}[{i}]")
+        return payload
+
+    def __iter__(self) -> Iterator[bytes]:
+        """Sequential scan (one open, large sequential reads)."""
+        with open(self.path, "rb") as f:
+            magic = f.read(len(MAGIC))
+            if magic != MAGIC:
+                raise IOError(f"bad magic in {self.path}")
+            while True:
+                header = f.read(12)
+                if len(header) < 12:
+                    return
+                (n,) = _LEN.unpack(header[:8])
+                (crc,) = _CRC.unpack(header[8:12])
+                payload = f.read(n)
+                if zlib.crc32(payload) & 0xFFFFFFFF != crc:
+                    raise IOError(f"crc mismatch in {self.path}")
+                yield payload
+
+
+def pack_files(file_paths, out_path: str, read_fn=None) -> int:
+    """Pack many small files into one JRecord shard; returns bytes packed."""
+    from repro.data.readers import sized_read_file
+    read_fn = read_fn or sized_read_file
+    total = 0
+    with JRecordWriter(out_path) as w:
+        for p in file_paths:
+            data = read_fn(p)
+            w.write(data)
+            total += len(data)
+    return total

@@ -1,0 +1,191 @@
+"""tf.data-style input pipeline: parallel map (capture functions on a
+thread pool), batching, prefetch, optional hedged re-dispatch of straggler
+reads, and AUTOTUNE (profile-guided parallelism via the tf-Darshan
+advisor — the paper's proposed runtime auto-tuning).
+
+Semantics follow tf.data.map + prefetch: ``num_parallel_calls`` capture
+functions execute concurrently on worker threads, results are consumed in
+order, and a prefetch buffer of ``prefetch`` batches is kept filled by a
+background thread so ingestion overlaps the accelerator step.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Iterable, List, Optional, Sequence
+
+AUTOTUNE = -1
+
+
+@dataclass(frozen=True)
+class _Spec:
+    items: Sequence
+    map_fn: Optional[Callable] = None
+    num_parallel_calls: int = 1
+    batch_size: Optional[int] = None
+    prefetch_depth: int = 0
+    hedge_timeout_s: Optional[float] = None
+    autotune_window: int = 64
+    autotune_start: int = 4
+    drop_remainder: bool = False
+
+
+class Pipeline:
+    """Builder: Pipeline(ds.files).map(fn, N).batch(b).prefetch(k)."""
+
+    def __init__(self, items: Sequence, _spec: Optional[_Spec] = None):
+        self.spec = _spec or _Spec(items=items)
+
+    def map(self, fn: Callable, num_parallel_calls: int = 1) -> "Pipeline":
+        return Pipeline(None, replace(self.spec, map_fn=fn,
+                                      num_parallel_calls=num_parallel_calls))
+
+    def batch(self, size: int, drop_remainder: bool = False) -> "Pipeline":
+        return Pipeline(None, replace(self.spec, batch_size=size,
+                                      drop_remainder=drop_remainder))
+
+    def prefetch(self, depth: int) -> "Pipeline":
+        return Pipeline(None, replace(self.spec, prefetch_depth=depth))
+
+    def hedge(self, timeout_s: float) -> "Pipeline":
+        """Straggler mitigation: re-dispatch an element whose capture
+        function hasn't finished within timeout_s; first result wins."""
+        return Pipeline(None, replace(self.spec, hedge_timeout_s=timeout_s))
+
+    # ------------------------------------------------------------------ run
+    def __iter__(self):
+        spec = self.spec
+        if spec.batch_size is None:
+            return self._iter_elements()
+        return self._iter_batches()
+
+    def _iter_batches(self):
+        spec = self.spec
+        buf: List[Any] = []
+        for item in self._iter_elements():
+            buf.append(item)
+            if len(buf) == spec.batch_size:
+                yield buf
+                buf = []
+        if buf and not spec.drop_remainder:
+            yield buf
+
+    def _iter_elements(self):
+        spec = self.spec
+        if spec.map_fn is None:
+            yield from spec.items
+            return
+        if spec.prefetch_depth > 0:
+            yield from self._prefetched(self._mapped())
+        else:
+            yield from self._mapped()
+
+    def _prefetched(self, source):
+        """Background thread keeps a bounded queue of ready elements."""
+        spec = self.spec
+        cap = max(spec.prefetch_depth * max(spec.batch_size or 1, 1), 1)
+        q: "queue.Queue" = queue.Queue(maxsize=cap)
+        DONE, ERR = object(), object()
+
+        def feed():
+            try:
+                for x in source:
+                    q.put(x)
+                q.put(DONE)
+            except BaseException as e:  # noqa: BLE001
+                q.put((ERR, e))
+
+        t = threading.Thread(target=feed, daemon=True)
+        t.start()
+        while True:
+            x = q.get()
+            if x is DONE:
+                break
+            if isinstance(x, tuple) and len(x) == 2 and x[0] is ERR:
+                raise x[1]
+            yield x
+
+    def _mapped(self):
+        spec = self.spec
+        n = spec.num_parallel_calls
+        if n == AUTOTUNE:
+            yield from self._mapped_autotune()
+            return
+        n = max(n, 1)
+        if n == 1 and spec.hedge_timeout_s is None:
+            for it in spec.items:
+                yield spec.map_fn(it)
+            return
+        pool = ThreadPoolExecutor(max_workers=n)
+        try:
+            yield from _ordered_parallel(pool, spec.map_fn, spec.items,
+                                         in_flight=n + 2,
+                                         hedge_timeout=spec.hedge_timeout_s)
+        finally:
+            # don't block on abandoned hedge originals still sleeping
+            pool.shutdown(wait=False, cancel_futures=True)
+
+    def _mapped_autotune(self):
+        """Windowed hill-climbing on measured throughput (bytes/s when map
+        results have a length, else items/s)."""
+        from repro.core.advisor import ThreadAutotuneAdvisor
+        spec = self.spec
+        advisor = ThreadAutotuneAdvisor(start=spec.autotune_start)
+        threads = spec.autotune_start
+        items = list(spec.items)
+        i = 0
+        while i < len(items):
+            window = items[i:i + spec.autotune_window]
+            i += len(window)
+            t0 = time.perf_counter()
+            nbytes = 0
+            with ThreadPoolExecutor(max_workers=threads) as pool:
+                for res in _ordered_parallel(pool, spec.map_fn, window,
+                                             in_flight=threads + 2,
+                                             hedge_timeout=spec.hedge_timeout_s):
+                    try:
+                        nbytes += len(res)
+                    except TypeError:
+                        nbytes += 1
+                    yield res
+            dt = max(time.perf_counter() - t0, 1e-9)
+            advice = advisor.observe(threads, nbytes / dt / 1e6)
+            threads = advice.threads
+
+
+def _ordered_parallel(pool: ThreadPoolExecutor, fn, items,
+                      in_flight: int, hedge_timeout: Optional[float]):
+    """Submit up to ``in_flight`` tasks ahead, yield results in order;
+    optionally hedge stragglers with a duplicate submission."""
+    items = list(items)
+    futures: dict = {}
+    nxt = 0
+
+    def ensure(k):
+        nonlocal nxt
+        while nxt < min(k + in_flight, len(items)):
+            futures[nxt] = pool.submit(fn, items[nxt])
+            nxt += 1
+
+    for k in range(len(items)):
+        ensure(k)
+        f = futures.pop(k)
+        if hedge_timeout is not None:
+            try:
+                yield f.result(timeout=hedge_timeout)
+                continue
+            except TimeoutError:
+                backup = pool.submit(fn, items[k])
+                winner = _first_done(f, backup)
+                yield winner.result()
+                continue
+        yield f.result()
+
+
+def _first_done(*fs: Future):
+    import concurrent.futures as cf
+    done, _ = cf.wait(fs, return_when=cf.FIRST_COMPLETED)
+    return next(iter(done))

@@ -1,0 +1,77 @@
+"""Synthetic datasets reproducing the paper's two case-study workloads:
+
+* imagenet-like — many small files, log-normal sizes, median ~88 KB
+  (paper: 128K files, 11.6 GB, median 88 KB; we scale counts/sizes down
+  for CI but keep the distribution shape), and
+* malware-like  — fewer, larger files, median ~4 MB with a sub-2MB tail
+  that is ~40 % of files but only ~8 % of bytes (paper §V-B) — the tail
+  the staging advisor must discover.
+"""
+from __future__ import annotations
+
+import os
+import numpy as np
+
+
+def _write(path: str, n: int, rng: np.random.Generator) -> None:
+    with open(path, "wb") as f:
+        f.write(rng.bytes(n))
+
+
+def make_imagenet_like(root: str, n_files: int = 512,
+                       median_bytes: int = 88 * 1024,
+                       sigma: float = 0.5, seed: int = 0) -> list:
+    """Log-normal sizes around the ImageNet JPEG median."""
+    rng = np.random.default_rng(seed)
+    os.makedirs(root, exist_ok=True)
+    sizes = np.exp(rng.normal(np.log(median_bytes), sigma, n_files))
+    sizes = np.clip(sizes, 1024, 20 * median_bytes).astype(int)
+    paths = []
+    for i, n in enumerate(sizes):
+        p = os.path.join(root, f"img_{i:06d}.jpg")
+        _write(p, int(n), rng)
+        paths.append(p)
+    return paths
+
+
+def make_malware_like(root: str, n_files: int = 64,
+                      median_bytes: int = 4 * 1024 * 1024,
+                      small_frac: float = 0.4, seed: int = 0) -> list:
+    """~(1-small_frac) large files around the median + a small_frac tail
+    below 2 MB that carries only a few % of total bytes."""
+    rng = np.random.default_rng(seed)
+    os.makedirs(root, exist_ok=True)
+    n_small = int(n_files * small_frac)
+    n_large = n_files - n_small
+    large = np.exp(rng.normal(np.log(median_bytes), 0.4, n_large))
+    large = np.clip(large, 2 * 1024 * 1024 + 1, 8 * median_bytes).astype(int)
+    small = np.exp(rng.normal(np.log(300 * 1024), 0.8, n_small))
+    small = np.clip(small, 8 * 1024, 2 * 1024 * 1024 - 1).astype(int)
+    sizes = np.concatenate([large, small])
+    rng.shuffle(sizes)
+    paths = []
+    for i, n in enumerate(sizes):
+        p = os.path.join(root, f"mal_{i:05d}.bytes")
+        _write(p, int(n), rng)
+        paths.append(p)
+    return paths
+
+
+def make_token_shards(root: str, n_shards: int = 8,
+                      docs_per_shard: int = 64,
+                      mean_doc_tokens: int = 512,
+                      vocab_size: int = 50_000, seed: int = 0) -> list:
+    """LM training corpus as JRecord shards of token documents."""
+    from repro.data.jrecord import JRecordWriter
+    rng = np.random.default_rng(seed)
+    os.makedirs(root, exist_ok=True)
+    paths = []
+    for s in range(n_shards):
+        p = os.path.join(root, f"tokens_{s:04d}.jrec")
+        with JRecordWriter(p) as w:
+            for _ in range(docs_per_shard):
+                n = max(16, int(rng.exponential(mean_doc_tokens)))
+                toks = rng.integers(0, vocab_size, n, dtype=np.int32)
+                w.write(toks.tobytes())
+        paths.append(p)
+    return paths

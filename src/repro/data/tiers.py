@@ -1,0 +1,146 @@
+"""Multi-tier storage model.
+
+A tier is a directory plus an optional token-bucket bandwidth throttle so
+HDD / SSD / Optane-class tiers behave deterministically on this
+container's single disk (the *policy* — what to stage where — is the
+paper's contribution; the tier hardware is simulated, DESIGN.md §2).
+``/dev/shm`` serves as a genuine fast tier for live runs."""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+
+class TokenBucket:
+    """Simple bandwidth limiter: ``take(n)`` blocks until n bytes fit."""
+
+    def __init__(self, bytes_per_s: float, burst: Optional[float] = None):
+        self.rate = float(bytes_per_s)
+        # burst sized to ~10 ms of bandwidth so per-file reads see the
+        # steady-state rate, not a free initial window
+        self.burst = burst or max(self.rate / 100, 1 << 20)
+        self._tokens = self.burst
+        self._t = time.perf_counter()
+        self._lock = threading.Lock()
+
+    def take(self, n: int) -> None:
+        """Debt-based limiter: always admits the request, then sleeps long
+        enough that sustained throughput equals the configured rate (large
+        single requests simply incur a proportionally longer sleep)."""
+        if n <= 0:
+            return
+        with self._lock:
+            now = time.perf_counter()
+            self._tokens = min(self.burst,
+                               self._tokens + (now - self._t) * self.rate)
+            self._t = now
+            self._tokens -= n
+            debt = -self._tokens
+        if debt > 0:
+            time.sleep(debt / self.rate)
+
+
+@dataclass
+class StorageTier:
+    name: str
+    root: str
+    bandwidth_bytes_s: Optional[float] = None   # None = unthrottled
+    open_latency_s: float = 0.0                 # seek / metadata cost
+    # True: seeks occupy the (single) device head — HDD-like, concurrency
+    # makes interleaving WORSE.  False: latency is per-request (parallel
+    # file system metadata RTT) — concurrency hides it.
+    seek_serialized: bool = False
+    _bucket: Optional[TokenBucket] = None
+
+    def __post_init__(self):
+        os.makedirs(self.root, exist_ok=True)
+        if self.bandwidth_bytes_s:
+            self._bucket = TokenBucket(self.bandwidth_bytes_s)
+        self._last_path = None
+        self._seek_lock = threading.Lock()
+
+    def throttle(self, nbytes: int) -> None:
+        if self._bucket is not None:
+            self._bucket.take(nbytes)
+
+    def note_access(self, path: Optional[str]) -> None:
+        """HDD head model: switching between files costs a seek.  With one
+        sequential reader this fires once per file; with many concurrent
+        readers on large files, interleaved chunks thrash the head — the
+        paper's Fig 11a large-file threading regression."""
+        if self.open_latency_s <= 0 or path is None:
+            return
+        with self._seek_lock:
+            switched = self._last_path != path
+            self._last_path = path
+        if switched:
+            if self.seek_serialized and self._bucket is not None:
+                # a head seek steals device time from everyone
+                self._bucket.take(int(self.open_latency_s
+                                      * self._bucket.rate))
+            else:
+                time.sleep(self.open_latency_s)
+
+    def on_open(self, path: Optional[str] = None) -> None:
+        self.note_access(path if path is not None else object())
+
+
+class TierManager:
+    """Resolves a file path to its tier (by root prefix) and provides the
+    per-tier throttle callable the readers apply."""
+
+    def __init__(self, tiers: Dict[str, StorageTier]):
+        self.tiers = tiers
+        self._by_root = sorted(tiers.values(), key=lambda t: -len(t.root))
+
+    def tier_of(self, path: str) -> Optional[StorageTier]:
+        for t in self._by_root:
+            if path.startswith(t.root.rstrip("/") + "/") or path == t.root:
+                return t
+        return None
+
+    def throttle_for(self, path: str):
+        t = self.tier_of(path)
+        if t is None or t._bucket is None:
+            return None
+        return t.throttle
+
+
+def default_tiers(base: str, throttled: bool = False) -> TierManager:
+    """hdd/ssd/optane tier layout; throttled=True gives HDD 120 MB/s with
+    a per-open seek penalty, SSD 500 MB/s, Optane 2 GB/s-class
+    deterministic behaviour (the paper's Greendog storage mix)."""
+    def mk(name, bw, lat, serial=False):
+        return StorageTier(name, os.path.join(base, name),
+                           bandwidth_bytes_s=bw if throttled else None,
+                           open_latency_s=lat if throttled else 0.0,
+                           seek_serialized=serial)
+    return TierManager({
+        "hdd": mk("hdd", 120e6, 0.008, serial=True),
+        "lustre": mk("lustre", 500e6, 0.008),       # metadata RTT, parallel
+        "ssd": mk("ssd", 500e6, 0.0002),
+        "optane": mk("optane", 2000e6, 0.00002),
+    })
+
+
+def make_tiered_reader(tm: TierManager, reader=None, resolver=None):
+    """Reader that applies tier throttling/seek penalties and an optional
+    path resolver (e.g. StagingManager.resolve for staged files)."""
+    from repro.data.readers import posix_read_file
+    reader = reader or posix_read_file
+    def read(path: str):
+        p = resolver(path) if resolver else path
+        tier = tm.tier_of(p)
+        if tier is None:
+            return reader(p)
+
+        def thr(n: int, _p=p, _t=tier):
+            _t.note_access(_p)
+            _t.throttle(n)
+
+        tier.note_access(p)
+        return reader(p, throttle=thr)
+    return read

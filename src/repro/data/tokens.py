@@ -1,0 +1,39 @@
+"""Token pipeline: JRecord document shards -> fixed-length LM batches.
+
+Documents are concatenated and packed into (batch, seq_len+1) windows
+(inputs + shifted labels come from the same window).  Sharding is by
+file round-robin per DP worker; the reader path goes through os.pread so
+tf-Darshan instruments training-data ingestion end to end.
+"""
+from __future__ import annotations
+
+from typing import Iterator, List, Optional
+
+import numpy as np
+
+from repro.data.jrecord import JRecordReader
+
+
+def token_batches(shard_paths: List[str], batch_size: int, seq_len: int,
+                  vocab_size: int, seed: int = 0,
+                  repeat: bool = True) -> Iterator[np.ndarray]:
+    """Yields int32 (batch_size, seq_len + 1) token windows forever
+    (or once if repeat=False)."""
+    rng = np.random.default_rng(seed)
+    window = seq_len + 1
+    buf = np.empty((0,), np.int32)
+    epoch = 0
+    while True:
+        order = rng.permutation(len(shard_paths))
+        for si in order:
+            reader = JRecordReader(shard_paths[si])
+            for payload in reader:
+                doc = np.frombuffer(payload, np.int32) % vocab_size
+                buf = np.concatenate([buf, doc])
+                while len(buf) >= batch_size * window:
+                    take = buf[:batch_size * window]
+                    buf = buf[batch_size * window:]
+                    yield take.reshape(batch_size, window).copy()
+        epoch += 1
+        if not repeat:
+            return

@@ -1,0 +1,63 @@
+"""Gradient compression with error feedback.
+
+``Int8Compressor.roundtrip`` simulates communicating int8-quantized
+gradients (per-tensor absmax scaling) and carries the quantization error
+into the next step via an error-feedback buffer folded into the gradient
+before quantization — the standard EF-SGD construction that keeps
+convergence unbiased.  On a real multi-host deployment the quantized
+tensors are what cross the DCN between pods (4x fewer bytes on the "pod"
+axis all-reduce); in-XLA the quantize/dequantize pair still shrinks the
+collective the partitioner schedules when placed around the psum.
+
+Stateless variant (no error feedback) is exposed for the dry-run, where
+train_step carries no extra state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Int8Compressor:
+    stochastic: bool = False
+
+    def quantize(self, g):
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        return q, scale
+
+    def dequantize(self, q, scale):
+        return q.astype(jnp.float32) * scale
+
+    def roundtrip_leaf(self, g):
+        q, s = self.quantize(g.astype(jnp.float32))
+        return self.dequantize(q, s).astype(g.dtype)
+
+    def roundtrip(self, grads):
+        return jax.tree.map(self.roundtrip_leaf, grads)
+
+
+class ErrorFeedbackCompressor:
+    """Stateful wrapper: error buffer e_{t+1} = g_t + e_t - Q(g_t + e_t)."""
+
+    def __init__(self, base: Int8Compressor = Int8Compressor()):
+        self.base = base
+
+    def init_state(self, params):
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def compress(self, grads, error_state):
+        def leaf(g, e):
+            corrected = g.astype(jnp.float32) + e
+            q = self.base.roundtrip_leaf(corrected)
+            return q.astype(g.dtype), corrected - q
+        pairs = jax.tree.map(leaf, grads, error_state)
+        comp = jax.tree.map(lambda t: t[0], pairs,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        err = jax.tree.map(lambda t: t[1], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        return comp, err

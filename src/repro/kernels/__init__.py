@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the framework's compute hot spots (the paper
+itself is an I/O paper — see DESIGN.md §2): flash attention and the
+Mamba2 SSD chunk scan, each with a pure-jnp oracle in ref.py."""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0):
+    """q: (B, H, Sq, D); k, v: (B, KVH, Sk, D) -> (B, H, Sq, D)."""
+    B, H, Sq, D = q.shape
+    KVH, Sk = k.shape[1], k.shape[2]
+    G = H // KVH
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok = ok & (q_pos >= k_pos)
+    if window > 0:
+        ok = ok & (q_pos - k_pos < window)
+    s = jnp.where(ok[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(x, B, C, dt, A, D):
+    """Sequential SSD recurrence oracle.
+
+    x: (b, S, nh, P); B, C: (b, S, N); dt: (b, S, nh); A, D: (nh,).
+    Returns (y (b, S, nh, P) f32, h_final (b, nh, N, P) f32)."""
+    b, S, nh, P = x.shape
+    N = B.shape[-1]
+    h = jnp.zeros((b, nh, N, P), jnp.float32)
+    ys = []
+    xf = x.astype(jnp.float32)
+    for t in range(S):
+        a_t = jnp.exp(dt[:, t] * A[None, :])                    # (b, nh)
+        upd = jnp.einsum("bn,bhp,bh->bhnp", B[:, t], xf[:, t], dt[:, t])
+        h = h * a_t[..., None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", C[:, t], h) \
+            + D[None, :, None] * xf[:, t]
+        ys.append(y)
+    return jnp.stack(ys, axis=1), h

@@ -1,0 +1,54 @@
+"""ShapeDtypeStruct stand-ins for every model input of every
+(architecture x input-shape) dry-run cell — weak-type-correct, shardable,
+zero device allocation."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import init_cache, init_params
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+
+S = jax.ShapeDtypeStruct
+
+
+def batch_specs_struct(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract train/prefill batch."""
+    B, L = shape.global_batch, shape.seq_len
+    batch = {"tokens": S((B, L), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = S((B, cfg.vision_tokens, cfg.d_model),
+                                   jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["audio_frames"] = S((B, cfg.encoder_seq, cfg.d_model),
+                                  jnp.bfloat16)
+    return batch
+
+
+def params_struct(cfg: ModelConfig):
+    return jax.eval_shape(partial(init_params, cfg), jax.random.PRNGKey(0))
+
+
+def opt_state_struct(ocfg: OptimizerConfig, params_shape):
+    return jax.eval_shape(partial(init_opt_state, ocfg), params_shape)
+
+
+def cache_struct(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        partial(init_cache, cfg, shape.global_batch, shape.seq_len))
+
+
+def decode_inputs_struct(cfg: ModelConfig, shape: ShapeConfig):
+    B = shape.global_batch
+    return {"tokens": S((B, 1), jnp.int32), "pos": S((B,), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Every abstract input for the cell, keyed by role."""
+    if shape.kind in ("train", "prefill"):
+        return {"batch": batch_specs_struct(cfg, shape)}
+    return {"cache": cache_struct(cfg, shape),
+            **decode_inputs_struct(cfg, shape)}

@@ -1,0 +1,142 @@
+"""Whisper-style encoder-decoder.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed frame embeddings (B, encoder_seq, d_model).  Positions are
+sinusoidal (added at embedding time), so attention layers carry no RoPE.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_batch
+from repro.models.layers import (
+    attention,
+    attention_init,
+    dtype_of,
+    mlp_apply,
+    mlp_init,
+    project_out,
+    project_qkv,
+    rms_norm,
+    rms_norm_init,
+    sinusoidal_positions,
+)
+from repro.models.transformer import _remat
+
+
+def _enc_layer_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": rms_norm_init(cfg.d_model),
+        "attn": attention_init(k1, cfg),
+        "ln2": rms_norm_init(cfg.d_model),
+        "mlp": mlp_init(k2, cfg),
+    }
+
+
+def _dec_layer_init(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": rms_norm_init(cfg.d_model),
+        "self_attn": attention_init(k1, cfg),
+        "ln_x": rms_norm_init(cfg.d_model),
+        "cross_attn": attention_init(k2, cfg),
+        "ln2": rms_norm_init(cfg.d_model),
+        "mlp": mlp_init(k3, cfg),
+    }
+
+
+def encdec_stack_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    enc_keys = jax.random.split(k1, cfg.n_encoder_layers)
+    dec_keys = jax.random.split(k2, cfg.n_layers)
+    return {
+        "encoder": jax.vmap(lambda k: _enc_layer_init(k, cfg))(enc_keys),
+        "decoder": jax.vmap(lambda k: _dec_layer_init(k, cfg))(dec_keys),
+        "ln_enc": rms_norm_init(cfg.d_model),
+        "ln_f": rms_norm_init(cfg.d_model),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, S_enc, d) stub frame embeddings -> encoder output."""
+    cdt = dtype_of(cfg.compute_dtype)
+    S = frames.shape[1]
+    x = frames.astype(cdt) + sinusoidal_positions(S, cfg.d_model).astype(cdt)
+
+    def body(h, p):
+        a = rms_norm(h, p["ln1"], cfg.norm_eps)
+        q, k, v = project_qkv(p["attn"], cfg, a)
+        o = attention(cfg, q, k, v, causal=False)
+        h = h + project_out(p["attn"], cfg, o)
+        m = rms_norm(h, p["ln2"], cfg.norm_eps)
+        return shard_batch(h + mlp_apply(p["mlp"], cfg, m)), None
+
+    x, _ = lax.scan(_remat(cfg, body), x, params["encoder"])
+    return rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def _dec_layer(p, cfg: ModelConfig, x, enc_out, collect_kv: bool):
+    a = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = project_qkv(p["self_attn"], cfg, a)
+    o = attention(cfg, q, k, v, causal=True)
+    x = x + project_out(p["self_attn"], cfg, o)
+    cx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+    qx, kx, vx = project_qkv(p["cross_attn"], cfg, cx, kv_x=enc_out)
+    ox = attention(cfg, qx, kx, vx, causal=False)
+    x = x + project_out(p["cross_attn"], cfg, ox)
+    m = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = shard_batch(x + mlp_apply(p["mlp"], cfg, m))
+    kv = (k, v, kx, vx) if collect_kv else None
+    return x, kv
+
+
+def decode_train(params, cfg: ModelConfig, x, enc_out, *,
+                 collect_kv: bool = False):
+    """x: (B, S, d) token embeddings (positions already added)."""
+    def body(h, p):
+        h, kv = _dec_layer(p, cfg, h, enc_out, collect_kv)
+        return h, kv
+
+    x, kvs = lax.scan(_remat(cfg, body), x, params["decoder"])
+    return rms_norm(x, params["ln_f"], cfg.norm_eps), kvs
+
+
+def decode_step(params, cfg: ModelConfig, x, cache, pos):
+    """Single-token decoder step.
+
+    cache: {"k","v": (L,B,S,H,hd) self KV, "xk","xv": (L,B,S_enc,H,hd)}.
+    x: (B, 1, d) token embedding with position added; pos: (B,).
+    """
+    B = x.shape[0]
+    bidx = jnp.arange(B)
+
+    def body(carry, inputs):
+        h, ck, cv, layer = carry
+        p, xk, xv = inputs
+        a = rms_norm(h, p["ln1"], cfg.norm_eps)
+        q, k, v = project_qkv(p["self_attn"], cfg, a)
+        ck = ck.at[layer, bidx, pos].set(k[:, 0].astype(ck.dtype))
+        cv = cv.at[layer, bidx, pos].set(v[:, 0].astype(cv.dtype))
+        ckl = jax.lax.dynamic_index_in_dim(ck, layer, 0, keepdims=False)
+        cvl = jax.lax.dynamic_index_in_dim(cv, layer, 0, keepdims=False)
+        o = attention(cfg, q, ckl, cvl, causal=False, q_offset=pos,
+                      k_valid=pos + 1)
+        h = h + project_out(p["self_attn"], cfg, o)
+        cx = rms_norm(h, p["ln_x"], cfg.norm_eps)
+        qx, _, _ = project_qkv(p["cross_attn"], cfg, cx, kv_x=cx)
+        ox = attention(cfg, qx, xk, xv, causal=False)
+        h = h + project_out(p["cross_attn"], cfg, ox)
+        m = rms_norm(h, p["ln2"], cfg.norm_eps)
+        h = shard_batch(h + mlp_apply(p["mlp"], cfg, m))
+        return (h, ck, cv, layer + 1), None
+
+    (x, ck, cv, _), _ = lax.scan(
+        body, (x, cache["k"], cache["v"], jnp.int32(0)),
+        (params["decoder"], cache["xk"], cache["xv"]))
+    new_cache = dict(cache)
+    new_cache.update({"k": ck, "v": cv})
+    return rms_norm(x, params["ln_f"], cfg.norm_eps), new_cache

@@ -1,0 +1,147 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with a single *shared-weight*
+attention+MLP transformer block applied after every k-th Mamba block.
+
+The layer stack is split into groups of ``shared_attn_every`` Mamba blocks;
+each group is one `lax.scan` (stacked params sliced per group), followed by
+one application of the shared block.  The shared block's weights are the
+same at every site; its KV caches are per-site (stacked on a site axis).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_batch
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    attention,
+    apply_rope,
+    rms_norm,
+    rope_table,
+    project_out,
+    project_qkv,
+)
+from repro.models.transformer import _remat, self_layer_init, self_layer_train
+
+
+def n_shared_sites(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def group_slices(cfg: ModelConfig):
+    """[(start, size, shared_after)] covering all n_layers."""
+    k = cfg.shared_attn_every
+    out = []
+    start = 0
+    while start < cfg.n_layers:
+        size = min(k, cfg.n_layers - start)
+        shared_after = (size == k)
+        out.append((start, size, shared_after))
+        start += size
+    return out
+
+
+def hybrid_stack_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    mamba_keys = jax.random.split(k1, cfg.n_layers)
+    return {
+        "mamba": jax.vmap(lambda k: ssm_lib.mamba_init(k, cfg))(mamba_keys),
+        "shared": self_layer_init(k2, cfg),
+        "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+
+
+def _slice_params(params, start: int, size: int):
+    return jax.tree.map(lambda a: a[start:start + size], params)
+
+
+def hybrid_forward(params, cfg: ModelConfig, x, *, collect_state: bool = False):
+    """Train/prefill forward.  Returns (x, aux, caches) where caches (when
+    collect_state) hold per-layer mamba states + per-site shared-attn KV."""
+    S = x.shape[1]
+    rope = rope_table(jnp.arange(S), cfg.resolved_head_dim, cfg.rope_theta)
+
+    conv_states, ssm_states, shared_kv = [], [], []
+
+    def mamba_body(h, p):
+        if collect_state:
+            y, (cs, hs) = ssm_lib.mamba_prefill(p, cfg, h)
+            return shard_batch(h + y), (cs, hs)
+        return shard_batch(h + ssm_lib.mamba_forward(p, cfg, h)), None
+
+    for (start, size, shared_after) in group_slices(cfg):
+        gp = _slice_params(params["mamba"], start, size)
+        x, states = lax.scan(_remat(cfg, mamba_body), x, gp)
+        if collect_state:
+            conv_states.append(states[0])
+            ssm_states.append(states[1])
+        if shared_after:
+            x, kv, _ = self_layer_train(params["shared"], cfg, x, (rope, rope),
+                                        jnp.bool_(True), collect_state)
+            if collect_state:
+                shared_kv.append(kv)
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    if not collect_state:
+        return x, {}, None
+    cache = {
+        "conv": jnp.concatenate(conv_states, axis=0),
+        "ssm": jnp.concatenate(ssm_states, axis=0),
+        "shared_k": jnp.stack([kv[0] for kv in shared_kv]),
+        "shared_v": jnp.stack([kv[1] for kv in shared_kv]),
+    }
+    return x, {}, cache
+
+
+def hybrid_decode(params, cfg: ModelConfig, x, cache, pos):
+    """x: (B,1,d).  cache: conv (L,B,W-1,Ch), ssm (L,B,nh,P?,N?),
+    shared_k/v (sites,B,S,KVH,hd)."""
+    rope = rope_table(pos[:, None], cfg.resolved_head_dim, cfg.rope_theta)
+    B = x.shape[0]
+    bidx = jnp.arange(B)
+
+    def mamba_body(h, inputs):
+        p, conv, hstate = inputs
+        y, new_conv, new_h = ssm_lib.mamba_decode_step(p, cfg, h, conv, hstate)
+        return shard_batch(h + y), (new_conv, new_h)
+
+    new_conv, new_ssm, new_k, new_v = [], [], [], []
+    site = 0
+    for (start, size, shared_after) in group_slices(cfg):
+        gp = _slice_params(params["mamba"], start, size)
+        conv = cache["conv"][start:start + size]
+        hstate = cache["ssm"][start:start + size]
+        x, (cs, hs) = lax.scan(mamba_body, x, (gp, conv, hstate))
+        new_conv.append(cs)
+        new_ssm.append(hs)
+        if shared_after:
+            p = params["shared"]
+            h = rms_norm(x, p["ln1"], cfg.norm_eps)
+            q, k, v = project_qkv(p["attn"], cfg, h)
+            q, k = apply_rope(q, *rope), apply_rope(k, *rope)
+            ck = cache["shared_k"][site].at[bidx, pos].set(
+                k[:, 0].astype(cache["shared_k"].dtype))
+            cv = cache["shared_v"][site].at[bidx, pos].set(
+                v[:, 0].astype(cache["shared_v"].dtype))
+            o = attention(cfg, q, ck, cv, causal=False, q_offset=pos,
+                          k_valid=pos + 1)
+            x = x + project_out(p["attn"], cfg, o)
+            from repro.models.layers import mlp_apply
+            m = rms_norm(x, p["ln2"], cfg.norm_eps)
+            x = x + mlp_apply(p["mlp"], cfg, m)
+            new_k.append(ck)
+            new_v.append(cv)
+            site += 1
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    new_cache = {
+        "conv": jnp.concatenate(new_conv, axis=0),
+        "ssm": jnp.concatenate(new_ssm, axis=0),
+        "shared_k": jnp.stack(new_k),
+        "shared_v": jnp.stack(new_v),
+    }
+    return x, new_cache, {}

@@ -1,0 +1,94 @@
+"""Cross-entropy with optional vocabulary chunking.
+
+For 100k–262k vocabularies at 1M tokens/step, materializing full f32 logits
+costs O(tokens x vocab x 4B) ≈ 1 TB.  The chunked path scans over vocab
+slices with an online logsumexp so peak logits memory is
+O(tokens x chunk x 4B), which the per-device memory analysis in the dry-run
+must (and does) reflect.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import activation_axes, shard_spec, tp_axis
+
+
+def _shard_logits(logits: jnp.ndarray) -> jnp.ndarray:
+    """(B, S, V'): batch over the data axes, vocab over the model axis."""
+    ba = activation_axes()
+    if ba is None:
+        return logits
+    return shard_spec(logits, P(ba, None, tp_axis()))
+
+
+def _stable_ce(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """logits (..., V) f32-accumulated CE; returns per-token loss (...)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - ll
+
+
+def cross_entropy(x: jnp.ndarray, unembed: jnp.ndarray, labels: jnp.ndarray,
+                  cfg: ModelConfig) -> jnp.ndarray:
+    """x: (B, S, d) final hiddens; unembed: (d, V); labels: (B, S) int32.
+
+    Returns per-token loss (B, S) float32.
+    """
+    d, V = unembed.shape
+    chunk = cfg.vocab_chunk
+    if chunk <= 0 or V <= chunk:
+        logits = _shard_logits(jnp.einsum("bsd,dv->bsv", x, unembed,
+                                          preferred_element_type=jnp.float32))
+        return _stable_ce(logits, labels)
+
+    if V % chunk:
+        # pad the vocab axis so chunks tile exactly; padded logits get -inf
+        pad = chunk - V % chunk
+        unembed = jnp.pad(unembed, ((0, 0), (0, pad)))
+        n_chunks = (V + pad) // chunk
+        padded = True
+    else:
+        n_chunks = V // chunk
+        padded = False
+        pad = 0
+
+    w = unembed.reshape(d, n_chunks, chunk).transpose(1, 0, 2)  # (n, d, chunk)
+
+    B, S, _ = x.shape
+    m0 = jnp.full((B, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, S), jnp.float32)
+    c0 = jnp.zeros((B, S), jnp.float32)   # gathered label logit
+
+    def body(carry, inputs):
+        m, l, correct, idx = carry
+        wc = inputs
+        logits = _shard_logits(jnp.einsum("bsd,dv->bsv", x, wc,
+                                          preferred_element_type=jnp.float32))
+        if padded:
+            # mask out logits beyond the true vocab in the final chunk
+            vpos = idx * chunk + jnp.arange(chunk)
+            logits = jnp.where(vpos[None, None, :] < V, logits, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        l = l * jnp.exp(m - m_new) + jnp.sum(
+            jnp.exp(logits - m_new[..., None]), axis=-1)
+        local = labels - idx * chunk
+        in_range = (local >= 0) & (local < chunk)
+        ll = jnp.take_along_axis(logits, jnp.clip(local, 0, chunk - 1)[..., None],
+                                 axis=-1)[..., 0]
+        correct = correct + jnp.where(in_range, ll, 0.0)
+        return (m_new, l, correct, idx + 1), None
+
+    (m, l, correct, _), _ = lax.scan(body, (m0, l0, c0, jnp.int32(0)), w)
+    lse = m + jnp.log(l)
+    return lse - correct
+
+
+def masked_mean(per_token: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(per_token * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,122 @@
+"""Mixture-of-experts feed-forward with capacity-based top-k dispatch.
+
+Mesh-TensorFlow/Switch-style dense dispatch: tokens are split into groups,
+each group routes its tokens into per-expert capacity buffers via a one-hot
+dispatch tensor, experts run as a batched einsum over (expert, capacity)
+slots, and a combine tensor scatters results back.  This formulation is
+fully static-shape (jit/pjit friendly); the group count bounds the dispatch
+tensor to O(tokens x experts x capacity/groups) per group.
+
+Sharding: with ``expert_sharding="tp"`` expert ffn dims shard over the
+"model" axis (tensor parallel); with ``"ep"`` the expert dim shards over
+"model" (expert parallel) and XLA materializes the dispatch as all-to-alls.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_batch, shard_spec, activation_axes, tp_axis
+from jax.sharding import PartitionSpec as P
+from repro.models.layers import activation, dense_init, dtype_of
+
+
+def resolve_groups(cfg: ModelConfig, n_tokens: int, data_shards: int = 1) -> int:
+    """Pick the dispatch group count: ~group_tokens per group, divisible
+    by the data-shard count so groups shard cleanly, and dividing
+    n_tokens."""
+    g = cfg.moe.n_groups
+    if g <= 0:
+        g = max(data_shards, n_tokens // cfg.moe.group_tokens, 1)
+    g = min(g, n_tokens)
+    while n_tokens % g:
+        g -= 1
+    return g
+
+
+def capacity_of(cfg: ModelConfig, group_tokens: int) -> int:
+    m = cfg.moe
+    cap = int(group_tokens * m.top_k * m.capacity_factor / m.n_experts)
+    return max(8, (cap + 7) // 8 * 8)
+
+
+def moe_init(key, cfg: ModelConfig) -> dict:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    dt = dtype_of(cfg.param_dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(k1, (d, E), jnp.float32, fan_in=d),
+        "w1": dense_init(k2, (E, d, ff), dt, fan_in=d),
+        "w3": dense_init(k3, (E, d, ff), dt, fan_in=d),
+        "w2": dense_init(k4, (E, ff, d), dt, fan_in=ff),
+    }
+
+
+def moe_apply(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+              n_groups: Optional[int] = None):
+    """x: (B, S, d) -> (y (B, S, d), aux dict with load-balance losses)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    cdt = dtype_of(cfg.compute_dtype)
+    T = B * S
+    G = n_groups or resolve_groups(cfg, T)
+    Tg = T // G
+    C = capacity_of(cfg, Tg)
+    E, K = m.n_experts, m.top_k
+
+    xg = shard_batch(x.reshape(G, Tg, d))
+
+    # --- routing (f32 for numerics) ----------------------------------------
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                     # (G, Tg, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)             # (G, Tg, K)
+    # renormalize the top-k gates
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # --- capacity assignment -------------------------------------------------
+    # one-hot over experts per routing slot: (G, Tg, K, E)
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)
+    # position of each (token, k) pair inside its expert's buffer
+    # flatten k-major so k=0 choices claim capacity first
+    flat = onehot.transpose(0, 2, 1, 3).reshape(G, K * Tg, E)   # (G, K*Tg, E)
+    pos_flat = jnp.cumsum(flat, axis=1) - flat                  # (G, K*Tg, E)
+    pos = pos_flat.reshape(G, K, Tg, E).transpose(0, 2, 1, 3)   # (G, Tg, K, E)
+    position = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)  # (G, Tg, K)
+    keep = (position < C).astype(jnp.float32)
+    gates = gate_vals * keep                                     # dropped -> 0
+
+    # dispatch/combine tensors: (G, Tg, E, C)
+    pos_onehot = jax.nn.one_hot(position, C, dtype=jnp.float32) * keep[..., None]
+    dispatch = jnp.einsum("gtke,gtkc->gtec", onehot, pos_onehot)
+    combine = jnp.einsum("gtk,gtke,gtkc->gtec", gates, onehot, pos_onehot)
+
+    # --- expert computation ---------------------------------------------------
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(cdt), xg.astype(cdt))
+    ba, tp = activation_axes(), tp_axis()
+    if ba is not None:
+        espec = (P(ba, tp, None, None) if m.expert_sharding == "ep"
+                 else P(ba, None, None, None))
+        xe = shard_spec(xe, espec)
+    act = activation(cfg.act)
+    h = act(jnp.einsum("gecd,edf->gecf", xe, p["w1"].astype(cdt)))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, p["w3"].astype(cdt))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w2"].astype(cdt))
+    y = shard_batch(jnp.einsum("gtec,gecd->gtd", combine.astype(cdt), ye))
+
+    # --- aux losses ------------------------------------------------------------
+    # load-balance: E * sum_e f_e * p_e  (f = dispatch fraction, p = mean prob)
+    f = jnp.mean(jnp.sum(onehot * keep[..., None], axis=2), axis=(0, 1))  # (E,)
+    pbar = jnp.mean(probs, axis=(0, 1))
+    lb_loss = E * jnp.sum(f / K * pbar)
+    z_loss = jnp.mean(jnp.square(jax.scipy.special.logsumexp(logits, axis=-1)))
+    dropped = 1.0 - jnp.mean(keep)
+    aux = {
+        "moe_lb_loss": lb_loss * m.aux_loss_weight,
+        "moe_z_loss": z_loss * m.router_z_loss_weight,
+        "moe_dropped_frac": dropped,
+    }
+    return y.reshape(B, S, d), aux

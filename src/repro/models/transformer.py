@@ -1,0 +1,378 @@
+"""Decoder-only transformer stacks: dense (llama/qwen/gemma3), MoE
+(dbrx/grok), and VLM (llama-3.2-vision: 4 self layers + 1 gated
+cross-attention layer per group).
+
+All stacks scan over layers with stacked parameters so the lowered HLO is
+one `while` per stack regardless of depth (compile time and HLO size stay
+bounded; the roofline parser multiplies body costs by the trip count).
+
+Modes:
+  train   — full-sequence forward, no caches.
+  prefill — full-sequence forward, returns KV caches (post-RoPE keys).
+  decode  — single-token step against KV caches at per-sequence positions.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_batch
+from repro.models import moe as moe_lib
+from repro.models.layers import (
+    attention,
+    attention_init,
+    apply_rope,
+    dtype_of,
+    mlp_apply,
+    mlp_init,
+    project_out,
+    project_qkv,
+    rms_norm,
+    rms_norm_init,
+    rope_table,
+)
+
+# ---------------------------------------------------------------------------
+# init
+
+
+def self_layer_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": rms_norm_init(cfg.d_model),
+        "attn": attention_init(k1, cfg),
+        "ln2": rms_norm_init(cfg.d_model),
+    }
+    if cfg.moe.n_experts > 0:
+        p["moe"] = moe_lib.moe_init(k2, cfg)
+    else:
+        p["mlp"] = mlp_init(k2, cfg)
+    return p
+
+
+def cross_layer_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": rms_norm_init(cfg.d_model),
+        "attn": attention_init(k1, cfg, cross=True),
+        "ln2": rms_norm_init(cfg.d_model),
+        "mlp": mlp_init(k2, cfg),
+        "gate_ffn": jnp.zeros((), jnp.float32),
+    }
+
+
+def stack_init(key, cfg: ModelConfig, n: int, kind: str = "self"):
+    init = self_layer_init if kind == "self" else cross_layer_init
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init(k, cfg))(keys)
+
+
+def is_global_flags(cfg: ModelConfig, n: int) -> jnp.ndarray:
+    """gemma3-style local:global pattern; all-global when ratio == 0."""
+    if cfg.local_global_ratio <= 0:
+        return jnp.ones((n,), jnp.bool_)
+    period = cfg.local_global_ratio + 1
+    return (jnp.arange(n) + 1) % period == 0
+
+
+# ---------------------------------------------------------------------------
+# rope helpers (dual-theta for gemma3 local/global)
+
+
+def _rope_pair(cfg: ModelConfig, positions: jnp.ndarray):
+    hd = cfg.resolved_head_dim
+    local = rope_table(positions, hd, cfg.rope_theta or 10_000.0)
+    if cfg.rope_theta_global:
+        glob = rope_table(positions, hd, cfg.rope_theta_global)
+    else:
+        glob = local
+    return local, glob
+
+
+def _select_rope(local, glob, is_global):
+    cos = jnp.where(is_global, glob[0], local[0])
+    sin = jnp.where(is_global, glob[1], local[1])
+    return cos, sin
+
+
+# ---------------------------------------------------------------------------
+# single-layer bodies
+
+
+def _window_for(cfg: ModelConfig, is_global, s_k: int):
+    if cfg.sliding_window <= 0:
+        return None
+    return jnp.where(is_global, jnp.int32(s_k + 1),
+                     jnp.int32(cfg.sliding_window))
+
+
+def _ffn(p: dict, cfg: ModelConfig, h: jnp.ndarray):
+    if cfg.moe.n_experts > 0:
+        return moe_lib.moe_apply(p["moe"], cfg, h)
+    return mlp_apply(p["mlp"], cfg, h), None
+
+
+def self_layer_train(p, cfg: ModelConfig, x, rope_lg, is_global,
+                     collect_kv: bool):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = project_qkv(p["attn"], cfg, h)
+    cos, sin = _select_rope(*rope_lg, is_global)
+    if cfg.rope_theta:
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    win = _window_for(cfg, is_global, k.shape[1])
+    o = attention(cfg, q, k, v, causal=True, window=win,
+                  softcap=cfg.attn_logit_softcap)
+    x = x + project_out(p["attn"], cfg, o)
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    ff, aux = _ffn(p, cfg, h2)
+    x = shard_batch(x + ff)
+    kv = (k, v) if collect_kv else None
+    return x, kv, aux
+
+
+def self_layer_decode(p, cfg: ModelConfig, x, cache_k, cache_v, pos,
+                      rope_lg, is_global, layer=None):
+    """x: (B,1,d); pos: (B,) write positions.
+
+    cache_k/v are either per-layer (B, S, KVH, hd) slices (layer=None) or
+    the FULL stacked (L, B, S, KVH, hd) caches updated in place at
+    ``layer`` — the stacked form lets the decode scan carry the cache
+    (aliased by XLA's while-loop buffer reuse) instead of producing a
+    second copy through scan ys (2x KV residency otherwise)."""
+    B = x.shape[0]
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = project_qkv(p["attn"], cfg, h)
+    cos, sin = _select_rope(*rope_lg, is_global)   # (B, 1, hd/2)
+    if cfg.rope_theta:
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    bidx = jnp.arange(B)
+    if layer is None:
+        cache_k = cache_k.at[bidx, pos].set(k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[bidx, pos].set(v[:, 0].astype(cache_v.dtype))
+        ck, cv = cache_k, cache_v
+    else:
+        cache_k = cache_k.at[layer, bidx, pos].set(
+            k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[layer, bidx, pos].set(
+            v[:, 0].astype(cache_v.dtype))
+        ck = jax.lax.dynamic_index_in_dim(cache_k, layer, 0,
+                                          keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(cache_v, layer, 0,
+                                          keepdims=False)
+    win = _window_for(cfg, is_global, ck.shape[1])
+    o = attention(cfg, q, ck, cv, causal=False, window=win,
+                  softcap=cfg.attn_logit_softcap, q_offset=pos,
+                  k_valid=pos + 1)
+    x = x + project_out(p["attn"], cfg, o)
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    ff, aux = _ffn(p, cfg, h2)
+    return shard_batch(x + ff), cache_k, cache_v, aux
+
+
+def cross_layer_apply(p, cfg: ModelConfig, x, kv_src=None, kv_cache=None):
+    """Gated cross-attention (llama-3.2-vision).  Either ``kv_src``
+    (full vision embeddings, train/prefill) or ``kv_cache`` ((k, v) tuple,
+    decode) must be given."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kv_cache is None:
+        q, k, v = project_qkv(p["attn"], cfg, h, kv_x=kv_src)
+    else:
+        q, _, _ = project_qkv(p["attn"], cfg, h, kv_x=h[:, :1])
+        k, v = kv_cache
+    o = attention(cfg, q, k, v, causal=False)
+    dt = x.dtype
+    x = x + (jnp.tanh(p["attn"]["gate"])
+             * project_out(p["attn"], cfg, o)).astype(dt)
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + (jnp.tanh(p["gate_ffn"]) * mlp_apply(p["mlp"], cfg, h2)).astype(dt)
+    return shard_batch(x)
+
+
+def cross_kv(p, cfg: ModelConfig, kv_src):
+    """Precompute cross-attention K/V from vision embeddings (prefill)."""
+    _, k, v = project_qkv(p["attn"], cfg, kv_src, kv_x=kv_src)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# aux accumulation helpers
+
+_AUX_KEYS = ("moe_lb_loss", "moe_z_loss", "moe_dropped_frac")
+
+
+def _aux_zero():
+    return {k: jnp.zeros((), jnp.float32) for k in _AUX_KEYS}
+
+
+def _aux_add(acc, aux):
+    if aux is None:
+        return acc
+    return {k: acc[k] + aux[k] for k in _AUX_KEYS}
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# dense / moe stack
+
+
+def dense_stack_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    p = {"layers": stack_init(k1, cfg, cfg.n_layers),
+         "ln_f": rms_norm_init(cfg.d_model)}
+    if cfg.family == "vlm":
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        n_self = cfg.n_layers - n_cross
+        group = cfg.cross_attn_every - 1
+        ks1, ks2 = jax.random.split(k2)
+        self_p = stack_init(ks1, cfg, n_self)
+        # reshape stacked self params to (groups, group, ...)
+        n_groups = n_self // group
+        self_p = jax.tree.map(
+            lambda a: a.reshape((n_groups, group) + a.shape[1:]), self_p)
+        p = {"self_layers": self_p,
+             "cross_layers": stack_init(ks2, cfg, n_cross, kind="cross"),
+             "ln_f": rms_norm_init(cfg.d_model)}
+    return p
+
+
+def dense_forward(params, cfg: ModelConfig, x, *, collect_kv: bool = False):
+    """Train/prefill forward for dense & moe families.
+
+    With ``cfg.remat_group = G`` the layer scan is nested (G groups of
+    L/G layers) and BOTH levels are rematerialized: the backward pass
+    keeps only G group-boundary carries plus L/G transient per-layer
+    carries — sqrt(L)-style activation memory instead of L stacks."""
+    S = x.shape[1]
+    rope_lg = _rope_pair(cfg, jnp.arange(S))
+    flags = is_global_flags(cfg, cfg.n_layers)
+
+    def body(carry, inputs):
+        h, aux = carry
+        p, is_g = inputs
+        h, kv, a = self_layer_train(p, cfg, h, rope_lg, is_g, collect_kv)
+        return (h, _aux_add(aux, a)), kv
+
+    G = cfg.remat_group
+    if G > 1 and cfg.n_layers % G == 0 and not collect_kv:
+        per = cfg.n_layers // G
+        grouped = jax.tree.map(
+            lambda a: a.reshape((G, per) + a.shape[1:]), params["layers"])
+        gflags = flags.reshape(G, per)
+
+        def group_body(carry, inputs):
+            gp, gf = inputs
+            carry, _ = lax.scan(_remat(cfg, body), carry, (gp, gf))
+            return carry, None
+
+        (x, aux), kvs = lax.scan(_remat(cfg, group_body), (x, _aux_zero()),
+                                 (grouped, gflags))
+    else:
+        (x, aux), kvs = lax.scan(_remat(cfg, body), (x, _aux_zero()),
+                                 (params["layers"], flags))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x, aux, kvs
+
+
+def dense_decode(params, cfg: ModelConfig, x, cache, pos):
+    """cache: {"k": (L,B,S,KVH,hd), "v": ...}; pos: (B,).
+
+    The full caches ride in the scan CARRY (in-place while-loop aliasing)
+    rather than as xs/ys, which would double KV residency."""
+    rope_lg = _rope_pair(cfg, pos[:, None])      # (B,1,hd/2) tables
+    flags = is_global_flags(cfg, cfg.n_layers)
+
+    def body(carry, inputs):
+        h, ck, cv, layer, aux = carry
+        p, is_g = inputs
+        h, ck, cv, a = self_layer_decode(p, cfg, h, ck, cv, pos, rope_lg,
+                                         is_g, layer=layer)
+        return (h, ck, cv, layer + 1, _aux_add(aux, a)), None
+
+    (x, ck, cv, _, aux), _ = lax.scan(
+        body, (x, cache["k"], cache["v"], jnp.int32(0), _aux_zero()),
+        (params["layers"], flags))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x, {"k": ck, "v": cv}, aux
+
+
+# ---------------------------------------------------------------------------
+# vlm stack (nested scan: groups of [self x (every-1), cross x 1])
+
+
+def vlm_forward(params, cfg: ModelConfig, x, vision, *,
+                collect_kv: bool = False):
+    S = x.shape[1]
+    rope_lg = _rope_pair(cfg, jnp.arange(S))
+    group = cfg.cross_attn_every - 1
+
+    def inner(carry, p):
+        h, aux = carry
+        h, kv, a = self_layer_train(p, cfg, h, rope_lg, jnp.bool_(True),
+                                    collect_kv)
+        return (h, _aux_add(aux, a)), kv
+
+    def outer(carry, inputs):
+        h, aux = carry
+        p_self, p_cross = inputs
+        (h, aux), kvs = lax.scan(_remat(cfg, inner), (h, aux), p_self)
+        ckv = cross_kv(p_cross, cfg, vision) if collect_kv else None
+        h = _remat(cfg, lambda hh: cross_layer_apply(
+            p_cross, cfg, hh, kv_src=vision))(h)
+        return (h, aux), (kvs, ckv)
+
+    # remat the outer (group) scan body too: without it, the inner scan's
+    # saved per-layer carries are stacked across all groups (~n_layers
+    # stacks); with it, only group-boundary carries persist.
+    outer_fn = outer if collect_kv else _remat(cfg, outer)
+    (x, aux), caches = lax.scan(
+        outer_fn, (x, _aux_zero()),
+        (params["self_layers"], params["cross_layers"]))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x, aux, caches
+
+
+def vlm_decode(params, cfg: ModelConfig, x, cache, pos):
+    """cache: self k/v (G, g, B, S, KVH, hd) + cross k/v (G, B, Tv, KVH, hd).
+
+    Self caches are flattened to (G*g, ...) and carried through both scan
+    levels (in-place aliasing); cross caches are read-only xs."""
+    rope_lg = _rope_pair(cfg, pos[:, None])
+    sk, sv = cache["self_k"], cache["self_v"]
+    G_, g_ = sk.shape[:2]
+    ck = sk.reshape((G_ * g_,) + sk.shape[2:])
+    cv = sv.reshape((G_ * g_,) + sv.shape[2:])
+
+    def inner(carry, p):
+        h, ck, cv, idx = carry
+        h, ck, cv, _ = self_layer_decode(p, cfg, h, ck, cv, pos, rope_lg,
+                                         jnp.bool_(True), layer=idx)
+        return (h, ck, cv, idx + 1), None
+
+    def outer(carry, inputs):
+        h, ck, cv, idx = carry
+        p_self, p_cross, xk, xv = inputs
+        (h, ck, cv, idx), _ = lax.scan(inner, (h, ck, cv, idx), p_self)
+        h = cross_layer_apply(p_cross, cfg, h, kv_cache=(xk, xv))
+        return (h, ck, cv, idx), None
+
+    (x, ck, cv, _), _ = lax.scan(
+        outer, (x, ck, cv, jnp.int32(0)),
+        (params["self_layers"], params["cross_layers"],
+         cache["cross_k"], cache["cross_v"]))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    new_cache = dict(cache)
+    new_cache.update({"self_k": ck.reshape(sk.shape),
+                      "self_v": cv.reshape(sv.shape)})
+    return x, new_cache, _aux_zero()

@@ -1,0 +1,491 @@
+"""Trip-count-corrected cost analysis of post-SPMD HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, but this
+framework scans over layers, so XLA's own numbers undercount FLOPs/bytes
+by ~n_layers x (verified empirically — DESIGN.md §6).  This parser walks
+``compiled.as_text()``:
+
+  * FLOPs: analytic 2*prod(out)*K for dot-general (K = product of the
+    lhs contracting dims), prod(shape) for elementwise/reduce ops,
+    recursing into fusion/call bodies;
+  * HBM-traffic proxy: sum of operand + output bytes of every top-level
+    non-trivial op (parameters/constants/tuples/bitcasts excluded);
+  * collective bytes: sum of operand sizes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute (incl. async
+    ``-start`` forms, excl. ``-done``);
+
+multiplying everything inside a ``while`` body by its
+``backend_config.known_trip_count.n``.  Per-device semantics: the input
+is the SPMD-partitioned module, so all results are per device.
+"""
+from __future__ import annotations
+
+import gzip
+import json
+import re
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "and", "or", "xor", "not", "negate", "abs", "exponential",
+    "exponential-minus-one", "log", "log-plus-one", "tanh", "sqrt", "rsqrt",
+    "cbrt", "sine", "cosine", "sign", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "compare", "select", "clamp", "atan2",
+    "logistic", "erf",
+}
+
+SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+              "bitcast", "after-all", "partition-id", "replica-id",
+              "iota", "rng-bit-generator", "rng", "custom-call"}
+
+# Ops that materialize HBM traffic even under TPU-grade fusion.  Standalone
+# elementwise ops (and pure-elementwise kLoop fusions) are assumed fused
+# into a neighboring producer/consumer on TPU and excluded from the
+# fusion-aware proxy; dots, data movement, reductions and collectives are
+# genuine traffic.
+MATERIALIZING = {"dot", "dot-general", "convolution", "copy", "copy-start",
+                 "dynamic-slice", "dynamic-update-slice", "scatter",
+                 "gather", "sort", "reduce", "reduce-window", "transpose",
+                 "concatenate", "slice", "pad", "reverse", "select-and-scatter"}
+
+
+@dataclass
+class Instr:
+    name: str
+    shape_bytes: float           # result size (tuples: sum of elements)
+    shape_elems: float           # result element count (tuples: sum)
+    opcode: str
+    operands: List[str]
+    attrs: str                   # raw text after the operand parens
+    out_dims: Tuple[Tuple[float, ...], ...]  # dims of each result element
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    table: Dict[str, Instr] = field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# shape parsing
+
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _parse_shapes(type_str: str):
+    """All dtype[dims] element shapes in a (possibly tuple) type string."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in DTYPE_BYTES:
+            continue
+        dims = tuple(float(d) for d in m.group(2).split(",") if d)
+        out.append((dt, dims))
+    return out
+
+
+def _shape_stats(type_str: str):
+    shapes = _parse_shapes(type_str)
+    nbytes = 0.0
+    elems = 0.0
+    dims_list = []
+    for dt, dims in shapes:
+        n = 1.0
+        for d in dims:
+            n *= d
+        nbytes += n * DTYPE_BYTES[dt]
+        elems += n
+        dims_list.append(dims)
+    return nbytes, elems, tuple(dims_list)
+
+
+# ---------------------------------------------------------------------------
+# HLO text parsing
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s+=\s+(.+?)\s+([\w\-]+)\(", re.M)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s+->.*\{\s*$")
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
+    """Returns ({name: Computation}, entry_name)."""
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.rstrip()
+        if not stripped:
+            continue
+        hdr = _COMP_HDR_RE.match(stripped) if " = " not in stripped else None
+        if hdr:
+            cur = Computation(hdr.group(1))
+            comps[cur.name] = cur
+            if stripped.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if stripped == "}":
+            continue
+        m = _INSTR_RE.match(stripped)
+        if not m or cur is None:
+            continue
+        name, type_str, opcode = m.group(1), m.group(2), m.group(3)
+        nbytes, elems, dims = _shape_stats(type_str)
+        # operands: %refs inside the first balanced paren group
+        open_idx = stripped.index(opcode + "(") + len(opcode)
+        depth = 0
+        end_idx = len(stripped)
+        for i in range(open_idx, len(stripped)):
+            if stripped[i] == "(":
+                depth += 1
+            elif stripped[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end_idx = i
+                    break
+        operand_str = stripped[open_idx + 1:end_idx]
+        attrs = stripped[end_idx + 1:]
+        operands = re.findall(r"%([\w\.\-]+)", operand_str)
+        ins = Instr(name, nbytes, elems, opcode, operands, attrs, dims)
+        cur.instrs.append(ins)
+        cur.table[name] = ins
+    if entry is None:
+        # fall back: last computation
+        entry = list(comps)[-1]
+    return comps, entry
+
+
+# ---------------------------------------------------------------------------
+# cost model
+
+
+def _operand_bytes(comp: Computation, ins: Instr) -> float:
+    total = 0.0
+    for op in ins.operands:
+        ref = comp.table.get(op)
+        if ref is not None:
+            total += ref.shape_bytes
+    return total
+
+
+def _effective_io(comp: Computation, ins: Instr, dus_fused) -> float:
+    """Operand+output traffic with in-place-update semantics.
+
+    dynamic-update-slice aliases its buffer operand (XLA updates in
+    place): traffic is ~2x the update slice, not the whole buffer.
+    dynamic-slice reads only the slice it produces.  A fusion containing
+    a DUS gets its largest aliasable operand/output pair discounted."""
+    op = ins.opcode
+    if op == "dynamic-update-slice":
+        update = 0.0
+        if len(ins.operands) > 1:
+            ref = comp.table.get(ins.operands[1])
+            update = ref.shape_bytes if ref else 0.0
+        return 2.0 * update
+    if op == "dynamic-slice":
+        return 2.0 * ins.shape_bytes
+    operands = _operand_bytes(comp, ins)
+    out = ins.shape_bytes
+    if dus_fused is not None:
+        largest = 0.0
+        for name in ins.operands:
+            ref = comp.table.get(name)
+            if ref is not None:
+                largest = max(largest, ref.shape_bytes)
+        aliased = min(largest, out)
+        return max(operands + out - 2.0 * aliased, aliased * 0.0)
+    return operands + out
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    out_elems = ins.shape_elems
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+    contracting = [int(x) for x in m.group(1).split(",")] if m and m.group(1) \
+        else []
+    k = 1.0
+    lhs = comp.table.get(ins.operands[0]) if ins.operands else None
+    if lhs is not None and lhs.out_dims:
+        dims = lhs.out_dims[0]
+        for d in contracting:
+            if d < len(dims):
+                k *= dims[d]
+    return 2.0 * out_elems * k
+
+
+def _attr_targets(ins: Instr):
+    """called computations: calls= / body= / condition= / branches."""
+    body = re.search(r"body=%?([\w\.\-]+)", ins.attrs)
+    cond = re.search(r"condition=%?([\w\.\-]+)", ins.attrs)
+    calls = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", ins.attrs)
+    bm = re.search(r"branch_computations=\{([^}]*)\}", ins.attrs)
+    branches = re.findall(r"%?([\w\.\-]+)", bm.group(1)) if bm else []
+    return (body.group(1) if body else None,
+            cond.group(1) if cond else None,
+            calls.group(1) if calls else None,
+            branches)
+
+
+def _trip_count(ins: Instr) -> float:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ins.attrs)
+    return float(m.group(1)) if m else 1.0
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0        # fusion-aware HBM proxy (TPU-like)
+    bytes_hi: float = 0.0     # upper bound: every top-level op materializes
+    coll_bytes: float = 0.0
+    coll_by_type: Dict[str, float] = field(default_factory=dict)
+    unknown_trip_whiles: int = 0
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k, self.bytes_hi * k,
+                    self.coll_bytes * k,
+                    {t: v * k for t, v in self.coll_by_type.items()},
+                    self.unknown_trip_whiles)
+
+    def add(self, other: "Cost") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.bytes_hi += other.bytes_hi
+        self.coll_bytes += other.coll_bytes
+        for t, v in other.coll_by_type.items():
+            self.coll_by_type[t] = self.coll_by_type.get(t, 0.0) + v
+        self.unknown_trip_whiles += other.unknown_trip_whiles
+
+
+class HloCostModel:
+    def __init__(self, comps: Dict[str, Computation], entry: str,
+                 layer_trips: Optional[set] = None):
+        self.comps = comps
+        self.entry = entry
+        self.layer_trips = layer_trips
+        self._memo: Dict[Tuple[str, bool, bool], Cost] = {}
+        self._fusion_memo: Dict[str, bool] = {}
+        self._haswhile_memo: Dict[str, bool] = {}
+
+    def _has_while(self, comp_name: str) -> bool:
+        if comp_name in self._haswhile_memo:
+            return self._haswhile_memo[comp_name]
+        self._haswhile_memo[comp_name] = False
+        comp = self.comps.get(comp_name)
+        result = False
+        if comp is not None:
+            for ins in comp.instrs:
+                if ins.opcode == "while":
+                    result = True
+                    break
+                body, _, calls, _ = _attr_targets(ins)
+                target = body or calls
+                if target and self._has_while(target):
+                    result = True
+                    break
+        self._haswhile_memo[comp_name] = result
+        return result
+
+    def total(self) -> Cost:
+        return self._comp_cost(self.entry, top=True, vmem=False)
+
+    def total_kernelized(self) -> Cost:
+        """Memory traffic assuming kernel-resident interiors: innermost
+        scans that are NOT layer scans (flash-attention k-chunk loops,
+        vocab-chunked CE) keep everything except dot operands and
+        collectives in VMEM — the Pallas/fused-kernel deployment path."""
+        return self._comp_cost(self.entry, top=True, vmem=False,
+                               key_suffix="kern")
+
+    def _fusion_has_dus(self, comp_name: str) -> bool:
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return False
+        key = "dus:" + comp_name
+        if key in self._fusion_memo:
+            return self._fusion_memo[key]
+        result = any(i.opcode == "dynamic-update-slice" for i in comp.instrs)
+        self._fusion_memo[key] = result
+        return result
+
+    def _fusion_materializes(self, comp_name: str) -> bool:
+        """True if a fused computation contains a materializing op (dot,
+        reduce, scatter, DUS...) — pure elementwise kLoop fusions would be
+        absorbed by neighboring ops on TPU."""
+        if comp_name in self._fusion_memo:
+            return self._fusion_memo[comp_name]
+        comp = self.comps.get(comp_name)
+        result = False
+        if comp is not None:
+            for ins in comp.instrs:
+                if ins.opcode in MATERIALIZING:
+                    result = True
+                    break
+                if ins.opcode == "fusion":
+                    _, _, calls, _ = _attr_targets(ins)
+                    if calls and self._fusion_materializes(calls):
+                        result = True
+                        break
+        self._fusion_memo[comp_name] = result
+        return result
+
+    # ------------------------------------------------------------------
+    def _comp_cost(self, name: str, top: bool, vmem: bool = False,
+                   key_suffix: str = "") -> Cost:
+        key = (name, top, vmem, key_suffix)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(name)
+        cost = Cost()
+        if comp is None:
+            self._memo[key] = cost
+            return cost
+        self._memo[key] = cost           # break cycles defensively
+        for ins in comp.instrs:
+            cost.add(self._instr_cost(comp, ins, top, vmem, key_suffix))
+        return cost
+
+    def _instr_cost(self, comp: Computation, ins: Instr, top: bool,
+                    vmem: bool = False, key_suffix: str = "") -> Cost:
+        op = ins.opcode
+        c = Cost()
+        body, cond, calls, branches = (None, None, None, [])
+        if "=" in ins.attrs and ("body=" in ins.attrs or "calls=" in ins.attrs
+                                 or "condition=" in ins.attrs
+                                 or "branch_computations" in ins.attrs
+                                 or "to_apply=" in ins.attrs):
+            body, cond, calls, branches = _attr_targets(ins)
+
+        if op == "while" and body:
+            trips = _trip_count(ins)
+            if trips == 1.0 and '"known_trip_count"' not in ins.attrs:
+                c.unknown_trip_whiles += 1
+            inner_vmem = vmem
+            boundary = False
+            if (key_suffix == "kern" and not vmem
+                    and self.layer_trips is not None
+                    and not self._has_while(body)
+                    and trips not in self.layer_trips):
+                inner_vmem = True        # kernel-resident interior
+                boundary = True
+            inner = Cost()
+            inner.add(self._comp_cost(body, top, inner_vmem, key_suffix))
+            if cond:
+                inner.add(self._comp_cost(cond, False, inner_vmem,
+                                          key_suffix))
+            c.add(inner.scaled(trips))
+            if boundary and top:
+                # the fused kernel reads its inputs and writes its outputs
+                # exactly once (q/k/v + carries live in the init tuple)
+                io = _operand_bytes(comp, ins) + ins.shape_bytes
+                c.bytes += io
+                c.bytes_hi += io
+            return c
+
+        if op == "conditional" and branches:
+            costs = [self._comp_cost(b, top, vmem, key_suffix)
+                     for b in branches]
+            if costs:
+                c.add(max(costs, key=lambda x: x.flops))
+            return c
+
+        if op in ("call", "async-start") and calls:
+            c.add(self._comp_cost(calls, top, vmem, key_suffix))
+            return c
+
+        if op == "fusion" and calls:
+            inner = self._comp_cost(calls, False, vmem, key_suffix)
+            c.flops += inner.flops
+            c.coll_bytes += inner.coll_bytes
+            for t, v in inner.coll_by_type.items():
+                c.coll_by_type[t] = c.coll_by_type.get(t, 0.0) + v
+            if top and not vmem:
+                io_bytes = _effective_io(
+                    comp, ins,
+                    self.comps.get(calls) if self._fusion_has_dus(calls)
+                    else None)
+                c.bytes_hi += io_bytes
+                if self._fusion_materializes(calls):
+                    c.bytes += io_bytes
+            return c
+
+        # --- leaf ops ----------------------------------------------------
+        if op.startswith(COLLECTIVES) and not op.endswith("-done"):
+            nbytes = _operand_bytes(comp, ins)
+            base = next(t for t in COLLECTIVES if op.startswith(t))
+            c.coll_bytes += nbytes
+            c.coll_by_type[base] = c.coll_by_type.get(base, 0.0) + nbytes
+            if top:
+                c.bytes += nbytes + ins.shape_bytes
+                c.bytes_hi += nbytes + ins.shape_bytes
+            return c
+
+        if op in ("dot", "dot-general"):
+            c.flops += _dot_flops(comp, ins)
+        elif op == "convolution":
+            # approximate: 2 * out_elems * (in_channels * window) — parse
+            # the kernel operand size / out_channels
+            rhs = comp.table.get(ins.operands[1]) if len(ins.operands) > 1 \
+                else None
+            k = rhs.shape_elems if rhs else 1.0
+            c.flops += 2.0 * ins.shape_elems * max(k / max(ins.out_dims[0][-1]
+                                                   if ins.out_dims and
+                                                   ins.out_dims[0] else 1.0,
+                                                   1.0), 1.0)
+        elif op in ELEMENTWISE:
+            c.flops += ins.shape_elems
+        elif op in ("reduce", "reduce-window"):
+            src = comp.table.get(ins.operands[0]) if ins.operands else None
+            c.flops += src.shape_elems if src else ins.shape_elems
+        elif op in ("scatter", "gather", "dynamic-slice",
+                    "dynamic-update-slice", "sort"):
+            pass                                  # bytes-only ops
+
+        if top and op not in SKIP_BYTES and not vmem:
+            io_bytes = _effective_io(comp, ins, None)
+            c.bytes_hi += io_bytes
+            if op in MATERIALIZING:
+                c.bytes += io_bytes
+        return c
+
+
+# ---------------------------------------------------------------------------
+# public API
+
+
+def analyze_hlo_text(text: str, layer_trips: Optional[set] = None) -> dict:
+    comps, entry = parse_hlo(text)
+    model = HloCostModel(comps, entry, layer_trips=layer_trips)
+    cost = model.total()
+    out = {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "bytes_hi": cost.bytes_hi,
+        "collective_bytes": cost.coll_bytes,
+        "collectives_by_type": cost.coll_by_type,
+        "unknown_trip_whiles": cost.unknown_trip_whiles,
+        "n_computations": len(comps),
+    }
+    if layer_trips is not None:
+        out["bytes_kernelized"] = model.total_kernelized().bytes
+    return out
+
+
+def analyze_hlo_file(path: str, layer_trips: Optional[set] = None) -> dict:
+    opener = gzip.open if path.endswith(".gz") else open
+    with opener(path, "rt") as f:
+        return analyze_hlo_text(f.read(), layer_trips=layer_trips)

@@ -1,0 +1,89 @@
+"""Batched serving engine: prefill + decode with per-sequence positions.
+
+Slot-based continuous batching: a fixed batch of slots, each holding one
+request's cache region; finished slots are refilled from the queue.  The
+decode step is one jitted program (cache donated, updated in place);
+per-sequence ``pos`` makes slots independent, which is what allows
+requests of different lengths to share a batch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, init_cache, init_params, prefill
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray                 # (len,) int32
+    max_new_tokens: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4,
+                 max_len: int = 256, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.cache = init_cache(cfg, batch_slots, max_len)
+        self.pos = jnp.zeros((batch_slots,), jnp.int32)
+        self.active: List[Optional[Request]] = [None] * batch_slots
+        self._tokens = jnp.zeros((batch_slots, 1), jnp.int32)
+
+        def step(params, cache, tokens, pos):
+            logits, cache = decode_step(params, cfg, cache, tokens, pos)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, cache
+
+        self._step = jax.jit(step, donate_argnums=(1,))
+
+    # ----------------------------------------------------------- lifecycle
+    def _admit(self, queue: List[Request]) -> None:
+        for i in range(self.slots):
+            if self.active[i] is None and queue:
+                req = queue.pop(0)
+                self.active[i] = req
+                # sequential prefill into slot i (simple: token-by-token)
+                toks = np.asarray(req.prompt, np.int32)
+                pos = self.pos
+                tokens = self._tokens
+                for t in toks:
+                    tokens = tokens.at[i, 0].set(int(t))
+                    nxt, self.cache = self._step(self.params, self.cache,
+                                                 tokens, pos)
+                    pos = pos.at[i].add(1)
+                self.pos = pos
+                self._tokens = tokens.at[i, 0].set(int(nxt[i]))
+                req.out.append(int(nxt[i]))
+
+    def serve(self, requests: List[Request]) -> List[Request]:
+        """Run until all requests complete; returns them with .out filled."""
+        queue = list(requests)
+        self._admit(queue)
+        while any(r is not None for r in self.active) or queue:
+            nxt, self.cache = self._step(self.params, self.cache,
+                                         self._tokens, self.pos)
+            self.pos = self.pos + jnp.asarray(
+                [1 if r is not None else 0 for r in self.active],
+                jnp.int32)
+            for i, req in enumerate(self.active):
+                if req is None:
+                    continue
+                tok = int(nxt[i])
+                req.out.append(tok)
+                if (len(req.out) >= req.max_new_tokens
+                        or int(self.pos[i]) >= self.max_len - 1):
+                    req.done = True
+                    self.active[i] = None
+            self._tokens = nxt[:, None]
+            self._admit(queue)
+        return requests

@@ -1,0 +1,164 @@
+"""Optimizers: AdamW and (factored) Adafactor, pure JAX pytree transforms.
+
+Adafactor factors the second moment of any leaf whose trailing two dims are
+both >= 128 into row/col statistics — O(n+m) instead of O(nm) state — which
+is what lets the 90B–314B configs fit the 16 GB/chip HBM budget (see
+DESIGN.md §4).  Optimizer-state sharding specs are derived from the
+parameter specs leaf-by-leaf so pjit shards state exactly like params.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    # adafactor
+    factored_threshold: int = 128
+    clip_rms: float = 1.0
+    warmup_steps: int = 100
+
+
+def for_model(cfg: ModelConfig, lr: float = 3e-4) -> OptimizerConfig:
+    if cfg.optimizer == "adafactor":
+        return OptimizerConfig(name="adafactor", lr=lr, b1=0.0, b2=0.999)
+    return OptimizerConfig(name="adamw", lr=lr)
+
+
+def _is_factored(ocfg: OptimizerConfig, shape) -> bool:
+    return (len(shape) >= 2 and shape[-1] >= ocfg.factored_threshold
+            and shape[-2] >= ocfg.factored_threshold)
+
+
+# ---------------------------------------------------------------------------
+# state init
+
+
+def init_opt_state(ocfg: OptimizerConfig, params) -> dict:
+    def leaf_state(p):
+        if ocfg.name == "adamw":
+            return {"m": jnp.zeros_like(p, jnp.float32),
+                    "v": jnp.zeros_like(p, jnp.float32)}
+        # adafactor
+        st = {}
+        if ocfg.b1 > 0:
+            st["m"] = jnp.zeros_like(p, jnp.float32)
+        if _is_factored(ocfg, p.shape):
+            st["v_row"] = jnp.zeros(p.shape[:-1], jnp.float32)
+            st["v_col"] = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        else:
+            st["v"] = jnp.zeros_like(p, jnp.float32)
+        return st
+
+    return {"leaves": jax.tree.map(leaf_state, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def opt_state_specs(ocfg: OptimizerConfig, param_specs, params_shape):
+    """Specs for the opt-state tree mirroring the parameter specs."""
+    def leaf_spec(spec: P, p):
+        out = {}
+        if ocfg.name == "adamw":
+            return {"m": spec, "v": spec}
+        if ocfg.b1 > 0:
+            out["m"] = spec
+        entries = list(spec) + [None] * (len(p.shape) - len(spec))
+        if _is_factored(ocfg, p.shape):
+            out["v_row"] = P(*entries[:-1])
+            out["v_col"] = P(*(entries[:-2] + entries[-1:]))
+        else:
+            out["v"] = spec
+        return out
+
+    leaves = jax.tree.map(leaf_spec, param_specs, params_shape,
+                          is_leaf=lambda x: isinstance(x, P))
+    return {"leaves": leaves, "step": P()}
+
+
+# ---------------------------------------------------------------------------
+# updates
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def _schedule(ocfg: OptimizerConfig, step) -> jnp.ndarray:
+    warm = jnp.minimum(1.0, (step + 1) / max(ocfg.warmup_steps, 1))
+    return ocfg.lr * warm
+
+
+def apply_updates(ocfg: OptimizerConfig, params, grads, opt_state):
+    """Returns (new_params, new_opt_state, stats)."""
+    step = opt_state["step"]
+    lr = _schedule(ocfg, step)
+    gnorm = _global_norm(grads)
+    scale = jnp.where(ocfg.grad_clip > 0,
+                      jnp.minimum(1.0, ocfg.grad_clip / (gnorm + 1e-9)), 1.0)
+    t = (step + 1).astype(jnp.float32)
+
+    def upd_adamw(p, g, st):
+        g = g.astype(jnp.float32) * scale
+        m = ocfg.b1 * st["m"] + (1 - ocfg.b1) * g
+        v = ocfg.b2 * st["v"] + (1 - ocfg.b2) * jnp.square(g)
+        mhat = m / (1 - ocfg.b1 ** t)
+        vhat = v / (1 - ocfg.b2 ** t)
+        delta = mhat / (jnp.sqrt(vhat) + ocfg.eps)
+        delta = delta + ocfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, {"m": m, "v": v}
+
+    def upd_adafactor(p, g, st):
+        g = g.astype(jnp.float32) * scale
+        g2 = jnp.square(g) + 1e-30
+        new_st = {}
+        if _is_factored(ocfg, p.shape):
+            v_row = ocfg.b2 * st["v_row"] + (1 - ocfg.b2) * jnp.mean(g2, -1)
+            v_col = ocfg.b2 * st["v_col"] + (1 - ocfg.b2) * jnp.mean(g2, -2)
+            new_st["v_row"], new_st["v_col"] = v_row, v_col
+            row_mean = jnp.mean(v_row, -1, keepdims=True)
+            vhat = (v_row / jnp.maximum(row_mean, 1e-30))[..., None] \
+                * v_col[..., None, :]
+        else:
+            v = ocfg.b2 * st["v"] + (1 - ocfg.b2) * g2
+            new_st["v"] = v
+            vhat = v
+        u = g * jax.lax.rsqrt(vhat + 1e-30)
+        # RMS clipping (adafactor's update clipping)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, rms / ocfg.clip_rms)
+        if ocfg.b1 > 0:
+            m = ocfg.b1 * st["m"] + (1 - ocfg.b1) * u
+            new_st["m"] = m
+            u = m
+        u = u + ocfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return new_p, new_st
+
+    upd = upd_adamw if ocfg.name == "adamw" else upd_adafactor
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_s = treedef.flatten_up_to(opt_state["leaves"])
+    new_p, new_s = [], []
+    for p, g, st in zip(flat_p, flat_g, flat_s):
+        np_, ns_ = upd(p, g, st)
+        new_p.append(np_)
+        new_s.append(ns_)
+    params = jax.tree_util.tree_unflatten(treedef, new_p)
+    leaves = jax.tree_util.tree_unflatten(treedef, new_s)
+    stats = {"grad_norm": gnorm, "lr": lr}
+    return params, {"leaves": leaves, "step": step + 1}, stats

@@ -1,0 +1,148 @@
+"""Trainer: the end-to-end loop tying together the instrumented data
+pipeline, the jitted train step, fault-tolerant checkpointing, and the
+tf-Darshan profiling/auto-tuning hooks.
+
+Fault tolerance: the loop auto-resumes from the newest checkpoint on
+start; a ``FailureInjector`` (tests) or any exception inside the step is
+survived by restoring the last checkpoint and continuing.  The profiling
+callback mirrors tf-Darshan's "automatic" mode: profile a window of
+steps, then let the advisor adjust reader parallelism / propose staging.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.session import StepCallback
+from repro.models import init_params
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import OptimizerConfig, for_model, init_opt_state
+from repro.train.train_step import make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "checkpoints"
+    checkpoint_async: bool = True
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    microbatches: int = 1
+    profile_first: int = -1           # -1 = no profiling window
+    profile_last: int = -1
+    profile_every: Optional[int] = None
+    seed: int = 0
+
+
+class FailureInjector:
+    """Raises at a chosen step once — used to test checkpoint/restart."""
+
+    def __init__(self, fail_at_step: Optional[int] = None):
+        self.fail_at_step = fail_at_step
+        self.fired = False
+
+    def maybe_fail(self, step: int) -> None:
+        if (self.fail_at_step is not None and step == self.fail_at_step
+                and not self.fired):
+            self.fired = True
+            raise RuntimeError(f"injected failure at step {step}")
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig,
+                 batches: Iterator[np.ndarray],
+                 ocfg: Optional[OptimizerConfig] = None,
+                 failure: Optional[FailureInjector] = None,
+                 extra_batch: Optional[dict] = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.ocfg = ocfg or for_model(cfg)
+        self.batches = batches
+        self.failure = failure
+        self.extra_batch = extra_batch or {}
+        self.ckpt = CheckpointManager(tcfg.checkpoint_dir,
+                                      keep=tcfg.keep_checkpoints)
+        self._step_fn = jax.jit(
+            make_train_step(cfg, self.ocfg,
+                            microbatches=tcfg.microbatches),
+            donate_argnums=(0, 1))
+        self.metrics_log: list = []
+        self.profiler: Optional[StepCallback] = None
+        if tcfg.profile_first >= 0:
+            self.profiler = StepCallback(tcfg.profile_first,
+                                         tcfg.profile_last,
+                                         every=tcfg.profile_every)
+
+    # ------------------------------------------------------------------ init
+    def init_state(self):
+        params = init_params(self.cfg, jax.random.PRNGKey(self.tcfg.seed))
+        opt_state = init_opt_state(self.ocfg, params)
+        return params, opt_state, 0
+
+    def _restore_or_init(self):
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return self.init_state()
+        params, opt_state, _ = self.init_state()
+        state, extra = self.ckpt.restore(
+            latest, target_tree={"params": params, "opt": opt_state})
+        return state["params"], state["opt"], extra.get("step", latest)
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> dict:
+        params, opt_state, start_step = self._restore_or_init()
+        step = start_step
+        t_begin = time.perf_counter()
+        while step < self.tcfg.steps:
+            try:
+                step = self._run_span(params, opt_state, step)
+                break
+            except RuntimeError as e:
+                if "injected failure" not in str(e):
+                    raise
+                # failure recovery: reload newest checkpoint and continue
+                self.ckpt.wait()
+                params, opt_state, step = self._restore_or_init()
+        self.ckpt.wait()
+        wall = time.perf_counter() - t_begin
+        return {"final_step": step, "wall_s": wall,
+                "metrics": self.metrics_log,
+                "profile_reports": (self.profiler.reports
+                                    if self.profiler else [])}
+
+    def _run_span(self, params, opt_state, step) -> int:
+        while step < self.tcfg.steps:
+            if self.profiler:
+                self.profiler.on_step_begin(step)
+            batch_tokens = next(self.batches)
+            batch = {"tokens": jnp.asarray(batch_tokens)}
+            batch.update(self.extra_batch)
+            if self.failure:
+                self.failure.maybe_fail(step)
+            params, opt_state, metrics = self._step_fn(params, opt_state,
+                                                       batch)
+            if self.profiler:
+                self.profiler.on_step_end(step)
+            step += 1
+            if step % self.tcfg.log_every == 0 or step == self.tcfg.steps:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = step
+                self.metrics_log.append(m)
+            if step % self.tcfg.checkpoint_every == 0 \
+                    or step == self.tcfg.steps:
+                tree = {"params": params, "opt": opt_state}
+                if self.tcfg.checkpoint_async and step != self.tcfg.steps:
+                    self.ckpt.save_async(step, tree, extra={"step": step})
+                else:
+                    self.ckpt.wait()     # drain any in-flight async save
+                    self.ckpt.save(step, tree, extra={"step": step})
+        # keep final state reachable for callers/tests
+        self._final = (params, opt_state)
+        return step

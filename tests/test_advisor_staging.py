@@ -1,0 +1,102 @@
+"""Advisor + staging tests: plan properties, autotuning, tier behaviour."""
+import os
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.advisor import (StagingAdvisor, ThreadAutotuneAdvisor,
+                                workload_character)
+from repro.core.analysis import analyze
+from repro.core.records import FileRecord
+from repro.core.staging import StagingManager
+
+SETTINGS = dict(deadline=None, max_examples=30)
+
+
+def _report_from_sizes(sizes: dict):
+    recs = {p: FileRecord(p, {"POSIX_READS": 1, "POSIX_OPENS": 1,
+                              "POSIX_BYTES_READ": s}) for p, s in
+            sizes.items()}
+    rep = analyze(recs, {}, elapsed_s=1.0, stat_sizes=False)
+    rep.file_sizes = dict(sizes)
+    return rep
+
+
+@given(st.dictionaries(st.integers(0, 200).map(lambda i: f"/d/f{i}"),
+                       st.integers(1, 8 * 2**20), min_size=1, max_size=50),
+       st.integers(1, 4 * 2**20))
+@settings(**SETTINGS)
+def test_plan_respects_threshold_and_prefers_smallest(sizes, threshold):
+    plan = StagingAdvisor(size_threshold=threshold).plan(
+        _report_from_sizes(sizes))
+    chosen = dict(plan.files)
+    assert all(s < threshold for s in chosen.values())
+    # every unchosen under-threshold file must be >= the largest chosen
+    if chosen:
+        biggest = max(chosen.values())
+        for p, s in sizes.items():
+            if p not in chosen and s < threshold:
+                assert s >= biggest
+
+
+@given(st.dictionaries(st.integers(0, 100).map(lambda i: f"/d/f{i}"),
+                       st.integers(1, 2**20), min_size=1, max_size=40),
+       st.integers(1, 2**21))
+@settings(**SETTINGS)
+def test_plan_respects_capacity_budget(sizes, capacity):
+    plan = StagingAdvisor(size_threshold=2**22,
+                          capacity_bytes=capacity).plan(
+        _report_from_sizes(sizes))
+    assert plan.total_bytes <= capacity
+
+
+def test_plan_summary_mirrors_paper_fractions():
+    sizes = {f"/d/small{i}": 300_000 for i in range(40)}
+    sizes.update({f"/d/big{i}": 4_000_000 for i in range(60)})
+    plan = StagingAdvisor(size_threshold=2_000_000).plan(
+        _report_from_sizes(sizes))
+    assert plan.total_files == 40
+    assert plan.files_frac == pytest.approx(0.4)
+    assert plan.bytes_frac == pytest.approx(
+        40 * 300_000 / (40 * 300_000 + 60 * 4_000_000))
+
+
+def test_autotune_scales_up_on_gains_and_backs_off_on_regression():
+    adv = ThreadAutotuneAdvisor(start=1)
+    a = adv.observe(1, 10.0)
+    assert a.threads > 1                     # explore upward
+    b = adv.observe(a.threads, 40.0)         # big gain -> continue
+    assert b.threads > a.threads
+    c = adv.observe(b.threads, 20.0)         # regression -> back off
+    assert c.threads == a.threads
+    assert adv.best() == a.threads
+
+
+def test_staging_manager_stage_and_resolve(tmp_path):
+    src = tmp_path / "slow"
+    src.mkdir()
+    files = []
+    for i in range(3):
+        f = src / f"{i}.bin"
+        f.write_bytes(bytes([i]) * 100)
+        files.append((str(f), 100))
+    from repro.core.advisor import StagingPlan
+    plan = StagingPlan(files=tuple(files), total_bytes=300, total_files=3,
+                       dataset_bytes=300, dataset_files=3,
+                       size_threshold=1000)
+    mgr = StagingManager(str(tmp_path / "fast"))
+    res = mgr.stage(plan)
+    assert res.bytes_copied == 300
+    for path, _ in files:
+        staged = mgr.resolve(path)
+        assert staged != path and os.path.exists(staged)
+        assert open(staged, "rb").read() == open(path, "rb").read()
+    mgr.unstage_all()
+    assert mgr.resolve(files[0][0]) == files[0][0]
+
+
+def test_workload_character():
+    small = _report_from_sizes({f"/f{i}": 90_000 for i in range(10)})
+    large = _report_from_sizes({f"/f{i}": 4_000_000 for i in range(10)})
+    assert workload_character(small) == "small-file"
+    assert workload_character(large) == "large-file"

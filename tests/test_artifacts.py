@@ -1,0 +1,79 @@
+"""Guard tests over the committed experiment artifacts: every dry-run
+cell must be ok, the cell matrix must cover every assigned architecture
+x applicable shape on both meshes, and per-device memory must respect
+the HBM budget (grok-1-314b single-pod is the one documented waiver,
+EXPERIMENTS.md §Perf)."""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs import get_config, list_archs, shapes_for
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "dryrun")
+
+pytestmark = pytest.mark.skipif(
+    not glob.glob(os.path.join(DRYRUN, "*.json")),
+    reason="dry-run artifacts not generated")
+
+HBM = 16 * 2**30
+# Documented single-pod waivers (EXPERIMENTS.md §Dry-run notes): these
+# cells fit on the 512-chip multi-pod production mesh; on 256 chips the
+# >100B configs and the 32k KV caches exceed one v5e's HBM (residual
+# non-aliased cache copy on this CPU backend adds ~1x cache).
+WAIVERS = {
+    ("grok-1-314b", "train_4k", "single"),
+    ("grok-1-314b", "prefill_32k", "single"),
+    ("grok-1-314b", "decode_32k", "single"),
+    ("dbrx-132b", "prefill_32k", "single"),
+    ("gemma3-12b", "decode_32k", "single"),
+    ("llama-3.2-vision-90b", "decode_32k", "single"),
+    ("qwen1.5-4b", "decode_32k", "single"),
+}
+
+
+def _cells():
+    out = {}
+    for path in glob.glob(os.path.join(DRYRUN, "*.json")):
+        rec = json.load(open(path))
+        out[(rec["arch"], rec["shape"], rec["mesh"])] = rec
+    return out
+
+
+def test_every_assigned_cell_compiled():
+    cells = _cells()
+    missing = []
+    for arch in list_archs():
+        for shape in shapes_for(get_config(arch)):
+            for mesh in ("single", "multi"):
+                key = (arch, shape.name, mesh)
+                if key not in cells or not cells[key].get("ok"):
+                    missing.append(key)
+    assert not missing, missing
+
+
+def test_long_500k_runs_exactly_for_subquadratic_archs():
+    cells = _cells()
+    ran = {a for (a, s, m) in cells if s == "long_500k"}
+    expected = {a for a in list_archs()
+                if get_config(a).supports_long_context}
+    assert ran == expected
+
+
+def test_per_device_memory_within_budget():
+    over = []
+    for key, rec in _cells().items():
+        if not rec.get("ok"):
+            continue
+        mem = rec["memory"]["per_device_total"]
+        if mem > HBM and key not in WAIVERS:
+            over.append((key, round(mem / 2**30, 2)))
+    assert not over, over
+
+
+def test_multi_pod_uses_512_devices():
+    for key, rec in _cells().items():
+        expected = 512 if key[2] == "multi" else 256
+        assert rec["n_devices"] == expected, key

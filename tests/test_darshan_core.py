@@ -1,0 +1,182 @@
+"""Unit tests for the jax-darshan core: counters, runtime attachment,
+session deltas, DXT tracing, exports."""
+import json
+import os
+
+import pytest
+
+from repro.core import counters as C
+from repro.core import (ProfileSession, reset_runtime, to_chrome_trace,
+                        to_darshan_log, to_json_report)
+from repro.core.attach import attach, detach, is_attached, originals
+from repro.core.records import FileRecord, delta
+from repro.core.session import ProfileServer, control
+
+
+def test_size_bins_match_darshan_bounds():
+    assert C.size_bin(0) == 0
+    assert C.size_bin(99) == 0
+    assert C.size_bin(100) == 1
+    assert C.size_bin(999_999) == 4
+    assert C.size_bin(1_000_000) == 5
+    assert C.size_bin(5_000_000_000) == 9
+    assert C.read_bin_name(0) == "POSIX_SIZE_READ_0_100"
+
+
+def test_attach_detach_restores_symbols():
+    rt = reset_runtime()
+    orig_open, orig_read = os.open, os.read
+    attach(rt)
+    assert is_attached()
+    assert os.open is not orig_open
+    detach()
+    assert not is_attached()
+    assert os.open is orig_open
+    assert os.read is orig_read
+
+
+def test_attach_is_idempotent_and_transparent(tmp_path):
+    rt = reset_runtime()
+    p = tmp_path / "f.bin"
+    p.write_bytes(b"x" * 1000)
+    attach(rt)
+    attach(rt)          # double attach must not wrap twice
+    rt.enabled = True
+    fd = os.open(str(p), os.O_RDONLY)
+    data = os.pread(fd, 4096, 0)
+    os.close(fd)
+    detach()
+    detach()
+    assert data == b"x" * 1000
+    rec = rt.posix.record(str(p))
+    assert rec.get("POSIX_OPENS") == 1
+    assert rec.get("POSIX_BYTES_READ") == 1000
+
+
+def test_counters_classify_sequential_consecutive(tmp_path):
+    rt = reset_runtime()
+    p = tmp_path / "f.bin"
+    p.write_bytes(bytes(range(256)) * 16)       # 4096 bytes
+    attach(rt)
+    rt.enabled = True
+    fd = os.open(str(p), os.O_RDONLY)
+    os.pread(fd, 100, 0)        # first read: no predecessor
+    os.pread(fd, 100, 100)      # consecutive (== prev end)
+    os.pread(fd, 100, 300)      # sequential (> prev end), not consecutive
+    os.pread(fd, 100, 0)        # backwards: neither
+    os.close(fd)
+    detach()
+    rec = rt.posix.record(str(p))
+    assert rec.get("POSIX_READS") == 4
+    assert rec.get("POSIX_CONSEC_READS") == 1
+    assert rec.get("POSIX_SEQ_READS") == 2
+    assert rec.get("POSIX_MAX_BYTE_READ") == 399
+
+
+def test_session_delta_isolates_window(tmp_path):
+    rt = reset_runtime()
+    p = tmp_path / "f.bin"
+    p.write_bytes(b"y" * 500)
+    attach(rt)
+    rt.enabled = True
+    fd = os.open(str(p), os.O_RDONLY)
+    os.pread(fd, 500, 0)                        # before the session
+    sess = ProfileSession(rt, auto_attach=False)
+    sess.start()
+    os.pread(fd, 200, 0)
+    os.pread(fd, 300, 200)
+    rep = sess.stop()
+    os.close(fd)
+    detach()
+    assert rep.posix.reads == 2                 # only in-window ops
+    assert rep.posix.bytes_read == 500
+    assert rep.posix.opens == 0                 # open was pre-window
+
+
+def test_stdio_layer_captures_buffered_writes(tmp_path):
+    rt = reset_runtime()
+    target = tmp_path / "out.txt"
+    with ProfileSession(rt) as sess:
+        with open(str(target), "w") as f:
+            f.write("hello ")
+            f.write("world")
+            f.flush()
+    rep = sess.reports[0]
+    assert rep.stdio.writes == 2
+    assert rep.stdio.bytes_written == 11
+    assert rep.stdio.flushes >= 1
+
+
+def test_exports_roundtrip(tmp_path):
+    rt = reset_runtime()
+    p = tmp_path / "data.bin"
+    p.write_bytes(b"z" * 2048)
+    with ProfileSession(rt) as sess:
+        fd = os.open(str(p), os.O_RDONLY)
+        os.pread(fd, 2048, 0)
+        os.close(fd)
+    rep = sess.reports[0]
+    trace = to_chrome_trace(rep.segments, str(tmp_path / "t.json"))
+    assert any(e.get("ph") == "X" for e in trace["traceEvents"])
+    text = to_darshan_log(rep)
+    assert "POSIX_BYTES_READ" in text and str(p) in text
+    payload = to_json_report(rep, str(tmp_path / "r.json"))
+    assert payload["posix"]["bytes_read"] == 2048
+    loaded = json.loads((tmp_path / "r.json").read_text())
+    assert loaded["posix"]["reads"] == payload["posix"]["reads"]
+
+
+def test_record_delta_semantics():
+    a = FileRecord("f", {"POSIX_READS": 10, "POSIX_MAX_BYTE_READ": 99},
+                   {"POSIX_F_READ_TIME": 1.0})
+    b = FileRecord("f", {"POSIX_READS": 25, "POSIX_MAX_BYTE_READ": 300},
+                   {"POSIX_F_READ_TIME": 2.5})
+    d = b.sub(a)
+    assert d.get("POSIX_READS") == 15
+    assert d.get("POSIX_MAX_BYTE_READ") == 300     # max, not difference
+    assert abs(d.get("POSIX_F_READ_TIME") - 1.5) < 1e-9
+
+
+def test_profile_server_interactive(tmp_path):
+    rt = reset_runtime()
+    srv = ProfileServer(runtime=rt)
+    try:
+        assert control(srv.port, "start") == "ok"
+        p = tmp_path / "f.bin"
+        p.write_bytes(b"q" * 4000)
+        fd = os.open(str(p), os.O_RDONLY)
+        os.pread(fd, 4000, 0)
+        os.close(fd)
+        out = json.loads(control(srv.port, "stop"))
+        assert out["bytes_read"] >= 4000
+    finally:
+        srv.close()
+    assert not is_attached()
+
+
+def test_excluded_prefixes_not_tracked():
+    rt = reset_runtime()
+    with ProfileSession(rt):
+        with open("/proc/self/status") as f:
+            f.read()
+    assert all(not p.startswith("/proc/")
+               for p in rt.posix.paths() + rt.stdio.paths())
+
+
+def test_report_render_text(tmp_path):
+    from repro.core.report import render, render_json
+    rt = reset_runtime()
+    p = tmp_path / "f.bin"
+    p.write_bytes(b"m" * 150_000)
+    with ProfileSession(rt) as sess:
+        fd = os.open(str(p), os.O_RDONLY)
+        os.pread(fd, 150_000, 0)
+        os.pread(fd, 0, 150_000)      # EOF probe
+        os.close(fd)
+    rep = sess.reports[0]
+    text = render(rep)
+    assert "POSIX" in text and "SIZE_100K_1M" in text
+    assert "double-read" in text      # diagnosed
+    payload = to_json_report(rep)
+    jtext = render_json(payload)
+    assert "reads=2" in jtext

@@ -1,0 +1,113 @@
+"""Property-based tests (hypothesis) for counter/analysis invariants."""
+import os
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import counters as C
+from repro.core.analysis import analyze, summarize_module
+from repro.core.records import FileRecord, ModuleBuffer, delta
+from repro.core.runtime import DarshanRuntime
+
+SETTINGS = dict(deadline=None, max_examples=40)
+
+# a synthetic stream of (file_id, offset, length) read ops
+read_ops = st.lists(
+    st.tuples(st.integers(0, 4),                # file id
+              st.integers(0, 1 << 20),          # offset
+              st.integers(0, 1 << 22)),         # length
+    min_size=1, max_size=60)
+
+
+def _apply(rt: DarshanRuntime, ops):
+    rt.enabled = True
+    for i, (fid, off, length) in enumerate(ops):
+        fd = 1000 + fid
+        if rt.fd_state(fd) is None:
+            rt.posix_open(fd, f"/data/f{fid}", rt.now(), rt.now())
+        rt.posix_read(fd, off, length, rt.now(), rt.now(), advance=False)
+
+
+@given(read_ops)
+@settings(**SETTINGS)
+def test_histogram_partitions_reads(ops):
+    rt = DarshanRuntime()
+    _apply(rt, ops)
+    summary = summarize_module("POSIX", rt.posix.snapshot())
+    assert sum(summary.read_size_hist) == summary.reads == len(ops)
+
+
+@given(read_ops)
+@settings(**SETTINGS)
+def test_bytes_read_equals_sum_of_lengths(ops):
+    rt = DarshanRuntime()
+    _apply(rt, ops)
+    summary = summarize_module("POSIX", rt.posix.snapshot())
+    assert summary.bytes_read == sum(length for _, _, length in ops)
+
+
+@given(read_ops)
+@settings(**SETTINGS)
+def test_consecutive_implies_sequential(ops):
+    rt = DarshanRuntime()
+    _apply(rt, ops)
+    for rec in rt.posix.snapshot().values():
+        consec = rec.get("POSIX_CONSEC_READS")
+        seq = rec.get("POSIX_SEQ_READS")
+        reads = rec.get("POSIX_READS")
+        assert consec <= seq <= reads
+        # first read of a file can never be classified
+        assert seq <= max(reads - 1, 0)
+
+
+@given(read_ops)
+@settings(**SETTINGS)
+def test_max_byte_read_is_max_extent(ops):
+    rt = DarshanRuntime()
+    _apply(rt, ops)
+    extents = {}
+    for fid, off, length in ops:
+        path = f"/data/f{fid}"
+        extents[path] = max(extents.get(path, 0), max(off + length - 1, 0))
+    for path, rec in rt.posix.snapshot().items():
+        assert rec.get("POSIX_MAX_BYTE_READ") == extents[path]
+
+
+@given(read_ops, read_ops)
+@settings(**SETTINGS)
+def test_snapshot_delta_equals_window_ops(before, during):
+    """delta(stop, start) must reflect exactly the ops in the window."""
+    rt = DarshanRuntime()
+    _apply(rt, before)
+    start = rt.posix.snapshot()
+    _apply(rt, during)
+    stop = rt.posix.snapshot()
+    d = delta(stop, start)
+    total_reads = sum(rec.get("POSIX_READS") for rec in d.values())
+    # opens inside the window also occur for new fds
+    expected = len(during)
+    assert total_reads == expected
+    total_bytes = sum(rec.get("POSIX_BYTES_READ") for rec in d.values())
+    assert total_bytes == sum(length for _, _, length in during)
+
+
+@given(st.integers(0, 10**12))
+@settings(**SETTINGS)
+def test_size_bin_total_and_monotone(n):
+    b = C.size_bin(n)
+    assert 0 <= b < len(C.SIZE_BIN_NAMES)
+    if n > 0:
+        assert C.size_bin(n - 1) <= b
+
+
+def test_eof_pattern_detector_threshold():
+    rt = DarshanRuntime()
+    rt.enabled = True
+    for fid in range(10):
+        fd = 2000 + fid
+        rt.posix_open(fd, f"/d/f{fid}", 0.0, 0.0)
+        rt.posix_read(fd, 0, 1000, 0.0, 0.0, advance=False)
+        rt.posix_read(fd, 1000, 0, 0.0, 0.0, advance=False)   # EOF probe
+    rep = analyze(rt.posix.snapshot(), {}, elapsed_s=1.0, stat_sizes=False)
+    assert rep.has_eof_double_read_pattern()
+    assert rep.zero_read_frac == pytest.approx(0.5)

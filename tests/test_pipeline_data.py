@@ -1,0 +1,154 @@
+"""Data pipeline, dataset sharding, JRecord and tier tests (incl.
+hypothesis properties)."""
+import os
+import threading
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.dataset import FileDataset
+from repro.data.jrecord import JRecordReader, JRecordWriter, pack_files
+from repro.data.pipeline import AUTOTUNE, Pipeline
+from repro.data.readers import posix_read_file, sized_read_file
+
+SETTINGS = dict(deadline=None, max_examples=30)
+
+
+@given(st.integers(1, 50), st.integers(1, 8))
+@settings(**SETTINGS)
+def test_sharding_partitions_files(n_files, n_shards):
+    ds = FileDataset(tuple(f"/f/{i}" for i in range(n_files)))
+    seen = []
+    for idx in range(n_shards):
+        seen.extend(ds.shard(n_shards, idx).files)
+    assert sorted(seen) == sorted(ds.files)          # exactly-once coverage
+
+
+@given(st.integers(1, 40), st.integers(0, 2**32 - 1))
+@settings(**SETTINGS)
+def test_shuffle_is_permutation_and_deterministic(n, seed):
+    ds = FileDataset(tuple(f"/f/{i}" for i in range(n)))
+    a, b = ds.shuffle(seed), ds.shuffle(seed)
+    assert a.files == b.files
+    assert sorted(a.files) == sorted(ds.files)
+
+
+def test_pipeline_preserves_order_and_batches():
+    items = list(range(37))
+    out = list(Pipeline(items).map(lambda x: x * 2, 4).batch(8))
+    flat = [x for b in out for x in b]
+    assert flat == [x * 2 for x in items]
+    assert [len(b) for b in out] == [8, 8, 8, 8, 5]
+    out2 = list(Pipeline(items).map(lambda x: x, 4)
+                .batch(8, drop_remainder=True))
+    assert [len(b) for b in out2] == [8, 8, 8, 8]
+
+
+def test_pipeline_prefetch_overlaps():
+    def slow(x):
+        time.sleep(0.02)
+        return x
+    items = list(range(16))
+    t0 = time.perf_counter()
+    out = []
+    for x in Pipeline(items).map(slow, 8).prefetch(4):
+        time.sleep(0.02)          # consumer work overlapped with producers
+        out.append(x)
+    wall = time.perf_counter() - t0
+    assert out == items
+    assert wall < 16 * 0.04 * 0.8     # must beat fully-serial execution
+
+
+def test_pipeline_propagates_exceptions():
+    def boom(x):
+        if x == 3:
+            raise ValueError("boom")
+        return x
+    with pytest.raises(ValueError, match="boom"):
+        list(Pipeline(range(8)).map(boom, 2).prefetch(2))
+
+
+def test_pipeline_hedge_recovers_straggler():
+    calls = {"n": 0}
+    lock = threading.Lock()
+
+    def sometimes_slow(x):
+        with lock:
+            calls["n"] += 1
+            first = calls["n"] == 1
+        if first and x == 0:
+            time.sleep(0.5)       # straggler on first attempt only
+        return x
+
+    t0 = time.perf_counter()
+    out = list(Pipeline(range(4)).map(sometimes_slow, 2).hedge(0.05))
+    assert out == [0, 1, 2, 3]
+    assert time.perf_counter() - t0 < 0.45
+
+
+def test_pipeline_autotune_runs():
+    out = list(Pipeline(list(range(100)))
+               .map(lambda x: bytes(100), AUTOTUNE).batch(10))
+    assert sum(len(b) for b in out) == 100
+
+
+@given(st.lists(st.binary(min_size=0, max_size=2000), min_size=1,
+                max_size=20))
+@settings(**SETTINGS)
+def test_jrecord_roundtrip(payloads):
+    import tempfile
+    tmp = tempfile.mkdtemp(prefix="jrec_")
+    path = os.path.join(tmp, "shard.jrec")
+    with JRecordWriter(path) as w:
+        for p in payloads:
+            w.write(p)
+    r = JRecordReader(path)
+    assert len(r) == len(payloads)
+    assert list(r) == payloads                       # sequential scan
+    for i in (0, len(payloads) - 1):
+        assert r.read(i) == payloads[i]              # random access
+    import shutil
+    shutil.rmtree(tmp, ignore_errors=True)
+
+
+def test_jrecord_detects_corruption(tmp_path):
+    path = str(tmp_path / "s.jrec")
+    with JRecordWriter(path) as w:
+        w.write(b"A" * 100)
+    with open(path, "r+b") as f:
+        f.seek(30)
+        f.write(b"\xff")
+    with pytest.raises(IOError, match="crc"):
+        JRecordReader(path).read(0)
+
+
+def test_readers_equivalent_but_different_read_counts(tmp_path):
+    from repro.core import ProfileSession, reset_runtime
+    p = tmp_path / "f.bin"
+    p.write_bytes(b"r" * 300_000)
+    rt = reset_runtime()
+    with ProfileSession(rt) as s1:
+        a = posix_read_file(str(p), chunk_size=65536)
+    rep1 = s1.reports[0]
+    rt = reset_runtime()
+    with ProfileSession(rt) as s2:
+        b = sized_read_file(str(p), chunk_size=65536)
+    rep2 = s2.reports[0]
+    assert a == b
+    # paper-faithful reader pays the zero-length EOF probe
+    assert rep1.posix.zero_reads == 1 and rep2.posix.zero_reads == 0
+    assert rep1.posix.reads == rep2.posix.reads + 1
+
+
+def test_pack_files_concatenates(tmp_path):
+    files = []
+    for i in range(5):
+        f = tmp_path / f"{i}.bin"
+        f.write_bytes(bytes([i]) * (100 + i))
+        files.append(str(f))
+    out = str(tmp_path / "packed.jrec")
+    total = pack_files(files, out)
+    assert total == sum(100 + i for i in range(5))
+    rec = list(JRecordReader(out))
+    assert [len(r) for r in rec] == [100 + i for i in range(5)]
