@@ -14,7 +14,7 @@ import traceback
 from benchmarks.common import Row
 
 BENCHES = ("stream", "overhead", "threads", "staging", "checkpoint",
-           "kernels")
+           "kernels", "insight")
 
 
 def main() -> None:

@@ -1,0 +1,100 @@
+"""repro.insight demo: attach -> profile -> findings -> staging.
+
+Runs three synthetic I/O pathologies under a profiled session with the
+streaming insight engine, prints each diagnosis with its evidence and
+recommendation, then closes the loop by feeding the small-file finding
+into the StagingAdvisor.
+
+    PYTHONPATH=src python examples/insight_demo.py
+"""
+import os
+import random
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (ProfileSession, StagingAdvisor, reset_runtime,
+                        to_chrome_trace)
+
+
+def tiny_read_storm(root):
+    paths = []
+    for i in range(128):
+        p = os.path.join(root, f"tiny_{i:04d}.bin")
+        with open(p, "wb") as f:
+            f.write(b"x" * 2048)
+        paths.append(p)
+
+    def run():
+        for p in paths:
+            fd = os.open(p, os.O_RDONLY)
+            os.read(fd, 1 << 20)
+            os.close(fd)
+    return run
+
+
+def random_read_thrash(root):
+    big = os.path.join(root, "big.bin")
+    with open(big, "wb") as f:
+        f.write(b"z" * (16 << 20))
+    offsets = [i * 65536 for i in range(128)]
+    random.Random(11).shuffle(offsets)
+
+    def run():
+        fd = os.open(big, os.O_RDONLY)
+        for off in offsets:
+            os.pread(fd, 65536, off)
+        os.close(fd)
+    return run
+
+
+def fsync_checkpoint(root):
+    ckpt = os.path.join(root, "ckpt.bin")
+
+    def run():
+        fd = os.open(ckpt, os.O_WRONLY | os.O_CREAT, 0o644)
+        for _ in range(64):
+            os.write(fd, b"w" * 65536)
+            os.fsync(fd)
+        os.close(fd)
+    return run
+
+
+def main():
+    root = tempfile.mkdtemp(prefix="insight_demo_")
+    workloads = [("tiny-read storm", tiny_read_storm(root)),
+                 ("random-offset reads", random_read_thrash(root)),
+                 ("fsync-heavy checkpoint", fsync_checkpoint(root))]
+    try:
+        for name, workload in workloads:
+            rt = reset_runtime()
+            sess = ProfileSession(rt, insight=True)
+            with sess:
+                workload()
+            rep = sess.reports[0]
+            print(f"\n=== {name} "
+                  f"({rep.posix.reads} reads, {rep.posix.writes} writes, "
+                  f"{rep.posix_bandwidth_mb_s:.0f} MB/s) ===")
+            if not rep.findings:
+                print("  no findings")
+            for f in rep.findings:
+                bar = "#" * max(1, int(f.severity * 20))
+                print(f"  [{bar:<20}] {f.title} (severity {f.severity:.2f})")
+                print(f"    evidence:       {f.evidence}")
+                print(f"    recommendation: {f.recommendation}")
+
+            if any(f.detector == "small-file-storm" for f in rep.findings):
+                plan = StagingAdvisor().plan(rep, findings=rep.findings)
+                print(f"  -> staging loop closed: {plan.summary()}")
+
+            trace_path = os.path.join(root, "trace.json")
+            to_chrome_trace(rep.segments, trace_path, findings=rep.findings)
+            print(f"  trace with insight markers: {trace_path}")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,17 +5,29 @@ from repro.core.advisor import (StagingAdvisor, StagingPlan,
                                 ThreadAutotuneAdvisor, workload_character)
 from repro.core.analysis import SessionReport, analyze, slowest_files
 from repro.core.attach import attach, detach, is_attached
+from repro.core.dxt import DXTBuffer, Segment
 from repro.core.export import to_chrome_trace, to_darshan_log, to_json_report
 from repro.core.monitor import IOMonitor
 from repro.core.runtime import DarshanRuntime, get_runtime, reset_runtime
 from repro.core.session import ProfileServer, ProfileSession, StepCallback
 from repro.core.staging import StagingManager
 
+
+def __getattr__(name):
+    # Lazy: repro.insight imports repro.core submodules, so importing it
+    # eagerly here would cycle when repro.insight is imported first.
+    if name in ("Finding", "InsightEngine"):
+        import repro.insight as _insight
+        return getattr(_insight, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
     "StagingAdvisor", "StagingPlan", "ThreadAutotuneAdvisor",
     "workload_character", "SessionReport", "analyze", "slowest_files",
-    "attach", "detach", "is_attached", "to_chrome_trace", "to_darshan_log",
-    "to_json_report", "IOMonitor", "DarshanRuntime", "get_runtime",
-    "reset_runtime", "ProfileServer", "ProfileSession", "StepCallback",
-    "StagingManager",
+    "attach", "detach", "is_attached", "DXTBuffer", "Segment",
+    "to_chrome_trace", "to_darshan_log", "to_json_report", "IOMonitor",
+    "DarshanRuntime", "get_runtime", "reset_runtime", "ProfileServer",
+    "ProfileSession", "StepCallback", "StagingManager", "Finding",
+    "InsightEngine",
 ]

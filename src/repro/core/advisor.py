@@ -54,16 +54,29 @@ class StagingAdvisor:
         self.size_threshold = size_threshold
         self.capacity_bytes = capacity_bytes
 
-    def plan(self, report: SessionReport) -> StagingPlan:
+    def plan(self, report: SessionReport,
+             findings: Optional[List] = None) -> StagingPlan:
         """Choose read files below the threshold, smallest first, within
-        the fast-tier capacity budget."""
+        the fast-tier capacity budget.
+
+        Insight findings sharpen the plan: a ``small-file-storm``
+        finding widens the size threshold in proportion to its severity
+        (up to 2x), since the finding is direct evidence that the
+        sub-threshold tail — not the big files — is what's slow."""
+        threshold = self.size_threshold
+        if findings is None:
+            findings = getattr(report, "findings", None) or []
+        for f in findings:
+            if f.detector == "small-file-storm":
+                threshold = max(threshold,
+                                int(self.size_threshold * (1 + f.severity)))
         sizes = report.file_sizes
         read_files = [p for p, rec in report.per_file.items()
                       if rec.get("POSIX_READS", 0) > 0 and p in sizes]
         dataset_bytes = sum(sizes[p] for p in read_files)
         candidates = sorted(
             ((sizes[p], p) for p in read_files
-             if sizes[p] < self.size_threshold))
+             if sizes[p] < threshold))
         chosen: List[tuple] = []
         used = 0
         for sz, p in candidates:
@@ -76,7 +89,7 @@ class StagingAdvisor:
                            total_files=len(chosen),
                            dataset_bytes=dataset_bytes,
                            dataset_files=len(read_files),
-                           size_threshold=self.size_threshold)
+                           size_threshold=threshold)
 
 
 @dataclass
@@ -120,6 +133,31 @@ class ThreadAutotuneAdvisor:
         if not self.history:
             return self.current
         return max(self.history, key=lambda kv: kv[1])[0]
+
+    def bias_from_findings(self, findings) -> Optional[ThreadAdvice]:
+        """Override pure bandwidth hill-climbing with a streamed insight
+        diagnosis (the paper's §VII runtime auto-tuning closed-loop):
+
+        * straggler tail / tier saturation => contention; halve threads
+          instead of waiting for the bandwidth signal to regress,
+        * small-file storm => parallelism-friendly (the ImageNet 1->28
+          threads = 8x case); jump threads up.
+
+        Returns None when no relevant finding is present."""
+        names = {f.detector for f in findings or []}
+        if names & {"straggler-read-tail", "fast-tier-saturation"}:
+            nxt = max(self.current // 2, 1)
+            advice = ThreadAdvice(
+                nxt, "insight: contention (straggler/saturation); "
+                     "backing off threads")
+        elif "small-file-storm" in names:
+            nxt = min(max(self.current * 2, 2), self.max_threads)
+            advice = ThreadAdvice(
+                nxt, "insight: small-file storm; scaling up threads")
+        else:
+            return None
+        self.current = advice.threads
+        return advice
 
 
 def workload_character(report: SessionReport) -> str:

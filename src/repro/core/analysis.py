@@ -27,6 +27,7 @@ class ModuleSummary:
     seeks: int = 0
     stats: int = 0
     flushes: int = 0
+    fsyncs: int = 0
     zero_reads: int = 0
     bytes_read: int = 0
     bytes_written: int = 0
@@ -48,6 +49,7 @@ class SessionReport:
     file_sizes: Dict[str, int] = field(default_factory=dict)
     dxt_segments: int = 0
     analysis_time_s: float = 0.0
+    findings: list = field(default_factory=list)   # insight Finding objects
 
     # ------------------------------------------------------------ derived
     @property
@@ -127,6 +129,7 @@ def summarize_module(module: str, records: Dict[str, FileRecord]) \
         s.meta_time_s += g(f"{pre}_F_META_TIME")
         if module == "POSIX":
             s.stats += g("POSIX_STATS")
+            s.fsyncs += g("POSIX_FSYNCS")
             s.zero_reads += g("POSIX_ZERO_READS")
             s.consec_reads += g("POSIX_CONSEC_READS")
             s.seq_reads += g("POSIX_SEQ_READS")

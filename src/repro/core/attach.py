@@ -48,6 +48,7 @@ def attach(runtime: Optional[DarshanRuntime] = None) -> DarshanRuntime:
             "os.lseek": os.lseek,
             "os.close": os.close,
             "os.stat": os.stat,
+            "os.fsync": os.fsync,
             "builtins.open": builtins.open,
         })
         _install(rt)
@@ -69,6 +70,7 @@ def detach() -> None:
         os.lseek = _ORIGINALS["os.lseek"]
         os.close = _ORIGINALS["os.close"]
         os.stat = _ORIGINALS["os.stat"]
+        os.fsync = _ORIGINALS["os.fsync"]
         builtins.open = _ORIGINALS["builtins.open"]
         _ORIGINALS.clear()
         _ATTACHED = False
@@ -81,7 +83,7 @@ def originals() -> dict:
     return {"os.open": os.open, "os.read": os.read, "os.pread": os.pread,
             "os.write": os.write, "os.pwrite": os.pwrite,
             "os.lseek": os.lseek, "os.close": os.close, "os.stat": os.stat,
-            "builtins.open": builtins.open}
+            "os.fsync": os.fsync, "builtins.open": builtins.open}
 
 
 def _install(rt: DarshanRuntime) -> None:
@@ -139,6 +141,14 @@ def _install(rt: DarshanRuntime) -> None:
         rt.posix_seek(fd, new, t0, rt.now())
         return new
 
+    def w_fsync(fd):
+        if rt.fd_state(fd) is None:
+            return o["os.fsync"](fd)
+        t0 = rt.now()
+        r = o["os.fsync"](fd)
+        rt.posix_fsync(fd, t0, rt.now())
+        return r
+
     def w_close(fd):
         if rt.fd_state(fd) is None:
             return o["os.close"](fd)
@@ -185,6 +195,7 @@ def _install(rt: DarshanRuntime) -> None:
     os.lseek = w_lseek
     os.close = w_close
     os.stat = w_stat
+    os.fsync = w_fsync
     builtins.open = w_builtin_open
 
 

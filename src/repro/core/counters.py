@@ -9,6 +9,8 @@ the in-situ analysis can reuse Darshan's access-size histogram bins:
 """
 from __future__ import annotations
 
+from bisect import bisect_right
+
 POSIX_COUNTERS = (
     "POSIX_OPENS",
     "POSIX_READS",
@@ -24,6 +26,7 @@ POSIX_COUNTERS = (
     "POSIX_MAX_BYTE_READ",
     "POSIX_MAX_BYTE_WRITTEN",
     "POSIX_ZERO_READS",          # tf-Darshan extension: zero-length reads
+    "POSIX_FSYNCS",
 )
 
 POSIX_F_COUNTERS = (
@@ -74,10 +77,7 @@ SIZE_BIN_NAMES = (
 
 def size_bin(n: int) -> int:
     """Index of the Darshan histogram bin for an access of n bytes."""
-    for i, ub in enumerate(SIZE_BIN_BOUNDS):
-        if n < ub:
-            return i
-    return len(SIZE_BIN_BOUNDS)
+    return bisect_right(SIZE_BIN_BOUNDS, n)
 
 
 def read_bin_name(i: int) -> str:

@@ -18,14 +18,33 @@ from repro.core.dxt import Segment
 
 
 def to_chrome_trace(segments: Iterable[Segment],
-                    path: Optional[str] = None) -> dict:
-    """One TraceViewer row per (module, file): pid=module, tid=file."""
+                    path: Optional[str] = None,
+                    findings: Optional[Iterable] = None) -> dict:
+    """One TraceViewer row per (module, file): pid=module, tid=file.
+
+    Insight findings render as global instant events ("ph": "i") on an
+    INSIGHT row at their window end, with severity/evidence/
+    recommendation in args — visible alongside the op timeline."""
     tids: dict = {}
     events = []
     meta = []
     for mod in ("POSIX", "STDIO"):
         meta.append({"ph": "M", "pid": mod, "name": "process_name",
                      "args": {"name": f"tf-darshan {mod}"}})
+    if findings:
+        meta.append({"ph": "M", "pid": "INSIGHT", "name": "process_name",
+                     "args": {"name": "tf-darshan insight"}})
+        for f in findings:
+            events.append({
+                "ph": "i", "s": "g",
+                "pid": "INSIGHT", "tid": 1,
+                "name": f"{f.detector} (sev {f.severity:.2f})",
+                "ts": f.window[1] * 1e6,
+                "args": {"severity": f.severity,
+                         "window_s": [f.window[0], f.window[1]],
+                         "evidence": dict(f.evidence),
+                         "recommendation": f.recommendation},
+            })
     for seg in segments:
         key = (seg.module, seg.path)
         if key not in tids:
@@ -86,7 +105,7 @@ def to_json_report(report: SessionReport, path: Optional[str] = None) -> dict:
         },
         "posix": {
             "opens": p.opens, "reads": p.reads, "writes": p.writes,
-            "seeks": p.seeks, "stats": p.stats,
+            "seeks": p.seeks, "stats": p.stats, "fsyncs": p.fsyncs,
             "zero_reads": p.zero_reads,
             "bytes_read": p.bytes_read, "bytes_written": p.bytes_written,
             "read_time_s": p.read_time_s, "write_time_s": p.write_time_s,
@@ -113,6 +132,14 @@ def to_json_report(report: SessionReport, path: Optional[str] = None) -> dict:
         },
         "analysis_time_s": report.analysis_time_s,
     }
+    findings = getattr(report, "findings", None)
+    if findings:
+        payload["insight"] = {
+            "count": len(findings),
+            "max_severity": max(f.severity for f in findings),
+            "dropped_events": getattr(report, "insight_dropped_events", 0),
+            "findings": [f.to_dict() for f in findings],
+        }
     if path:
         with open(path, "w") as f:
             json.dump(payload, f, indent=2)

@@ -96,6 +96,13 @@ class ModuleBuffer:
             return {p: FileRecord(p, dict(r.counters), dict(r.fcounters))
                     for p, r in self._records.items()}
 
+    def counter_total(self, name: str) -> int:
+        """Sum one integer counter over the live records without copying
+        them (int reads are GIL-atomic; good enough for streaming
+        consumers that only need a monotone total)."""
+        return sum(r.counters.get(name, 0)
+                   for r in list(self._records.values()))
+
 
 def delta(stop: Dict[str, FileRecord],
           start: Dict[str, FileRecord]) -> Dict[str, FileRecord]:

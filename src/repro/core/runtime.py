@@ -5,13 +5,20 @@ per-fd state needed to classify accesses (offset tracking for
 sequential/consecutive detection, exactly as Darshan's POSIX module does).
 The attach layer (repro.core.attach) routes intercepted I/O calls here;
 ProfileSession snapshots these buffers in situ.
+
+Every completed operation is published as a DXT ``Segment`` to both the
+trace buffer and any registered segment listeners — the hook the
+streaming insight engine (repro.insight) subscribes through.  Listeners
+must be O(1) and non-blocking (the engine side uses a bounded
+drop-oldest queue); a listener that raises is silently skipped so the
+instrumented application can never be taken down by a consumer.
 """
 from __future__ import annotations
 
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Callable, Dict, Optional
 
 from repro.core import counters as C
 from repro.core.dxt import DXTBuffer, Segment
@@ -40,11 +47,43 @@ class DarshanRuntime:
         self._lock = threading.Lock()
         self._t0 = time.perf_counter()
         self.wall_t0 = time.time()
+        self._listeners: list = []
 
     # ------------------------------------------------------------------ util
     def now(self) -> float:
         """Runtime-relative clock (seconds since runtime creation)."""
         return time.perf_counter() - self._t0
+
+    @property
+    def perf_t0(self) -> float:
+        """perf_counter() value at runtime creation — converts absolute
+        perf_counter timestamps (e.g. IOMonitor samples) to runtime time."""
+        return self._t0
+
+    # -------------------------------------------------------- segment hook
+    def add_segment_listener(self, fn: Callable) -> None:
+        """Register a callable invoked with every emitted Segment."""
+        with self._lock:
+            if fn not in self._listeners:
+                self._listeners.append(fn)
+
+    def remove_segment_listener(self, fn: Callable) -> None:
+        with self._lock:
+            if fn in self._listeners:
+                self._listeners.remove(fn)
+
+    def listener_count(self) -> int:
+        return len(self._listeners)
+
+    def _emit(self, seg: Segment) -> None:
+        self.dxt.add(seg)
+        listeners = self._listeners
+        if listeners:
+            for fn in listeners:
+                try:
+                    fn(seg)
+                except Exception:
+                    pass
 
     def tracked(self, path: Optional[str]) -> bool:
         if not self.enabled or path is None:
@@ -63,7 +102,7 @@ class DarshanRuntime:
         rec.fadd("POSIX_F_META_TIME", t1 - t0)
         rec.fset_min("POSIX_F_OPEN_START_TIMESTAMP", t0)
         rec.fset_max("POSIX_F_OPEN_END_TIMESTAMP", t1)
-        self.dxt.add(Segment("POSIX", path, "open", 0, 0, t0, t1,
+        self._emit(Segment("POSIX", path, "open", 0, 0, t0, t1,
                              threading.get_ident()))
 
     def posix_read(self, fd: int, offset: Optional[int], length: int,
@@ -73,24 +112,34 @@ class DarshanRuntime:
             return
         off = st.pos if offset is None else offset
         rec = self.posix.record(st.path)
-        rec.inc("POSIX_READS")
-        rec.inc("POSIX_BYTES_READ", length)
+        # Hot path (runs inside every intercepted read): update the
+        # counter dicts directly — the FileRecord helper methods cost a
+        # Python call each and this body makes ~13 of them per op.
+        c, fc, get = rec.counters, rec.fcounters, rec.counters.get
+        c["POSIX_READS"] = get("POSIX_READS", 0) + 1
+        c["POSIX_BYTES_READ"] = get("POSIX_BYTES_READ", 0) + length
         if length == 0:
-            rec.inc("POSIX_ZERO_READS")
-        rec.inc(C.read_bin_name(C.size_bin(length)))
+            c["POSIX_ZERO_READS"] = get("POSIX_ZERO_READS", 0) + 1
+        b = C.POSIX_READ_BINS[C.size_bin(length)]
+        c[b] = get(b, 0) + 1
+        end = off + length
         if st.last_read_end >= 0:
             if off == st.last_read_end:
-                rec.inc("POSIX_CONSEC_READS")
+                c["POSIX_CONSEC_READS"] = get("POSIX_CONSEC_READS", 0) + 1
             if off >= st.last_read_end:
-                rec.inc("POSIX_SEQ_READS")
-        st.last_read_end = off + length
+                c["POSIX_SEQ_READS"] = get("POSIX_SEQ_READS", 0) + 1
+        st.last_read_end = end
         if advance:
-            st.pos = off + length
-        rec.set_max("POSIX_MAX_BYTE_READ", max(off + length - 1, 0))
-        rec.fadd("POSIX_F_READ_TIME", t1 - t0)
-        rec.fset_min("POSIX_F_READ_START_TIMESTAMP", t0)
-        rec.fset_max("POSIX_F_READ_END_TIMESTAMP", t1)
-        self.dxt.add(Segment("POSIX", st.path, "read", off, length, t0, t1,
+            st.pos = end
+        if end - 1 > get("POSIX_MAX_BYTE_READ", 0):
+            c["POSIX_MAX_BYTE_READ"] = max(end - 1, 0)
+        fc["POSIX_F_READ_TIME"] = fc.get("POSIX_F_READ_TIME", 0.0) \
+            + (t1 - t0)
+        if t0 < fc.get("POSIX_F_READ_START_TIMESTAMP", float("inf")):
+            fc["POSIX_F_READ_START_TIMESTAMP"] = t0
+        if t1 > fc.get("POSIX_F_READ_END_TIMESTAMP", float("-inf")):
+            fc["POSIX_F_READ_END_TIMESTAMP"] = t1
+        self._emit(Segment("POSIX", st.path, "read", off, length, t0, t1,
                              threading.get_ident()))
 
     def posix_write(self, fd: int, offset: Optional[int], length: int,
@@ -100,22 +149,30 @@ class DarshanRuntime:
             return
         off = st.pos if offset is None else offset
         rec = self.posix.record(st.path)
-        rec.inc("POSIX_WRITES")
-        rec.inc("POSIX_BYTES_WRITTEN", length)
-        rec.inc(C.write_bin_name(C.size_bin(length)))
+        # Hot path: direct dict updates, mirroring posix_read.
+        c, fc, get = rec.counters, rec.fcounters, rec.counters.get
+        c["POSIX_WRITES"] = get("POSIX_WRITES", 0) + 1
+        c["POSIX_BYTES_WRITTEN"] = get("POSIX_BYTES_WRITTEN", 0) + length
+        b = C.POSIX_WRITE_BINS[C.size_bin(length)]
+        c[b] = get(b, 0) + 1
+        end = off + length
         if st.last_write_end >= 0:
             if off == st.last_write_end:
-                rec.inc("POSIX_CONSEC_WRITES")
+                c["POSIX_CONSEC_WRITES"] = get("POSIX_CONSEC_WRITES", 0) + 1
             if off >= st.last_write_end:
-                rec.inc("POSIX_SEQ_WRITES")
-        st.last_write_end = off + length
+                c["POSIX_SEQ_WRITES"] = get("POSIX_SEQ_WRITES", 0) + 1
+        st.last_write_end = end
         if advance:
-            st.pos = off + length
-        rec.set_max("POSIX_MAX_BYTE_WRITTEN", max(off + length - 1, 0))
-        rec.fadd("POSIX_F_WRITE_TIME", t1 - t0)
-        rec.fset_min("POSIX_F_WRITE_START_TIMESTAMP", t0)
-        rec.fset_max("POSIX_F_WRITE_END_TIMESTAMP", t1)
-        self.dxt.add(Segment("POSIX", st.path, "write", off, length, t0, t1,
+            st.pos = end
+        if end - 1 > get("POSIX_MAX_BYTE_WRITTEN", 0):
+            c["POSIX_MAX_BYTE_WRITTEN"] = max(end - 1, 0)
+        fc["POSIX_F_WRITE_TIME"] = fc.get("POSIX_F_WRITE_TIME", 0.0) \
+            + (t1 - t0)
+        if t0 < fc.get("POSIX_F_WRITE_START_TIMESTAMP", float("inf")):
+            fc["POSIX_F_WRITE_START_TIMESTAMP"] = t0
+        if t1 > fc.get("POSIX_F_WRITE_END_TIMESTAMP", float("-inf")):
+            fc["POSIX_F_WRITE_END_TIMESTAMP"] = t1
+        self._emit(Segment("POSIX", st.path, "write", off, length, t0, t1,
                              threading.get_ident()))
 
     def posix_seek(self, fd: int, new_pos: int, t0: float, t1: float) -> None:
@@ -126,12 +183,24 @@ class DarshanRuntime:
         rec = self.posix.record(st.path)
         rec.inc("POSIX_SEEKS")
         rec.fadd("POSIX_F_META_TIME", t1 - t0)
+        self._emit(Segment("POSIX", st.path, "seek", new_pos, 0, t0, t1,
+                           threading.get_ident()))
+
+    def posix_fsync(self, fd: int, t0: float, t1: float) -> None:
+        st = self._fds.get(fd)
+        if st is None:
+            return
+        rec = self.posix.record(st.path)
+        rec.inc("POSIX_FSYNCS")
+        rec.fadd("POSIX_F_WRITE_TIME", t1 - t0)
+        self._emit(Segment("POSIX", st.path, "fsync", 0, 0, t0, t1,
+                           threading.get_ident()))
 
     def posix_stat(self, path: str, t0: float, t1: float) -> None:
         rec = self.posix.record(path)
         rec.inc("POSIX_STATS")
         rec.fadd("POSIX_F_META_TIME", t1 - t0)
-        self.dxt.add(Segment("POSIX", path, "stat", 0, 0, t0, t1,
+        self._emit(Segment("POSIX", path, "stat", 0, 0, t0, t1,
                              threading.get_ident()))
 
     def posix_close(self, fd: int, t0: float, t1: float) -> None:
@@ -157,7 +226,7 @@ class DarshanRuntime:
         rec.inc("STDIO_BYTES_WRITTEN", length)
         rec.set_max("STDIO_MAX_BYTE_WRITTEN", max(offset + length - 1, 0))
         rec.fadd("STDIO_F_WRITE_TIME", t1 - t0)
-        self.dxt.add(Segment("STDIO", path, "write", offset, length, t0, t1,
+        self._emit(Segment("STDIO", path, "write", offset, length, t0, t1,
                              threading.get_ident()))
 
     def stdio_read(self, path: str, offset: int, length: int,
@@ -167,13 +236,15 @@ class DarshanRuntime:
         rec.inc("STDIO_BYTES_READ", length)
         rec.set_max("STDIO_MAX_BYTE_READ", max(offset + length - 1, 0))
         rec.fadd("STDIO_F_READ_TIME", t1 - t0)
-        self.dxt.add(Segment("STDIO", path, "read", offset, length, t0, t1,
+        self._emit(Segment("STDIO", path, "read", offset, length, t0, t1,
                              threading.get_ident()))
 
     def stdio_flush(self, path: str, t0: float, t1: float) -> None:
         rec = self.stdio.record(path)
         rec.inc("STDIO_FLUSHES")
         rec.fadd("STDIO_F_META_TIME", t1 - t0)
+        self._emit(Segment("STDIO", path, "flush", 0, 0, t0, t1,
+                           threading.get_ident()))
 
     def stdio_close(self, path: str, t0: float, t1: float) -> None:
         rec = self.stdio.record(path)

@@ -29,8 +29,18 @@ from repro.core.runtime import DarshanRuntime, get_runtime
 
 
 class ProfileSession:
+    """``insight`` closes the paper's runtime-optimization loop: pass
+    True (owned engine) or an ``InsightEngine`` and the session attaches
+    it to the runtime hook on start() and polls it on a background
+    thread every ``insight_interval_s`` (rolling windows keep the
+    bounded event bus drained and give history-based detectors their
+    trend); stop() runs a final poll and carries the findings raised
+    during this window on the report (exported by to_chrome_trace /
+    to_json_report, consumed by the advisors)."""
+
     def __init__(self, runtime: Optional[DarshanRuntime] = None,
-                 auto_attach: bool = True, trace: bool = True):
+                 auto_attach: bool = True, trace: bool = True,
+                 insight=False, insight_interval_s: float = 0.5):
         self.rt = runtime or get_runtime()
         self.auto_attach = auto_attach
         self.rt.dxt.enabled = trace
@@ -39,6 +49,14 @@ class ProfileSession:
         self._active = False
         self.reports: list[SessionReport] = []
         self._detach_on_stop = False
+        self.insight_interval_s = insight_interval_s
+        self.insight_engine = None
+        if insight:
+            if insight is True:
+                from repro.insight.engine import InsightEngine
+                self.insight_engine = InsightEngine()
+            else:
+                self.insight_engine = insight
 
     # ------------------------------------------------------------- manual
     def start(self) -> None:
@@ -47,6 +65,10 @@ class ProfileSession:
         if self.auto_attach and not _is_attached():
             _attach(self.rt)
             self._detach_on_stop = True
+        if self.insight_engine is not None:
+            self.insight_engine.attach(self.rt)
+            self.insight_engine.start(self.insight_interval_s)
+            self._insight_dropped_mark = self.insight_engine.bus.dropped
         self.rt.enabled = True
         self._start_snap = self.rt.snapshot()
         self._t0 = self._start_snap["time"]
@@ -57,6 +79,9 @@ class ProfileSession:
             raise RuntimeError("session not started")
         stop_snap = self.rt.snapshot()
         self.rt.enabled = False
+        if self.insight_engine is not None:
+            self.insight_engine.poll()           # flush the final window
+            self.insight_engine.detach()
         if self._detach_on_stop:
             _detach()
             self._detach_on_stop = False
@@ -68,6 +93,15 @@ class ProfileSession:
                          elapsed_s=stop_snap["time"] - self._t0,
                          dxt_segments=len(segs))
         report.segments = segs          # for export/TraceViewer
+        if self.insight_engine is not None:
+            # Only findings active within this window: the owned engine
+            # persists across session restarts (StepCallback's every=N
+            # mode) and must not re-report earlier windows' findings.
+            report.findings = [f for f in self.insight_engine.findings
+                               if f.window[1] >= self._t0]
+            report.insight_dropped_events = (
+                self.insight_engine.bus.dropped
+                - getattr(self, "_insight_dropped_mark", 0))
         self.reports.append(report)
         return report
 

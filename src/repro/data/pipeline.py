@@ -31,6 +31,7 @@ class _Spec:
     autotune_window: int = 64
     autotune_start: int = 4
     drop_remainder: bool = False
+    insight_engine: Optional[Any] = None
 
 
 class Pipeline:
@@ -54,6 +55,13 @@ class Pipeline:
         """Straggler mitigation: re-dispatch an element whose capture
         function hasn't finished within timeout_s; first result wins."""
         return Pipeline(None, replace(self.spec, hedge_timeout_s=timeout_s))
+
+    def with_insight(self, engine) -> "Pipeline":
+        """Wire a live InsightEngine into AUTOTUNE: each autotune window
+        polls the engine and lets streamed findings (small-file storm,
+        straggler tail, tier saturation) override the pure bandwidth
+        hill-climb — the paper's proposed profile-guided runtime loop."""
+        return Pipeline(None, replace(self.spec, insight_engine=engine))
 
     # ------------------------------------------------------------------ run
     def __iter__(self):
@@ -153,6 +161,12 @@ class Pipeline:
                     yield res
             dt = max(time.perf_counter() - t0, 1e-9)
             advice = advisor.observe(threads, nbytes / dt / 1e6)
+            if spec.insight_engine is not None:
+                spec.insight_engine.poll()
+                biased = advisor.bias_from_findings(
+                    spec.insight_engine.active_findings())
+                if biased is not None:
+                    advice = biased
             threads = advice.threads
 
 

@@ -1,0 +1,26 @@
+"""repro.insight — streaming I/O bottleneck detection and recommendation.
+
+Subscribes to the live DarshanRuntime (DXT segments + counter deltas)
+and optional IOMonitor samples, extracts rolling-window features, and
+runs a library of interpretable detectors, each emitting a ``Finding``
+with severity, evidence counters, and a concrete recommendation that
+feeds the staging/thread advisors and the exporters.
+"""
+from repro.insight.detectors import (CheckpointStallDetector, Detector,
+                                     FastTierSaturationDetector, Finding,
+                                     MetadataStormDetector,
+                                     RandomReadThrashDetector,
+                                     SmallFileStormDetector,
+                                     StragglerReadTailDetector,
+                                     default_detectors)
+from repro.insight.engine import InsightEngine
+from repro.insight.events import EventBus
+from repro.insight.features import WindowFeatures, extract
+
+__all__ = [
+    "CheckpointStallDetector", "Detector", "FastTierSaturationDetector",
+    "Finding", "MetadataStormDetector", "RandomReadThrashDetector",
+    "SmallFileStormDetector", "StragglerReadTailDetector",
+    "default_detectors", "InsightEngine", "EventBus", "WindowFeatures",
+    "extract",
+]

@@ -1,0 +1,266 @@
+"""Interpretable bottleneck detectors over window features.
+
+Each detector encodes one ML-I/O pathology from the tf-Darshan papers
+(small-file storms, metadata overhead, poor sequentiality, straggler
+reads, checkpoint stalls, tier saturation) as an explicit threshold rule
+on ``WindowFeatures``.  A firing detector returns a ``Finding`` carrying
+the evidence counters that drove the decision and a concrete
+recommendation the advisor layer can act on — no opaque scores, every
+number in the evidence dict is reproducible from the trace.
+
+Detectors are deliberately mutually exclusive on the canonical
+pathologies: direction guards (read- vs write-dominated), population
+guards (many files vs one file), and op-class guards (stats/seeks vs
+opens) keep a tiny-read storm from also reading as random-read thrash,
+and an fsync-heavy checkpoint from reading as anything else.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.insight.features import WindowFeatures
+
+
+@dataclass(frozen=True)
+class Finding:
+    detector: str                    # stable kebab-case id
+    title: str
+    severity: float                  # 0 (negligible) .. 1 (critical)
+    window: Tuple[float, float]      # [t0, t1] runtime-relative seconds
+    evidence: Dict[str, float]       # the counters that drove the decision
+    recommendation: str
+
+    def to_dict(self) -> dict:
+        return {"detector": self.detector, "title": self.title,
+                "severity": round(self.severity, 4),
+                "window": [self.window[0], self.window[1]],
+                "evidence": dict(self.evidence),
+                "recommendation": self.recommendation}
+
+
+def _clamp01(x: float) -> float:
+    return max(0.0, min(1.0, x))
+
+
+class Detector:
+    """Base: ``check(feats, history)`` returns a Finding or None.
+
+    ``history`` is the list of prior window features, oldest first,
+    excluding the current window."""
+
+    name = "detector"
+    title = "detector"
+
+    def check(self, feats: WindowFeatures,
+              history: Sequence[WindowFeatures]) -> Optional[Finding]:
+        raise NotImplementedError
+
+    def _finding(self, feats: WindowFeatures, severity: float,
+                 evidence: Dict[str, float], rec: str) -> Finding:
+        return Finding(self.name, self.title, _clamp01(severity),
+                       (feats.t0, feats.t1), evidence, rec)
+
+
+class SmallFileStormDetector(Detector):
+    """Many distinct small files opened and consumed in a few reads each —
+    the paper's ImageNet case (median 88 KB JPEGs): per-file open/close
+    overhead and sub-MB reads dominate, staging + parallelism help."""
+
+    name = "small-file-storm"
+    title = "Small-file storm"
+    MIN_OPENS = 16
+    MIN_FILES = 16
+    MAX_AVG_READ = 256 * 1024
+    MAX_READS_PER_OPEN = 4.0
+
+    def check(self, feats, history):
+        if (feats.opens < self.MIN_OPENS
+                or feats.files_read < self.MIN_FILES
+                or feats.reads <= 2 * feats.writes
+                or feats.avg_read_size >= self.MAX_AVG_READ
+                or feats.reads_per_open > self.MAX_READS_PER_OPEN):
+            return None
+        sev = _clamp01(0.4 + 0.6 * min(1.0, feats.opens
+                                       / (8.0 * self.MIN_OPENS)))
+        return self._finding(
+            feats, sev,
+            {"opens": feats.opens, "files_read": feats.files_read,
+             "avg_read_size": round(feats.avg_read_size, 1),
+             "reads_per_open": round(feats.reads_per_open, 2)},
+            "Per-file open overhead dominates: pack tiny files into "
+            "larger shards (repro.data.jrecord) or stage the small-file "
+            "tail onto the fast tier (StagingAdvisor); small-file "
+            "workloads also scale with more reader threads.")
+
+
+class RandomReadThrashDetector(Detector):
+    """Non-sequential reads inside files defeat readahead: low
+    sequential fraction over reads that have an in-window predecessor."""
+
+    name = "random-read-thrash"
+    title = "Random-read thrash"
+    MIN_ELIGIBLE = 8
+    MIN_READS = 16
+    MAX_SEQ_FRAC = 0.75
+    MAX_CONSEC_FRAC = 0.05
+
+    def check(self, feats, history):
+        if (feats.eligible_seq_reads < self.MIN_ELIGIBLE
+                or feats.reads < self.MIN_READS
+                or feats.reads <= 2 * feats.writes
+                or feats.seq_read_frac >= self.MAX_SEQ_FRAC
+                or feats.consec_read_frac >= self.MAX_CONSEC_FRAC):
+            return None
+        sev = _clamp01(0.3 + 0.7 * (1.0 - feats.seq_read_frac))
+        return self._finding(
+            feats, sev,
+            {"seq_read_frac": round(feats.seq_read_frac, 3),
+             "consec_read_frac": round(feats.consec_read_frac, 3),
+             "eligible_reads": feats.eligible_seq_reads,
+             "avg_read_size": round(feats.avg_read_size, 1)},
+            "Reads jump backwards/randomly within files, defeating "
+            "readahead: sort accesses by offset, read larger sequential "
+            "extents, or load the file once and index in memory.")
+
+
+class MetadataStormDetector(Detector):
+    """stat/seek traffic swamps data ops — directory scans, size probes,
+    or per-element seeks (the metadata overhead of 1810.03035 §IV)."""
+
+    name = "metadata-storm"
+    title = "Metadata storm"
+    MIN_META = 16
+    META_TO_DATA = 2.0
+
+    def check(self, feats, history):
+        probe_ops = feats.stats + feats.seeks
+        if (probe_ops < self.MIN_META
+                or probe_ops <= self.META_TO_DATA * feats.data_ops):
+            return None
+        sev = _clamp01(0.4 + 0.6 * min(1.0, probe_ops
+                                       / (8.0 * self.MIN_META)))
+        return self._finding(
+            feats, sev,
+            {"stats": feats.stats, "seeks": feats.seeks,
+             "data_ops": feats.data_ops,
+             "meta_time_frac": round(feats.meta_time_frac, 3)},
+            "stat/seek calls outnumber data ops: cache file sizes and "
+            "directory listings up front, reuse open handles, and use "
+            "size-aware readers (sized_read_file) instead of re-probing.")
+
+
+class StragglerReadTailDetector(Detector):
+    """Same-size reads with a heavy latency tail — the paper's §V-B
+    straggler diagnostic (same-length reads varying by milliseconds)."""
+
+    name = "straggler-read-tail"
+    title = "Straggler read tail"
+    MIN_TAIL_READS = 16
+    MIN_TAIL_RATIO = 4.0
+    MIN_P95_S = 1e-3            # absolute floor: µs-scale cache hits are noise
+    MIN_P50_S = 1e-4            # median must be storage-scale: a ms blip over
+                                # a µs median is OS scheduling, not stragglers,
+                                # and hedging such reads buys nothing
+
+    def check(self, feats, history):
+        if (feats.tail_bin_reads < self.MIN_TAIL_READS
+                or feats.lat_tail_ratio < self.MIN_TAIL_RATIO
+                or feats.read_lat_p95 < self.MIN_P95_S
+                or feats.read_lat_p50 < self.MIN_P50_S):
+            return None
+        # A single-file pure-sequential scan dispersing on cache warmup
+        # is not a straggler tail (nothing to hedge): the paper's case
+        # is same-size reads across files/threads varying by ms.
+        if feats.files_read <= 1 and feats.seq_read_frac >= 1.0:
+            return None
+        sev = _clamp01(0.2 + min(1.0, feats.lat_tail_ratio / 20.0))
+        return self._finding(
+            feats, sev,
+            {"lat_tail_ratio": round(feats.lat_tail_ratio, 2),
+             "read_lat_p50_ms": round(feats.read_lat_p50 * 1e3, 3),
+             "read_lat_p95_ms": round(feats.read_lat_p95 * 1e3, 3),
+             "tail_bin_reads": feats.tail_bin_reads},
+            "p95 read latency far exceeds the median for same-size "
+            "reads: hedge stragglers (Pipeline.hedge), replicate hot "
+            "files across tiers, or reduce reader-thread contention.")
+
+
+class CheckpointStallDetector(Detector):
+    """A burst of synchronous writes (fsync/flush after every chunk)
+    serializes the step — checkpoints should overlap compute."""
+
+    name = "checkpoint-stall"
+    title = "Checkpoint stall"
+    MIN_WRITES = 8
+    MIN_SYNCS = 4
+    MIN_SYNC_TIME_FRAC = 0.5
+
+    def check(self, feats, history):
+        syncs = feats.flushes + feats.fsyncs
+        if (feats.writes < self.MIN_WRITES
+                or syncs < self.MIN_SYNCS
+                or feats.bytes_written <= feats.bytes_read
+                or feats.sync_time_frac < self.MIN_SYNC_TIME_FRAC):
+            return None
+        sev = _clamp01(0.3 + 0.7 * feats.sync_time_frac)
+        return self._finding(
+            feats, sev,
+            {"writes": feats.writes, "fsyncs": feats.fsyncs,
+             "flushes": feats.flushes,
+             "bytes_written": feats.bytes_written,
+             "sync_time_frac": round(feats.sync_time_frac, 3)},
+            "Synchronous write+fsync bursts stall the step: checkpoint "
+            "asynchronously (write on a background thread), batch "
+            "fsyncs to once per file, or land checkpoints on the fast "
+            "tier and drain to capacity storage later.")
+
+
+class FastTierSaturationDetector(Detector):
+    """Read bandwidth pinned at the tier's observed ceiling while the
+    latency tail grows — the consumer is about to underrun its prefetch
+    buffer.  The ceiling is ``capacity_mb_s`` when the tier's capability
+    is known, else the running peak over the feature history."""
+
+    name = "fast-tier-saturation"
+    title = "Fast tier saturation / prefetch underrun"
+    MIN_HISTORY = 2              # prior windows needed to trust the peak
+    MIN_READS = 16
+    UTILIZATION = 0.85
+    LAT_GROWTH = 1.5
+
+    def __init__(self, capacity_mb_s: Optional[float] = None):
+        self.capacity_mb_s = capacity_mb_s
+
+    def check(self, feats, history):
+        if len(history) < self.MIN_HISTORY or feats.reads < self.MIN_READS:
+            return None
+        recent = list(history[-self.MIN_HISTORY:]) + [feats]
+        peak = self.capacity_mb_s or max(
+            h.read_mb_s for h in list(history) + [feats])
+        if peak <= 0:
+            return None
+        if any(h.read_mb_s < self.UTILIZATION * peak for h in recent):
+            return None
+        base_p95 = recent[0].read_lat_p95
+        if base_p95 <= 0 or feats.read_lat_p95 < self.LAT_GROWTH * base_p95:
+            return None
+        util = feats.read_mb_s / peak
+        return self._finding(
+            feats, _clamp01(util),
+            {"read_mb_s": round(feats.read_mb_s, 2),
+             "peak_mb_s": round(peak, 2),
+             "utilization": round(util, 3),
+             "read_lat_p95_ms": round(feats.read_lat_p95 * 1e3, 3)},
+            "Read bandwidth is pinned at the tier ceiling while "
+            "latencies climb: deepen the prefetch buffer, spread the "
+            "hot set across tiers, or throttle reader threads before "
+            "the input pipeline underruns.")
+
+
+def default_detectors(fast_tier_mb_s: Optional[float] = None) \
+        -> List[Detector]:
+    return [SmallFileStormDetector(), RandomReadThrashDetector(),
+            MetadataStormDetector(), StragglerReadTailDetector(),
+            CheckpointStallDetector(),
+            FastTierSaturationDetector(fast_tier_mb_s)]

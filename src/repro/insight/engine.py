@@ -1,0 +1,203 @@
+"""InsightEngine: streaming diagnosis over the live instrumentation.
+
+The engine subscribes to the DarshanRuntime segment hook through a
+bounded ``EventBus`` (drop-oldest; the hot path never blocks), and on
+each ``poll()`` turns everything that arrived since the previous poll
+into one ``WindowFeatures`` window, runs the detector library, and
+coalesces consecutive firings of the same detector into a single
+``Finding`` whose window extends and whose severity is the running max.
+
+``poll()`` can be driven three ways:
+  * explicitly (tests, step callbacks),
+  * by the built-in background thread (``start(interval_s)``), or
+  * implicitly by ``ProfileSession.stop()``, which performs a final
+    poll and attaches ``engine.findings`` to the SessionReport.
+
+Counter deltas ride along: each poll snapshots the runtime's POSIX
+zero-read total so the features see the EOF-probe signature even though
+zero-length reads produce no offset movement.  An optional ``IOMonitor``
+supplies the system-side bandwidth (``monitor_read_mb_s``) for
+validation against the instrumented numbers.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import replace
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.dxt import Segment
+from repro.core.monitor import IOMonitor
+from repro.core.runtime import DarshanRuntime, get_runtime
+from repro.insight.detectors import Detector, Finding, default_detectors
+from repro.insight.events import EventBus
+from repro.insight.features import WindowFeatures, extract
+
+MAX_HISTORY = 128
+
+
+class InsightEngine:
+    def __init__(self, detectors: Optional[Sequence[Detector]] = None,
+                 bus_capacity: int = 1 << 14,
+                 monitor: Optional[IOMonitor] = None,
+                 fast_tier_mb_s: Optional[float] = None):
+        self.bus = EventBus(bus_capacity)
+        self.detectors: List[Detector] = list(
+            detectors if detectors is not None
+            else default_detectors(fast_tier_mb_s))
+        self.monitor = monitor
+        self.findings: List[Finding] = []
+        self.history: List[WindowFeatures] = []
+        self._rt: Optional[DarshanRuntime] = None
+        self._window_start = 0.0
+        self._zero_reads_total = 0
+        self._active_idx: Dict[str, int] = {}
+        self._last_new: List[Finding] = []
+        self._poll_lock = threading.Lock()
+        self._bg_stop = threading.Event()
+        self._bg_thread: Optional[threading.Thread] = None
+
+    # ----------------------------------------------------------- lifecycle
+    def attach(self, runtime: Optional[DarshanRuntime] = None) \
+            -> "InsightEngine":
+        """Subscribe to the runtime's segment hook.  Idempotent."""
+        rt = runtime or get_runtime()
+        if self._rt is rt:
+            return self
+        if self._rt is not None:
+            self.detach()
+        self.bus.drain()    # stale segments carry a previous clock origin
+        rt.add_segment_listener(self.bus.push)
+        self._rt = rt
+        self._window_start = rt.now()
+        self._zero_reads_total = self._zero_read_total(rt)
+        return self
+
+    def detach(self) -> None:
+        """Unsubscribe and stop the background poller.  Idempotent."""
+        self.stop()
+        if self._rt is not None:
+            self._rt.remove_segment_listener(self.bus.push)
+            self._rt = None
+
+    @property
+    def attached(self) -> bool:
+        return self._rt is not None
+
+    def start(self, interval_s: float = 0.5) -> "InsightEngine":
+        """Poll on a daemon thread every ``interval_s`` until stop()."""
+        if self._bg_thread is not None:
+            return self
+        self._bg_stop.clear()
+
+        def loop():
+            while not self._bg_stop.wait(interval_s):
+                self.poll()
+
+        self._bg_thread = threading.Thread(target=loop, daemon=True,
+                                           name="insight-engine")
+        self._bg_thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._bg_thread is None:
+            return
+        self._bg_stop.set()
+        self._bg_thread.join(timeout=2)
+        self._bg_thread = None
+
+    def __enter__(self) -> "InsightEngine":
+        return self.attach()
+
+    def __exit__(self, *exc):
+        self.poll()
+        self.detach()
+        return False
+
+    # ----------------------------------------------------------- analysis
+    def poll(self) -> List[Finding]:
+        """Analyze everything since the last poll; returns NEW findings
+        raised in this window (coalesced updates are not repeated)."""
+        with self._poll_lock:
+            segs: List[Segment] = self.bus.drain()
+            rt = self._rt
+            if rt is not None:
+                t1 = rt.now()
+            elif segs:
+                t1 = max(s.end for s in segs)
+            else:
+                # nothing observed: no finding is active any more (else
+                # active_findings() would replay the last window forever,
+                # e.g. into Pipeline autotune biasing)
+                self._active_idx = {}
+                self._last_new = []
+                return []
+            t0 = self._window_start
+            zero_delta = 0
+            if rt is not None:
+                total = self._zero_read_total(rt)
+                zero_delta = total - self._zero_reads_total
+                self._zero_reads_total = total
+            feats = extract(segs, t0, t1, zero_reads=zero_delta,
+                            monitor_read_mb_s=self._monitor_mb_s(t0, t1))
+            new: List[Finding] = []
+            for det in self.detectors:
+                try:
+                    f = det.check(feats, self.history)
+                except Exception:
+                    continue
+                if f is not None:
+                    new.append(f)
+            self.history.append(feats)
+            if len(self.history) > MAX_HISTORY:
+                del self.history[:len(self.history) - MAX_HISTORY]
+            self._window_start = t1
+            self._last_new = self._coalesce(new)
+            return list(self._last_new)
+
+    def _coalesce(self, new: List[Finding]) -> List[Finding]:
+        """Merge consecutive firings of a detector into one finding;
+        returns only findings FIRST raised this window (a detector that
+        keeps firing updates its existing entry and is not repeated —
+        consume continuing findings via active_findings())."""
+        fired: Dict[str, int] = {}
+        fresh: List[Finding] = []
+        for f in new:
+            idx = self._active_idx.get(f.detector)
+            if idx is not None:
+                old = self.findings[idx]
+                self.findings[idx] = replace(
+                    f, window=(old.window[0], f.window[1]),
+                    severity=max(old.severity, f.severity))
+                fired[f.detector] = idx
+            else:
+                self.findings.append(f)
+                fired[f.detector] = len(self.findings) - 1
+                fresh.append(f)
+        self._active_idx = fired
+        return fresh
+
+    # ------------------------------------------------------------- queries
+    def active_findings(self) -> List[Finding]:
+        """Findings whose detector fired in the most recent window."""
+        return [self.findings[i] for i in sorted(self._active_idx.values())]
+
+    def findings_by_detector(self, name: str) -> List[Finding]:
+        return [f for f in self.findings if f.detector == name]
+
+    # ------------------------------------------------------------- helpers
+    @staticmethod
+    def _zero_read_total(rt: DarshanRuntime) -> int:
+        return rt.posix.counter_total("POSIX_ZERO_READS")
+
+    def _monitor_mb_s(self, t0: float, t1: float) -> Optional[float]:
+        if self.monitor is None or self._rt is None:
+            return None
+        origin = self._rt.perf_t0
+        window = [s for s in self.monitor.samples
+                  if t0 <= s.t - origin <= t1]
+        if len(window) < 2:
+            return None
+        dt = window[-1].t - window[0].t
+        if dt <= 0:
+            return None
+        return (window[-1].rchar - window[0].rchar) / dt / 1e6

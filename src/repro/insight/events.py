@@ -1,0 +1,51 @@
+"""Bounded event stream between the instrumentation hot path and the
+insight engine.
+
+The producer side is the DarshanRuntime segment hook, which runs inside
+every intercepted I/O call — it must never block, allocate per-call
+beyond the queue append, or grow without bound.  ``EventBus.push`` is a
+single lock-free ``deque.append`` on a ``maxlen``-bounded deque: when the
+consumer falls behind, the oldest events are discarded and counted in
+``dropped`` (the same drop-oldest semantics as the DXT buffer, so a slow
+insight engine degrades gracefully instead of stalling the application).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import List
+
+
+class EventBus:
+    """Single-producer-friendly bounded queue with drop-oldest overflow.
+
+    ``deque.append`` / ``deque.popleft`` are atomic under the GIL, so the
+    hot path takes no lock.  ``dropped`` is a best-effort statistic (the
+    len check races with concurrent drains) — it exists to make silent
+    backpressure visible, not for exact accounting."""
+
+    def __init__(self, capacity: int = 1 << 14):
+        if capacity <= 0:
+            raise ValueError("capacity must be positive")
+        self.capacity = capacity
+        self.dropped = 0
+        self._q: deque = deque(maxlen=capacity)
+
+    def push(self, item) -> None:
+        q = self._q
+        if len(q) == self.capacity:
+            self.dropped += 1
+        q.append(item)
+
+    def drain(self) -> List:
+        """Remove and return everything currently queued."""
+        q = self._q
+        out = []
+        try:
+            while True:
+                out.append(q.popleft())
+        except IndexError:
+            pass
+        return out
+
+    def __len__(self) -> int:
+        return len(self._q)

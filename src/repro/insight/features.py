@@ -1,0 +1,170 @@
+"""Rolling-window feature extraction over DXT segment streams.
+
+One ``WindowFeatures`` summarizes every segment observed in a poll
+window: op counts, bandwidth, the Darshan access-size histogram,
+sequential/consecutive fractions (per file, in arrival order — the same
+offset-vs-previous-end rule the POSIX module applies), metadata-op
+ratios, and the read-latency tail computed inside the dominant size bin
+so that latency variance across access sizes is not mistaken for
+stragglers (the paper's §V-B diagnostic: same-length reads varying by
+milliseconds).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional
+
+from repro.core import counters as C
+from repro.core.dxt import Segment
+
+@dataclass
+class WindowFeatures:
+    t0: float
+    t1: float
+    duration_s: float = 0.0
+    # op counts (POSIX + STDIO combined)
+    reads: int = 0
+    writes: int = 0
+    opens: int = 0
+    stats: int = 0
+    seeks: int = 0
+    flushes: int = 0
+    fsyncs: int = 0
+    zero_reads: int = 0
+    # volume
+    bytes_read: int = 0
+    bytes_written: int = 0
+    read_mb_s: float = 0.0
+    write_mb_s: float = 0.0
+    # file population
+    files_read: int = 0
+    files_written: int = 0
+    files_touched: int = 0
+    # access sizes
+    read_size_hist: List[int] = field(default_factory=lambda: [0] * 10)
+    avg_read_size: float = 0.0
+    p50_read_size: float = 0.0
+    reads_per_open: float = 0.0
+    # access pattern (reads with an in-window predecessor on the same file)
+    eligible_seq_reads: int = 0
+    seq_read_frac: float = 1.0
+    consec_read_frac: float = 1.0
+    # metadata pressure
+    meta_ops: int = 0
+    meta_ratio: float = 0.0
+    meta_time_frac: float = 0.0
+    # time accounting (sum of segment durations)
+    busy_s: float = 0.0
+    read_busy_s: float = 0.0
+    write_busy_s: float = 0.0
+    sync_busy_s: float = 0.0
+    sync_time_frac: float = 0.0
+    # read-latency tail within the dominant access-size bin
+    tail_bin_reads: int = 0
+    read_lat_p50: float = 0.0
+    read_lat_p95: float = 0.0
+    read_lat_max: float = 0.0
+    lat_tail_ratio: float = 1.0
+    # system monitor (None when no IOMonitor wired in)
+    monitor_read_mb_s: Optional[float] = None
+
+    @property
+    def data_ops(self) -> int:
+        return self.reads + self.writes
+
+
+def _pct(sorted_vals: List[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(q / 100.0 * len(sorted_vals)))
+    return sorted_vals[idx]
+
+
+def extract(segments: Iterable[Segment], t0: float, t1: float,
+            zero_reads: int = 0,
+            monitor_read_mb_s: Optional[float] = None) -> WindowFeatures:
+    f = WindowFeatures(t0=t0, t1=t1, zero_reads=zero_reads,
+                       monitor_read_mb_s=monitor_read_mb_s)
+    f.duration_s = max(t1 - t0, 1e-9)
+
+    read_files, write_files, all_files = set(), set(), set()
+    read_sizes: List[int] = []
+    # per-file (prev_end) state for sequentiality, in arrival order
+    prev_end: Dict[str, int] = {}
+    seq = consec = eligible = 0
+    # read durations grouped by size bin for the tail diagnostic
+    lat_by_bin: Dict[int, List[float]] = {}
+
+    for seg in segments:
+        dur = max(seg.end - seg.start, 0.0)
+        f.busy_s += dur
+        all_files.add(seg.path)
+        op = seg.op
+        if op == "read":
+            f.reads += 1
+            f.bytes_read += seg.length
+            f.read_busy_s += dur
+            read_files.add(seg.path)
+            read_sizes.append(seg.length)
+            b = C.size_bin(seg.length)
+            f.read_size_hist[b] += 1
+            lat_by_bin.setdefault(b, []).append(dur)
+            pe = prev_end.get(seg.path)
+            if pe is not None:
+                eligible += 1
+                if seg.offset == pe:
+                    consec += 1
+                if seg.offset >= pe:
+                    seq += 1
+            prev_end[seg.path] = seg.offset + seg.length
+        elif op == "write":
+            f.writes += 1
+            f.bytes_written += seg.length
+            f.write_busy_s += dur
+            write_files.add(seg.path)
+        elif op == "open":
+            f.opens += 1
+        elif op == "stat":
+            f.stats += 1
+        elif op == "seek":
+            f.seeks += 1
+        elif op == "flush":
+            f.flushes += 1
+            f.sync_busy_s += dur
+        elif op == "fsync":
+            f.fsyncs += 1
+            f.sync_busy_s += dur
+
+    f.files_read = len(read_files)
+    f.files_written = len(write_files)
+    f.files_touched = len(all_files)
+    f.read_mb_s = f.bytes_read / f.duration_s / 1e6
+    f.write_mb_s = f.bytes_written / f.duration_s / 1e6
+
+    if f.reads:
+        read_sizes.sort()
+        f.avg_read_size = f.bytes_read / f.reads
+        f.p50_read_size = _pct(read_sizes, 50)
+    f.reads_per_open = f.reads / max(f.opens, 1)
+
+    f.eligible_seq_reads = eligible
+    if eligible:
+        f.seq_read_frac = seq / eligible
+        f.consec_read_frac = consec / eligible
+
+    f.meta_ops = f.opens + f.stats + f.seeks
+    f.meta_ratio = f.meta_ops / max(f.data_ops, 1)
+    meta_busy = f.busy_s - f.read_busy_s - f.write_busy_s - f.sync_busy_s
+    if f.busy_s > 0:
+        f.meta_time_frac = meta_busy / f.busy_s
+        f.sync_time_frac = (f.write_busy_s + f.sync_busy_s) / f.busy_s
+
+    if lat_by_bin:
+        dominant = max(lat_by_bin, key=lambda b: len(lat_by_bin[b]))
+        lats = sorted(lat_by_bin[dominant])
+        f.tail_bin_reads = len(lats)
+        f.read_lat_p50 = _pct(lats, 50)
+        f.read_lat_p95 = _pct(lats, 95)
+        f.read_lat_max = lats[-1]
+        f.lat_tail_ratio = f.read_lat_p95 / max(f.read_lat_p50, 1e-9)
+    return f

@@ -3,6 +3,8 @@ including non-divisible vocab sizes (padding path)."""
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config

@@ -5,6 +5,8 @@ import threading
 import time
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.data.dataset import FileDataset
