@@ -1,0 +1,107 @@
+"""Fleet collector ingest throughput (ISSUE 2 acceptance).
+
+Measures the aggregation path in isolation: pre-serialized rank report
+payloads (realistic shape — hundreds of per-file records, thousands of
+DXT segments, a finding) are pushed through
+``FleetCollector.ingest_line`` for 4 / 16 / 64 simulated ranks, then
+the cross-rank analysis (``report()``) runs on the ingested fleet.
+Derived columns report payloads/s, MB/s of wire traffic, and that no
+payload was dropped (reports ingested == ranks), plus a 4-rank
+end-to-end simulated collection as a sanity anchor.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import Row, cleanup, make_workspace, scaled
+
+
+def _rank_payload(rank: int, nranks: int, n_files: int,
+                  n_segments: int) -> str:
+    from repro.core.analysis import analyze
+    from repro.core.dxt import Segment
+    from repro.core.records import FileRecord
+    from repro.fleet import wire
+    from repro.insight.detectors import Finding
+
+    per_file = {}
+    for i in range(n_files):
+        p = f"/data/shard{rank:03d}/f{i:05d}.bin"
+        per_file[p] = FileRecord(p, {"POSIX_OPENS": 1, "POSIX_READS": 4,
+                                     "POSIX_BYTES_READ": 1 << 20},
+                                 {"POSIX_F_READ_TIME": 0.004})
+    rep = analyze(per_file, {}, elapsed_s=2.0, stat_sizes=False)
+    rep.file_sizes = {p: 1 << 20 for p in per_file}
+    t = 0.0
+    segs = []
+    paths = list(per_file)
+    for i in range(n_segments):
+        segs.append(Segment("POSIX", paths[i % n_files], "read",
+                            (i // n_files) << 18, 1 << 18,
+                            t, t + 2e-4, 1))
+        t += 2.5e-4
+    rep.segments = segs
+    rep.findings = [Finding("small-file-storm", "Small-file storm", 0.5,
+                            (0.0, 2.0), {"opens": float(n_files)}, "stage")]
+    return wire.encode_report(rank, rep, nprocs=nranks,
+                              clock_offset_s=-0.001 * rank,
+                              clock_rtt_s=5e-5)
+
+
+def run(rows: Row) -> None:
+    from repro.fleet import FleetCollector, run_simulated_fleet
+
+    n_files = scaled(200, 20)
+    n_segments = scaled(2000, 100)
+    for nranks in scaled((4, 16, 64), (4, 64)):
+        lines = [_rank_payload(r, nranks, n_files, n_segments)
+                 for r in range(nranks)]
+        wire_mb = sum(len(x) for x in lines) / 1e6
+        coll = FleetCollector()
+        t0 = time.perf_counter()
+        for line in lines:
+            coll.ingest_line(line)
+        ingest_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        fleet = coll.report()
+        analyze_s = time.perf_counter() - t0
+        dropped = nranks - coll.stats["reports"]
+        assert dropped == 0, f"dropped {dropped} payloads"
+        rows.add(f"fleet_ingest_{nranks}ranks",
+                 ingest_s / nranks * 1e6,
+                 f"payloads_s={nranks / ingest_s:.0f};"
+                 f"wire_mb_s={wire_mb / ingest_s:.1f};"
+                 f"analyze_ms={analyze_s * 1e3:.1f};"
+                 f"dropped={dropped};"
+                 f"reads={fleet.posix.reads}")
+
+    # end-to-end anchor: real 4-rank simulated collection over tmp files
+    ws = make_workspace("fleet_")
+    files = {}
+    per_rank = scaled(16, 4)
+    for r in range(4):
+        files[r] = []
+        d = os.path.join(ws, f"r{r}")
+        os.makedirs(d, exist_ok=True)
+        for i in range(per_rank):
+            p = os.path.join(d, f"{i:03d}.bin")
+            with open(p, "wb") as f:
+                f.write(b"x" * 65536)
+            files[r].append(p)
+
+    def workload(rank, io):
+        for p in files[rank]:
+            io.read_file(p, chunk=16384)
+
+    t0 = time.perf_counter()
+    fleet = run_simulated_fleet(4, workload)
+    wall = time.perf_counter() - t0
+    rows.add("fleet_sim_e2e_4ranks", wall * 1e6,
+             f"ranks={fleet.nprocs};reads={fleet.posix.reads};"
+             f"findings={len(fleet.findings)}")
+    cleanup(ws)
+
+
+if __name__ == "__main__":
+    run(Row())

@@ -14,7 +14,7 @@ from __future__ import annotations
 import os
 import time
 
-from benchmarks.common import Row, cleanup, make_workspace
+from benchmarks.common import Row, cleanup, make_workspace, scaled
 
 
 def _epoch(paths):
@@ -31,8 +31,9 @@ def run(rows: Row) -> None:
     from repro.data.synthetic import make_imagenet_like
 
     ws = make_workspace("insight_")
-    paths = make_imagenet_like(os.path.join(ws, "img"), n_files=640, seed=5)
-    repeats = 5
+    paths = make_imagenet_like(os.path.join(ws, "img"),
+                               n_files=scaled(640, 64), seed=5)
+    repeats = scaled(5, 1)
 
     def once(mode: str):
         rt = reset_runtime()

@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import Row
+from benchmarks.common import Row, scaled
 
 
 def _time(fn, *args, reps=3):
@@ -28,7 +28,8 @@ def run(rows: Row) -> None:
     from repro.models.flash import flash_attention_xla
 
     key = jax.random.PRNGKey(0)
-    B, Sq, Sk, H, KVH, D = 2, 512, 512, 8, 4, 64
+    S = scaled(512, 128)
+    B, Sq, Sk, H, KVH, D = 2, S, S, 8, 4, 64
     ks = jax.random.split(key, 3)
     q = jax.random.normal(ks[0], (B, Sq, H, D), jnp.float32)
     k = jax.random.normal(ks[1], (B, Sk, KVH, D), jnp.float32)
@@ -44,9 +45,10 @@ def run(rows: Row) -> None:
                               k.transpose(0, 2, 1, 3),
                               v.transpose(0, 2, 1, 3), causal=True)
     err = float(jnp.max(jnp.abs(o_pal - o_ref)))
-    rows.add("flash_attention_xla_512", us, f"pallas_vs_ref_err={err:.2e}")
+    rows.add(f"flash_attention_xla_{Sq}", us,
+             f"pallas_vs_ref_err={err:.2e}")
 
-    b, S, nh, P, N = 2, 512, 4, 32, 16
+    b, S, nh, P, N = 2, S, 4, 32, 16
     ks = jax.random.split(key, 4)
     x = jax.random.normal(ks[0], (b, S, nh, P))
     Bm = jax.random.normal(ks[1], (b, S, N)) * 0.5
@@ -61,7 +63,7 @@ def run(rows: Row) -> None:
     y_pal, h_pal = ops.ssd(x, Bm, Cm, dt, A, Dp, chunk=128)
     y_ref, h_ref = ref.ssd_ref(x, Bm, Cm, dt, A, Dp)
     err = float(jnp.max(jnp.abs(y_pal - y_ref)))
-    rows.add("ssd_chunked_xla_512", us, f"pallas_vs_ref_err={err:.2e}")
+    rows.add(f"ssd_chunked_xla_{S}", us, f"pallas_vs_ref_err={err:.2e}")
 
 
 if __name__ == "__main__":

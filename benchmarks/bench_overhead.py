@@ -9,7 +9,7 @@ from __future__ import annotations
 import os
 import time
 
-from benchmarks.common import Row, cleanup, make_workspace
+from benchmarks.common import Row, cleanup, make_workspace, scaled
 
 
 def _run_epoch(paths, batch=32, threads=16, callback=None):
@@ -34,8 +34,9 @@ def run(rows: Row) -> None:
     from repro.data.synthetic import make_imagenet_like
 
     ws = make_workspace("overhead_")
-    paths = make_imagenet_like(os.path.join(ws, "img"), n_files=640, seed=3)
-    repeats = 3
+    paths = make_imagenet_like(os.path.join(ws, "img"),
+                               n_files=scaled(640, 64), seed=3)
+    repeats = scaled(3, 1)
 
     def bench(mode: str):
         times = []

@@ -11,7 +11,7 @@ from __future__ import annotations
 import os
 import time
 
-from benchmarks.common import Row, cleanup, make_workspace
+from benchmarks.common import Row, cleanup, make_workspace, scaled
 
 
 def _epoch_bw(paths, reader, threads=1):
@@ -33,7 +33,8 @@ def run(rows: Row) -> None:
 
     ws = make_workspace("staging_")
     tm = default_tiers(ws, throttled=True)
-    paths = make_malware_like(os.path.join(ws, "hdd", "mal"), n_files=48,
+    paths = make_malware_like(os.path.join(ws, "hdd", "mal"),
+                              n_files=scaled(48, 8),
                               median_bytes=2 * 2**20, seed=6)
 
     reader = make_tiered_reader(tm)

@@ -11,7 +11,7 @@ from __future__ import annotations
 import os
 import time
 
-from benchmarks.common import Row, cleanup, make_workspace
+from benchmarks.common import Row, cleanup, make_workspace, scaled
 
 
 def run(rows: Row) -> None:
@@ -24,8 +24,9 @@ def run(rows: Row) -> None:
     ws = make_workspace("stream_")
     cases = {
         "imagenet": make_imagenet_like(os.path.join(ws, "img"),
-                                       n_files=480, seed=1),
-        "malware": make_malware_like(os.path.join(ws, "mal"), n_files=48,
+                                       n_files=scaled(480, 64), seed=1),
+        "malware": make_malware_like(os.path.join(ws, "mal"),
+                                     n_files=scaled(48, 8),
                                      median_bytes=2 * 2**20, seed=2),
     }
     batch, steps_every = 32, 5

@@ -12,7 +12,7 @@ import os
 import shutil
 import time
 
-from benchmarks.common import Row, cleanup, make_workspace
+from benchmarks.common import Row, cleanup, make_workspace, scaled
 
 
 def _bandwidth(paths, reader, threads) -> float:
@@ -33,9 +33,10 @@ def run(rows: Row) -> None:
     tm = default_tiers(ws, throttled=True)
     # ImageNet case ran on Lustre in the paper (metadata latency hidden
     # by parallelism); malware case on the workstation HDD (head thrash).
-    img = make_imagenet_like(os.path.join(ws, "lustre", "img"), n_files=320,
-                             seed=4)
-    mal = make_malware_like(os.path.join(ws, "hdd", "mal"), n_files=24,
+    img = make_imagenet_like(os.path.join(ws, "lustre", "img"),
+                             n_files=scaled(320, 48), seed=4)
+    mal = make_malware_like(os.path.join(ws, "hdd", "mal"),
+                            n_files=scaled(24, 6),
                             median_bytes=2 * 2**20, seed=5)
     reader = make_tiered_reader(tm)
 

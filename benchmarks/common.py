@@ -9,6 +9,17 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# --smoke (or REPRO_BENCH_SMOKE=1): shrink every workload to regression-
+# detector size so CI can run the whole suite per push.  Numbers from a
+# smoke run are NOT paper figures — only "does it still run and produce
+# sane derived columns".
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
+
+
+def scaled(full, smoke):
+    """Pick the workload size for the current mode."""
+    return smoke if SMOKE else full
+
 
 def make_workspace(prefix: str = "bench_") -> str:
     base = os.environ.get("REPRO_BENCH_DIR", tempfile.gettempdir())

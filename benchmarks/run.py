@@ -1,27 +1,38 @@
 """Benchmark harness: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only stream,staging,...]
+                                            [--smoke]
 
 Prints ``name,us_per_call,derived`` CSV rows (the contract in the repo
 skeleton); per-figure details live in each bench module's docstring.
+``--smoke`` shrinks every workload to regression-detector size (CI runs
+the whole suite this way, so an exporter or benchmark crash fails the
+build without paying full-figure runtimes).
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import traceback
 
+from benchmarks import common
 from benchmarks.common import Row
 
 BENCHES = ("stream", "overhead", "threads", "staging", "checkpoint",
-           "kernels", "insight")
+           "kernels", "insight", "fleet")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(BENCHES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workloads: regression check, not figures")
     args = ap.parse_args()
+    if args.smoke:
+        common.SMOKE = True
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
     chosen = args.only.split(",") if args.only else list(BENCHES)
 
     print("name,us_per_call,derived")

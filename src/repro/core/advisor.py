@@ -54,32 +54,26 @@ class StagingAdvisor:
         self.size_threshold = size_threshold
         self.capacity_bytes = capacity_bytes
 
-    def plan(self, report: SessionReport,
-             findings: Optional[List] = None) -> StagingPlan:
-        """Choose read files below the threshold, smallest first, within
-        the fast-tier capacity budget.
-
-        Insight findings sharpen the plan: a ``small-file-storm``
-        finding widens the size threshold in proportion to its severity
-        (up to 2x), since the finding is direct evidence that the
-        sub-threshold tail — not the big files — is what's slow."""
+    def _widened_threshold(self, findings) -> int:
+        """A ``small-file-storm`` finding widens the size threshold in
+        proportion to its severity (up to 2x): the finding is direct
+        evidence that the sub-threshold tail — not the big files — is
+        what's slow."""
         threshold = self.size_threshold
-        if findings is None:
-            findings = getattr(report, "findings", None) or []
-        for f in findings:
+        for f in findings or []:
             if f.detector == "small-file-storm":
                 threshold = max(threshold,
                                 int(self.size_threshold * (1 + f.severity)))
-        sizes = report.file_sizes
-        read_files = [p for p, rec in report.per_file.items()
-                      if rec.get("POSIX_READS", 0) > 0 and p in sizes]
-        dataset_bytes = sum(sizes[p] for p in read_files)
-        candidates = sorted(
-            ((sizes[p], p) for p in read_files
-             if sizes[p] < threshold))
+        return threshold
+
+    def _select(self, candidates: List[tuple], dataset_bytes: int,
+                dataset_files: int, threshold: int) -> StagingPlan:
+        """Greedy pick in candidate order (each ``(..., size, path)``,
+        pre-sorted by priority) within the fast-tier capacity budget."""
         chosen: List[tuple] = []
         used = 0
-        for sz, p in candidates:
+        for cand in candidates:
+            sz, p = cand[-2], cand[-1]
             if self.capacity_bytes is not None \
                     and used + sz > self.capacity_bytes:
                 break
@@ -88,8 +82,56 @@ class StagingAdvisor:
         return StagingPlan(files=tuple(chosen), total_bytes=used,
                            total_files=len(chosen),
                            dataset_bytes=dataset_bytes,
-                           dataset_files=len(read_files),
+                           dataset_files=dataset_files,
                            size_threshold=threshold)
+
+    def plan(self, report: SessionReport,
+             findings: Optional[List] = None) -> StagingPlan:
+        """Choose read files below the threshold, smallest first, within
+        the fast-tier capacity budget; insight findings sharpen the
+        plan (see ``_widened_threshold``)."""
+        if findings is None:
+            findings = getattr(report, "findings", None) or []
+        threshold = self._widened_threshold(findings)
+        sizes = report.file_sizes
+        read_files = [p for p, rec in report.per_file.items()
+                      if rec.get("POSIX_READS", 0) > 0 and p in sizes]
+        candidates = sorted(
+            ((sizes[p], p) for p in read_files
+             if sizes[p] < threshold))
+        return self._select(candidates,
+                            dataset_bytes=sum(sizes[p] for p in read_files),
+                            dataset_files=len(read_files),
+                            threshold=threshold)
+
+    def fleet_plan(self, fleet_report,
+                   findings: Optional[List] = None) -> StagingPlan:
+        """Fleet-level staging plan: the union of every rank's hot files,
+        weighted by how many ranks read each file.  A file read by all N
+        ranks repays staging N times over (one fast-tier copy serves the
+        whole fleet), so candidates are ordered by reader count first,
+        then smallest-first within a count — the same small-file-tail
+        logic as ``plan`` applied fleet-wide."""
+        if findings is None:
+            findings = getattr(fleet_report, "findings", None) or []
+        threshold = self._widened_threshold(findings)
+        sizes: Dict[str, int] = {}
+        readers: Dict[str, int] = {}
+        for slice_ in fleet_report.ranks.values():
+            for p, rec in slice_.per_file.items():
+                if rec.get("POSIX_READS", 0) <= 0:
+                    continue
+                readers[p] = readers.get(p, 0) + 1
+                if p in slice_.file_sizes:
+                    sizes[p] = slice_.file_sizes[p]
+        read_files = [p for p in readers if p in sizes]
+        candidates = sorted(
+            ((-readers[p], sizes[p], p) for p in read_files
+             if sizes[p] < threshold))
+        return self._select(candidates,
+                            dataset_bytes=sum(sizes[p] for p in read_files),
+                            dataset_files=len(read_files),
+                            threshold=threshold)
 
 
 @dataclass

@@ -10,7 +10,8 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Iterable, Optional
+import sys
+from typing import Dict, Iterable, Optional
 
 from repro.core import counters as C
 from repro.core.analysis import SessionReport
@@ -69,23 +70,110 @@ def to_chrome_trace(segments: Iterable[Segment],
     return trace
 
 
-def to_darshan_log(report: SessionReport, path: Optional[str] = None) -> str:
-    """darshan-parser-style text dump of the per-file POSIX records."""
-    lines = ["# darshan log version: tf-darshan-jax 1.0",
-             f"# elapsed: {report.elapsed_s:.6f} s",
-             f"# POSIX bandwidth: {report.posix_bandwidth_mb_s:.3f} MB/s",
-             "#<module>\t<rank>\t<record>\t<counter>\t<value>\t<file>"]
-    for fpath, rec in sorted(report.per_file.items()):
-        rid = abs(hash(fpath)) % (1 << 32)
+def record_id(path: str) -> int:
+    """Stable 32-bit record id for a file path (same path => same id on
+    every rank, so cross-rank lines of one file share a record id)."""
+    import zlib
+    return zlib.crc32(path.encode()) & 0xFFFFFFFF
+
+
+def darshan_record_lines(per_file: Dict, rank: int = 0) -> list:
+    """``<module>\\t<rank>\\t<record>\\t<counter>\\t<value>\\t<file>`` rows
+    for one rank's per-file POSIX records, with the record's actual rank
+    in the rank column (darshan-parser's per-rank record layout)."""
+    lines = []
+    for fpath, rec in sorted(per_file.items()):
+        rid = record_id(fpath)
         for k, v in sorted(rec.counters.items()):
-            lines.append(f"POSIX\t0\t{rid}\t{k}\t{v}\t{fpath}")
+            lines.append(f"POSIX\t{rank}\t{rid}\t{k}\t{v}\t{fpath}")
         for k, v in sorted(rec.fcounters.items()):
-            lines.append(f"POSIX\t0\t{rid}\t{k}\t{v:.9f}\t{fpath}")
+            lines.append(f"POSIX\t{rank}\t{rid}\t{k}\t{v:.9f}\t{fpath}")
+    return lines
+
+
+def darshan_header_lines(elapsed_s: float, exe: Optional[str] = None,
+                         nprocs: int = 1) -> list:
+    """The ``#exe`` / ``#nprocs`` header block darshan-parser prints."""
+    return ["# darshan log version: tf-darshan-jax 1.0",
+            f"# exe: {exe or ' '.join(sys.argv) or sys.executable}",
+            f"# nprocs: {nprocs}",
+            f"# run time: {elapsed_s:.6f}"]
+
+
+def to_darshan_log(report: SessionReport, path: Optional[str] = None,
+                   rank: int = 0, exe: Optional[str] = None,
+                   nprocs: int = 1) -> str:
+    """darshan-parser-style text dump of the per-file POSIX records.
+
+    ``rank`` lands in the per-record rank column (a distributed caller
+    passes each record's actual rank instead of the old constant 0);
+    ``exe``/``nprocs`` fill the darshan-parser header block."""
+    lines = darshan_header_lines(report.elapsed_s, exe=exe, nprocs=nprocs)
+    lines += [f"# elapsed: {report.elapsed_s:.6f} s",
+              f"# POSIX bandwidth: {report.posix_bandwidth_mb_s:.3f} MB/s",
+              "#<module>\t<rank>\t<record>\t<counter>\t<value>\t<file>"]
+    lines += darshan_record_lines(report.per_file, rank=rank)
     text = "\n".join(lines) + "\n"
     if path:
         with open(path, "w") as f:
             f.write(text)
     return text
+
+
+def to_fleet_chrome_trace(rank_segments: Dict[int, Iterable[Segment]],
+                          path: Optional[str] = None,
+                          findings: Optional[Iterable] = None) -> dict:
+    """Merged multi-rank TraceViewer export: one pid per rank (named
+    ``rank N``), one tid per (module, file) within the rank.  Segment
+    timestamps are expected to be already clock-aligned to the fleet
+    timeline (FleetCollector's handshake offsets).  Findings render on a
+    per-rank INSIGHT row (fleet-level findings, rank=None, go to pid
+    "fleet")."""
+    events, meta = [], []
+    for rank in sorted(rank_segments):
+        pid = f"rank {rank}"
+        meta.append({"ph": "M", "pid": pid, "name": "process_name",
+                     "args": {"name": f"tf-darshan {pid}"}})
+        tids: dict = {}
+        for seg in rank_segments[rank]:
+            key = (seg.module, seg.path)
+            if key not in tids:
+                tids[key] = len(tids) + 1
+                meta.append({"ph": "M", "pid": pid, "tid": tids[key],
+                             "name": "thread_name",
+                             "args": {"name": f"{seg.module} {seg.path}"}})
+            events.append({
+                "ph": "X", "pid": pid, "tid": tids[key],
+                "name": f"{seg.op} {os.path.basename(seg.path)}",
+                "ts": seg.start * 1e6,
+                "dur": max((seg.end - seg.start) * 1e6, 0.01),
+                "args": {"offset": seg.offset, "length": seg.length,
+                         "os_thread": seg.thread},
+            })
+    if findings:
+        insight_pids = set()
+        for f in findings:
+            pid = "fleet" if f.rank is None else f"rank {f.rank}"
+            if pid not in insight_pids:
+                insight_pids.add(pid)
+                if pid == "fleet":
+                    meta.append({"ph": "M", "pid": pid,
+                                 "name": "process_name",
+                                 "args": {"name": "tf-darshan fleet"}})
+            events.append({
+                "ph": "i", "s": "g", "pid": pid, "tid": 0,
+                "name": f"{f.detector} (sev {f.severity:.2f})",
+                "ts": f.window[1] * 1e6,
+                "args": {"severity": f.severity, "rank": f.rank,
+                         "window_s": [f.window[0], f.window[1]],
+                         "evidence": dict(f.evidence),
+                         "recommendation": f.recommendation},
+            })
+    trace = {"traceEvents": meta + events, "displayTimeUnit": "ms"}
+    if path:
+        with open(path, "w") as f:
+            json.dump(trace, f)
+    return trace
 
 
 def to_json_report(report: SessionReport, path: Optional[str] = None) -> dict:

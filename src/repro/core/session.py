@@ -69,6 +69,11 @@ class ProfileSession:
             self.insight_engine.attach(self.rt)
             self.insight_engine.start(self.insight_interval_s)
             self._insight_dropped_mark = self.insight_engine.bus.dropped
+        # Nested sessions share the runtime (e.g. a fleet RankReporter
+        # spanning the run with a StepCallback window inside): stop()
+        # restores rather than clears, so the inner window's end doesn't
+        # blind the outer one.
+        self._enabled_before = self.rt.enabled
         self.rt.enabled = True
         self._start_snap = self.rt.snapshot()
         self._t0 = self._start_snap["time"]
@@ -78,7 +83,7 @@ class ProfileSession:
         if not self._active:
             raise RuntimeError("session not started")
         stop_snap = self.rt.snapshot()
-        self.rt.enabled = False
+        self.rt.enabled = getattr(self, "_enabled_before", False)
         if self.insight_engine is not None:
             self.insight_engine.poll()           # flush the final window
             self.insight_engine.detach()
@@ -142,18 +147,83 @@ class StepCallback:
             self.session.stop()
 
 
-class ProfileServer:
-    """Interactive mode: line-oriented local TCP control
-    ("start" / "stop" / "status"), mirroring tf.profiler.server.start()."""
+MAX_LINE_BYTES = 1 << 24     # one rank's serialized report fits comfortably
 
-    def __init__(self, port: int = 0, runtime: Optional[DarshanRuntime] = None):
-        self.session = ProfileSession(runtime)
+
+def recv_lines(conn: socket.socket, idle_timeout: float = 2.0):
+    """Yield newline-terminated commands from a socket, buffered.
+
+    One ``recv`` is NOT one command: multi-command clients pipeline
+    several lines per connection and fleet ``report`` payloads exceed a
+    single segment, so we accumulate until ``\\n``.  A final
+    unterminated chunk before EOF is yielded too — legacy single-shot
+    clients that omit the newline keep working."""
+    conn.settimeout(idle_timeout)
+    buf = b""
+    while True:
+        nl = buf.find(b"\n")
+        if nl >= 0:
+            line, buf = buf[:nl], buf[nl + 1:]
+            yield line.decode()
+            continue
+        try:
+            chunk = conn.recv(65536)
+        except socket.timeout:
+            # an idle client that sent a newline-less command and kept
+            # the connection open still deserves its reply
+            if buf:
+                yield buf.decode()
+                buf = b""
+                continue
+            return
+        except OSError:
+            return
+        if not chunk:
+            if buf:
+                yield buf.decode()
+            return
+        buf += chunk
+        if len(buf) > MAX_LINE_BYTES:
+            raise ValueError("protocol line exceeds MAX_LINE_BYTES")
+
+
+def recv_reply(sock: socket.socket) -> str:
+    """Client side: read one newline-terminated reply (or until EOF)."""
+    buf = b""
+    while b"\n" not in buf:
+        chunk = sock.recv(65536)
+        if not chunk:
+            break
+        buf += chunk
+        if len(buf) > MAX_LINE_BYTES:
+            raise ValueError("reply exceeds MAX_LINE_BYTES")
+    return buf.split(b"\n", 1)[0].decode().strip()
+
+
+class ProfileServer:
+    """Interactive mode: line-oriented local TCP control, mirroring
+    tf.profiler.server.start().
+
+    Verbs: ``start`` / ``stop`` / ``status`` (the original single-rank
+    protocol), plus the fleet extension — ``report`` (the last stopped
+    window as a versioned wire payload a FleetCollector can ingest),
+    ``findings`` (insight findings of the last window as JSON), and
+    ``clock <t_send>`` (clock-handshake probe: replies with this rank's
+    runtime clock so a collector can align timelines).  Connections are
+    read line-by-line, so one client may pipeline many commands."""
+
+    def __init__(self, port: int = 0, runtime: Optional[DarshanRuntime] = None,
+                 rank: int = 0, nprocs: int = 1, insight=False):
+        self.session = ProfileSession(runtime, insight=insight)
+        self.rank = rank
+        self.nprocs = nprocs
         self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._srv.bind(("127.0.0.1", port))
         self._srv.listen(4)
         self.port = self._srv.getsockname()[1]
         self._stop = threading.Event()
+        self._cmd_lock = threading.Lock()   # serialize session mutation
         self._thread = threading.Thread(target=self._serve, daemon=True)
         self._thread.start()
 
@@ -164,35 +234,86 @@ class ProfileServer:
                 conn, _ = self._srv.accept()
             except socket.timeout:
                 continue
-            with conn:
-                cmd = conn.recv(256).decode().strip()
-                if cmd == "start":
-                    self.session.start()
-                    conn.sendall(b"ok\n")
-                elif cmd == "stop":
-                    try:
-                        rep = self.session.stop()
-                        conn.sendall(json.dumps({
-                            "posix_bandwidth_mb_s": rep.posix_bandwidth_mb_s,
-                            "reads": rep.posix.reads,
-                            "bytes_read": rep.posix.bytes_read,
-                        }).encode() + b"\n")
-                    except RuntimeError as e:
-                        conn.sendall(f"error: {e}\n".encode())
-                elif cmd == "status":
-                    conn.sendall(
-                        f"active={self.session._active}\n".encode())
-                else:
-                    conn.sendall(b"unknown\n")
+            # connections are long-lived now (pipelined commands, a
+            # collector polling report/clock): one thread each, so a
+            # persistent client can't starve other control clients
+            threading.Thread(target=self._handle, args=(conn,),
+                             daemon=True).start()
+
+    def _handle(self, conn: socket.socket) -> None:
+        with conn:
+            try:
+                for line in recv_lines(conn):
+                    if self._stop.is_set():
+                        break
+                    conn.sendall(self._dispatch(line.strip()))
+            except (ValueError, OSError):
+                pass
+
+    def _dispatch(self, cmd: str) -> bytes:
+        with self._cmd_lock:
+            return self._dispatch_locked(cmd)
+
+    def _dispatch_locked(self, cmd: str) -> bytes:
+        verb, _, arg = cmd.partition(" ")
+        if verb == "start":
+            self.session.start()
+            return b"ok\n"
+        if verb == "stop":
+            try:
+                rep = self.session.stop()
+            except RuntimeError as e:
+                return f"error: {e}\n".encode()
+            return json.dumps({
+                "posix_bandwidth_mb_s": rep.posix_bandwidth_mb_s,
+                "reads": rep.posix.reads,
+                "bytes_read": rep.posix.bytes_read,
+                "findings": [f.to_dict() for f in rep.findings],
+            }).encode() + b"\n"
+        if verb == "status":
+            return f"active={self.session._active}\n".encode()
+        if verb == "findings":
+            rep = self.session.reports[-1] if self.session.reports else None
+            found = [f.to_dict() for f in rep.findings] if rep else []
+            return json.dumps({"findings": found}).encode() + b"\n"
+        if verb == "clock":
+            reply = {"t": self.session.rt.now(), "wall": time.time()}
+            if arg:
+                try:
+                    reply["echo"] = float(arg)
+                except ValueError:
+                    return b"error: clock argument must be a number\n"
+            return json.dumps(reply).encode() + b"\n"
+        if verb == "report":
+            if not self.session.reports:
+                return b"error: no report\n"
+            from repro.fleet.wire import encode_report   # lazy: avoids cycle
+            line = encode_report(self.rank, self.session.reports[-1],
+                                 nprocs=self.nprocs)
+            return line.encode() + b"\n"
+        return b"unknown\n"
 
     def close(self) -> None:
         self._stop.set()
         self._thread.join(timeout=2)
         self._srv.close()
+        # A window left open by a client must not leak the global
+        # attach: later sessions would silently record into THIS
+        # server's runtime instead of their own.
+        if self.session._active:
+            try:
+                self.session.stop()
+            except RuntimeError:
+                pass
 
 
-def control(port: int, cmd: str) -> str:
-    """Client helper for ProfileServer."""
+def control(port: int, cmd: str, parse: bool = False):
+    """Client helper for ProfileServer.  Returns the raw reply string,
+    or the decoded JSON object when ``parse=True`` (e.g. the ``stop``
+    reply with its ``findings`` list)."""
     with socket.create_connection(("127.0.0.1", port), timeout=5) as s:
         s.sendall(cmd.encode() + b"\n")
-        return s.recv(4096).decode().strip()
+        reply = recv_reply(s)
+    if parse:
+        return json.loads(reply)
+    return reply

@@ -1,0 +1,33 @@
+"""repro.fleet — multi-rank trace collection, aggregation, and
+cross-rank straggler analysis.
+
+Darshan's unit of observation is the MPI rank; this package is the
+reproduction's rank dimension.  Every rank runs a ``RankReporter``
+(wrapping its DarshanRuntime/ProfileSession) and ships counters, DXT
+segments, and insight findings over a versioned JSON-lines wire format;
+rank 0's ``FleetCollector`` aligns clocks via an NTP-style handshake,
+rolls counters up globally and per rank, runs cross-rank detectors
+(rank straggler, load imbalance, shared-file contention), and emits a
+``FleetReport`` with merged exports — one Chrome-trace pid per rank,
+darshan-parser logs with real rank numbers.  ``run_simulated_fleet``
+exercises all of it in-process (N threads, N runtimes) without MPI.
+"""
+from repro.fleet.collector import CollectorServer, FleetCollector
+from repro.fleet.detectors import (FleetDetector, LoadImbalanceDetector,
+                                   RankStragglerDetector,
+                                   SharedFileContentionDetector,
+                                   default_fleet_detectors)
+from repro.fleet.harness import RankIO, run_simulated_fleet
+from repro.fleet.report import FleetReport, RankSlice, merge_summaries
+from repro.fleet.reporter import RankReporter, SocketTransport
+from repro.fleet.wire import (WIRE_VERSION, WireError, WireMessage, decode,
+                              encode, encode_report)
+
+__all__ = [
+    "CollectorServer", "FleetCollector", "FleetDetector",
+    "LoadImbalanceDetector", "RankStragglerDetector",
+    "SharedFileContentionDetector", "default_fleet_detectors", "RankIO",
+    "run_simulated_fleet", "FleetReport", "RankSlice", "merge_summaries",
+    "RankReporter", "SocketTransport", "WIRE_VERSION", "WireError",
+    "WireMessage", "decode", "encode", "encode_report",
+]

@@ -1,0 +1,221 @@
+"""FleetCollector: rank-0's aggregation endpoint.
+
+Ingests wire-format lines from RankReporters — directly
+(``ingest_line``, the in-process simulated fleet and replayed payload
+dumps) or over TCP (``CollectorServer``, speaking the same buffered
+line protocol as the ProfileServer) — and materializes a ``FleetReport``:
+per-rank slices with clock-aligned segments, global counter rollups,
+and cross-rank findings.
+
+Clock alignment: reporters measure their offset against the collector's
+clock with an NTP-style handshake (``clock`` probe -> ``clock_reply``,
+offset = t_coll - (t_send + t_recv)/2 at minimum RTT) and ship the
+result inside their report payload; the collector applies it to every
+segment timestamp, so the merged timeline is ordered on one clock.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from typing import Dict, List, Optional
+
+from repro.core.analysis import summarize_module
+from repro.core.session import recv_lines
+from repro.fleet import wire
+from repro.fleet.detectors import FleetDetector, default_fleet_detectors
+from repro.fleet.report import FleetReport, RankSlice, merge_summaries
+from repro.insight.detectors import Finding
+
+
+class FleetCollector:
+    def __init__(self,
+                 detectors: Optional[List[FleetDetector]] = None):
+        self.detectors = (list(detectors) if detectors is not None
+                          else default_fleet_detectors())
+        self.ranks: Dict[int, RankSlice] = {}
+        self._extra_findings: List[Finding] = []
+        self._t0 = time.perf_counter()
+        self._lock = threading.Lock()
+        self.stats = {"lines": 0, "reports": 0, "hellos": 0,
+                      "clock_probes": 0, "findings": 0, "errors": 0,
+                      "bytes": 0}
+
+    def _bump(self, key: str, by: int = 1) -> None:
+        # CollectorServer runs one thread per rank connection: the
+        # read-modify-write must not lose counts, or "no payload
+        # dropped" checks lie in both directions.
+        with self._lock:
+            self.stats[key] += by
+
+    # ------------------------------------------------------------- clock
+    def now(self) -> float:
+        """The fleet clock every rank timeline is aligned onto."""
+        return time.perf_counter() - self._t0
+
+    # ------------------------------------------------------------ ingest
+    def ingest_line(self, line: str) -> Optional[str]:
+        """Process one wire line; returns the reply line for
+        request/response kinds (clock) or an ack, None to say nothing.
+        Raises WireError on malformed input (server mode catches and
+        replies with an error line instead of dying)."""
+        self._bump("lines")
+        self._bump("bytes", len(line))
+        msg = wire.decode(line)
+        if msg.kind == "hello":
+            with self._lock:
+                s = self._slice(msg.rank)
+                s.nprocs = int(msg.payload.get("nprocs", 1))
+                s.host = str(msg.payload.get("host", ""))
+                s.pid = int(msg.payload.get("pid", 0))
+            self._bump("hellos")
+            return "ok"
+        if msg.kind == "clock":
+            self._bump("clock_probes")
+            return wire.encode("clock_reply", msg.rank,
+                              {"t_coll": self.now()})
+        if msg.kind == "report":
+            self._ingest_report(msg)
+            self._bump("reports")
+            return "ok"
+        if msg.kind == "findings":
+            found = wire.decode_findings(msg.payload.get("findings", []),
+                                         rank=msg.rank)
+            with self._lock:
+                self._extra_findings.extend(found)
+            self._bump("findings", len(found))
+            return "ok"
+        if msg.kind == "bye":
+            return "ok"
+        return "ok"      # clock_reply etc.: ignore quietly
+
+    def _ingest_report(self, msg: wire.WireMessage) -> None:
+        p = msg.payload
+        per_file = wire.decode_records(p.get("posix", {}))
+        clock = p.get("clock") or {}
+        offset = clock.get("offset_s")
+        offset = 0.0 if offset is None else float(offset)
+        segments = wire.decode_segments(p.get("segments", []))
+        aligned = [seg._replace(start=seg.start + offset,
+                                end=seg.end + offset)
+                   for seg in segments]
+        aligned.sort(key=lambda s: s.start)
+        findings = wire.decode_findings(p.get("findings", []),
+                                        rank=msg.rank)
+        with self._lock:
+            s = self._slice(msg.rank)
+            s.nprocs = max(s.nprocs, int(p.get("nprocs", 1)))
+            s.elapsed_s = float(p.get("elapsed_s", 0.0))
+            s.clock_offset_s = offset
+            s.clock_rtt_s = float(clock.get("rtt_s") or 0.0)
+            s.per_file = per_file
+            s.file_sizes = {k: int(v)
+                            for k, v in p.get("file_sizes", {}).items()}
+            s.posix = summarize_module("POSIX", per_file)
+            if "stdio_summary" in p:
+                s.stdio = wire.decode_summary("STDIO", p["stdio_summary"])
+            else:
+                s.stdio = summarize_module(
+                    "STDIO", wire.decode_records(p.get("stdio", {})))
+            s.segments = aligned
+            s.findings = findings
+
+    def _slice(self, rank: int) -> RankSlice:
+        s = self.ranks.get(rank)
+        if s is None:
+            s = self.ranks[rank] = RankSlice(rank=rank)
+        return s
+
+    # ------------------------------------------------------------ report
+    def report(self) -> FleetReport:
+        """Aggregate everything ingested so far into one FleetReport."""
+        with self._lock:
+            ranks = dict(self.ranks)
+            extra = list(self._extra_findings)
+        findings: List[Finding] = []
+        for r in sorted(ranks):
+            findings.extend(ranks[r].findings)
+        findings.extend(extra)
+        for det in self.detectors:
+            try:
+                findings.extend(det.check(ranks))
+            except Exception:
+                self._bump("errors")
+        t0s = [s.segments[0].start for s in ranks.values() if s.segments]
+        t1s = [s.segments[-1].end for s in ranks.values() if s.segments]
+        window = (min(t0s), max(t1s)) if t0s else (0.0, 0.0)
+        nprocs = max([len(ranks)] + [s.nprocs for s in ranks.values()])
+        return FleetReport(
+            nprocs=nprocs,
+            ranks=ranks,
+            posix=merge_summaries("POSIX",
+                                  [s.posix for s in ranks.values()]),
+            stdio=merge_summaries("STDIO",
+                                  [s.stdio for s in ranks.values()]),
+            findings=findings,
+            window=window,
+            elapsed_s=max([s.elapsed_s for s in ranks.values()],
+                          default=0.0),
+            collector_stats=dict(self.stats))
+
+
+class CollectorServer:
+    """TCP front end for a FleetCollector: rank 0 listens, every rank's
+    reporter connects and streams wire lines (the push direction of the
+    extended ProfileServer protocol).  One thread per connection so a
+    slow rank cannot stall the fleet."""
+
+    def __init__(self, collector: Optional[FleetCollector] = None,
+                 port: int = 0):
+        self.collector = collector or FleetCollector()
+        self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._srv.bind(("127.0.0.1", port))
+        self._srv.listen(64)
+        self.port = self._srv.getsockname()[1]
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._accept = threading.Thread(target=self._serve, daemon=True)
+        self._accept.start()
+
+    def _serve(self) -> None:
+        self._srv.settimeout(0.2)
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._srv.accept()
+            except socket.timeout:
+                continue
+            t = threading.Thread(target=self._handle, args=(conn,),
+                                 daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _handle(self, conn: socket.socket) -> None:
+        with conn:
+            try:
+                for line in recv_lines(conn, idle_timeout=5.0):
+                    if self._stop.is_set():
+                        break
+                    try:
+                        reply = self.collector.ingest_line(line)
+                    except wire.WireError as e:
+                        self.collector._bump("errors")
+                        reply = f"error: {e}"
+                    if reply is not None:
+                        conn.sendall(reply.encode() + b"\n")
+            except (ValueError, OSError):
+                pass
+
+    def close(self) -> None:
+        self._stop.set()
+        self._accept.join(timeout=2)
+        for t in self._threads:
+            t.join(timeout=1)
+        self._srv.close()
+
+    def __enter__(self) -> "CollectorServer":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

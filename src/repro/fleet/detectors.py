@@ -1,0 +1,192 @@
+"""Cross-rank detectors: pathologies only visible ACROSS ranks.
+
+The single-process insight detectors (repro.insight) see one rank's
+window; these see the whole fleet and encode the distributed pathologies
+of 1810.03035 — uneven reader load, stragglers, shared-file contention —
+as explicit threshold rules over per-rank ``RankSlice`` rollups and the
+clock-aligned merged timeline.  Each emits a ``Finding`` whose ``rank``
+field names the culprit (or None for a genuinely collective pathology),
+so downstream consumers (exporters, advisors, operators) can act per
+rank.
+"""
+from __future__ import annotations
+
+import statistics
+from typing import Dict, List, Optional, Tuple
+
+from repro.fleet.report import RankSlice
+from repro.insight.detectors import Finding, _clamp01
+
+
+class FleetDetector:
+    """Base: ``check(ranks)`` returns zero or more findings."""
+
+    name = "fleet-detector"
+    title = "fleet detector"
+
+    def check(self, ranks: Dict[int, RankSlice]) -> List[Finding]:
+        raise NotImplementedError
+
+    @staticmethod
+    def _window(ranks: Dict[int, RankSlice]) -> Tuple[float, float]:
+        t0s = [s.segments[0].start for s in ranks.values() if s.segments]
+        t1s = [s.segments[-1].end for s in ranks.values() if s.segments]
+        if not t0s:
+            return (0.0, 0.0)
+        return (min(t0s), max(t1s))
+
+
+class RankStragglerDetector(FleetDetector):
+    """One rank's read time far above the fleet median — the distributed
+    analogue of the paper's Fig 9 straggler diagnostic: every rank reads
+    the same per-step volume, so a rank whose POSIX read time is a
+    multiple of the median is being starved (slow tier, contended
+    reader, bad placement) and gates every synchronous step."""
+
+    name = "rank-straggler"
+    title = "Rank straggler"
+    MIN_RANKS = 2
+    MIN_RATIO = 1.5
+    MIN_READ_S = 1e-3          # µs-scale fleets are all cache hits — noise
+    MIN_EXCESS_S = 0.05        # worst - median: ms-scale raggedness is OS
+                               # scheduling, not a straggler worth chasing
+
+    def check(self, ranks):
+        if len(ranks) < self.MIN_RANKS:
+            return []
+        read_s = {r: s.posix.read_time_s for r, s in ranks.items()}
+        worst = max(read_s, key=read_s.get)
+        worst_s = read_s[worst]
+        others = [v for r, v in read_s.items() if r != worst]
+        median = statistics.median(others)
+        if worst_s < self.MIN_READ_S \
+                or worst_s - median < self.MIN_EXCESS_S:
+            return []
+        ratio = worst_s / max(median, 1e-9)
+        if ratio < self.MIN_RATIO:
+            return []
+        sev = _clamp01(0.3 + 0.7 * min(1.0, (ratio - self.MIN_RATIO) / 8.0))
+        return [Finding(
+            self.name, self.title, sev, self._window(ranks),
+            {"straggler_rank": worst,
+             "straggler_read_s": round(worst_s, 6),
+             "fleet_median_read_s": round(median, 6),
+             "ratio": round(ratio, 2),
+             "nprocs": len(ranks)},
+            f"Rank {worst} spends {ratio:.1f}x the fleet-median time in "
+            "reads and gates every synchronous step: restage its shard "
+            "onto a faster tier, rebalance its file assignment, or hedge "
+            "its reads (Pipeline.hedge).", rank=worst)]
+
+
+class LoadImbalanceDetector(FleetDetector):
+    """Read volume spread unevenly across readers: one rank pulls a
+    multiple of the mean while others idle — sharding skew (uneven file
+    sizes, modulo-N assignment of a non-uniform listing)."""
+
+    name = "load-imbalance"
+    title = "Reader load imbalance"
+    MIN_RANKS = 2
+    MIN_TOTAL_BYTES = 1 << 20
+    MIN_RATIO = 1.5            # max/mean bytes_read
+
+    def check(self, ranks):
+        if len(ranks) < self.MIN_RANKS:
+            return []
+        vol = {r: s.posix.bytes_read for r, s in ranks.items()}
+        total = sum(vol.values())
+        if total < self.MIN_TOTAL_BYTES:
+            return []
+        mean = total / len(vol)
+        worst = max(vol, key=vol.get)
+        ratio = vol[worst] / max(mean, 1.0)
+        if ratio < self.MIN_RATIO:
+            return []
+        cv = (statistics.pstdev(vol.values()) / mean) if mean else 0.0
+        sev = _clamp01(0.3 + 0.7 * min(1.0, cv))
+        return [Finding(
+            self.name, self.title, sev, self._window(ranks),
+            {"heaviest_rank": worst,
+             "heaviest_bytes": vol[worst],
+             "mean_bytes": round(mean, 1),
+             "ratio": round(ratio, 2),
+             "cv": round(cv, 3)},
+            f"Rank {worst} reads {ratio:.1f}x the mean volume: shard by "
+            "bytes instead of file count (sort the listing by size and "
+            "deal round-robin), or split oversized files across ranks.",
+            rank=worst)]
+
+
+class SharedFileContentionDetector(FleetDetector):
+    """Multiple ranks inside the same file at the same (fleet-clock)
+    time: overlapping DXT segments on one path from ≥2 ranks mean the
+    backing device/stripe serves interleaved requests — the shared-file
+    contention regime where per-rank bandwidth collapses."""
+
+    name = "shared-file-contention"
+    title = "Shared-file contention"
+    MIN_RANKS = 2
+    MIN_UNION_S = 1e-3
+    MIN_OVERLAP_FRAC = 0.25    # fraction of busy time with ≥2 ranks in-file
+
+    def check(self, ranks):
+        by_path: Dict[str, List[Tuple[float, float, int]]] = {}
+        for r, s in ranks.items():
+            for seg in s.segments:
+                if seg.op in ("read", "write") and seg.end > seg.start:
+                    by_path.setdefault(seg.path, []).append(
+                        (seg.start, seg.end, r))
+        out: List[Finding] = []
+        for path, ivals in by_path.items():
+            rset = {r for _, _, r in ivals}
+            if len(rset) < self.MIN_RANKS:
+                continue
+            union, overlap = self._union_overlap(ivals)
+            if union < self.MIN_UNION_S:
+                continue
+            frac = overlap / union
+            if frac < self.MIN_OVERLAP_FRAC:
+                continue
+            t0 = min(s for s, _, _ in ivals)
+            t1 = max(e for _, e, _ in ivals)
+            sev = _clamp01(0.3 + 0.7 * frac)
+            out.append(Finding(
+                self.name, self.title, sev, (t0, t1),
+                {"path_ranks": len(rset),
+                 "union_busy_s": round(union, 6),
+                 "multi_rank_busy_s": round(overlap, 6),
+                 "overlap_frac": round(frac, 3)},
+                f"{len(rset)} ranks overlap inside {path} for "
+                f"{frac:.0%} of its busy time: replicate the file per "
+                "rank (staging), split it into per-rank shards, or "
+                "serialize access behind a shared cache.", rank=None))
+        return out
+
+    @staticmethod
+    def _union_overlap(ivals: List[Tuple[float, float, int]]) \
+            -> Tuple[float, float]:
+        """Sweep line over (start, end, rank): returns (time any rank is
+        in-file, time ≥2 DISTINCT ranks are in-file)."""
+        events: List[Tuple[float, int, int]] = []
+        for s, e, r in ivals:
+            events.append((s, 1, r))
+            events.append((e, -1, r))
+        events.sort()
+        depth: Dict[int, int] = {}
+        union = overlap = 0.0
+        prev: Optional[float] = None
+        for t, delta, r in events:
+            if prev is not None and t > prev:
+                active = sum(1 for c in depth.values() if c > 0)
+                if active >= 1:
+                    union += t - prev
+                if active >= 2:
+                    overlap += t - prev
+            depth[r] = depth.get(r, 0) + delta
+            prev = t
+        return union, overlap
+
+
+def default_fleet_detectors() -> List[FleetDetector]:
+    return [RankStragglerDetector(), LoadImbalanceDetector(),
+            SharedFileContentionDetector()]

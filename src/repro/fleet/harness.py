@@ -1,0 +1,160 @@
+"""Simulated in-process multi-rank fleet: N threads, N runtimes, no MPI.
+
+Each simulated rank owns a private ``DarshanRuntime`` (its own clock
+origin — optionally skewed to exercise alignment) and a ``RankIO``
+facade that performs REAL file I/O through the unwrapped os entry
+points while recording into that rank's runtime, exactly what the
+attach layer does for the global runtime in a one-process-per-rank
+deployment.  An optional per-rank throttle (e.g. a
+``repro.data.tiers.TokenBucket``) makes one rank deterministically
+slower — the knob the rank-straggler tests turn.
+
+``run_simulated_fleet`` runs the rank workloads on threads, then ships
+every rank's window through the real wire protocol (serialize ->
+ingest_line -> parse) into a FleetCollector, so the simulated path and
+the TCP path share every byte of the aggregation code.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.attach import originals
+from repro.core.runtime import DarshanRuntime
+from repro.fleet.collector import FleetCollector
+from repro.fleet.report import FleetReport
+from repro.fleet.reporter import RankReporter
+
+
+class RankIO:
+    """os-shaped I/O facade recording into one rank's private runtime.
+
+    Mirrors the attach-layer wrappers (open/read/pread/write/seek/
+    fsync/stat/close) but targets an explicit runtime, so N of these can
+    coexist in one process.  ``throttle(nbytes)``, when given, runs
+    INSIDE the timed window — a throttled rank's reads genuinely take
+    longer in its counters and segments."""
+
+    def __init__(self, runtime: DarshanRuntime,
+                 throttle: Optional[Callable[[int], None]] = None):
+        self.rt = runtime
+        self.throttle = throttle
+        self._o = originals()
+
+    # ------------------------------------------------------------- POSIX
+    def open(self, path: str, flags=None, mode: int = 0o644) -> int:
+        import os
+        flags = os.O_RDONLY if flags is None else flags
+        t0 = self.rt.now()
+        fd = self._o["os.open"](path, flags, mode)
+        self.rt.posix_open(fd, path, t0, self.rt.now())
+        return fd
+
+    def read(self, fd: int, n: int) -> bytes:
+        t0 = self.rt.now()
+        data = self._o["os.read"](fd, n)
+        if self.throttle is not None:
+            self.throttle(len(data))
+        self.rt.posix_read(fd, None, len(data), t0, self.rt.now(),
+                           advance=True)
+        return data
+
+    def pread(self, fd: int, n: int, offset: int) -> bytes:
+        t0 = self.rt.now()
+        data = self._o["os.pread"](fd, n, offset)
+        if self.throttle is not None:
+            self.throttle(len(data))
+        self.rt.posix_read(fd, offset, len(data), t0, self.rt.now(),
+                           advance=False)
+        return data
+
+    def write(self, fd: int, data: bytes) -> int:
+        t0 = self.rt.now()
+        n = self._o["os.write"](fd, data)
+        if self.throttle is not None:
+            self.throttle(n)
+        self.rt.posix_write(fd, None, n, t0, self.rt.now(), advance=True)
+        return n
+
+    def fsync(self, fd: int) -> None:
+        t0 = self.rt.now()
+        self._o["os.fsync"](fd)
+        self.rt.posix_fsync(fd, t0, self.rt.now())
+
+    def stat(self, path: str):
+        t0 = self.rt.now()
+        res = self._o["os.stat"](path)
+        self.rt.posix_stat(path, t0, self.rt.now())
+        return res
+
+    def close(self, fd: int) -> None:
+        t0 = self.rt.now()
+        self._o["os.close"](fd)
+        self.rt.posix_close(fd, t0, self.rt.now())
+
+    # ------------------------------------------------------------ helpers
+    def read_file(self, path: str, chunk: int = 1 << 20) -> int:
+        """Sequential whole-file read; returns bytes read."""
+        fd = self.open(path)
+        total = 0
+        try:
+            while True:
+                data = self.read(fd, chunk)
+                if not data:
+                    break
+                total += len(data)
+        finally:
+            self.close(fd)
+        return total
+
+
+def run_simulated_fleet(
+        nranks: int,
+        workload: Callable[[int, RankIO], None],
+        collector: Optional[FleetCollector] = None,
+        insight=False,
+        clock_skew_s: Optional[Sequence[float]] = None,
+        throttles: Optional[Dict[int, Callable[[int], None]]] = None,
+        handshake_rounds: int = 3) -> FleetReport:
+    """Run ``workload(rank, io)`` on ``nranks`` threads, each with a
+    private runtime + RankReporter, ship every window through the wire
+    protocol into ``collector`` (a fresh one by default), and return the
+    aggregated FleetReport.
+
+    ``clock_skew_s[r]`` shifts rank r's clock origin (its clock reads
+    ahead by that many seconds) — the handshake must recover it.
+    ``throttles[r]`` is applied inside rank r's timed reads/writes."""
+    collector = collector or FleetCollector()
+    reporters: List[RankReporter] = []
+    for r in range(nranks):
+        rt = DarshanRuntime()
+        if clock_skew_s:
+            rt._t0 -= clock_skew_s[r]
+        reporters.append(RankReporter(r, nprocs=nranks, runtime=rt,
+                                      auto_attach=False, insight=insight))
+
+    errors: List[BaseException] = []
+
+    def run_rank(rank: int, rep: RankReporter) -> None:
+        io = RankIO(rep.rt, throttle=(throttles or {}).get(rank))
+        rep.start()
+        try:
+            workload(rank, io)
+        except BaseException as e:  # noqa: BLE001 — surfaced after join
+            errors.append(e)
+        finally:
+            rep.stop()
+
+    threads = [threading.Thread(target=run_rank, args=(r, rep),
+                                name=f"sim-rank-{r}")
+               for r, rep in enumerate(reporters)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        raise errors[0]
+
+    for rep in reporters:
+        rep.ship(collector.ingest_line, handshake_rounds=handshake_rounds)
+    return collector.report()

@@ -1,0 +1,172 @@
+"""FleetReport: the cross-rank aggregate a FleetCollector produces.
+
+One ``RankSlice`` per rank (counters rolled up to a ModuleSummary,
+per-file records, clock-aligned DXT segments, per-rank findings with
+``rank`` provenance) plus the fleet-level view: global counter rollups
+(the sum over ranks — Darshan's job-level aggregation), a merged
+timeline ordered on the collector's clock, cross-rank findings, and
+exports (merged Chrome trace with one pid per rank, darshan-parser log
+with real rank numbers and the ``#exe``/``#nprocs`` header block).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.analysis import ModuleSummary
+from repro.core.dxt import Segment
+from repro.core.export import (darshan_header_lines, darshan_record_lines,
+                               to_fleet_chrome_trace)
+from repro.core.records import FileRecord
+from repro.insight.detectors import Finding
+
+
+@dataclass
+class RankSlice:
+    """Everything one rank shipped, normalized onto the fleet timeline."""
+    rank: int
+    nprocs: int = 1
+    host: str = ""
+    pid: int = 0
+    elapsed_s: float = 0.0
+    clock_offset_s: float = 0.0       # rank clock + offset = fleet clock
+    clock_rtt_s: float = 0.0          # handshake round-trip (offset error bar)
+    posix: ModuleSummary = field(
+        default_factory=lambda: ModuleSummary("POSIX"))
+    stdio: ModuleSummary = field(
+        default_factory=lambda: ModuleSummary("STDIO"))
+    per_file: Dict[str, FileRecord] = field(default_factory=dict)
+    file_sizes: Dict[str, int] = field(default_factory=dict)
+    segments: List[Segment] = field(default_factory=list)  # fleet clock
+    findings: List[Finding] = field(default_factory=list)  # rank set
+
+
+_SUM_INT = ("files_opened", "read_only_files", "write_only_files",
+            "read_write_files", "opens", "reads", "writes", "seeks",
+            "stats", "flushes", "fsyncs", "zero_reads", "bytes_read",
+            "bytes_written", "consec_reads", "seq_reads")
+_SUM_FLOAT = ("read_time_s", "write_time_s", "meta_time_s")
+
+
+def merge_summaries(module: str, parts: List[ModuleSummary]) -> ModuleSummary:
+    """Global rollup = per-rank sums (Darshan's job-level aggregation:
+    counters are additive across ranks; histograms add bin-wise)."""
+    out = ModuleSummary(module)
+    for p in parts:
+        for name in _SUM_INT:
+            setattr(out, name, getattr(out, name) + getattr(p, name))
+        for name in _SUM_FLOAT:
+            setattr(out, name, getattr(out, name) + getattr(p, name))
+        for i in range(10):
+            out.read_size_hist[i] += p.read_size_hist[i]
+            out.write_size_hist[i] += p.write_size_hist[i]
+    return out
+
+
+@dataclass
+class FleetReport:
+    nprocs: int
+    ranks: Dict[int, RankSlice]
+    posix: ModuleSummary                  # global rollup (sum over ranks)
+    stdio: ModuleSummary
+    findings: List[Finding]               # fleet-level + per-rank
+    window: Tuple[float, float] = (0.0, 0.0)   # fleet-clock [min, max]
+    elapsed_s: float = 0.0                # max per-rank elapsed (wall window)
+    collector_stats: dict = field(default_factory=dict)
+
+    # ------------------------------------------------------------ queries
+    @property
+    def fleet_bandwidth_mb_s(self) -> float:
+        if self.elapsed_s <= 0:
+            return 0.0
+        return (self.posix.bytes_read + self.posix.bytes_written) \
+            / self.elapsed_s / 1e6
+
+    def per_rank(self, attr: str) -> Dict[int, float]:
+        """One ModuleSummary field across ranks, e.g.
+        ``per_rank("read_time_s")`` — the paper's Fig 9 per-rank bars."""
+        return {r: getattr(s.posix, attr) for r, s in self.ranks.items()}
+
+    def merged_segments(self) -> List[Tuple[int, Segment]]:
+        """(rank, segment) pairs over the whole fleet, ordered on the
+        fleet clock — the merged timeline DeepProf-style mining runs on."""
+        out = [(r, seg) for r, s in self.ranks.items() for seg in s.segments]
+        out.sort(key=lambda rs: rs[1].start)
+        return out
+
+    def rank_findings(self, rank: int) -> List[Finding]:
+        return [f for f in self.findings if f.rank == rank]
+
+    def fleet_findings(self) -> List[Finding]:
+        """Cross-rank findings (no single-rank provenance)."""
+        return [f for f in self.findings if f.rank is None]
+
+    # ------------------------------------------------------------ exports
+    def to_chrome_trace(self, path: Optional[str] = None) -> dict:
+        return to_fleet_chrome_trace(
+            {r: s.segments for r, s in self.ranks.items()},
+            path=path, findings=self.findings)
+
+    def to_darshan_log(self, path: Optional[str] = None,
+                       exe: Optional[str] = None) -> str:
+        lines = darshan_header_lines(self.elapsed_s, exe=exe,
+                                     nprocs=self.nprocs)
+        lines.append(f"# POSIX bandwidth: {self.fleet_bandwidth_mb_s:.3f}"
+                     " MB/s (fleet)")
+        lines.append("#<module>\t<rank>\t<record>\t<counter>\t<value>"
+                     "\t<file>")
+        for rank in sorted(self.ranks):
+            lines += darshan_record_lines(self.ranks[rank].per_file,
+                                          rank=rank)
+        text = "\n".join(lines) + "\n"
+        if path:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
+    def to_dict(self) -> dict:
+        """JSON-ready fleet panel payload (the multi-rank analogue of
+        export.to_json_report)."""
+        return {
+            "nprocs": self.nprocs,
+            "elapsed_s": self.elapsed_s,
+            "window": list(self.window),
+            "fleet_bandwidth_mb_s": self.fleet_bandwidth_mb_s,
+            "global": {
+                "posix": {"reads": self.posix.reads,
+                          "writes": self.posix.writes,
+                          "bytes_read": self.posix.bytes_read,
+                          "bytes_written": self.posix.bytes_written,
+                          "read_time_s": self.posix.read_time_s,
+                          "meta_time_s": self.posix.meta_time_s},
+            },
+            "per_rank": {
+                str(r): {"bytes_read": s.posix.bytes_read,
+                         "reads": s.posix.reads,
+                         "read_time_s": s.posix.read_time_s,
+                         "elapsed_s": s.elapsed_s,
+                         "clock_offset_s": s.clock_offset_s,
+                         "findings": len(s.findings)}
+                for r, s in self.ranks.items()},
+            "findings": [f.to_dict() for f in self.findings],
+            "collector": dict(self.collector_stats),
+        }
+
+    def summary(self) -> str:
+        """Human-readable digest (fleet demo / logs)."""
+        lines = [f"FleetReport: {self.nprocs} ranks, "
+                 f"{self.posix.reads} reads, "
+                 f"{self.posix.bytes_read / 2**20:.1f} MiB read, "
+                 f"{self.fleet_bandwidth_mb_s:.1f} MB/s fleet bandwidth"]
+        for r in sorted(self.ranks):
+            s = self.ranks[r]
+            lines.append(
+                f"  rank {r}: {s.posix.reads} reads, "
+                f"{s.posix.bytes_read / 2**20:.2f} MiB, "
+                f"read_time {s.posix.read_time_s * 1e3:.1f} ms, "
+                f"clock_offset {s.clock_offset_s * 1e3:+.3f} ms")
+        for f in self.findings:
+            who = "fleet" if f.rank is None else f"rank {f.rank}"
+            lines.append(f"  [{who}] {f.detector} sev={f.severity:.2f}: "
+                         f"{f.recommendation}")
+        return "\n".join(lines)

@@ -1,0 +1,156 @@
+"""RankReporter: the per-rank collection agent.
+
+Wraps a rank's DarshanRuntime in a ProfileSession (optionally with a
+streaming InsightEngine) and ships the stopped window — per-file
+counters, DXT segments, findings — to the FleetCollector as wire-format
+lines.  Before shipping it measures its clock offset against the
+collector with an NTP-style handshake so the collector can align every
+rank's timeline onto one clock:
+
+    probe:  send clock{t_send}, note t_recv on the reply
+    offset = t_coll - (t_send + t_recv) / 2      (midpoint estimate)
+    keep the sample with the smallest RTT over a few rounds
+
+A transport is any ``send(line) -> reply-line-or-None`` callable: the
+in-process simulated fleet passes ``collector.ingest_line`` directly,
+real deployments use ``SocketTransport`` against a CollectorServer.
+"""
+from __future__ import annotations
+
+import socket
+from typing import Callable, Optional
+
+from repro.core.analysis import SessionReport
+from repro.core.runtime import DarshanRuntime, get_runtime
+from repro.core.session import ProfileSession, recv_reply
+from repro.fleet import wire
+
+Transport = Callable[[str], Optional[str]]
+
+
+class SocketTransport:
+    """Line-framed request/response over one TCP connection."""
+
+    def __init__(self, host: str, port: int, timeout: float = 5.0):
+        self._sock = socket.create_connection((host, port), timeout=timeout)
+
+    def __call__(self, line: str) -> Optional[str]:
+        self._sock.sendall(line.encode() + b"\n")
+        return recv_reply(self._sock)
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    def __enter__(self) -> "SocketTransport":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+class RankReporter:
+    """One rank's collection agent.
+
+    ``runtime=None`` wraps the process-global runtime (real one-process-
+    per-rank deployments, auto-attaching instrumentation); the simulated
+    harness passes a private per-rank runtime with ``auto_attach=False``
+    and drives recording itself."""
+
+    def __init__(self, rank: int, nprocs: int = 1,
+                 runtime: Optional[DarshanRuntime] = None,
+                 auto_attach: bool = True, insight=False):
+        self.rank = rank
+        self.nprocs = nprocs
+        self.rt = runtime or get_runtime()
+        self.session = ProfileSession(self.rt, auto_attach=auto_attach,
+                                      insight=insight)
+        self.clock_offset_s: Optional[float] = None
+        self.clock_rtt_s: Optional[float] = None
+
+    # ---------------------------------------------------------- profiling
+    def start(self) -> None:
+        self.session.start()
+
+    def stop(self) -> SessionReport:
+        return self.session.stop()
+
+    @property
+    def reports(self):
+        return self.session.reports
+
+    def __enter__(self) -> "RankReporter":
+        self.start()
+        return self
+
+    def __exit__(self, *exc):
+        if self.session._active:
+            self.stop()
+        return False
+
+    # ----------------------------------------------------------- shipping
+    def handshake(self, transport: Transport, rounds: int = 5) -> float:
+        """Measure this rank's clock offset against the collector.
+
+        Returns the offset such that ``rank_time + offset`` lands on the
+        collector's clock; caches it for ``ship``."""
+        best_rtt = float("inf")
+        best_offset = 0.0
+        for _ in range(max(rounds, 1)):
+            t_send = self.rt.now()
+            reply = transport(wire.encode("clock", self.rank,
+                                          {"t_send": t_send}))
+            t_recv = self.rt.now()
+            if not reply or reply.startswith("error"):
+                continue
+            msg = wire.decode(reply)
+            if msg.kind != "clock_reply":
+                continue
+            t_coll = float(msg.payload["t_coll"])
+            rtt = t_recv - t_send
+            if rtt < best_rtt:
+                best_rtt = rtt
+                best_offset = t_coll - (t_send + t_recv) / 2.0
+        if best_rtt == float("inf"):
+            raise RuntimeError("clock handshake failed: no valid reply")
+        self.clock_offset_s = best_offset
+        self.clock_rtt_s = best_rtt
+        return best_offset
+
+    def payload_lines(self, report: Optional[SessionReport] = None) -> list:
+        """The hello + report wire lines for the given (default: last)
+        window — what ``ship`` sends, exposed for dumps and replay."""
+        if report is None:
+            if not self.reports:
+                raise RuntimeError("no stopped window to ship")
+            report = self.reports[-1]
+        return [
+            wire.encode_hello(self.rank, self.nprocs),
+            wire.encode_report(self.rank, report, nprocs=self.nprocs,
+                               clock_offset_s=self.clock_offset_s,
+                               clock_rtt_s=self.clock_rtt_s),
+        ]
+
+    def ship(self, transport: Transport,
+             report: Optional[SessionReport] = None,
+             handshake_rounds: int = 5) -> None:
+        """hello -> clock handshake -> report -> bye over one transport."""
+        transport(wire.encode_hello(self.rank, self.nprocs))
+        self.handshake(transport, rounds=handshake_rounds)
+        if report is None:
+            if not self.reports:
+                raise RuntimeError("no stopped window to ship")
+            report = self.reports[-1]
+        transport(wire.encode_report(
+            self.rank, report, nprocs=self.nprocs,
+            clock_offset_s=self.clock_offset_s,
+            clock_rtt_s=self.clock_rtt_s))
+        transport(wire.encode("bye", self.rank, {}))
+
+    def ship_socket(self, host: str, port: int,
+                    report: Optional[SessionReport] = None) -> None:
+        with SocketTransport(host, port) as t:
+            self.ship(t, report=report)

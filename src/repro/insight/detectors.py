@@ -30,13 +30,27 @@ class Finding:
     window: Tuple[float, float]      # [t0, t1] runtime-relative seconds
     evidence: Dict[str, float]       # the counters that drove the decision
     recommendation: str
+    rank: Optional[int] = None       # provenance in a multi-rank fleet
+                                     # (None: single-process / fleet-level)
 
     def to_dict(self) -> dict:
-        return {"detector": self.detector, "title": self.title,
-                "severity": round(self.severity, 4),
-                "window": [self.window[0], self.window[1]],
-                "evidence": dict(self.evidence),
-                "recommendation": self.recommendation}
+        d = {"detector": self.detector, "title": self.title,
+             "severity": round(self.severity, 4),
+             "window": [self.window[0], self.window[1]],
+             "evidence": dict(self.evidence),
+             "recommendation": self.recommendation}
+        if self.rank is not None:
+            d["rank"] = self.rank
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Finding":
+        return cls(detector=d["detector"], title=d.get("title", d["detector"]),
+                   severity=float(d.get("severity", 0.0)),
+                   window=(float(d["window"][0]), float(d["window"][1])),
+                   evidence=dict(d.get("evidence", {})),
+                   recommendation=d.get("recommendation", ""),
+                   rank=d.get("rank"))
 
 
 def _clamp01(x: float) -> float:

@@ -60,7 +60,8 @@ class Trainer:
                  batches: Iterator[np.ndarray],
                  ocfg: Optional[OptimizerConfig] = None,
                  failure: Optional[FailureInjector] = None,
-                 extra_batch: Optional[dict] = None):
+                 extra_batch: Optional[dict] = None,
+                 fleet_reporter=None):
         self.cfg = cfg
         self.tcfg = tcfg
         self.ocfg = ocfg or for_model(cfg)
@@ -79,6 +80,11 @@ class Trainer:
             self.profiler = StepCallback(tcfg.profile_first,
                                          tcfg.profile_last,
                                          every=tcfg.profile_every)
+        # Distributed profiling: a repro.fleet.RankReporter profiles this
+        # process's whole run and ships it to the FleetCollector (the
+        # shipping — reporter.ship / ship_socket — is the caller's call,
+        # after run() returns).
+        self.fleet_reporter = fleet_reporter
 
     # ------------------------------------------------------------------ init
     def init_state(self):
@@ -100,20 +106,29 @@ class Trainer:
         params, opt_state, start_step = self._restore_or_init()
         step = start_step
         t_begin = time.perf_counter()
-        while step < self.tcfg.steps:
-            try:
-                step = self._run_span(params, opt_state, step)
-                break
-            except RuntimeError as e:
-                if "injected failure" not in str(e):
-                    raise
-                # failure recovery: reload newest checkpoint and continue
-                self.ckpt.wait()
-                params, opt_state, step = self._restore_or_init()
-        self.ckpt.wait()
+        if self.fleet_reporter is not None:
+            self.fleet_reporter.start()
+        try:
+            while step < self.tcfg.steps:
+                try:
+                    step = self._run_span(params, opt_state, step)
+                    break
+                except RuntimeError as e:
+                    if "injected failure" not in str(e):
+                        raise
+                    # failure recovery: reload newest checkpoint, continue
+                    self.ckpt.wait()
+                    params, opt_state, step = self._restore_or_init()
+            self.ckpt.wait()
+        finally:
+            rank_report = None
+            if self.fleet_reporter is not None \
+                    and self.fleet_reporter.session._active:
+                rank_report = self.fleet_reporter.stop()
         wall = time.perf_counter() - t_begin
         return {"final_step": step, "wall_s": wall,
                 "metrics": self.metrics_log,
+                "rank_report": rank_report,
                 "profile_reports": (self.profiler.reports
                                     if self.profiler else [])}
 

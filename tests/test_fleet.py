@@ -1,0 +1,470 @@
+"""repro.fleet: simulated multi-rank collection, clock alignment,
+cross-rank detectors, the wire format, and the extended ProfileServer
+protocol (ISSUE 2 acceptance)."""
+import json
+import os
+import socket
+import time
+
+import pytest
+
+from repro.core import reset_runtime
+from repro.core.advisor import StagingAdvisor
+from repro.core.analysis import ModuleSummary, analyze
+from repro.core.dxt import Segment
+from repro.core.export import to_darshan_log
+from repro.core.records import FileRecord
+from repro.core.session import ProfileServer, control
+from repro.data.tiers import TokenBucket
+from repro.fleet import (CollectorServer, FleetCollector, RankReporter,
+                         RankSlice, run_simulated_fleet, wire)
+from repro.fleet.detectors import (LoadImbalanceDetector,
+                                   RankStragglerDetector,
+                                   SharedFileContentionDetector)
+from repro.insight.detectors import Finding
+
+
+def _make_files(root, rank, n, size):
+    paths = []
+    os.makedirs(str(root), exist_ok=True)
+    for i in range(n):
+        p = os.path.join(str(root), f"rank{rank}_{i:03d}.bin")
+        with open(p, "wb") as f:
+            f.write(b"x" * size)
+        paths.append(p)
+    return paths
+
+
+def _detector_names(report):
+    return sorted({f.detector for f in report.findings})
+
+
+# ------------------------------------------------------------ wire format
+def test_wire_roundtrip_report_payload():
+    per_file = {"/d/a.bin": FileRecord("/d/a.bin",
+                                       {"POSIX_READS": 3,
+                                        "POSIX_BYTES_READ": 4096},
+                                       {"POSIX_F_READ_TIME": 0.25}),
+                "/d/b.bin": FileRecord("/d/b.bin", {"POSIX_OPENS": 1}, {})}
+    rep = analyze(per_file, {}, elapsed_s=1.5, stat_sizes=False)
+    rep.segments = [Segment("POSIX", "/d/a.bin", "read", 0, 4096,
+                            0.1, 0.2, 7)]
+    rep.findings = [Finding("small-file-storm", "Small-file storm", 0.8,
+                            (0.0, 1.0), {"opens": 64.0}, "stage", rank=2)]
+    rep.file_sizes = {"/d/a.bin": 4096}
+
+    line = wire.encode_report(2, rep, nprocs=4, clock_offset_s=-3.25,
+                              clock_rtt_s=1e-4)
+    msg = wire.decode(line)
+    assert (msg.v, msg.kind, msg.rank) == (wire.WIRE_VERSION, "report", 2)
+    back = wire.decode_records(msg.payload["posix"])
+    assert back["/d/a.bin"].counters == per_file["/d/a.bin"].counters
+    assert back["/d/a.bin"].fcounters == per_file["/d/a.bin"].fcounters
+    assert back["/d/b.bin"].counters == per_file["/d/b.bin"].counters
+    segs = wire.decode_segments(msg.payload["segments"])
+    assert segs == rep.segments
+    founds = wire.decode_findings(msg.payload["findings"])
+    assert founds == rep.findings
+    assert msg.payload["clock"]["offset_s"] == -3.25
+    assert msg.payload["file_sizes"] == {"/d/a.bin": 4096}
+
+
+def test_wire_rejects_garbage_and_future_versions():
+    with pytest.raises(wire.WireError):
+        wire.decode("not json at all {")
+    with pytest.raises(wire.WireError):
+        wire.decode(json.dumps({"v": wire.WIRE_VERSION + 1,
+                                "kind": "report", "rank": 0,
+                                "payload": {}}))
+    with pytest.raises(wire.WireError):
+        wire.decode(json.dumps({"v": 1, "kind": "nope", "rank": 0,
+                                "payload": {}}))
+    with pytest.raises(wire.WireError):
+        wire.encode("nope", 0, {})
+
+
+# ------------------------------------------------- simulated fleet e2e
+def test_simulated_4rank_merged_counters_equal_per_rank_sums(tmp_path):
+    files = {r: _make_files(tmp_path, r, 6, 32768) for r in range(4)}
+
+    def workload(rank, io):
+        for p in files[rank]:
+            io.read_file(p, chunk=8192)
+
+    coll = FleetCollector()
+    rep = run_simulated_fleet(4, workload, collector=coll)
+    assert rep.nprocs == 4
+    assert sorted(rep.ranks) == [0, 1, 2, 3]
+    assert coll.stats["reports"] == 4
+    # global rollup == per-rank sums, and equals ground truth
+    assert rep.posix.reads == sum(s.posix.reads for s in rep.ranks.values())
+    assert rep.posix.bytes_read == 4 * 6 * 32768
+    assert rep.posix.opens == sum(s.posix.opens for s in rep.ranks.values())
+    for i in range(10):
+        assert rep.posix.read_size_hist[i] == sum(
+            s.posix.read_size_hist[i] for s in rep.ranks.values())
+    # merged chrome trace: one pid per rank
+    trace = rep.to_chrome_trace(str(tmp_path / "fleet.json"))
+    pids = {e["pid"] for e in trace["traceEvents"] if e["ph"] == "X"}
+    assert pids == {"rank 0", "rank 1", "rank 2", "rank 3"}
+    assert (tmp_path / "fleet.json").exists()
+    # merged timeline is globally ordered
+    merged = rep.merged_segments()
+    assert [s.start for _, s in merged] == sorted(s.start
+                                                  for _, s in merged)
+
+
+def test_clock_handshake_recovers_injected_skew(tmp_path):
+    files = {r: _make_files(tmp_path, r, 4, 16384) for r in range(4)}
+    skews = [0.0, 5.0, 10.0, 15.0]
+
+    def workload(rank, io):
+        for p in files[rank]:
+            io.read_file(p)
+
+    rep = run_simulated_fleet(4, workload, clock_skew_s=skews,
+                              handshake_rounds=5)
+    for r, s in rep.ranks.items():
+        # offset must cancel the injected skew (in-process RTT is ~µs)
+        assert s.clock_offset_s == pytest.approx(-skews[r], abs=0.05)
+        # aligned segments: monotone per rank, on the collector clock
+        starts = [seg.start for seg in s.segments]
+        assert starts == sorted(starts)
+        assert all(-0.1 <= t < 5.0 for t in starts), \
+            f"rank {r} not aligned: {starts[:3]}"
+    # and therefore the fleet window is tight, not skew-spread
+    assert rep.window[1] - rep.window[0] < 5.0
+
+
+def test_rank_straggler_fires_on_throttled_rank(tmp_path):
+    files = {r: _make_files(tmp_path, r, 6, 65536) for r in range(4)}
+
+    def workload(rank, io):
+        for p in files[rank]:
+            io.read_file(p, chunk=16384)
+
+    # rank 2 reads through a 1 MB/s tier (data/tiers TokenBucket with a
+    # small burst so the throttle actually engages on ~384 KiB)
+    bucket = TokenBucket(1e6, burst=16384)
+    rep = run_simulated_fleet(4, workload, throttles={2: bucket.take})
+    stragglers = [f for f in rep.findings if f.detector == "rank-straggler"]
+    assert len(stragglers) == 1
+    f = stragglers[0]
+    assert f.rank == 2
+    assert f.evidence["straggler_rank"] == 2
+    assert f.evidence["ratio"] >= RankStragglerDetector.MIN_RATIO
+    assert f.severity > 0
+    assert "rank 2" in f.recommendation.lower()
+    # balanced volume => no load-imbalance false positive
+    assert "load-imbalance" not in _detector_names(rep)
+
+
+def test_balanced_fleet_raises_no_cross_rank_findings(tmp_path):
+    files = {r: _make_files(tmp_path, r, 4, 32768) for r in range(4)}
+
+    def workload(rank, io):
+        for p in files[rank]:
+            io.read_file(p)
+
+    rep = run_simulated_fleet(4, workload)
+    assert "rank-straggler" not in _detector_names(rep)
+    assert "load-imbalance" not in _detector_names(rep)
+
+
+# -------------------------------------------------- detector unit tests
+def _slice_with(rank, bytes_read=0, read_time_s=0.0, segments=()):
+    s = RankSlice(rank=rank)
+    s.posix = ModuleSummary("POSIX")
+    s.posix.bytes_read = bytes_read
+    s.posix.read_time_s = read_time_s
+    s.posix.reads = max(1, bytes_read // 4096)
+    s.segments = list(segments)
+    return s
+
+
+def test_load_imbalance_detector_flags_heavy_rank():
+    det = LoadImbalanceDetector()
+    ranks = {0: _slice_with(0, bytes_read=8 << 20),
+             1: _slice_with(1, bytes_read=1 << 20),
+             2: _slice_with(2, bytes_read=1 << 20),
+             3: _slice_with(3, bytes_read=1 << 20)}
+    out = det.check(ranks)
+    assert len(out) == 1 and out[0].rank == 0
+    assert out[0].evidence["ratio"] >= det.MIN_RATIO
+    # balanced -> nothing
+    ranks = {r: _slice_with(r, bytes_read=4 << 20) for r in range(4)}
+    assert det.check(ranks) == []
+    # tiny volume -> nothing
+    ranks = {0: _slice_with(0, bytes_read=8000),
+             1: _slice_with(1, bytes_read=100)}
+    assert det.check(ranks) == []
+
+
+def test_shared_file_contention_detector_needs_overlap():
+    det = SharedFileContentionDetector()
+
+    def seg(rank_t0, dur, path="/shared/data.bin"):
+        return Segment("POSIX", path, "read", 0, 4096,
+                       rank_t0, rank_t0 + dur, 1)
+
+    # two ranks inside the same file at the same time
+    ranks = {0: _slice_with(0, segments=[seg(0.0, 0.10)]),
+             1: _slice_with(1, segments=[seg(0.02, 0.10)])}
+    out = det.check(ranks)
+    assert len(out) == 1
+    f = out[0]
+    assert f.detector == "shared-file-contention"
+    assert f.rank is None                      # collective pathology
+    assert f.evidence["path_ranks"] == 2
+    assert f.evidence["overlap_frac"] > 0.5
+    # same file, disjoint times -> no contention
+    ranks = {0: _slice_with(0, segments=[seg(0.0, 0.05)]),
+             1: _slice_with(1, segments=[seg(0.5, 0.05)])}
+    assert det.check(ranks) == []
+    # overlap on DIFFERENT files -> no contention
+    ranks = {0: _slice_with(0, segments=[seg(0.0, 0.1, "/a")]),
+             1: _slice_with(1, segments=[seg(0.0, 0.1, "/b")])}
+    assert det.check(ranks) == []
+
+
+def test_rank_straggler_detector_ignores_microsecond_fleets():
+    det = RankStragglerDetector()
+    ranks = {0: _slice_with(0, read_time_s=8e-5),
+             1: _slice_with(1, read_time_s=1e-5),
+             2: _slice_with(2, read_time_s=1e-5)}
+    assert det.check(ranks) == []              # all cache-hit noise
+    ranks = {0: _slice_with(0, read_time_s=0.8),
+             1: _slice_with(1, read_time_s=0.1),
+             2: _slice_with(2, read_time_s=0.1)}
+    out = det.check(ranks)
+    assert len(out) == 1 and out[0].rank == 0
+
+
+# ------------------------------------------------ fleet staging plan
+def test_fleet_staging_plan_prefers_files_shared_by_more_ranks():
+    shared, private = "/d/shared.bin", "/d/private.bin"
+
+    def slice_reading(rank, paths):
+        s = RankSlice(rank=rank)
+        s.per_file = {p: FileRecord(p, {"POSIX_READS": 2}) for p in paths}
+        s.file_sizes = {p: 1 << 20 for p in paths}
+        return s
+
+    ranks = {r: slice_reading(r, [shared] if r else [shared, private])
+             for r in range(4)}
+    from repro.fleet.report import FleetReport, merge_summaries
+    fr = FleetReport(nprocs=4, ranks=ranks,
+                     posix=ModuleSummary("POSIX"),
+                     stdio=ModuleSummary("STDIO"), findings=[])
+    # capacity for exactly one file: the 4-reader file must win
+    plan = StagingAdvisor(size_threshold=2 << 20,
+                          capacity_bytes=1 << 20).fleet_plan(fr)
+    assert plan.total_files == 1
+    assert plan.files[0][0] == shared
+    # unconstrained: both staged, dataset is the union (2 files)
+    plan = StagingAdvisor(size_threshold=2 << 20).fleet_plan(fr)
+    assert plan.total_files == 2
+    assert plan.dataset_files == 2
+
+
+# ---------------------------------------- ProfileServer fleet protocol
+def test_profile_server_stop_reply_contains_findings(tmp_path):
+    paths = _make_files(tmp_path, 0, 48, 1024)   # created BEFORE profiling
+    rt = reset_runtime()
+    srv = ProfileServer(runtime=rt, insight=True)
+    try:
+        assert control(srv.port, "start") == "ok"
+        for p in paths:
+            fd = os.open(p, os.O_RDONLY)
+            os.read(fd, 4096)
+            os.close(fd)
+        stop = control(srv.port, "stop", parse=True)
+        assert "findings" in stop
+        assert "small-file-storm" in [f["detector"]
+                                      for f in stop["findings"]]
+        assert stop["reads"] >= 48
+        # findings verb re-serves the last window's findings
+        again = control(srv.port, "findings", parse=True)
+        assert again["findings"] == stop["findings"]
+    finally:
+        srv.close()
+
+
+def test_profile_server_legacy_clients_still_work(tmp_path):
+    rt = reset_runtime()
+    srv = ProfileServer(runtime=rt)
+    try:
+        # unparsed string replies, exactly as before
+        assert control(srv.port, "status") == "active=False"
+        assert control(srv.port, "start") == "ok"
+        raw = control(srv.port, "stop")
+        assert "posix_bandwidth_mb_s" in json.loads(raw)
+        assert control(srv.port, "bogus") == "unknown"
+        # a client that sends its command with no trailing newline
+        with socket.create_connection(("127.0.0.1", srv.port)) as s:
+            s.sendall(b"status")
+            s.shutdown(socket.SHUT_WR)
+            assert s.recv(4096) == b"active=False\n"
+    finally:
+        srv.close()
+
+
+def test_profile_server_multi_command_single_connection(tmp_path):
+    rt = reset_runtime()
+    srv = ProfileServer(runtime=rt)
+    try:
+        with socket.create_connection(("127.0.0.1", srv.port)) as s:
+            s.sendall(b"status\nstart\nstatus\n")
+            deadline = time.time() + 5
+            buf = b""
+            while buf.count(b"\n") < 3 and time.time() < deadline:
+                buf += s.recv(4096)
+        assert buf.decode().splitlines() == ["active=False", "ok",
+                                             "active=True"]
+    finally:
+        srv.close()
+
+
+def test_profile_server_report_verb_feeds_collector(tmp_path):
+    paths = _make_files(tmp_path, 0, 8, 8192)
+    rt = reset_runtime()
+    srv = ProfileServer(runtime=rt, rank=3, nprocs=8)
+    try:
+        control(srv.port, "start")
+        for p in paths:
+            fd = os.open(p, os.O_RDONLY)
+            os.read(fd, 16384)
+            os.close(fd)
+        control(srv.port, "stop")
+        line = control(srv.port, "report")     # far beyond 256 bytes
+        assert len(line) > 256
+        clk = control(srv.port, "clock 0.0", parse=True)
+        assert "t" in clk and "wall" in clk
+        coll = FleetCollector()
+        assert coll.ingest_line(line) == "ok"
+        fleet = coll.report()
+        assert fleet.ranks[3].posix.bytes_read == 8 * 8192
+        assert fleet.nprocs == 8
+    finally:
+        srv.close()
+
+
+def test_collector_server_socket_roundtrip(tmp_path):
+    files = {r: _make_files(tmp_path, r, 4, 16384) for r in range(2)}
+    with CollectorServer() as cs:
+        for r in range(2):
+            from repro.core.runtime import DarshanRuntime
+            from repro.fleet.harness import RankIO
+            rep = RankReporter(r, nprocs=2, runtime=DarshanRuntime(),
+                               auto_attach=False)
+            io = RankIO(rep.rt)
+            with rep:
+                for p in files[r]:
+                    io.read_file(p)
+            rep.ship_socket("127.0.0.1", cs.port)
+        fleet = cs.collector.report()
+    assert sorted(fleet.ranks) == [0, 1]
+    assert fleet.posix.bytes_read == 2 * 4 * 16384
+    assert all(abs(s.clock_offset_s) < 1.0 for s in fleet.ranks.values())
+    assert cs.collector.stats["reports"] == 2
+    assert cs.collector.stats["errors"] == 0
+
+
+def test_nested_sessions_do_not_blind_outer_window(tmp_path):
+    """A fleet RankReporter spans the whole run while a StepCallback
+    window opens and closes inside it: the inner stop must restore (not
+    clear) runtime recording, or the outer window goes blind."""
+    from repro.core import ProfileSession
+    paths = _make_files(tmp_path, 0, 2, 4096)
+    rt = reset_runtime()
+    outer = ProfileSession(rt)
+    outer.start()
+    inner = ProfileSession(rt, auto_attach=False)
+    inner.start()
+    fd = os.open(paths[0], os.O_RDONLY)
+    os.read(fd, 4096)
+    os.close(fd)
+    inner.stop()
+    assert rt.enabled                     # restored, not cleared
+    fd = os.open(paths[1], os.O_RDONLY)   # after the inner window
+    os.read(fd, 4096)
+    os.close(fd)
+    rep = outer.stop()
+    assert not rt.enabled
+    assert rep.posix.reads == 2           # outer saw BOTH reads
+
+
+def test_profile_server_replies_to_newline_less_idle_client():
+    rt = reset_runtime()
+    srv = ProfileServer(runtime=rt)
+    try:
+        # legacy client: no trailing newline, write side kept open
+        with socket.create_connection(("127.0.0.1", srv.port)) as s:
+            s.settimeout(5)
+            s.sendall(b"status")
+            assert s.recv(4096) == b"active=False\n"
+    finally:
+        srv.close()
+
+
+# ------------------------------------------------------ darshan log rank
+def test_darshan_log_emits_actual_rank_and_header_block():
+    per_file = {"/d/x.bin": FileRecord("/d/x.bin", {"POSIX_READS": 5})}
+    rep = analyze(per_file, {}, elapsed_s=1.0, stat_sizes=False)
+    text = to_darshan_log(rep, rank=7, exe="train.py --epochs 3", nprocs=16)
+    assert "# exe: train.py --epochs 3" in text
+    assert "# nprocs: 16" in text
+    assert "POSIX\t7\t" in text
+    assert "POSIX\t0\t" not in text
+
+
+def test_fleet_darshan_log_one_block_per_rank(tmp_path):
+    files = {r: _make_files(tmp_path, r, 2, 4096) for r in range(3)}
+
+    def workload(rank, io):
+        for p in files[rank]:
+            io.read_file(p)
+
+    rep = run_simulated_fleet(3, workload)
+    text = rep.to_darshan_log(exe="fleet_demo.py")
+    assert "# nprocs: 3" in text
+    for r in range(3):
+        assert f"POSIX\t{r}\t" in text
+    # every record line carries the rank that produced it
+    for line in text.splitlines():
+        if line.startswith("POSIX\t"):
+            rank = int(line.split("\t")[1])
+            fpath = line.split("\t")[-1]
+            assert f"rank{rank}_" in os.path.basename(fpath)
+
+
+# ------------------------------------------------------- trainer hook
+def test_trainer_attaches_rank_reporter(tmp_path):
+    jax = pytest.importorskip("jax")
+    import numpy as np
+    from repro.configs import get_config
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    def batches():
+        rng = np.random.default_rng(0)
+        while True:
+            yield rng.integers(0, 128, (2, 33)).astype(np.int32)
+
+    reset_runtime()
+    cfg = get_config("qwen1.5-4b", reduced=True)
+    tcfg = TrainerConfig(steps=2, checkpoint_every=2, log_every=1,
+                         checkpoint_dir=str(tmp_path / "ck"),
+                         checkpoint_async=False)
+    reporter = RankReporter(rank=0, nprocs=1)
+    out = Trainer(cfg, tcfg, batches(), fleet_reporter=reporter).run()
+    assert out["final_step"] == 2
+    rep = out["rank_report"]
+    assert rep is not None
+    # the checkpoint write landed inside the rank's profiled window
+    assert rep.stdio.bytes_written > 0
+    # and the window ships through the wire like any other rank
+    coll = FleetCollector()
+    reporter.ship(coll.ingest_line)
+    slice0 = coll.report().ranks[0]
+    assert slice0.stdio.bytes_written == rep.stdio.bytes_written
+    assert slice0.elapsed_s > 0
