@@ -50,7 +50,8 @@ def _rank_payload(rank: int, nranks: int, n_files: int,
 
 
 def run(rows: Row) -> None:
-    from repro.fleet import FleetCollector, run_simulated_fleet
+    from repro.fleet import FleetCollector
+    from repro.profiler import Profiler, ProfilerOptions
 
     n_files = scaled(200, 20)
     n_segments = scaled(2000, 100)
@@ -95,7 +96,7 @@ def run(rows: Row) -> None:
             io.read_file(p, chunk=16384)
 
     t0 = time.perf_counter()
-    fleet = run_simulated_fleet(4, workload)
+    fleet = Profiler(ProfilerOptions(mode="fleet", nranks=4)).run(workload)
     wall = time.perf_counter() - t0
     rows.add("fleet_sim_e2e_4ranks", wall * 1e6,
              f"ranks={fleet.nprocs};reads={fleet.posix.reads};"

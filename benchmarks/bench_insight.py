@@ -27,8 +27,9 @@ def _epoch(paths):
 
 
 def run(rows: Row) -> None:
-    from repro.core import InsightEngine, ProfileSession, reset_runtime
+    from repro.core import ProfileSession, reset_runtime
     from repro.data.synthetic import make_imagenet_like
+    from repro.insight import InsightEngine
 
     ws = make_workspace("insight_")
     paths = make_imagenet_like(os.path.join(ws, "img"),

@@ -1,12 +1,13 @@
-"""repro.fleet demo: a 4-rank simulated collection end to end.
+"""repro.fleet demo: a 4-rank simulated collection end to end, driven
+through the `repro.profiler` façade.
 
 Four simulated ranks (N threads, N runtimes — no MPI) each read their
 own shard; rank 2 reads through a 1 MB/s token-bucket tier and rank
-clocks are deliberately skewed by seconds.  Every rank's RankReporter
-ships counters, DXT segments, and findings over the wire protocol into
-a FleetCollector, which aligns the clocks via handshake, rolls the
-counters up globally, runs the cross-rank detectors, and prints the
-FleetReport — the rank-straggler finding names rank 2.  Exports land
+clocks are deliberately skewed by seconds.  ``ProfilerOptions(mode=
+"fleet")`` selects the cross-rank detectors from the plugin registry,
+ships every rank's window through the wire protocol into a
+FleetCollector, aligns the clocks via handshake, and returns one
+unified Report — the rank-straggler finding names rank 2.  Exports land
 next to this script: a merged Chrome trace (one pid per rank; load it
 in Perfetto) and a darshan-parser-style log with real rank numbers.
 
@@ -19,9 +20,9 @@ import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import StagingAdvisor
 from repro.data.tiers import TokenBucket
-from repro.fleet import FleetCollector, run_simulated_fleet
+from repro.fleet import FleetCollector
+from repro.profiler import Profiler, ProfilerOptions
 
 NRANKS = 4
 FILES_PER_RANK = 12
@@ -49,12 +50,14 @@ def main() -> None:
         # rank 2 sits on a slow tier; clocks are skewed to prove alignment
         slow = TokenBucket(1e6, burst=16384)
         collector = FleetCollector()
-        fleet = run_simulated_fleet(
-            NRANKS, workload, collector=collector,
-            clock_skew_s=[0.0, 2.0, 4.0, 6.0],
-            throttles={2: slow.take})
+        profiler = Profiler(ProfilerOptions(
+            mode="fleet", nranks=NRANKS,
+            clock_skew_s=(0.0, 2.0, 4.0, 6.0),
+            advisors=("staging",)))
+        report = profiler.run(workload, collector=collector,
+                              throttles={2: slow.take})
 
-        print(fleet.summary())
+        print(report.summary())
         print()
         print(f"collector: {collector.stats['reports']} payloads, "
               f"{collector.stats['bytes'] / 1024:.0f} KiB on the wire, "
@@ -63,13 +66,11 @@ def main() -> None:
         out_dir = os.path.dirname(os.path.abspath(__file__))
         trace_path = os.path.join(out_dir, "fleet_trace.json")
         log_path = os.path.join(out_dir, "fleet_darshan.txt")
-        fleet.to_chrome_trace(trace_path)
-        fleet.to_darshan_log(log_path, exe="fleet_demo.py")
+        report.export("chrome_trace", trace_path)
+        report.export("darshan_log", log_path)
         print(f"merged Chrome trace (one pid per rank): {trace_path}")
         print(f"darshan-parser log (real rank column):  {log_path}")
-
-        plan = StagingAdvisor().fleet_plan(fleet)
-        print(f"fleet staging plan: {plan.summary()}")
+        print(f"fleet staging plan: {report.advice['staging'].summary()}")
     finally:
         shutil.rmtree(root, ignore_errors=True)
 

@@ -1,9 +1,10 @@
-"""repro.insight demo: attach -> profile -> findings -> staging.
+"""repro.insight demo: attach -> profile -> findings -> staging,
+driven through the `repro.profiler` facade.
 
-Runs three synthetic I/O pathologies under a profiled session with the
-streaming insight engine, prints each diagnosis with its evidence and
-recommendation, then closes the loop by feeding the small-file finding
-into the StagingAdvisor.
+Runs three synthetic I/O pathologies with the streaming insight engine
+enabled in ProfilerOptions, prints each diagnosis with its evidence and
+recommendation, and closes the loop with the registry's "staging"
+advisor (selected by name, no hand-wiring).
 
     PYTHONPATH=src python examples/insight_demo.py
 """
@@ -15,8 +16,8 @@ import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import (ProfileSession, StagingAdvisor, reset_runtime,
-                        to_chrome_trace)
+from repro.core import reset_runtime
+from repro.profiler import Profiler, ProfilerOptions
 
 
 def tiny_read_storm(root):
@@ -70,13 +71,13 @@ def main():
     try:
         for name, workload in workloads:
             rt = reset_runtime()
-            sess = ProfileSession(rt, insight=True)
-            with sess:
-                workload()
-            rep = sess.reports[0]
+            profiler = Profiler(ProfilerOptions(insight=True,
+                                                advisors=("staging",)),
+                                runtime=rt)
+            rep = profiler.run(workload)
             print(f"\n=== {name} "
                   f"({rep.posix.reads} reads, {rep.posix.writes} writes, "
-                  f"{rep.posix_bandwidth_mb_s:.0f} MB/s) ===")
+                  f"{rep.bandwidth_mb_s:.0f} MB/s) ===")
             if not rep.findings:
                 print("  no findings")
             for f in rep.findings:
@@ -86,11 +87,11 @@ def main():
                 print(f"    recommendation: {f.recommendation}")
 
             if any(f.detector == "small-file-storm" for f in rep.findings):
-                plan = StagingAdvisor().plan(rep, findings=rep.findings)
+                plan = rep.advice["staging"]
                 print(f"  -> staging loop closed: {plan.summary()}")
 
             trace_path = os.path.join(root, "trace.json")
-            to_chrome_trace(rep.segments, trace_path, findings=rep.findings)
+            rep.export("chrome_trace", trace_path)
             print(f"  trace with insight markers: {trace_path}")
     finally:
         shutil.rmtree(root, ignore_errors=True)

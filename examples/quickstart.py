@@ -1,55 +1,61 @@
-"""Quickstart: profile an input pipeline with jax-darshan (tf-Darshan
-reproduction) and print the Input-Pipeline-Analysis report.
+"""Quickstart: profile an input pipeline through the `repro.profiler`
+façade and print the Input-Pipeline-Analysis report.
+
+One options object configures the whole stack (instrumentation, insight,
+exporters, advisors); `run()` returns a unified Report.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import json
 import os
 import sys
 import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import (IOMonitor, ProfileSession, StagingAdvisor,
-                        reset_runtime, to_chrome_trace, to_json_report)
+from repro.core import IOMonitor, reset_runtime
 from repro.data.pipeline import Pipeline
 from repro.data.readers import posix_read_file
 from repro.data.synthetic import make_imagenet_like
+from repro.profiler import Profiler, ProfilerOptions
 
 
 def main():
     tmp = tempfile.mkdtemp(prefix="quickstart_")
     paths = make_imagenet_like(os.path.join(tmp, "imgs"), n_files=256)
 
-    rt = reset_runtime()
-    monitor = IOMonitor().start()
-    with ProfileSession(rt) as session:          # runtime attachment
+    def epoch():
         n_bytes = 0
         for batch in (Pipeline(paths)
                       .map(posix_read_file, num_parallel_calls=8)
                       .batch(32)
                       .prefetch(2)):
             n_bytes += sum(len(x) for x in batch)
+        return n_bytes
+
+    rt = reset_runtime()
+    monitor = IOMonitor().start()
+    profiler = Profiler(ProfilerOptions(mode="local",
+                                        advisors=("staging",)),
+                        runtime=rt)
+    report = profiler.run(epoch)             # attach -> profile -> analyze
     monitor.stop()
 
-    report = session.reports[0]
-    print(f"POSIX bandwidth : {report.posix_bandwidth_mb_s:8.1f} MB/s "
+    sr = report.session                      # the native SessionReport view
+    print(f"POSIX bandwidth : {report.bandwidth_mb_s:8.1f} MB/s "
           f"(monitor: {monitor.bandwidth_mb_s():.1f} MB/s)")
     print(f"opens/reads     : {report.posix.opens}/{report.posix.reads} "
-          f"({report.reads_per_open:.2f} reads per open)")
+          f"({sr.reads_per_open:.2f} reads per open)")
     print(f"zero-len reads  : {report.posix.zero_reads} "
           f"-> EOF-double-read pattern: "
-          f"{report.has_eof_double_read_pattern()}")
-    print(f"sequential reads: {report.seq_read_frac:.0%}, "
-          f"consecutive: {report.consec_read_frac:.0%}")
+          f"{sr.has_eof_double_read_pattern()}")
+    print(f"sequential reads: {sr.seq_read_frac:.0%}, "
+          f"consecutive: {sr.consec_read_frac:.0%}")
+    print(f"staging advice  : {report.advice['staging'].summary()}")
 
-    plan = StagingAdvisor(size_threshold=100 * 1024).plan(report)
-    print(f"staging advice  : {plan.summary()}")
-
-    out = os.path.join(tmp, "trace.json")
-    to_chrome_trace(report.segments, out)
-    to_json_report(report, os.path.join(tmp, "report.json"))
-    print(f"TraceViewer JSON: {out} ({report.dxt_segments} segments)")
+    out = report.export_all(os.path.join(tmp, "exports"))
+    print(f"TraceViewer JSON: {out['chrome_trace']} "
+          f"({sr.dxt_segments} segments)")
+    print(f"exports         : {sorted(out)}")
 
 
 if __name__ == "__main__":

@@ -9,14 +9,21 @@ from repro.core.dxt import DXTBuffer, Segment
 from repro.core.export import to_chrome_trace, to_darshan_log, to_json_report
 from repro.core.monitor import IOMonitor
 from repro.core.runtime import DarshanRuntime, get_runtime, reset_runtime
-from repro.core.session import ProfileServer, ProfileSession, StepCallback
+from repro.core.session import (ProfileServer, ProfileServerError,
+                                ProfileSession, StepCallback, control)
 from repro.core.staging import StagingManager
 
 
 def __getattr__(name):
-    # Lazy: repro.insight imports repro.core submodules, so importing it
-    # eagerly here would cycle when repro.insight is imported first.
+    # Deprecated re-exports: Finding/InsightEngine live in repro.insight
+    # (and reach most callers through the repro.profiler façade); the old
+    # lazy-import cycle-breaking hack is gone with the new layering.
     if name in ("Finding", "InsightEngine"):
+        import warnings
+        warnings.warn(
+            f"importing {name} from repro.core is deprecated; import it "
+            "from repro.insight (or use the repro.profiler facade)",
+            DeprecationWarning, stacklevel=2)
         import repro.insight as _insight
         return getattr(_insight, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
@@ -28,6 +35,6 @@ __all__ = [
     "attach", "detach", "is_attached", "DXTBuffer", "Segment",
     "to_chrome_trace", "to_darshan_log", "to_json_report", "IOMonitor",
     "DarshanRuntime", "get_runtime", "reset_runtime", "ProfileServer",
-    "ProfileSession", "StepCallback", "StagingManager", "Finding",
-    "InsightEngine",
+    "ProfileServerError", "ProfileSession", "StepCallback", "control",
+    "StagingManager",
 ]

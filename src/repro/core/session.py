@@ -129,9 +129,13 @@ class StepCallback:
     every 5 batches to derive a bandwidth series)."""
 
     def __init__(self, first: int, last: int, every: Optional[int] = None,
-                 runtime: Optional[DarshanRuntime] = None):
+                 runtime: Optional[DarshanRuntime] = None,
+                 session: Optional[ProfileSession] = None):
         self.first, self.last, self.every = first, last, every
-        self.session = ProfileSession(runtime)
+        # ``session`` lets the repro.profiler façade drive a fully
+        # configured ProfileSession (insight detectors, trace flag)
+        # through the automatic step-window mode.
+        self.session = session or ProfileSession(runtime)
         self.reports = self.session.reports
 
     def on_step_begin(self, step: int) -> None:
@@ -218,12 +222,18 @@ class ProfileServer:
         self.rank = rank
         self.nprocs = nprocs
         self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        # SO_REUSEADDR + joining handler threads in close(): back-to-back
+        # servers in one process can re-bind the port immediately instead
+        # of racing lingering TIME_WAIT sockets / still-open connections.
         self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._srv.bind(("127.0.0.1", port))
         self._srv.listen(4)
         self.port = self._srv.getsockname()[1]
         self._stop = threading.Event()
         self._cmd_lock = threading.Lock()   # serialize session mutation
+        self._conn_lock = threading.Lock()
+        self._conn_threads: list = []
+        self._conns: set = set()
         self._thread = threading.Thread(target=self._serve, daemon=True)
         self._thread.start()
 
@@ -234,21 +244,43 @@ class ProfileServer:
                 conn, _ = self._srv.accept()
             except socket.timeout:
                 continue
+            except OSError:
+                # fd exhaustion or a closing socket raises immediately:
+                # back off instead of spinning hot on retry
+                self._stop.wait(0.05)
+                continue
             # connections are long-lived now (pipelined commands, a
             # collector polling report/clock): one thread each, so a
             # persistent client can't starve other control clients
-            threading.Thread(target=self._handle, args=(conn,),
-                             daemon=True).start()
+            t = threading.Thread(target=self._handle, args=(conn,),
+                                 daemon=True)
+            with self._conn_lock:
+                self._conn_threads.append(t)
+                self._conns.add(conn)
+            t.start()
 
     def _handle(self, conn: socket.socket) -> None:
-        with conn:
-            try:
-                for line in recv_lines(conn):
-                    if self._stop.is_set():
-                        break
-                    conn.sendall(self._dispatch(line.strip()))
-            except (ValueError, OSError):
-                pass
+        try:
+            with conn:
+                try:
+                    for line in recv_lines(conn):
+                        if self._stop.is_set():
+                            break
+                        conn.sendall(self._dispatch(line.strip()))
+                except (ValueError, OSError):
+                    pass
+        finally:
+            with self._conn_lock:
+                self._conns.discard(conn)
+                # prune finished handlers so a reconnect-per-probe
+                # client can't grow the list for the server's lifetime;
+                # keep not-yet-started threads (ident None — registered
+                # by _serve but start() hasn't run), else close() could
+                # miss joining a live handler
+                me = threading.current_thread()
+                self._conn_threads = [
+                    t for t in self._conn_threads
+                    if t is not me and (t.ident is None or t.is_alive())]
 
     def _dispatch(self, cmd: str) -> bytes:
         with self._cmd_lock:
@@ -297,6 +329,29 @@ class ProfileServer:
         self._stop.set()
         self._thread.join(timeout=2)
         self._srv.close()
+        # Wake handler threads blocked in recv (their clients may hold
+        # connections open for seconds), then JOIN them: a handler still
+        # holding a connection after close() would keep the old session
+        # mutable while a successor server on the same port serves new
+        # clients.
+        with self._conn_lock:
+            conns = list(self._conns)
+            threads = list(self._conn_threads)
+        for conn in conns:
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                conn.close()
+            except OSError:
+                pass
+        for t in threads:
+            try:
+                t.join(timeout=2)
+            except RuntimeError:
+                # registered by _serve but start() hadn't run yet
+                pass
         # A window left open by a client must not leak the global
         # attach: later sessions would silently record into THIS
         # server's runtime instead of their own.
@@ -307,13 +362,30 @@ class ProfileServer:
                 pass
 
 
+class ProfileServerError(RuntimeError):
+    """A ProfileServer control exchange failed: the server replied with
+    an error/unknown-verb line, or the reply wasn't the JSON the caller
+    asked to parse."""
+
+
 def control(port: int, cmd: str, parse: bool = False):
     """Client helper for ProfileServer.  Returns the raw reply string,
     or the decoded JSON object when ``parse=True`` (e.g. the ``stop``
-    reply with its ``findings`` list)."""
+    reply with its ``findings`` list).
+
+    With ``parse=True``, an error/``unknown`` reply or a malformed
+    (non-JSON) reply raises ``ProfileServerError`` naming the verb and
+    the offending reply, instead of surfacing a raw JSONDecodeError."""
     with socket.create_connection(("127.0.0.1", port), timeout=5) as s:
         s.sendall(cmd.encode() + b"\n")
         reply = recv_reply(s)
     if parse:
-        return json.loads(reply)
+        if reply.startswith(("error", "ERR")) or reply == "unknown":
+            raise ProfileServerError(
+                f"server rejected {cmd.partition(' ')[0]!r}: {reply}")
+        try:
+            return json.loads(reply)
+        except json.JSONDecodeError as e:
+            raise ProfileServerError(
+                f"malformed reply to {cmd.partition(' ')[0]!r}: {reply!r}") from e
     return reply

@@ -13,6 +13,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
+import warnings
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, replace
 from typing import Any, Callable, Iterable, List, Optional, Sequence
@@ -56,12 +57,29 @@ class Pipeline:
         function hasn't finished within timeout_s; first result wins."""
         return Pipeline(None, replace(self.spec, hedge_timeout_s=timeout_s))
 
-    def with_insight(self, engine) -> "Pipeline":
-        """Wire a live InsightEngine into AUTOTUNE: each autotune window
-        polls the engine and lets streamed findings (small-file storm,
-        straggler tail, tier saturation) override the pure bandwidth
-        hill-climb — the paper's proposed profile-guided runtime loop."""
+    def with_profiler(self, profiler) -> "Pipeline":
+        """Wire live insight into AUTOTUNE: each autotune window polls
+        the profiler's insight engine and lets streamed findings
+        (small-file storm, straggler tail, tier saturation) override the
+        pure bandwidth hill-climb — the paper's proposed profile-guided
+        runtime loop.  Accepts a ``repro.profiler.Profiler`` (its
+        ``insight_engine``, which must be enabled in its options) or a
+        bare ``InsightEngine``."""
+        engine = getattr(profiler, "insight_engine", profiler)
+        if engine is None:
+            raise ValueError(
+                "with_profiler() needs insight enabled: construct the "
+                "Profiler with ProfilerOptions(insight=True)")
         return Pipeline(None, replace(self.spec, insight_engine=engine))
+
+    def with_insight(self, engine) -> "Pipeline":
+        """Deprecated shim for ``with_profiler`` (same behavior)."""
+        warnings.warn(
+            "Pipeline.with_insight(engine) is deprecated; use "
+            "Pipeline.with_profiler(profiler) with a repro.profiler."
+            "Profiler (or pass the engine to with_profiler directly)",
+            DeprecationWarning, stacklevel=2)
+        return self.with_profiler(engine)
 
     # ------------------------------------------------------------------ run
     def __iter__(self):

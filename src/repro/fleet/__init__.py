@@ -17,7 +17,7 @@ from repro.fleet.detectors import (FleetDetector, LoadImbalanceDetector,
                                    RankStragglerDetector,
                                    SharedFileContentionDetector,
                                    default_fleet_detectors)
-from repro.fleet.harness import RankIO, run_simulated_fleet
+from repro.fleet.harness import RankIO, run_simulated_fleet, simulate_fleet
 from repro.fleet.report import FleetReport, RankSlice, merge_summaries
 from repro.fleet.reporter import RankReporter, SocketTransport
 from repro.fleet.wire import (WIRE_VERSION, WireError, WireMessage, decode,
@@ -27,7 +27,8 @@ __all__ = [
     "CollectorServer", "FleetCollector", "FleetDetector",
     "LoadImbalanceDetector", "RankStragglerDetector",
     "SharedFileContentionDetector", "default_fleet_detectors", "RankIO",
-    "run_simulated_fleet", "FleetReport", "RankSlice", "merge_summaries",
+    "run_simulated_fleet", "simulate_fleet", "FleetReport", "RankSlice",
+    "merge_summaries",
     "RankReporter", "SocketTransport", "WIRE_VERSION", "WireError",
     "WireMessage", "decode", "encode", "encode_report",
 ]

@@ -9,14 +9,17 @@ deployment.  An optional per-rank throttle (e.g. a
 ``repro.data.tiers.TokenBucket``) makes one rank deterministically
 slower — the knob the rank-straggler tests turn.
 
-``run_simulated_fleet`` runs the rank workloads on threads, then ships
-every rank's window through the real wire protocol (serialize ->
-ingest_line -> parse) into a FleetCollector, so the simulated path and
-the TCP path share every byte of the aggregation code.
+``simulate_fleet`` runs the rank workloads on threads, then ships every
+rank's window through the real wire protocol (serialize -> ingest_line
+-> parse) into a FleetCollector, so the simulated path and the TCP path
+share every byte of the aggregation code.  The public entry point is
+``repro.profiler`` fleet mode; ``run_simulated_fleet`` remains as a
+deprecated shim.
 """
 from __future__ import annotations
 
 import threading
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.attach import originals
@@ -108,30 +111,36 @@ class RankIO:
         return total
 
 
-def run_simulated_fleet(
+def simulate_fleet(
         nranks: int,
         workload: Callable[[int, RankIO], None],
-        collector: Optional[FleetCollector] = None,
-        insight=False,
+        collector: FleetCollector,
         clock_skew_s: Optional[Sequence[float]] = None,
         throttles: Optional[Dict[int, Callable[[int], None]]] = None,
-        handshake_rounds: int = 3) -> FleetReport:
+        handshake_rounds: int = 3,
+        make_insight: Optional[Callable[[], object]] = None,
+        insight_interval_s: float = 0.5, trace: bool = True) -> FleetReport:
     """Run ``workload(rank, io)`` on ``nranks`` threads, each with a
     private runtime + RankReporter, ship every window through the wire
-    protocol into ``collector`` (a fresh one by default), and return the
-    aggregated FleetReport.
+    protocol into ``collector``, and return the aggregated FleetReport.
 
-    ``clock_skew_s[r]`` shifts rank r's clock origin (its clock reads
-    ahead by that many seconds) — the handshake must recover it.
-    ``throttles[r]`` is applied inside rank r's timed reads/writes."""
-    collector = collector or FleetCollector()
+    This is the collection engine behind ``Profiler`` fleet mode (the
+    public entry point — repro.profiler).  ``clock_skew_s[r]`` shifts
+    rank r's clock origin (its clock reads ahead by that many seconds)
+    — the handshake must recover it.  ``throttles[r]`` is applied inside
+    rank r's timed reads/writes.  ``make_insight()`` is invoked once per
+    rank and may return an InsightEngine (each rank needs its own) or
+    True (the session builds a default engine); None disables insight."""
     reporters: List[RankReporter] = []
     for r in range(nranks):
         rt = DarshanRuntime()
         if clock_skew_s:
             rt._t0 -= clock_skew_s[r]
+        insight = make_insight() if make_insight is not None else False
         reporters.append(RankReporter(r, nprocs=nranks, runtime=rt,
-                                      auto_attach=False, insight=insight))
+                                      auto_attach=False, insight=insight,
+                                      insight_interval_s=insight_interval_s,
+                                      trace=trace))
 
     errors: List[BaseException] = []
 
@@ -158,3 +167,38 @@ def run_simulated_fleet(
     for rep in reporters:
         rep.ship(collector.ingest_line, handshake_rounds=handshake_rounds)
     return collector.report()
+
+
+def run_simulated_fleet(
+        nranks: int,
+        workload: Callable[[int, RankIO], None],
+        collector: Optional[FleetCollector] = None,
+        insight=False,
+        clock_skew_s: Optional[Sequence[float]] = None,
+        throttles: Optional[Dict[int, Callable[[int], None]]] = None,
+        handshake_rounds: int = 3) -> FleetReport:
+    """Deprecated shim: the legacy hand-wired entry point, now routed
+    through the ``repro.profiler`` façade (which selects the cross-rank
+    detectors from the plugin registry and wraps the result — the
+    FleetReport returned here is ``report.fleet``)."""
+    warnings.warn(
+        "run_simulated_fleet() is deprecated; use repro.profiler."
+        "Profiler(ProfilerOptions(mode='fleet', nranks=...)).run(workload)",
+        DeprecationWarning, stacklevel=2)
+    if not isinstance(insight, bool):
+        # Legacy callers could hand ProfileSession an engine object;
+        # the options path can't express that (engines are built from
+        # registry names), so keep the old wiring verbatim.
+        return simulate_fleet(nranks, workload,
+                              collector or FleetCollector(),
+                              clock_skew_s=clock_skew_s,
+                              throttles=throttles,
+                              handshake_rounds=handshake_rounds,
+                              make_insight=lambda: insight)
+    from repro.profiler import Profiler, ProfilerOptions
+    opts = ProfilerOptions(mode="fleet", nranks=nranks, insight=insight,
+                           clock_skew_s=clock_skew_s,
+                           handshake_rounds=handshake_rounds)
+    report = Profiler(opts).run(workload, collector=collector,
+                                throttles=throttles)
+    return report.fleet

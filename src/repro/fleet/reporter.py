@@ -62,12 +62,14 @@ class RankReporter:
 
     def __init__(self, rank: int, nprocs: int = 1,
                  runtime: Optional[DarshanRuntime] = None,
-                 auto_attach: bool = True, insight=False):
+                 auto_attach: bool = True, insight=False,
+                 insight_interval_s: float = 0.5, trace: bool = True):
         self.rank = rank
         self.nprocs = nprocs
         self.rt = runtime or get_runtime()
         self.session = ProfileSession(self.rt, auto_attach=auto_attach,
-                                      insight=insight)
+                                      trace=trace, insight=insight,
+                                      insight_interval_s=insight_interval_s)
         self.clock_offset_s: Optional[float] = None
         self.clock_rtt_s: Optional[float] = None
 

@@ -1,0 +1,38 @@
+"""repro.profiler — one façade, one options object, one plugin registry
+for the whole profiling stack.
+
+This package is the reproduction's analogue of tf-Darshan's TF-Profiler
+integration (paper §III): a single entry point that drives
+instrumentation, in-situ extraction, streaming diagnosis, multi-rank
+collection, visualization export, and profile-guided advice.
+
+    from repro.profiler import Profiler, ProfilerOptions
+
+    report = Profiler(ProfilerOptions(insight=True)).run(workload)
+    report.export("chrome_trace", "trace.json")
+
+Plugins (insight detectors, fleet detectors, exporters, advisors) are
+named, listable (``available``), and selectable from options; a third
+party adds one with a single ``register_*`` call.
+"""
+from repro.profiler.facade import Profiler
+from repro.profiler.options import (DEFAULT_EXPORTERS, ProfilerOptions,
+                                    ProfilerOptionsError)
+from repro.profiler.plugins import (BUILTIN_ADVISORS, BUILTIN_DETECTORS,
+                                    BUILTIN_EXPORTERS,
+                                    BUILTIN_FLEET_DETECTORS)
+from repro.profiler.registry import (PluginRegistry, RegistryError,
+                                     available, create, get_registry,
+                                     register_advisor, register_detector,
+                                     register_exporter,
+                                     register_fleet_detector)
+from repro.profiler.report import Report
+
+__all__ = [
+    "Profiler", "ProfilerOptions", "ProfilerOptionsError",
+    "DEFAULT_EXPORTERS", "BUILTIN_ADVISORS", "BUILTIN_DETECTORS",
+    "BUILTIN_EXPORTERS", "BUILTIN_FLEET_DETECTORS", "PluginRegistry",
+    "RegistryError", "available", "create", "register_advisor",
+    "get_registry", "register_detector", "register_exporter",
+    "register_fleet_detector", "Report",
+]

@@ -1,0 +1,223 @@
+"""The ``Profiler`` façade: one entry point for the whole stack.
+
+A single declarative ``ProfilerOptions`` drives everything the
+subsystems used to require hand-wiring for — runtime attachment,
+session windows, the streaming insight engine (with detectors selected
+by registry name), fleet collection with cross-rank detectors, the
+interactive ProfileServer, exporters, and advisors — and every
+collection path returns the same unified ``Report``.
+
+    from repro.profiler import Profiler, ProfilerOptions
+
+    prof = Profiler(ProfilerOptions(insight=True, advisors=("staging",)))
+    report = prof.run(my_input_pipeline)        # or: with prof: ...
+    report.export("chrome_trace", "trace.json")
+
+    fleet = Profiler(ProfilerOptions(mode="fleet", nranks=4))
+    report = fleet.run(lambda rank, io: io.read_file(shards[rank]))
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional
+
+from repro.core.runtime import DarshanRuntime
+from repro.profiler import registry as _registry  # the submodule
+from repro.profiler.options import ProfilerOptions
+from repro.profiler.report import Report
+
+
+class Profiler:
+    def __init__(self, options: Optional[ProfilerOptions] = None, *,
+                 runtime: Optional[DarshanRuntime] = None, **overrides):
+        opts = options or ProfilerOptions()
+        if overrides:
+            opts = opts.with_overrides(**overrides)
+        self.options = opts.validate()
+        self._runtime = runtime
+        self._session = None
+        self._reports: List[Report] = []
+        # Fail fast on plugin names: a typo'd detector/exporter/advisor
+        # surfaces at construction, not at the end of an hour-long run.
+        self._resolve_names()
+        self._advisors = {name: _registry.create("advisor", name,
+                                                 self.options)
+                          for name in self.options.advisors}
+        self._engine = (self._make_engine()
+                        if self.options.mode == "local" else None)
+
+    # ------------------------------------------------------- plugin wiring
+    def _resolve_names(self) -> None:
+        checks = [("exporter", self.options.exporters),
+                  ("advisor", self.options.advisors),
+                  ("detector", self.options.detectors or ()),
+                  ("fleet_detector", self.options.fleet_detectors or ())]
+        for kind, names in checks:
+            reg = _registry.get_registry(kind)
+            for name in names:
+                if name not in reg:
+                    raise _registry.RegistryError(
+                        f"unknown {kind}: {name!r} (available: "
+                        f"{', '.join(reg.names()) or 'none'})")
+
+    def _detector_names(self):
+        if self.options.detectors is not None:
+            return tuple(self.options.detectors)
+        from repro.profiler.plugins import BUILTIN_DETECTORS
+        return BUILTIN_DETECTORS
+
+    def _fleet_detector_names(self):
+        if self.options.fleet_detectors is not None:
+            return tuple(self.options.fleet_detectors)
+        from repro.profiler.plugins import BUILTIN_FLEET_DETECTORS
+        return BUILTIN_FLEET_DETECTORS
+
+    def _make_engine(self):
+        """A fresh InsightEngine with the selected detector set, or None
+        when insight is off."""
+        if not self.options.insight:
+            return None
+        from repro.insight.engine import InsightEngine
+        detectors = [_registry.create("detector", name, self.options)
+                     for name in self._detector_names()]
+        return InsightEngine(detectors=detectors)
+
+    @property
+    def insight_engine(self):
+        """The façade-owned engine (local mode), e.g. for
+        ``Pipeline.with_profiler``; None when insight is off."""
+        return self._engine
+
+    # ------------------------------------------------------------ wrapping
+    def _wrap(self, native) -> Report:
+        if self.options.mode == "local":
+            report = Report.from_session(native,
+                                         exporters=self.options.exporters,
+                                         options=self.options)
+        else:
+            report = Report.from_fleet(native,
+                                       exporters=self.options.exporters,
+                                       options=self.options)
+        for name, advisor in self._advisors.items():
+            try:
+                report.advice[name] = advisor.advise(report)
+            except Exception as e:     # advisors must never kill a run
+                report.advice[name] = f"advisor error: {e!r}"
+        return report
+
+    @property
+    def reports(self) -> List[Report]:
+        """Every profiled window as a unified Report (windows stopped
+        through a StepCallback are wrapped lazily here)."""
+        native = self._session.reports if self._session is not None else []
+        while len(self._reports) < len(native):
+            self._reports.append(self._wrap(native[len(self._reports)]))
+        return list(self._reports)
+
+    @property
+    def report(self) -> Optional[Report]:
+        reports = self.reports
+        return reports[-1] if reports else None
+
+    # --------------------------------------------------------- local mode
+    def _ensure_session(self):
+        if self.options.mode != "local":
+            raise RuntimeError("manual start/stop is a local-mode API; "
+                               "fleet mode profiles via run(workload)")
+        if self._session is None:
+            from repro.core.session import ProfileSession
+            self._session = ProfileSession(
+                self._runtime,
+                auto_attach=self.options.auto_attach,
+                trace=self.options.trace,
+                insight=self._engine or False,
+                insight_interval_s=self.options.insight_interval_s)
+        return self._session
+
+    def start(self) -> "Profiler":
+        self._ensure_session().start()
+        return self
+
+    def stop(self) -> Report:
+        self._ensure_session().stop()
+        return self.reports[-1]
+
+    def __enter__(self) -> "Profiler":
+        return self.start()
+
+    def __exit__(self, *exc):
+        if self._session is not None and self._session._active:
+            self.stop()
+        return False
+
+    def step_callback(self):
+        """Automatic mode: a StepCallback over ``options.step_window``
+        driving this façade's session (tf-Darshan's TensorBoard-callback
+        invocation)."""
+        if self.options.step_window is None:
+            raise RuntimeError("step_callback() needs "
+                               "ProfilerOptions(step_window=(first, last))")
+        from repro.core.session import StepCallback
+        first, last = self.options.step_window
+        return StepCallback(first, last, every=self.options.step_every,
+                            session=self._ensure_session())
+
+    def serve(self):
+        """Interactive mode: a ProfileServer on ``options.server_port``
+        (0 => ephemeral), with this façade's insight configuration.
+        The server gets its OWN engine instance — one engine cannot back
+        two concurrently active sessions (either stop() would detach it
+        out from under the other window)."""
+        if self.options.mode != "local":
+            raise RuntimeError("serve() is a local-mode API")
+        from repro.core.session import ProfileServer
+        return ProfileServer(port=self.options.server_port or 0,
+                             runtime=self._runtime,
+                             insight=self._make_engine() or False)
+
+    # --------------------------------------------------------------- run
+    def run(self, workload: Callable, *args,
+            collector=None, throttles=None, **kwargs) -> Report:
+        """Profile one workload end to end and return its Report.
+
+        local mode: ``workload(*args, **kwargs)`` runs inside a session
+        window.  fleet mode: ``workload(rank, io)`` runs on
+        ``options.nranks`` simulated ranks (``collector`` overrides the
+        aggregation endpoint, ``throttles[rank]`` throttles one rank's
+        I/O — see repro.fleet.harness)."""
+        if self.options.mode == "local":
+            if collector is not None or throttles is not None:
+                raise RuntimeError("collector/throttles are fleet-mode "
+                                   "arguments")
+            self.start()
+            try:
+                workload(*args, **kwargs)
+            finally:
+                report = self.stop()
+            return report
+        return self._run_fleet(workload, collector=collector,
+                               throttles=throttles)
+
+    def _run_fleet(self, workload, collector=None, throttles=None) -> Report:
+        from repro.fleet.collector import FleetCollector
+        from repro.fleet.harness import simulate_fleet
+        opts = self.options
+        if collector is None:
+            detectors = [_registry.create("fleet_detector", name, opts)
+                         for name in self._fleet_detector_names()]
+            collector = FleetCollector(detectors=detectors)
+        elif opts.fleet_detectors is not None:
+            raise RuntimeError(
+                "pass fleet_detectors in ProfilerOptions OR a "
+                "pre-configured collector, not both: the collector "
+                "already owns its detector set")
+        make_insight = (self._make_engine if opts.insight else None)
+        fleet = simulate_fleet(
+            opts.nranks, workload, collector,
+            clock_skew_s=opts.clock_skew_s, throttles=throttles,
+            handshake_rounds=opts.handshake_rounds,
+            make_insight=make_insight,
+            insight_interval_s=opts.insight_interval_s,
+            trace=opts.trace)
+        report = self._wrap(fleet)
+        self._reports.append(report)
+        return report

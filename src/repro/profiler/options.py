@@ -1,0 +1,132 @@
+"""ProfilerOptions: the single declarative configuration object for the
+whole profiling stack.
+
+One dataclass replaces the constructor dance previously spread over
+``ProfileSession``, ``InsightEngine``, ``RankReporter``/``FleetCollector``,
+``ProfileServer``, and the exporters: mode, insight on/off with detector
+selection, exporter set, advisor set, server port, step window, fleet
+shape.  Plugins are referred to by registry name so options stay plain
+data (serializable, diffable, loggable).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, fields, replace
+from typing import Optional, Sequence, Tuple
+
+MODES = ("local", "fleet")
+
+DEFAULT_EXPORTERS = ("chrome_trace", "json_report", "darshan_log")
+
+
+class ProfilerOptionsError(ValueError):
+    """Structurally invalid ProfilerOptions."""
+
+
+@dataclass(frozen=True)
+class ProfilerOptions:
+    # ------------------------------------------------------------- mode
+    mode: str = "local"                 # "local" | "fleet"
+    # ---------------------------------------------------------- insight
+    insight: bool = False
+    detectors: Optional[Sequence[str]] = None   # None => all built-ins
+    fast_tier_mb_s: Optional[float] = None
+    insight_interval_s: float = 0.5
+    # ---------------------------------------------------------- plugins
+    exporters: Sequence[str] = DEFAULT_EXPORTERS
+    advisors: Sequence[str] = ()
+    # ---------------------------------------------------------- session
+    trace: bool = True
+    auto_attach: bool = True
+    server_port: Optional[int] = None   # interactive ProfileServer port
+    step_window: Optional[Tuple[int, int]] = None   # [first, last] steps
+    step_every: Optional[int] = None
+    # ------------------------------------------------------------ fleet
+    nranks: int = 1
+    fleet_detectors: Optional[Sequence[str]] = None   # None => built-ins
+    clock_skew_s: Optional[Sequence[float]] = field(default=None)
+    handshake_rounds: int = 3
+
+    # ------------------------------------------------------- validation
+    def validate(self) -> "ProfilerOptions":
+        """Structural checks; returns self so construction sites can
+        chain ``ProfilerOptions(...).validate()``.  Plugin-name
+        resolution happens in the Profiler (the registry owns names)."""
+        if self.mode not in MODES:
+            raise ProfilerOptionsError(
+                f"mode must be one of {MODES}, got {self.mode!r}")
+        if self.detectors is not None and not self.insight:
+            raise ProfilerOptionsError(
+                "detectors were selected but insight is off; pass "
+                "insight=True alongside detectors=[...]")
+        for name_field in ("detectors", "fleet_detectors", "exporters",
+                           "advisors"):
+            names = getattr(self, name_field)
+            if names is None:
+                continue
+            if isinstance(names, str):
+                raise ProfilerOptionsError(
+                    f"{name_field} must be a sequence of names, not a "
+                    f"bare string: {names!r}")
+            for n in names:
+                if not isinstance(n, str) or not n:
+                    raise ProfilerOptionsError(
+                        f"{name_field} entries must be non-empty plugin "
+                        f"names, got {n!r}")
+        if self.insight_interval_s <= 0:
+            raise ProfilerOptionsError(
+                f"insight_interval_s must be > 0, got "
+                f"{self.insight_interval_s}")
+        if self.step_window is not None:
+            try:
+                first, last = self.step_window
+            except (TypeError, ValueError):
+                raise ProfilerOptionsError(
+                    f"step_window must be a (first, last) pair, got "
+                    f"{self.step_window!r}") from None
+            if first < 0 or last < first:
+                raise ProfilerOptionsError(
+                    f"step_window needs 0 <= first <= last, got "
+                    f"({first}, {last})")
+        if self.step_every is not None and self.step_every <= 0:
+            raise ProfilerOptionsError(
+                f"step_every must be > 0, got {self.step_every}")
+        if self.server_port is not None and not (0 <= self.server_port
+                                                 <= 65535):
+            raise ProfilerOptionsError(
+                f"server_port must be in [0, 65535], got "
+                f"{self.server_port}")
+        if self.mode == "fleet":
+            if self.nranks < 1:
+                raise ProfilerOptionsError(
+                    f"fleet mode needs nranks >= 1, got {self.nranks}")
+            if self.clock_skew_s is not None \
+                    and len(self.clock_skew_s) != self.nranks:
+                raise ProfilerOptionsError(
+                    f"clock_skew_s has {len(self.clock_skew_s)} entries "
+                    f"for nranks={self.nranks}")
+            if self.handshake_rounds < 1:
+                raise ProfilerOptionsError(
+                    f"handshake_rounds must be >= 1, got "
+                    f"{self.handshake_rounds}")
+            if self.step_window is not None or self.server_port is not None:
+                raise ProfilerOptionsError(
+                    "step_window/server_port are local-mode options; "
+                    "fleet mode profiles each rank's whole window")
+        else:
+            for fleet_only in ("fleet_detectors", "clock_skew_s"):
+                if getattr(self, fleet_only) is not None:
+                    raise ProfilerOptionsError(
+                        f"{fleet_only} is a fleet-mode option but "
+                        "mode='local'")
+            if self.nranks != 1:
+                raise ProfilerOptionsError(
+                    f"nranks={self.nranks} requires mode='fleet'")
+        return self
+
+    # ---------------------------------------------------------- helpers
+    def with_overrides(self, **kw) -> "ProfilerOptions":
+        """A copy with fields replaced (dataclasses.replace, validated)."""
+        return replace(self, **kw).validate()
+
+    def to_dict(self) -> dict:
+        return {f.name: getattr(self, f.name) for f in fields(self)}

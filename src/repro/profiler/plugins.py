@@ -1,0 +1,135 @@
+"""Built-in plugin set: the stack's own detectors, exporters, and
+advisors registered under stable names.
+
+Everything here goes through the exact same registry surface a
+third-party plugin would use — the built-ins get no private hooks, which
+keeps the registry honest (mirroring how tf-Darshan rides the public TF
+Profiler plugin API rather than patching TensorFlow).
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+# Canonical built-in orderings: ProfilerOptions(detectors=None) means
+# "all built-ins" in the same order default_detectors() wired by hand,
+# so facade-produced findings list identically to the legacy path.
+BUILTIN_DETECTORS = ("small-file-storm", "random-read-thrash",
+                     "metadata-storm", "straggler-read-tail",
+                     "checkpoint-stall", "fast-tier-saturation")
+BUILTIN_FLEET_DETECTORS = ("rank-straggler", "load-imbalance",
+                           "shared-file-contention")
+BUILTIN_EXPORTERS = ("chrome_trace", "darshan_log", "json_report")
+BUILTIN_ADVISORS = ("staging", "thread-autotune", "workload-character")
+
+
+# ------------------------------------------------------------- exporters
+def _export_chrome_trace(report, path: Optional[str] = None):
+    if report.mode == "fleet":
+        return report.fleet.to_chrome_trace(path)
+    from repro.core.export import to_chrome_trace
+    return to_chrome_trace(report.session.segments, path,
+                           findings=report.session.findings)
+
+
+def _export_darshan_log(report, path: Optional[str] = None):
+    if report.mode == "fleet":
+        return report.fleet.to_darshan_log(path)
+    from repro.core.export import to_darshan_log
+    return to_darshan_log(report.session, path)
+
+
+def _export_json_report(report, path: Optional[str] = None):
+    if report.mode == "fleet":
+        payload = report.fleet.to_dict()
+        if path:
+            with open(path, "w") as f:
+                json.dump(payload, f, indent=2)
+        return payload
+    from repro.core.export import to_json_report
+    return to_json_report(report.session, path)
+
+
+# -------------------------------------------------------------- advisors
+class _StagingAdvisorPlugin:
+    """Uniform advise() over StagingAdvisor.plan / fleet_plan."""
+
+    def __init__(self, options):
+        from repro.core.advisor import StagingAdvisor
+        self._advisor = StagingAdvisor()
+
+    def advise(self, report):
+        if report.mode == "fleet":
+            return self._advisor.fleet_plan(report.fleet,
+                                            findings=report.findings)
+        return self._advisor.plan(report.session,
+                                  findings=report.findings)
+
+
+class _ThreadAutotunePlugin:
+    """Findings-biased thread advice (the §VII auto-tuning loop)."""
+
+    def __init__(self, options):
+        from repro.core.advisor import ThreadAutotuneAdvisor
+        self._advisor = ThreadAutotuneAdvisor()
+
+    def advise(self, report):
+        return self._advisor.bias_from_findings(report.findings)
+
+
+class _WorkloadCharacterPlugin:
+    """small-file vs large-file classification (paper §V framing)."""
+
+    def __init__(self, options):
+        pass
+
+    def advise(self, report):
+        # workload_character reads only .file_sizes, which the unified
+        # Report exposes in both modes (fleet: union over ranks)
+        from repro.core.advisor import workload_character
+        return workload_character(report)
+
+
+# ---------------------------------------------------------- registration
+def register_builtins(registries) -> None:
+    """Fill the four registries with the built-in plugin set.  Called
+    exactly once by the registry module; imports of the heavy subsystems
+    stay inside the factories so registering names costs nothing."""
+    from repro.insight import detectors as _ins
+
+    det = registries["detector"]
+    det.register("small-file-storm",
+                 lambda opts: _ins.SmallFileStormDetector())
+    det.register("random-read-thrash",
+                 lambda opts: _ins.RandomReadThrashDetector())
+    det.register("metadata-storm",
+                 lambda opts: _ins.MetadataStormDetector())
+    det.register("straggler-read-tail",
+                 lambda opts: _ins.StragglerReadTailDetector())
+    det.register("checkpoint-stall",
+                 lambda opts: _ins.CheckpointStallDetector())
+    det.register("fast-tier-saturation",
+                 lambda opts: _ins.FastTierSaturationDetector(
+                     getattr(opts, "fast_tier_mb_s", None)))
+
+    def _fleet_factory(cls_name):
+        def make(opts):
+            from repro.fleet import detectors as _fd
+            return getattr(_fd, cls_name)()
+        return make
+
+    fdet = registries["fleet_detector"]
+    fdet.register("rank-straggler", _fleet_factory("RankStragglerDetector"))
+    fdet.register("load-imbalance", _fleet_factory("LoadImbalanceDetector"))
+    fdet.register("shared-file-contention",
+                  _fleet_factory("SharedFileContentionDetector"))
+
+    exp = registries["exporter"]
+    exp.register("chrome_trace", lambda opts: _export_chrome_trace)
+    exp.register("darshan_log", lambda opts: _export_darshan_log)
+    exp.register("json_report", lambda opts: _export_json_report)
+
+    adv = registries["advisor"]
+    adv.register("staging", _StagingAdvisorPlugin)
+    adv.register("thread-autotune", _ThreadAutotunePlugin)
+    adv.register("workload-character", _WorkloadCharacterPlugin)

@@ -1,0 +1,150 @@
+"""String-keyed plugin registry for the profiling stack.
+
+tf-Darshan's core move is slotting into an existing plugin surface (the
+TF Profiler) without modifying the thing being observed; this registry
+is the same move applied to our own stack.  Insight detectors, fleet
+detectors, exporters, and advisors are all *named* plugins — listable,
+selectable from ``ProfilerOptions`` by name, and extensible by third
+parties with a one-function drop-in:
+
+    from repro.profiler import register_detector
+
+    @register_detector("my-pathology")
+    def _make(options):
+        return MyDetector(options.fast_tier_mb_s)
+
+Factory protocols by kind (every factory receives the active
+``ProfilerOptions`` so option-aware plugins need no side channel):
+
+  * ``detector``        — ``factory(options) -> repro.insight Detector``
+  * ``fleet_detector``  — ``factory(options) -> repro.fleet FleetDetector``
+  * ``exporter``        — ``factory(options) -> fn(report, path=None)``
+                          where ``report`` is the unified ``Report``
+  * ``advisor``         — ``factory(options) -> obj with advise(report)``
+
+Built-ins self-register on first registry use (``_ensure_builtins``), so
+``available("detector")`` always includes them without import-order
+games.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, List, Optional
+
+KINDS = ("detector", "fleet_detector", "exporter", "advisor")
+
+
+class RegistryError(ValueError):
+    """Unknown plugin name, duplicate registration, or bad kind."""
+
+
+class PluginRegistry:
+    """One named-factory table for one plugin kind."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._factories: Dict[str, Callable] = {}
+        self._lock = threading.Lock()
+
+    def register(self, name: str, factory: Callable,
+                 override: bool = False) -> Callable:
+        if not name or not isinstance(name, str):
+            raise RegistryError(f"{self.kind} name must be a non-empty "
+                                f"string, got {name!r}")
+        if not callable(factory):
+            raise RegistryError(f"{self.kind} factory for {name!r} is not "
+                                "callable")
+        with self._lock:
+            if name in self._factories and not override:
+                raise RegistryError(
+                    f"{self.kind} {name!r} is already registered; pass "
+                    "override=True to replace it")
+            self._factories[name] = factory
+        return factory
+
+    def unregister(self, name: str) -> None:
+        with self._lock:
+            if name not in self._factories:
+                raise RegistryError(f"unknown {self.kind}: {name!r}")
+            del self._factories[name]
+
+    def create(self, name: str, options=None):
+        try:
+            factory = self._factories[name]
+        except KeyError:
+            raise RegistryError(
+                f"unknown {self.kind}: {name!r} (available: "
+                f"{', '.join(self.names()) or 'none'})") from None
+        return factory(options)
+
+    def names(self) -> List[str]:
+        return sorted(self._factories)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._factories
+
+
+_REGISTRIES: Dict[str, PluginRegistry] = {k: PluginRegistry(k) for k in KINDS}
+_builtins_lock = threading.Lock()
+_builtins_loaded = False
+
+
+def get_registry(kind: str) -> PluginRegistry:
+    _ensure_builtins()
+    try:
+        return _REGISTRIES[kind]
+    except KeyError:
+        raise RegistryError(
+            f"unknown plugin kind: {kind!r} (one of {KINDS})") from None
+
+
+def available(kind: str) -> List[str]:
+    """Registered plugin names for one kind (built-ins included)."""
+    return get_registry(kind).names()
+
+
+def create(kind: str, name: str, options=None):
+    return get_registry(kind).create(name, options)
+
+
+def _register(kind: str, name: str, factory: Optional[Callable],
+              override: bool):
+    reg = get_registry(kind)
+    if factory is None:              # decorator form: @register_x("name")
+        return lambda fn: reg.register(name, fn, override=override)
+    return reg.register(name, factory, override=override)
+
+
+def register_detector(name: str, factory: Optional[Callable] = None,
+                      override: bool = False):
+    """Register an insight-detector factory under ``name``; usable as a
+    plain call or a decorator."""
+    return _register("detector", name, factory, override)
+
+
+def register_fleet_detector(name: str, factory: Optional[Callable] = None,
+                            override: bool = False):
+    return _register("fleet_detector", name, factory, override)
+
+
+def register_exporter(name: str, factory: Optional[Callable] = None,
+                      override: bool = False):
+    return _register("exporter", name, factory, override)
+
+
+def register_advisor(name: str, factory: Optional[Callable] = None,
+                     override: bool = False):
+    return _register("advisor", name, factory, override)
+
+
+def _ensure_builtins() -> None:
+    """Populate the registries with the built-in plugin set, once."""
+    global _builtins_loaded
+    if _builtins_loaded:
+        return
+    with _builtins_lock:
+        if _builtins_loaded:
+            return
+        from repro.profiler import plugins
+        plugins.register_builtins(_REGISTRIES)
+        _builtins_loaded = True

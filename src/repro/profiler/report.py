@@ -1,0 +1,220 @@
+"""The unified ``Report``: one result type for local and fleet profiling.
+
+Supersedes the ad-hoc ``SessionReport``-vs-``FleetReport`` split at the
+public surface: counters, findings, per-file stats, segments, and
+``export(kind, path)`` all read the same way regardless of how the data
+was collected.  The mode-specific report stays reachable (``.session`` /
+``.fleet``) for consumers that need the full native surface.
+"""
+from __future__ import annotations
+
+import json
+from functools import cached_property
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.analysis import ModuleSummary, SessionReport
+from repro.core.records import FileRecord
+
+
+def _merge_file_records(parts: List[Tuple[Dict[str, FileRecord], float]]) \
+        -> Dict[str, FileRecord]:
+    """Sum per-file counters across ranks (Darshan's shared-record
+    reduction: additive counters add, MAX counters take the max).  Each
+    part carries its rank's handshake-recovered clock offset, applied to
+    the timestamp fcounters first — min/max over timestamps from skewed
+    rank clocks would otherwise compare different timebases."""
+    out: Dict[str, FileRecord] = {}
+    for records, offset in parts:
+        for path, rec in records.items():
+            fcounters = {k: (v + offset if k.endswith("_TIMESTAMP") else v)
+                         for k, v in rec.fcounters.items()}
+            tgt = out.get(path)
+            if tgt is None:
+                out[path] = FileRecord(path, dict(rec.counters), fcounters)
+                continue
+            for k, v in rec.counters.items():
+                if k.startswith(("POSIX_MAX_", "STDIO_MAX_")):
+                    tgt.set_max(k, v)
+                else:
+                    tgt.inc(k, v)
+            for k, v in fcounters.items():
+                if k.endswith("_START_TIMESTAMP"):
+                    tgt.fset_min(k, v)
+                elif k.endswith("_END_TIMESTAMP"):
+                    tgt.fset_max(k, v)
+                else:
+                    tgt.fadd(k, v)
+    return out
+
+
+def _advice_text(res) -> str:
+    """Human-readable rendering of one advisor result."""
+    if hasattr(res, "summary"):
+        return res.summary()
+    return res if isinstance(res, str) else repr(res)
+
+
+class Report:
+    """Mode-agnostic view over one profiled window (local) or one
+    aggregated fleet collection."""
+
+    def __init__(self, mode: str, session: Optional[SessionReport] = None,
+                 fleet=None, exporters: Tuple[str, ...] = (),
+                 options=None):
+        if mode not in ("local", "fleet"):
+            raise ValueError(f"bad report mode: {mode!r}")
+        if (mode == "local") == (session is None):
+            raise ValueError("local reports wrap a SessionReport; fleet "
+                             "reports wrap a FleetReport")
+        self.mode = mode
+        self.session = session          # SessionReport | None
+        self.fleet = fleet              # FleetReport | None
+        self.exporters = tuple(exporters)
+        self.options = options
+        self.advice: Dict[str, object] = {}   # advisor name -> result
+
+    # ----------------------------------------------------- constructors
+    @classmethod
+    def from_session(cls, session: SessionReport, exporters=(),
+                     options=None) -> "Report":
+        return cls("local", session=session, exporters=exporters,
+                   options=options)
+
+    @classmethod
+    def from_fleet(cls, fleet, exporters=(), options=None) -> "Report":
+        return cls("fleet", fleet=fleet, exporters=exporters,
+                   options=options)
+
+    def _native(self):
+        return self.session if self.mode == "local" else self.fleet
+
+    # ---------------------------------------------------- shared surface
+    @property
+    def elapsed_s(self) -> float:
+        return self._native().elapsed_s
+
+    @property
+    def posix(self) -> ModuleSummary:
+        return self._native().posix
+
+    @property
+    def stdio(self) -> ModuleSummary:
+        return self._native().stdio
+
+    @property
+    def findings(self) -> list:
+        return self._native().findings
+
+    @property
+    def nprocs(self) -> int:
+        return 1 if self.mode == "local" else self.fleet.nprocs
+
+    @property
+    def bandwidth_mb_s(self) -> float:
+        if self.mode == "local":
+            return self.session.posix_bandwidth_mb_s
+        return self.fleet.fleet_bandwidth_mb_s
+
+    @cached_property
+    def per_file(self) -> Dict[str, FileRecord]:
+        """Per-file POSIX records; fleet mode sums them across ranks
+        (timestamps clock-aligned first).  Cached: the underlying report
+        never changes after collection."""
+        if self.mode == "local":
+            return self.session.per_file
+        return _merge_file_records(
+            [(s.per_file, s.clock_offset_s)
+             for _, s in sorted(self.fleet.ranks.items())])
+
+    @cached_property
+    def file_sizes(self) -> Dict[str, int]:
+        if self.mode == "local":
+            return self.session.file_sizes
+        sizes: Dict[str, int] = {}
+        for _, s in sorted(self.fleet.ranks.items()):
+            sizes.update(s.file_sizes)
+        return sizes
+
+    @cached_property
+    def segments(self) -> list:
+        """DXT segments on one timeline (fleet: clock-aligned merge)."""
+        if self.mode == "local":
+            return list(getattr(self.session, "segments", []) or [])
+        return [seg for _, seg in self.fleet.merged_segments()]
+
+    @property
+    def ranks(self) -> dict:
+        """Fleet: rank -> RankSlice; local: empty (no rank dimension)."""
+        return {} if self.mode == "local" else self.fleet.ranks
+
+    def counters(self) -> dict:
+        """The POSIX rollup as one flat dict — the cross-mode
+        equivalence surface (same workload => same numbers whichever
+        collection path produced the report)."""
+        p = self.posix
+        return {"opens": p.opens, "reads": p.reads, "writes": p.writes,
+                "seeks": p.seeks, "stats": p.stats, "fsyncs": p.fsyncs,
+                "zero_reads": p.zero_reads, "bytes_read": p.bytes_read,
+                "bytes_written": p.bytes_written,
+                "files_opened": p.files_opened,
+                "seq_reads": p.seq_reads, "consec_reads": p.consec_reads}
+
+    # ----------------------------------------------------------- export
+    def export(self, kind: str, path: Optional[str] = None):
+        """Run one named exporter over this report; ``kind`` resolves
+        through the plugin registry, so third-party exporters work here
+        the moment they are registered."""
+        from repro.profiler import registry as _registry
+        fn = _registry.create("exporter", kind, self.options)
+        return fn(self, path)
+
+    def export_all(self, directory: str) -> Dict[str, str]:
+        """Export every exporter selected in the options (or the default
+        set) into ``directory``; returns kind -> written path."""
+        import os
+        os.makedirs(directory, exist_ok=True)
+        out: Dict[str, str] = {}
+        for kind in self.exporters:
+            ext = "txt" if kind == "darshan_log" else "json"
+            path = os.path.join(directory, f"{kind}.{ext}")
+            self.export(kind, path)
+            out[kind] = path
+        return out
+
+    # ------------------------------------------------------------- misc
+    def to_dict(self) -> dict:
+        d = {"mode": self.mode, "nprocs": self.nprocs,
+             "elapsed_s": self.elapsed_s,
+             "bandwidth_mb_s": self.bandwidth_mb_s,
+             "counters": self.counters(),
+             "findings": [f.to_dict() for f in self.findings]}
+        if self.advice:
+            d["advice"] = {name: _advice_text(res)
+                           for name, res in self.advice.items()}
+        return d
+
+    def to_json(self, path: Optional[str] = None) -> str:
+        text = json.dumps(self.to_dict(), indent=2)
+        if path:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
+    def summary(self) -> str:
+        if self.mode == "fleet":
+            return self.fleet.summary()
+        p = self.posix
+        lines = [f"Report (local): {p.reads} reads, "
+                 f"{p.bytes_read / 2**20:.1f} MiB read, "
+                 f"{self.bandwidth_mb_s:.1f} MB/s POSIX bandwidth"]
+        for f in self.findings:
+            lines.append(f"  [{f.detector}] sev={f.severity:.2f}: "
+                         f"{f.recommendation}")
+        for name, res in self.advice.items():
+            lines.append(f"  advice[{name}]: {_advice_text(res)}")
+        return "\n".join(lines)
+
+    def __repr__(self) -> str:
+        return (f"Report(mode={self.mode!r}, nprocs={self.nprocs}, "
+                f"reads={self.posix.reads}, "
+                f"findings={len(self.findings)})")

@@ -61,7 +61,8 @@ class Trainer:
                  ocfg: Optional[OptimizerConfig] = None,
                  failure: Optional[FailureInjector] = None,
                  extra_batch: Optional[dict] = None,
-                 fleet_reporter=None):
+                 fleet_reporter=None,
+                 profiler=None):
         self.cfg = cfg
         self.tcfg = tcfg
         self.ocfg = ocfg or for_model(cfg)
@@ -75,16 +76,35 @@ class Trainer:
                             microbatches=tcfg.microbatches),
             donate_argnums=(0, 1))
         self.metrics_log: list = []
-        self.profiler: Optional[StepCallback] = None
-        if tcfg.profile_first >= 0:
-            self.profiler = StepCallback(tcfg.profile_first,
-                                         tcfg.profile_last,
-                                         every=tcfg.profile_every)
+        # Profiling goes through the repro.profiler façade: pass a
+        # Profiler (or ProfilerOptions) with a step_window, or use the
+        # legacy TrainerConfig.profile_first/last fields, which build an
+        # equivalent façade under the hood.
+        self.profiler_facade = self._make_facade(profiler)
+        self.profiler: Optional[StepCallback] = (
+            self.profiler_facade.step_callback()
+            if self.profiler_facade is not None else None)
         # Distributed profiling: a repro.fleet.RankReporter profiles this
         # process's whole run and ships it to the FleetCollector (the
         # shipping — reporter.ship / ship_socket — is the caller's call,
         # after run() returns).
         self.fleet_reporter = fleet_reporter
+
+    def _make_facade(self, profiler):
+        from repro.profiler import Profiler, ProfilerOptions
+        if profiler is not None:
+            if isinstance(profiler, ProfilerOptions):
+                profiler = Profiler(profiler)
+            if profiler.options.step_window is None:
+                raise ValueError(
+                    "Trainer profiling needs ProfilerOptions("
+                    "step_window=(first, last))")
+            return profiler
+        if self.tcfg.profile_first < 0:
+            return None
+        return Profiler(ProfilerOptions(
+            step_window=(self.tcfg.profile_first, self.tcfg.profile_last),
+            step_every=self.tcfg.profile_every))
 
     # ------------------------------------------------------------------ init
     def init_state(self):
@@ -130,7 +150,10 @@ class Trainer:
                 "metrics": self.metrics_log,
                 "rank_report": rank_report,
                 "profile_reports": (self.profiler.reports
-                                    if self.profiler else [])}
+                                    if self.profiler else []),
+                # unified repro.profiler.Report views of the same windows
+                "reports": (self.profiler_facade.reports
+                            if self.profiler_facade is not None else [])}
 
     def _run_span(self, params, opt_state, step) -> int:
         while step < self.tcfg.steps:

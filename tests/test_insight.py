@@ -7,13 +7,13 @@ import random
 
 import pytest
 
-from repro.core import (InsightEngine, ProfileSession, reset_runtime,
-                        to_chrome_trace, to_json_report)
+from repro.core import (ProfileSession, reset_runtime, to_chrome_trace,
+                        to_json_report)
 from repro.core.advisor import StagingAdvisor, ThreadAutotuneAdvisor
 from repro.core.analysis import analyze
 from repro.core.dxt import Segment
 from repro.core.records import FileRecord
-from repro.insight import EventBus, Finding, extract
+from repro.insight import EventBus, Finding, InsightEngine, extract
 from repro.insight.detectors import (FastTierSaturationDetector,
                                      StragglerReadTailDetector)
 
