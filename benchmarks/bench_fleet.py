@@ -22,7 +22,7 @@ def _rank_payload(rank: int, nranks: int, n_files: int,
     from repro.core.analysis import analyze
     from repro.core.dxt import Segment
     from repro.core.records import FileRecord
-    from repro.fleet import wire
+    from repro.fleet import payloads
     from repro.insight.detectors import Finding
 
     per_file = {}
@@ -44,9 +44,9 @@ def _rank_payload(rank: int, nranks: int, n_files: int,
     rep.segments = segs
     rep.findings = [Finding("small-file-storm", "Small-file storm", 0.5,
                             (0.0, 2.0), {"opens": float(n_files)}, "stage")]
-    return wire.encode_report(rank, rep, nprocs=nranks,
-                              clock_offset_s=-0.001 * rank,
-                              clock_rtt_s=5e-5)
+    return payloads.encode_report(rank, rep, nprocs=nranks,
+                                  clock_offset_s=-0.001 * rank,
+                                  clock_rtt_s=5e-5)
 
 
 def run(rows: Row) -> None:

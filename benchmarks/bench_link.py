@@ -1,0 +1,139 @@
+"""repro.link codec + transport throughput (ISSUE 4 acceptance).
+
+Measures the nervous system in isolation:
+
+  * codec — encode+decode round trips per second at three payload
+    sizes (a control ack, a findings push, a full rank report with
+    hundreds of per-file records and thousands of segments);
+  * transports — messages/s for the same mid-size payload through
+    ``LoopbackTransport`` (into a FleetCollector endpoint),
+    ``TcpTransport`` (against a CollectorServer), and
+    ``SpoolTransport`` (append + SpoolReader drain).
+
+Derived columns report msgs/s, MB/s of wire traffic, and that nothing
+was dropped (lines ingested == lines sent).  ``--smoke`` keeps the
+loops tiny and enforces a generous floor on small-payload codec
+throughput — a regression bar, not a figure.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Row, scaled
+
+# smoke bar: small-payload codec round trips must stay at least this
+# fast (full runs are ~2 orders of magnitude above this on any laptop)
+SMOKE_MIN_CODEC_MSGS_S = 2000.0
+
+
+def _payload_lines():
+    from repro.core.analysis import analyze
+    from repro.core.dxt import Segment
+    from repro.core.records import FileRecord
+    from repro.fleet import payloads
+    from repro.insight.detectors import Finding
+    from repro.link import encode
+
+    small = encode("clock", 1, {"t_send": 1.234567})
+
+    finding = Finding("small-file-storm", "Small-file storm", 0.5,
+                      (0.0, 2.0), {"opens": 64.0}, "stage small files")
+    medium = payloads.encode_findings(1, [finding] * 8, streaming=True)
+
+    n_files, n_segments = scaled((200, 2000), (50, 400))
+    per_file = {}
+    for i in range(n_files):
+        p = f"/data/shard001/f{i:05d}.bin"
+        per_file[p] = FileRecord(p, {"POSIX_OPENS": 1, "POSIX_READS": 4,
+                                     "POSIX_BYTES_READ": 1 << 20},
+                                 {"POSIX_F_READ_TIME": 0.004})
+    rep = analyze(per_file, {}, elapsed_s=2.0, stat_sizes=False)
+    rep.file_sizes = {p: 1 << 20 for p in per_file}
+    paths = list(per_file)
+    rep.segments = [Segment("POSIX", paths[i % n_files], "read",
+                            (i // n_files) << 18, 1 << 18,
+                            i * 2.5e-4, i * 2.5e-4 + 2e-4, 1)
+                    for i in range(n_segments)]
+    rep.findings = [finding]
+    large = payloads.encode_report(1, rep, nprocs=4,
+                                   clock_offset_s=-0.001, clock_rtt_s=5e-5)
+    return {"small": small, "medium": medium, "large": large}
+
+
+def run(rows: Row) -> None:
+    from repro.fleet import FleetCollector
+    from repro.fleet.collector import CollectorServer
+    from repro.link import (LoopbackTransport, SpoolReader, SpoolTransport,
+                            TcpTransport, decode)
+
+    lines = _payload_lines()
+
+    # ------------------------------------------------------------- codec
+    for name, line in lines.items():
+        n = scaled({"small": 20000, "medium": 5000, "large": 50}[name],
+                   {"small": 500, "medium": 100, "large": 5}[name])
+        t0 = time.perf_counter()
+        for _ in range(n):
+            decode(line)
+        dt = time.perf_counter() - t0
+        msgs_s = n / dt
+        rows.add(f"link_codec_{name}", dt / n * 1e6,
+                 f"msgs_s={msgs_s:.0f};bytes={len(line)};"
+                 f"mb_s={len(line) * n / dt / 1e6:.1f}")
+        if name == "small":
+            assert msgs_s >= SMOKE_MIN_CODEC_MSGS_S, \
+                f"codec regressed: {msgs_s:.0f} msgs/s"
+
+    # -------------------------------------------------------- transports
+    payload = lines["medium"]
+    n = scaled(2000, 100)
+
+    def _bench_transport(label, transport, drain=None, close=None):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            transport(payload)
+        if drain is not None:
+            drain()
+        dt = time.perf_counter() - t0
+        if close is not None:
+            close()
+        return dt
+
+    import shutil
+    import tempfile
+
+    coll = FleetCollector(detectors=[])
+    dt = _bench_transport("loopback",
+                          LoopbackTransport(coll.ingest_line))
+    sent = coll.stats["lines"]
+    rows.add("link_transport_loopback", dt / n * 1e6,
+             f"msgs_s={n / dt:.0f};dropped={n - sent}")
+    assert sent == n, f"loopback dropped {n - sent} lines"
+
+    coll = FleetCollector(detectors=[])
+    server = CollectorServer(coll, idle_timeout_s=1.0)
+    tcp = TcpTransport("127.0.0.1", server.port)
+    dt = _bench_transport("tcp", tcp, close=lambda: (tcp.close(),
+                                                     server.close()))
+    sent = coll.stats["lines"]
+    rows.add("link_transport_tcp", dt / n * 1e6,
+             f"msgs_s={n / dt:.0f};dropped={n - sent}")
+    assert sent == n, f"tcp dropped {n - sent} lines"
+
+    coll = FleetCollector(detectors=[])
+    spool_dir = tempfile.mkdtemp(prefix="bench_link_spool_")
+    spool = SpoolTransport(spool_dir, name="bench")
+    reader = SpoolReader(spool_dir)
+    dt = _bench_transport(
+        "spool", spool,
+        drain=lambda: coll.ingest_spool(reader),
+        close=lambda: (spool.close(),
+                       shutil.rmtree(spool_dir, ignore_errors=True)))
+    sent = coll.stats["lines"]
+    rows.add("link_transport_spool", dt / n * 1e6,
+             f"msgs_s={n / dt:.0f};dropped={n - sent}")
+    assert sent == n, f"spool dropped {n - sent} lines"
+
+
+if __name__ == "__main__":
+    run(Row())

@@ -16,7 +16,6 @@ after process exit (Table I).
 from __future__ import annotations
 
 import json
-import os
 import socket
 import threading
 import time
@@ -26,6 +25,12 @@ from repro.core.attach import attach as _attach, detach as _detach, is_attached 
 from repro.core.analysis import SessionReport, analyze
 from repro.core.records import delta
 from repro.core.runtime import DarshanRuntime, get_runtime
+from repro.link import (LINK_VERSION, Endpoint, LineServer, Message,
+                        check_hello)
+# Line framing lives in repro.link now (TcpTransport subsumed the old
+# socket plumbing); re-exported here for the long-standing import path.
+from repro.link.transport import (MAX_LINE_BYTES, recv_lines,  # noqa: F401
+                                  recv_reply)
 
 
 class ProfileSession:
@@ -151,207 +156,166 @@ class StepCallback:
             self.session.stop()
 
 
-MAX_LINE_BYTES = 1 << 24     # one rank's serialized report fits comfortably
-
-
-def recv_lines(conn: socket.socket, idle_timeout: float = 2.0):
-    """Yield newline-terminated commands from a socket, buffered.
-
-    One ``recv`` is NOT one command: multi-command clients pipeline
-    several lines per connection and fleet ``report`` payloads exceed a
-    single segment, so we accumulate until ``\\n``.  A final
-    unterminated chunk before EOF is yielded too — legacy single-shot
-    clients that omit the newline keep working."""
-    conn.settimeout(idle_timeout)
-    buf = b""
-    while True:
-        nl = buf.find(b"\n")
-        if nl >= 0:
-            line, buf = buf[:nl], buf[nl + 1:]
-            yield line.decode()
-            continue
-        try:
-            chunk = conn.recv(65536)
-        except socket.timeout:
-            # an idle client that sent a newline-less command and kept
-            # the connection open still deserves its reply
-            if buf:
-                yield buf.decode()
-                buf = b""
-                continue
-            return
-        except OSError:
-            return
-        if not chunk:
-            if buf:
-                yield buf.decode()
-            return
-        buf += chunk
-        if len(buf) > MAX_LINE_BYTES:
-            raise ValueError("protocol line exceeds MAX_LINE_BYTES")
-
-
-def recv_reply(sock: socket.socket) -> str:
-    """Client side: read one newline-terminated reply (or until EOF)."""
-    buf = b""
-    while b"\n" not in buf:
-        chunk = sock.recv(65536)
-        if not chunk:
-            break
-        buf += chunk
-        if len(buf) > MAX_LINE_BYTES:
-            raise ValueError("reply exceeds MAX_LINE_BYTES")
-    return buf.split(b"\n", 1)[0].decode().strip()
-
-
 class ProfileServer:
     """Interactive mode: line-oriented local TCP control, mirroring
     tf.profiler.server.start().
 
-    Verbs: ``start`` / ``stop`` / ``status`` (the original single-rank
-    protocol), plus the fleet extension — ``report`` (the last stopped
-    window as a versioned wire payload a FleetCollector can ingest),
-    ``findings`` (insight findings of the last window as JSON), and
-    ``clock <t_send>`` (clock-handshake probe: replies with this rank's
-    runtime clock so a collector can align timelines).  Connections are
-    read line-by-line, so one client may pipeline many commands."""
+    Dual-stack on one port (a ``repro.link.LineServer``):
+
+      * legacy text verbs — ``start`` / ``stop`` / ``status`` (the
+        original single-rank protocol), plus the fleet extension:
+        ``report`` (the last stopped window as a versioned wire payload
+        a FleetCollector can ingest), ``findings`` (insight findings of
+        the last window as JSON), and ``clock <t_send>`` (clock-
+        handshake probe);
+      * typed ``repro.link`` messages — any line starting with ``{`` is
+        decoded and dispatched through the server's ``Endpoint``
+        (kinds ``hello``/``start``/``stop``/``status``/``findings``/
+        ``clock``/``report`` built in, ``register_verb`` extensions
+        resolved from the registry), so a ``TcpTransport`` client and a
+        netcat user drive the same session.
+
+    Connections are read line-by-line, so one client may pipeline many
+    commands.  ``idle_timeout_s`` bounds how long an idle connection's
+    reader blocks between commands (plumbed from
+    ``ProfilerOptions.idle_timeout_s`` by the façade)."""
 
     def __init__(self, port: int = 0, runtime: Optional[DarshanRuntime] = None,
-                 rank: int = 0, nprocs: int = 1, insight=False):
+                 rank: int = 0, nprocs: int = 1, insight=False,
+                 idle_timeout_s: float = 2.0):
         self.session = ProfileSession(runtime, insight=insight)
         self.rank = rank
         self.nprocs = nprocs
-        self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
-        # SO_REUSEADDR + joining handler threads in close(): back-to-back
-        # servers in one process can re-bind the port immediately instead
-        # of racing lingering TIME_WAIT sockets / still-open connections.
-        self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-        self._srv.bind(("127.0.0.1", port))
-        self._srv.listen(4)
-        self.port = self._srv.getsockname()[1]
-        self._stop = threading.Event()
         self._cmd_lock = threading.Lock()   # serialize session mutation
-        self._conn_lock = threading.Lock()
-        self._conn_threads: list = []
-        self._conns: set = set()
-        self._thread = threading.Thread(target=self._serve, daemon=True)
-        self._thread.start()
+        self.endpoint = Endpoint(context=self, handlers={
+            "hello": ProfileServer._msg_hello,
+            "start": ProfileServer._msg_start,
+            "stop": ProfileServer._msg_stop,
+            "status": ProfileServer._msg_status,
+            "findings": ProfileServer._msg_findings,
+            "clock": ProfileServer._msg_clock,
+            "report": ProfileServer._msg_report,
+        })
+        self._server = LineServer(self._dispatch, port=port, backlog=4,
+                                  idle_timeout_s=idle_timeout_s)
+        self.port = self._server.port
 
-    def _serve(self) -> None:
-        self._srv.settimeout(0.2)
-        while not self._stop.is_set():
-            try:
-                conn, _ = self._srv.accept()
-            except socket.timeout:
-                continue
-            except OSError:
-                # fd exhaustion or a closing socket raises immediately:
-                # back off instead of spinning hot on retry
-                self._stop.wait(0.05)
-                continue
-            # connections are long-lived now (pipelined commands, a
-            # collector polling report/clock): one thread each, so a
-            # persistent client can't starve other control clients
-            t = threading.Thread(target=self._handle, args=(conn,),
-                                 daemon=True)
-            with self._conn_lock:
-                self._conn_threads.append(t)
-                self._conns.add(conn)
-            t.start()
-
-    def _handle(self, conn: socket.socket) -> None:
-        try:
-            with conn:
-                try:
-                    for line in recv_lines(conn):
-                        if self._stop.is_set():
-                            break
-                        conn.sendall(self._dispatch(line.strip()))
-                except (ValueError, OSError):
-                    pass
-        finally:
-            with self._conn_lock:
-                self._conns.discard(conn)
-                # prune finished handlers so a reconnect-per-probe
-                # client can't grow the list for the server's lifetime;
-                # keep not-yet-started threads (ident None — registered
-                # by _serve but start() hasn't run), else close() could
-                # miss joining a live handler
-                me = threading.current_thread()
-                self._conn_threads = [
-                    t for t in self._conn_threads
-                    if t is not me and (t.ident is None or t.is_alive())]
-
-    def _dispatch(self, cmd: str) -> bytes:
+    # ---------------------------------------------------------- dispatch
+    def _dispatch(self, line: str) -> Optional[str]:
+        cmd = line.strip()
         with self._cmd_lock:
-            return self._dispatch_locked(cmd)
+            if cmd.startswith("{"):
+                return self.endpoint.dispatch_line(cmd)
+            return self._dispatch_text(cmd)
 
-    def _dispatch_locked(self, cmd: str) -> bytes:
+    def _dispatch_text(self, cmd: str) -> str:
         verb, _, arg = cmd.partition(" ")
         if verb == "start":
             self.session.start()
-            return b"ok\n"
+            return "ok"
         if verb == "stop":
             try:
-                rep = self.session.stop()
+                return json.dumps(self._stop_dict())
             except RuntimeError as e:
-                return f"error: {e}\n".encode()
-            return json.dumps({
-                "posix_bandwidth_mb_s": rep.posix_bandwidth_mb_s,
-                "reads": rep.posix.reads,
-                "bytes_read": rep.posix.bytes_read,
-                "findings": [f.to_dict() for f in rep.findings],
-            }).encode() + b"\n"
+                return f"error: {e}"
         if verb == "status":
-            return f"active={self.session._active}\n".encode()
+            return f"active={self.session._active}"
         if verb == "findings":
-            rep = self.session.reports[-1] if self.session.reports else None
-            found = [f.to_dict() for f in rep.findings] if rep else []
-            return json.dumps({"findings": found}).encode() + b"\n"
+            return json.dumps({"findings": self._last_findings()})
         if verb == "clock":
             reply = {"t": self.session.rt.now(), "wall": time.time()}
             if arg:
                 try:
                     reply["echo"] = float(arg)
                 except ValueError:
-                    return b"error: clock argument must be a number\n"
-            return json.dumps(reply).encode() + b"\n"
+                    return "error: clock argument must be a number"
+            return json.dumps(reply)
         if verb == "report":
-            if not self.session.reports:
-                return b"error: no report\n"
-            from repro.fleet.wire import encode_report   # lazy: avoids cycle
-            line = encode_report(self.rank, self.session.reports[-1],
-                                 nprocs=self.nprocs)
-            return line.encode() + b"\n"
-        return b"unknown\n"
+            try:
+                return self._report_line()
+            except RuntimeError as e:
+                return f"error: {e}"
+        return "unknown"
+
+    # ------------------------------------------------------- typed verbs
+    # Handlers follow the Endpoint contract handler(endpoint, msg); the
+    # server reaches itself through endpoint.context, so registry-wide
+    # verb extensions see the same surface as these built-ins.
+    @staticmethod
+    def _msg_hello(endpoint, msg: Message) -> Message:
+        srv = endpoint.context
+        check_hello(msg.payload, side="client")
+        return msg.reply("hello", {"link_v": LINK_VERSION,
+                                   "rank": srv.rank,
+                                   "nprocs": srv.nprocs})
+
+    @staticmethod
+    def _msg_start(endpoint, msg: Message) -> Message:
+        endpoint.context.session.start()
+        return msg.reply("ok")
+
+    @staticmethod
+    def _msg_stop(endpoint, msg: Message) -> Message:
+        srv = endpoint.context
+        try:
+            return msg.reply("ok", srv._stop_dict())
+        except RuntimeError as e:
+            return msg.reply("error", {"error": str(e)})
+
+    @staticmethod
+    def _msg_status(endpoint, msg: Message) -> Message:
+        return msg.reply("ok", {"active": endpoint.context.session._active})
+
+    @staticmethod
+    def _msg_findings(endpoint, msg: Message) -> Message:
+        return msg.reply("ok",
+                         {"findings": endpoint.context._last_findings()})
+
+    @staticmethod
+    def _msg_clock(endpoint, msg: Message) -> Message:
+        srv = endpoint.context
+        # clock_reply mirrors the collector's handshake shape (t_coll),
+        # so a collector can pull-align against a ProfileServer too.
+        payload = {"t_coll": srv.session.rt.now(), "wall": time.time()}
+        if "t_send" in msg.payload:
+            payload["echo"] = msg.payload["t_send"]
+        return msg.reply("clock_reply", payload)
+
+    @staticmethod
+    def _msg_report(endpoint, msg: Message):
+        srv = endpoint.context
+        try:
+            return srv._report_line()     # already an encoded report line
+        except RuntimeError as e:
+            return msg.reply("error", {"error": str(e)})
+
+    # ------------------------------------------------------- shared ops
+    def _stop_dict(self) -> dict:
+        rep = self.session.stop()         # raises RuntimeError if idle
+        return {
+            "posix_bandwidth_mb_s": rep.posix_bandwidth_mb_s,
+            "reads": rep.posix.reads,
+            "bytes_read": rep.posix.bytes_read,
+            "findings": [f.to_dict() for f in rep.findings],
+        }
+
+    def _last_findings(self) -> list:
+        rep = self.session.reports[-1] if self.session.reports else None
+        return [f.to_dict() for f in rep.findings] if rep else []
+
+    def _report_line(self) -> str:
+        if not self.session.reports:
+            raise RuntimeError("no report")
+        from repro.fleet.payloads import encode_report   # lazy: avoids cycle
+        return encode_report(self.rank, self.session.reports[-1],
+                             nprocs=self.nprocs)
 
     def close(self) -> None:
-        self._stop.set()
-        self._thread.join(timeout=2)
-        self._srv.close()
-        # Wake handler threads blocked in recv (their clients may hold
-        # connections open for seconds), then JOIN them: a handler still
+        # LineServer.close() joins handler threads: a handler still
         # holding a connection after close() would keep the old session
         # mutable while a successor server on the same port serves new
         # clients.
-        with self._conn_lock:
-            conns = list(self._conns)
-            threads = list(self._conn_threads)
-        for conn in conns:
-            try:
-                conn.shutdown(socket.SHUT_RDWR)
-            except OSError:
-                pass
-            try:
-                conn.close()
-            except OSError:
-                pass
-        for t in threads:
-            try:
-                t.join(timeout=2)
-            except RuntimeError:
-                # registered by _serve but start() hadn't run yet
-                pass
+        self._server.close()
         # A window left open by a client must not leak the global
         # attach: later sessions would silently record into THIS
         # server's runtime instead of their own.

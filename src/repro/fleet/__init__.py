@@ -4,13 +4,20 @@ cross-rank straggler analysis.
 Darshan's unit of observation is the MPI rank; this package is the
 reproduction's rank dimension.  Every rank runs a ``RankReporter``
 (wrapping its DarshanRuntime/ProfileSession) and ships counters, DXT
-segments, and insight findings over a versioned JSON-lines wire format;
-rank 0's ``FleetCollector`` aligns clocks via an NTP-style handshake,
-rolls counters up globally and per rank, runs cross-rank detectors
-(rank straggler, load imbalance, shared-file contention), and emits a
+segments, and insight findings as ``repro.link`` messages over any
+transport — loopback (the in-process simulated fleet), TCP (a
+``CollectorServer``), or a spool directory (no network at all); rank
+0's ``FleetCollector`` aligns clocks via an NTP-style handshake, rolls
+counters up globally and per rank, runs cross-rank detectors (rank
+straggler, load imbalance, shared-file contention), and emits a
 ``FleetReport`` with merged exports — one Chrome-trace pid per rank,
-darshan-parser logs with real rank numbers.  ``run_simulated_fleet``
-exercises all of it in-process (N threads, N runtimes) without MPI.
+darshan-parser logs with real rank numbers.  ``simulate_fleet``
+exercises all of it in-process (N threads, N runtimes) without MPI;
+``run_spawned_fleet`` runs N real OS processes over TCP or spool.
+
+The old ``repro.fleet.wire`` module is deprecated: the generic codec
+lives in ``repro.link``, the fleet payload helpers in
+``repro.fleet.payloads``.
 """
 from repro.fleet.collector import CollectorServer, FleetCollector
 from repro.fleet.detectors import (FleetDetector, LoadImbalanceDetector,
@@ -18,17 +25,29 @@ from repro.fleet.detectors import (FleetDetector, LoadImbalanceDetector,
                                    SharedFileContentionDetector,
                                    default_fleet_detectors)
 from repro.fleet.harness import RankIO, run_simulated_fleet, simulate_fleet
+from repro.fleet.launch import run_spawned_fleet
+from repro.fleet.payloads import (decode_findings, decode_records,
+                                  decode_segments, encode_findings,
+                                  encode_hello, encode_records,
+                                  encode_report, encode_segments)
 from repro.fleet.report import FleetReport, RankSlice, merge_summaries
 from repro.fleet.reporter import RankReporter, SocketTransport
-from repro.fleet.wire import (WIRE_VERSION, WireError, WireMessage, decode,
-                              encode, encode_report)
+from repro.link import (LINK_VERSION, Message, WireError, decode, encode)
+
+# Legacy names: the fleet wire format IS the link protocol now.
+WIRE_VERSION = LINK_VERSION
+WireMessage = Message
 
 __all__ = [
     "CollectorServer", "FleetCollector", "FleetDetector",
     "LoadImbalanceDetector", "RankStragglerDetector",
     "SharedFileContentionDetector", "default_fleet_detectors", "RankIO",
-    "run_simulated_fleet", "simulate_fleet", "FleetReport", "RankSlice",
-    "merge_summaries",
-    "RankReporter", "SocketTransport", "WIRE_VERSION", "WireError",
-    "WireMessage", "decode", "encode", "encode_report",
+    "run_simulated_fleet", "simulate_fleet", "run_spawned_fleet",
+    "FleetReport", "RankSlice", "merge_summaries",
+    "RankReporter", "SocketTransport",
+    "decode_findings", "decode_records", "decode_segments",
+    "encode_findings", "encode_hello", "encode_records", "encode_report",
+    "encode_segments",
+    "LINK_VERSION", "WIRE_VERSION", "Message", "WireError", "WireMessage",
+    "decode", "encode",
 ]

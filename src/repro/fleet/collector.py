@@ -1,11 +1,25 @@
 """FleetCollector: rank-0's aggregation endpoint.
 
-Ingests wire-format lines from RankReporters — directly
-(``ingest_line``, the in-process simulated fleet and replayed payload
-dumps) or over TCP (``CollectorServer``, speaking the same buffered
-line protocol as the ProfileServer) — and materializes a ``FleetReport``:
-per-rank slices with clock-aligned segments, global counter rollups,
-and cross-rank findings.
+Ingests ``repro.link`` wire messages from RankReporters — directly
+(``ingest_line``, the loopback-transport simulated fleet and replayed
+payload dumps), from a spool directory (``ingest_spool``), or over TCP
+(``CollectorServer``, a ``repro.link.LineServer`` speaking the same
+buffered line protocol as the ProfileServer) — and materializes a
+``FleetReport``: per-rank slices with clock-aligned segments, global
+counter rollups, and cross-rank findings.
+
+Dispatch goes through a ``repro.link.Endpoint`` whose built-in verbs
+are ``hello`` (version negotiation), ``clock`` (handshake),
+``report``, ``findings`` (streaming push), and ``bye``; message kinds
+added with ``repro.profiler.register_verb`` resolve through the plugin
+registry with this collector as ``endpoint.context`` — a third-party
+wire extension reaches the aggregation surface without touching this
+module.
+
+Streaming findings: a rank may push ``findings`` messages mid-run
+(``{"streaming": true}``); they surface in ``report()`` immediately and
+are superseded by that rank's final ``report`` payload (which carries
+the authoritative findings for the window), so nothing double-counts.
 
 Clock alignment: reporters measure their offset against the collector's
 clock with an NTP-style handshake (``clock`` probe -> ``clock_reply``,
@@ -15,17 +29,17 @@ segment timestamp, so the merged timeline is ordered on one clock.
 """
 from __future__ import annotations
 
-import socket
 import threading
 import time
 from typing import Dict, List, Optional
 
 from repro.core.analysis import summarize_module
-from repro.core.session import recv_lines
-from repro.fleet import wire
+from repro.fleet import payloads
 from repro.fleet.detectors import FleetDetector, default_fleet_detectors
 from repro.fleet.report import FleetReport, RankSlice, merge_summaries
 from repro.insight.detectors import Finding
+from repro.link import (LINK_VERSION, Endpoint, LineServer, Message,
+                        SpoolReader, WireError, check_hello, encode)
 
 
 class FleetCollector:
@@ -34,12 +48,26 @@ class FleetCollector:
         self.detectors = (list(detectors) if detectors is not None
                           else default_fleet_detectors())
         self.ranks: Dict[int, RankSlice] = {}
+        # streaming pushes by rank, superseded by that rank's final report
+        self._streamed: Dict[int, List[Finding]] = {}
+        # standalone (non-streaming) pushes: persistent, always reported
         self._extra_findings: List[Finding] = []
         self._t0 = time.perf_counter()
         self._lock = threading.Lock()
         self.stats = {"lines": 0, "reports": 0, "hellos": 0,
                       "clock_probes": 0, "findings": 0, "errors": 0,
                       "bytes": 0}
+        self.endpoint = Endpoint(context=self, handlers={
+            "hello": FleetCollector._msg_hello,
+            "clock": FleetCollector._msg_clock,
+            "report": FleetCollector._msg_report,
+            "findings": FleetCollector._msg_findings,
+            "bye": FleetCollector._msg_ack,
+            # replies that loop back (e.g. replayed captures of a full
+            # exchange) are acknowledged quietly, not errors
+            "clock_reply": FleetCollector._msg_ack,
+            "ok": FleetCollector._msg_ack,
+        })
 
     def _bump(self, key: str, by: int = 1) -> None:
         # CollectorServer runs one thread per rank connection: the
@@ -56,52 +84,96 @@ class FleetCollector:
     # ------------------------------------------------------------ ingest
     def ingest_line(self, line: str) -> Optional[str]:
         """Process one wire line; returns the reply line for
-        request/response kinds (clock) or an ack, None to say nothing.
-        Raises WireError on malformed input (server mode catches and
-        replies with an error line instead of dying)."""
+        request/response kinds (clock, hello) or an ack, None to say
+        nothing.  Raises WireError on malformed input (server mode
+        catches and replies with an error line instead of dying)."""
         self._bump("lines")
         self._bump("bytes", len(line))
-        msg = wire.decode(line)
-        if msg.kind == "hello":
-            with self._lock:
-                s = self._slice(msg.rank)
-                s.nprocs = int(msg.payload.get("nprocs", 1))
-                s.host = str(msg.payload.get("host", ""))
-                s.pid = int(msg.payload.get("pid", 0))
-            self._bump("hellos")
-            return "ok"
-        if msg.kind == "clock":
-            self._bump("clock_probes")
-            return wire.encode("clock_reply", msg.rank,
-                              {"t_coll": self.now()})
-        if msg.kind == "report":
-            self._ingest_report(msg)
-            self._bump("reports")
-            return "ok"
-        if msg.kind == "findings":
-            found = wire.decode_findings(msg.payload.get("findings", []),
-                                         rank=msg.rank)
-            with self._lock:
-                self._extra_findings.extend(found)
-            self._bump("findings", len(found))
-            return "ok"
-        if msg.kind == "bye":
-            return "ok"
-        return "ok"      # clock_reply etc.: ignore quietly
+        return self.endpoint.dispatch_line(line)
 
-    def _ingest_report(self, msg: wire.WireMessage) -> None:
+    def ingest_spool(self, directory_or_reader) -> int:
+        """Drain a spool (directory path or ``SpoolReader``) into this
+        collector; returns the number of lines ingested.  Call
+        repeatedly on a live spool (the reader tracks offsets) and once
+        after the writers exit — a finished spool dir is exactly a
+        replayable capture."""
+        reader = (directory_or_reader
+                  if isinstance(directory_or_reader, SpoolReader)
+                  else SpoolReader(directory_or_reader))
+        n = 0
+        for line in reader.poll():
+            # tolerate a corrupt line exactly like the TCP server does:
+            # count it and keep draining — one bad byte must not make
+            # the rest of a capture unreplayable (or abort a live
+            # spawned fleet mid-run)
+            try:
+                self.ingest_line(line)
+            except WireError:
+                self._bump("errors")
+                continue
+            n += 1
+        return n
+
+    # ------------------------------------------------------------- verbs
+    # Endpoint handler contract: handler(endpoint, msg); the collector
+    # is endpoint.context, same as a register_verb extension sees.
+    @staticmethod
+    def _msg_hello(endpoint, msg: Message) -> str:
+        self = endpoint.context
+        check_hello(msg.payload, side=f"rank {msg.rank}")
+        with self._lock:
+            s = self._slice(msg.rank)
+            s.nprocs = int(msg.payload.get("nprocs", 1))
+            s.host = str(msg.payload.get("host", ""))
+            s.pid = int(msg.payload.get("pid", 0))
+        self._bump("hellos")
+        return encode("hello", msg.rank, {"link_v": LINK_VERSION})
+
+    @staticmethod
+    def _msg_clock(endpoint, msg: Message) -> str:
+        self = endpoint.context
+        self._bump("clock_probes")
+        return encode("clock_reply", msg.rank, {"t_coll": self.now()})
+
+    @staticmethod
+    def _msg_report(endpoint, msg: Message) -> str:
+        self = endpoint.context
+        self._ingest_report(msg)
+        self._bump("reports")
+        return "ok"
+
+    @staticmethod
+    def _msg_findings(endpoint, msg: Message) -> str:
+        self = endpoint.context
+        found = payloads.decode_findings(msg.payload.get("findings", []),
+                                         rank=msg.rank)
+        with self._lock:
+            if msg.payload.get("streaming"):
+                # mid-run push: the rank's final report supersedes it
+                self._streamed.setdefault(msg.rank, []).extend(found)
+            else:
+                # standalone push: authoritative, survives the report
+                self._extra_findings.extend(found)
+        self._bump("findings", len(found))
+        return "ok"
+
+    @staticmethod
+    def _msg_ack(endpoint, msg: Message) -> str:
+        return "ok"
+
+    def _ingest_report(self, msg: Message) -> None:
         p = msg.payload
-        per_file = wire.decode_records(p.get("posix", {}))
+        per_file = payloads.decode_records(p.get("posix", {}))
         clock = p.get("clock") or {}
         offset = clock.get("offset_s")
         offset = 0.0 if offset is None else float(offset)
-        segments = wire.decode_segments(p.get("segments", []))
+        segments = payloads.decode_segments(p.get("segments", []))
         aligned = [seg._replace(start=seg.start + offset,
                                 end=seg.end + offset)
                    for seg in segments]
         aligned.sort(key=lambda s: s.start)
-        findings = wire.decode_findings(p.get("findings", []),
-                                        rank=msg.rank)
+        findings = payloads.decode_findings(p.get("findings", []),
+                                            rank=msg.rank)
         with self._lock:
             s = self._slice(msg.rank)
             s.nprocs = max(s.nprocs, int(p.get("nprocs", 1)))
@@ -113,12 +185,15 @@ class FleetCollector:
                             for k, v in p.get("file_sizes", {}).items()}
             s.posix = summarize_module("POSIX", per_file)
             if "stdio_summary" in p:
-                s.stdio = wire.decode_summary("STDIO", p["stdio_summary"])
+                s.stdio = payloads.decode_summary("STDIO",
+                                                  p["stdio_summary"])
             else:
                 s.stdio = summarize_module(
-                    "STDIO", wire.decode_records(p.get("stdio", {})))
+                    "STDIO", payloads.decode_records(p.get("stdio", {})))
             s.segments = aligned
             s.findings = findings
+            # the final report supersedes this rank's mid-run pushes
+            self._streamed.pop(msg.rank, None)
 
     def _slice(self, rank: int) -> RankSlice:
         s = self.ranks.get(rank)
@@ -131,10 +206,13 @@ class FleetCollector:
         """Aggregate everything ingested so far into one FleetReport."""
         with self._lock:
             ranks = dict(self.ranks)
+            streamed = [f for r in sorted(self._streamed)
+                        for f in self._streamed[r]]
             extra = list(self._extra_findings)
         findings: List[Finding] = []
         for r in sorted(ranks):
             findings.extend(ranks[r].findings)
+        findings.extend(streamed)
         findings.extend(extra)
         for det in self.detectors:
             try:
@@ -162,56 +240,25 @@ class FleetCollector:
 class CollectorServer:
     """TCP front end for a FleetCollector: rank 0 listens, every rank's
     reporter connects and streams wire lines (the push direction of the
-    extended ProfileServer protocol).  One thread per connection so a
-    slow rank cannot stall the fleet."""
+    extended ProfileServer protocol).  A ``repro.link.LineServer``
+    carries the plumbing — one thread per connection so a slow rank
+    cannot stall the fleet, and ``close()`` joins handler threads so a
+    successor server on the same port never races a lingering handler.
+
+    ``idle_timeout_s`` bounds an idle reporter connection's read wait
+    (plumbed from ``ProfilerOptions.idle_timeout_s`` by the façade)."""
 
     def __init__(self, collector: Optional[FleetCollector] = None,
-                 port: int = 0):
+                 port: int = 0, idle_timeout_s: float = 5.0):
         self.collector = collector or FleetCollector()
-        self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
-        self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-        self._srv.bind(("127.0.0.1", port))
-        self._srv.listen(64)
-        self.port = self._srv.getsockname()[1]
-        self._stop = threading.Event()
-        self._threads: List[threading.Thread] = []
-        self._accept = threading.Thread(target=self._serve, daemon=True)
-        self._accept.start()
-
-    def _serve(self) -> None:
-        self._srv.settimeout(0.2)
-        while not self._stop.is_set():
-            try:
-                conn, _ = self._srv.accept()
-            except socket.timeout:
-                continue
-            t = threading.Thread(target=self._handle, args=(conn,),
-                                 daemon=True)
-            t.start()
-            self._threads.append(t)
-
-    def _handle(self, conn: socket.socket) -> None:
-        with conn:
-            try:
-                for line in recv_lines(conn, idle_timeout=5.0):
-                    if self._stop.is_set():
-                        break
-                    try:
-                        reply = self.collector.ingest_line(line)
-                    except wire.WireError as e:
-                        self.collector._bump("errors")
-                        reply = f"error: {e}"
-                    if reply is not None:
-                        conn.sendall(reply.encode() + b"\n")
-            except (ValueError, OSError):
-                pass
+        self._server = LineServer(
+            self.collector.ingest_line, port=port, backlog=64,
+            idle_timeout_s=idle_timeout_s,
+            on_error=lambda e: self.collector._bump("errors"))
+        self.port = self._server.port
 
     def close(self) -> None:
-        self._stop.set()
-        self._accept.join(timeout=2)
-        for t in self._threads:
-            t.join(timeout=1)
-        self._srv.close()
+        self._server.close()
 
     def __enter__(self) -> "CollectorServer":
         return self

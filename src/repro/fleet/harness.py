@@ -10,11 +10,14 @@ deployment.  An optional per-rank throttle (e.g. a
 slower — the knob the rank-straggler tests turn.
 
 ``simulate_fleet`` runs the rank workloads on threads, then ships every
-rank's window through the real wire protocol (serialize -> ingest_line
--> parse) into a FleetCollector, so the simulated path and the TCP path
-share every byte of the aggregation code.  The public entry point is
-``repro.profiler`` fleet mode; ``run_simulated_fleet`` remains as a
-deprecated shim.
+rank's window through the real wire protocol (serialize -> transport ->
+decode) into a FleetCollector, so the simulated path and the networked
+paths share every byte of the codec and aggregation code.  The default
+transport is a ``repro.link.LoopbackTransport`` straight into the
+collector; ``make_transport`` swaps in per-rank ``TcpTransport`` /
+``SpoolTransport`` instances so the same harness exercises every wire.
+The public entry point is ``repro.profiler`` fleet mode;
+``run_simulated_fleet`` remains as a deprecated shim.
 """
 from __future__ import annotations
 
@@ -27,6 +30,7 @@ from repro.core.runtime import DarshanRuntime
 from repro.fleet.collector import FleetCollector
 from repro.fleet.report import FleetReport
 from repro.fleet.reporter import RankReporter
+from repro.link import LoopbackTransport, as_transport
 
 
 class RankIO:
@@ -119,7 +123,9 @@ def simulate_fleet(
         throttles: Optional[Dict[int, Callable[[int], None]]] = None,
         handshake_rounds: int = 3,
         make_insight: Optional[Callable[[], object]] = None,
-        insight_interval_s: float = 0.5, trace: bool = True) -> FleetReport:
+        insight_interval_s: float = 0.5, trace: bool = True,
+        make_transport: Optional[Callable[[int], object]] = None,
+        collect: bool = True) -> Optional[FleetReport]:
     """Run ``workload(rank, io)`` on ``nranks`` threads, each with a
     private runtime + RankReporter, ship every window through the wire
     protocol into ``collector``, and return the aggregated FleetReport.
@@ -130,7 +136,14 @@ def simulate_fleet(
     — the handshake must recover it.  ``throttles[r]`` is applied inside
     rank r's timed reads/writes.  ``make_insight()`` is invoked once per
     rank and may return an InsightEngine (each rank needs its own) or
-    True (the session builds a default engine); None disables insight."""
+    True (the session builds a default engine); None disables insight.
+
+    ``make_transport(rank)`` builds each rank's shipping transport
+    (default: ``LoopbackTransport`` straight into ``collector``); the
+    harness closes what it builds.  ``collect=False`` skips the final
+    ``collector.report()`` and returns None — for one-way transports
+    (spool) whose lines the caller must drain into the collector before
+    aggregating."""
     reporters: List[RankReporter] = []
     for r in range(nranks):
         rt = DarshanRuntime()
@@ -164,9 +177,16 @@ def simulate_fleet(
     if errors:
         raise errors[0]
 
-    for rep in reporters:
-        rep.ship(collector.ingest_line, handshake_rounds=handshake_rounds)
-    return collector.report()
+    for r, rep in enumerate(reporters):
+        if make_transport is not None:
+            transport = as_transport(make_transport(r))
+        else:
+            transport = LoopbackTransport(collector.ingest_line)
+        try:
+            rep.ship(transport, handshake_rounds=handshake_rounds)
+        finally:
+            transport.close()
+    return collector.report() if collect else None
 
 
 def run_simulated_fleet(

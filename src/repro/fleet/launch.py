@@ -1,0 +1,211 @@
+"""Real multi-process fleet launch: N OS processes, one rank each.
+
+The simulated harness (``repro.fleet.harness``) proves the collection
+path with N threads in one process; this module runs the same contract
+— ``workload(rank, io)`` against a private per-rank ``DarshanRuntime``
+— in **separate OS processes** spawned via ``multiprocessing``, shipping
+over a real inter-process transport:
+
+  * ``transport="tcp"``   — every rank connects a ``TcpTransport`` to a
+    ``CollectorServer`` (duplex: clock handshake, streamed findings
+    arrive live);
+  * ``transport="spool"`` — every rank appends to its own file in a
+    shared spool directory (no network; the parent tails the spool
+    mid-run with a ``SpoolReader``, so streamed findings still surface
+    before the run ends, and the finished directory is a replayable
+    capture).
+
+Because both paths speak ``repro.link`` messages end to end, a spawned
+fleet and a simulated fleet produce the same global counters and the
+same finding kinds for the same workload — the equivalence the tests
+pin down.
+
+The default start method is the platform default (``fork`` on Linux),
+so closures work as workloads; pass ``mp_start_method="spawn"`` for
+fork-unsafe embeddings (then the workload and throttles must pickle).
+
+``Profiler(ProfilerOptions(mode="fleet", launch="spawn"))`` drives this
+module and owns the ``CollectorServer`` lifecycle; ``run_spawned_fleet``
+is the standalone entry point.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import sys
+import traceback
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.runtime import DarshanRuntime
+from repro.fleet.collector import CollectorServer, FleetCollector
+from repro.fleet.harness import RankIO
+from repro.fleet.report import FleetReport
+from repro.fleet.reporter import RankReporter
+from repro.link import SpoolReader, SpoolTransport, TcpTransport
+
+_JOIN_GRACE_S = 10.0
+
+
+def _build_insight(spec, fast_tier_mb_s: Optional[float]):
+    """An InsightEngine for one child rank.
+
+    ``spec`` is plain data so it crosses process boundaries under any
+    start method: False/None (off), True (default detector set), or a
+    sequence of registry detector names."""
+    if not spec:
+        return False
+    if spec is True:
+        return True
+    from types import SimpleNamespace
+
+    from repro.insight.engine import InsightEngine
+    from repro.profiler import registry
+    opts = SimpleNamespace(fast_tier_mb_s=fast_tier_mb_s)
+    return InsightEngine(
+        detectors=[registry.create("detector", n, opts) for n in spec])
+
+
+def _child_main(rank: int, nranks: int, workload, transport_spec,
+                clock_skew: float, throttle, insight_spec,
+                fast_tier_mb_s, insight_interval_s: float, trace: bool,
+                handshake_rounds: int, stream_interval_s: float) -> None:
+    """One rank: profile the workload against a private runtime, stream
+    findings mid-run, ship the window, exit 0 on success."""
+    try:
+        rt = DarshanRuntime()
+        if clock_skew:
+            rt._t0 -= clock_skew
+        insight = _build_insight(insight_spec, fast_tier_mb_s)
+        reporter = RankReporter(rank, nprocs=nranks, runtime=rt,
+                                auto_attach=False, insight=insight,
+                                insight_interval_s=insight_interval_s,
+                                trace=trace)
+        kind = transport_spec[0]
+        if kind == "tcp":
+            transport = TcpTransport(transport_spec[1], transport_spec[2])
+        elif kind == "spool":
+            transport = SpoolTransport(transport_spec[1],
+                                       name=f"rank{rank:05d}")
+        else:
+            raise ValueError(f"unknown transport spec: {transport_spec!r}")
+        try:
+            io = RankIO(rt, throttle=throttle)
+            reporter.start()
+            if insight:
+                reporter.start_streaming(transport,
+                                         interval_s=stream_interval_s)
+            try:
+                workload(rank, io)
+            finally:
+                reporter.stop_streaming()
+                reporter.stop()
+            reporter.ship(transport, handshake_rounds=handshake_rounds)
+        finally:
+            transport.close()
+    except BaseException:
+        traceback.print_exc(file=sys.stderr)
+        sys.exit(1)
+
+
+def run_spawned_fleet(
+        nranks: int,
+        workload: Callable[[int, RankIO], None],
+        collector: Optional[FleetCollector] = None,
+        transport: str = "tcp",
+        server: Optional[CollectorServer] = None,
+        spool_dir: Optional[str] = None,
+        clock_skew_s: Optional[Sequence[float]] = None,
+        throttles: Optional[Dict[int, Callable[[int], None]]] = None,
+        handshake_rounds: int = 3,
+        insight=False,
+        fast_tier_mb_s: Optional[float] = None,
+        insight_interval_s: float = 0.5,
+        trace: bool = True,
+        stream_interval_s: float = 0.25,
+        idle_timeout_s: float = 5.0,
+        mp_start_method: Optional[str] = None,
+        timeout_s: float = 120.0) -> FleetReport:
+    """Run ``workload(rank, io)`` on ``nranks`` OS processes and return
+    the aggregated FleetReport.
+
+    ``transport`` is ``"tcp"`` (a ``CollectorServer`` is created unless
+    ``server`` is passed — the façade passes its own, owning the
+    lifecycle) or ``"spool"`` (``spool_dir`` required; the parent tails
+    it mid-run and drains it after the children exit).  ``insight`` is
+    False, True, or a sequence of registry detector names (plain data —
+    it must cross the process boundary).  A rank that dies or hangs past
+    ``timeout_s`` raises RuntimeError naming the rank."""
+    import tempfile
+
+    collector = collector if collector is not None else FleetCollector()
+    own_server: Optional[CollectorServer] = None
+    reader: Optional[SpoolReader] = None
+    own_spool: Optional[str] = None
+    if transport == "tcp":
+        if server is None:
+            server = own_server = CollectorServer(
+                collector, idle_timeout_s=idle_timeout_s)
+        transport_spec = ("tcp", "127.0.0.1", server.port)
+    elif transport == "spool":
+        if spool_dir is None:
+            spool_dir = own_spool = tempfile.mkdtemp(prefix="fleet_spool_")
+        transport_spec = ("spool", spool_dir)
+        reader = SpoolReader(spool_dir)
+    else:
+        raise ValueError(
+            f"transport must be 'tcp' or 'spool' for spawned fleets, "
+            f"got {transport!r} (loopback cannot cross processes)")
+
+    ctx = (multiprocessing.get_context(mp_start_method)
+           if mp_start_method else multiprocessing.get_context())
+    procs = []
+    try:
+        for r in range(nranks):
+            p = ctx.Process(
+                target=_child_main,
+                name=f"fleet-rank-{r}",
+                args=(r, nranks, workload, transport_spec,
+                      (clock_skew_s[r] if clock_skew_s else 0.0),
+                      (throttles or {}).get(r), insight, fast_tier_mb_s,
+                      insight_interval_s, trace, handshake_rounds,
+                      stream_interval_s))
+            p.start()
+            procs.append(p)
+
+        # Wait for the ranks; over spool, tail the directory while they
+        # run so streamed findings surface mid-run like they do on TCP.
+        import time
+        poll_s = 0.05
+        deadline = time.perf_counter() + timeout_s
+        while (any(p.is_alive() for p in procs)
+               and time.perf_counter() < deadline):
+            if reader is not None:
+                collector.ingest_spool(reader)
+            alive = next((p for p in procs if p.is_alive()), None)
+            if alive is not None:
+                alive.join(poll_s)
+        hung = [p for p in procs if p.is_alive()]
+        if hung:
+            for p in hung:
+                p.terminate()
+                p.join(_JOIN_GRACE_S)
+            raise RuntimeError(
+                f"fleet ranks timed out after {timeout_s:.0f}s: "
+                f"{[p.name for p in hung]}")
+        failed = [p.name for p in procs if p.exitcode != 0]
+        if failed:
+            raise RuntimeError(f"fleet ranks failed: {failed}")
+        if reader is not None:
+            collector.ingest_spool(reader)     # final drain
+    finally:
+        for p in procs:
+            if p.is_alive():
+                p.terminate()
+                p.join(_JOIN_GRACE_S)
+        if own_server is not None:
+            own_server.close()
+        if own_spool is not None:
+            # ours to clean up on every exit path; a caller-provided
+            # spool_dir is left intact (it is the replayable capture)
+            import shutil
+            shutil.rmtree(own_spool, ignore_errors=True)
+    return collector.report()

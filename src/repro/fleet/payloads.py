@@ -1,0 +1,133 @@
+"""Fleet payload codecs: domain objects <-> ``repro.link`` messages.
+
+The generic message/transport layer lives in ``repro.link``; this
+module owns the fleet-specific payload shapes that ride inside it —
+per-file POSIX/STDIO counter records, DXT segments, module summaries,
+insight findings, and the composed ``hello`` / ``report`` messages a
+``RankReporter`` ships to a ``FleetCollector``.
+
+Kinds (all built-in ``repro.link`` kinds):
+
+  * ``hello``        — rank announces itself: nprocs, pid, host, and
+                       the link protocol version it speaks (``link_v``,
+                       the negotiation input — see
+                       ``repro.link.check_hello``).
+  * ``clock``        — handshake probe: ``{"t_send": <rank clock>}``.
+  * ``clock_reply``  — collector's answer: ``{"t_coll": <fleet clock>}``.
+  * ``report``       — one profiled window: per-file POSIX/STDIO counter
+                       records, DXT segments, file sizes, insight
+                       findings, elapsed time, and the measured clock
+                       offset (rank clock + offset = fleet clock).
+  * ``findings``     — standalone findings push (streaming mode;
+                       ``{"streaming": true}`` marks mid-run pushes the
+                       final report supersedes).
+  * ``bye``          — rank is done.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.core.dxt import Segment
+from repro.core.records import FileRecord
+from repro.insight.detectors import Finding
+from repro.link.messages import LINK_VERSION, encode
+
+
+# ----------------------------------------------------------- components
+def encode_segments(segments) -> List[list]:
+    return [[s.module, s.path, s.op, s.offset, s.length, s.start, s.end,
+             s.thread] for s in segments]
+
+
+def decode_segments(rows) -> List[Segment]:
+    return [Segment(r[0], r[1], r[2], int(r[3]), int(r[4]),
+                    float(r[5]), float(r[6]), int(r[7])) for r in rows]
+
+
+def encode_records(records: Dict[str, FileRecord]) -> dict:
+    return {p: {"c": dict(r.counters), "f": dict(r.fcounters)}
+            for p, r in records.items()}
+
+
+def decode_records(obj: dict) -> Dict[str, FileRecord]:
+    return {p: FileRecord(p, dict(d.get("c", {})), dict(d.get("f", {})))
+            for p, d in obj.items()}
+
+
+def encode_summary(summary) -> dict:
+    """Scalar + histogram fields of a ModuleSummary (the per-module
+    rollup analyze() computes; shipped because SessionReport keeps
+    per-file records for POSIX only)."""
+    from repro.fleet.report import _SUM_FLOAT, _SUM_INT
+    d = {name: getattr(summary, name) for name in _SUM_INT + _SUM_FLOAT}
+    d["read_size_hist"] = list(summary.read_size_hist)
+    d["write_size_hist"] = list(summary.write_size_hist)
+    return d
+
+
+def decode_summary(module: str, d: dict):
+    from repro.core.analysis import ModuleSummary
+    from repro.fleet.report import _SUM_FLOAT, _SUM_INT
+    s = ModuleSummary(module)
+    for name in _SUM_INT:
+        setattr(s, name, int(d.get(name, 0)))
+    for name in _SUM_FLOAT:
+        setattr(s, name, float(d.get(name, 0.0)))
+    s.read_size_hist = list(d.get("read_size_hist", [0] * 10))
+    s.write_size_hist = list(d.get("write_size_hist", [0] * 10))
+    return s
+
+
+# -------------------------------------------------------------- messages
+def encode_hello(rank: int, nprocs: int, pid: Optional[int] = None,
+                 host: Optional[str] = None) -> str:
+    import os
+    import socket as _socket
+    return encode("hello", rank, {
+        "nprocs": nprocs,
+        "pid": pid if pid is not None else os.getpid(),
+        "host": host or _socket.gethostname(),
+        "link_v": LINK_VERSION})
+
+
+def encode_report(rank: int, report, nprocs: int = 1,
+                  clock_offset_s: Optional[float] = None,
+                  clock_rtt_s: Optional[float] = None) -> str:
+    """Serialize one rank's SessionReport window.
+
+    ``clock_offset_s`` is the handshake-measured offset such that
+    rank-local segment times + offset land on the fleet timeline; None
+    means "not measured" (the collector falls back to zero)."""
+    # SessionReport carries POSIX per-file records; STDIO rides as the
+    # module rollup only (mirrors what analyze() retains).
+    payload = {
+        "nprocs": nprocs,
+        "elapsed_s": report.elapsed_s,
+        "posix": encode_records(report.per_file),
+        "stdio_summary": encode_summary(report.stdio),
+        "file_sizes": dict(report.file_sizes),
+        "segments": encode_segments(getattr(report, "segments", []) or []),
+        "findings": [f.to_dict() for f in report.findings],
+        "clock": {"offset_s": clock_offset_s, "rtt_s": clock_rtt_s},
+    }
+    return encode("report", rank, payload)
+
+
+def encode_findings(rank: int, findings, streaming: bool = False) -> str:
+    """A standalone findings push (the mid-run streaming path)."""
+    return encode("findings", rank,
+                  {"findings": [f.to_dict() for f in findings],
+                   "streaming": bool(streaming)})
+
+
+def decode_findings(rows, rank: Optional[int] = None) -> List[Finding]:
+    """Findings from their wire dicts; ``rank`` stamps provenance when
+    the producing side didn't."""
+    out = []
+    for d in rows:
+        f = Finding.from_dict(d)
+        if f.rank is None and rank is not None:
+            f = Finding(f.detector, f.title, f.severity, f.window,
+                        f.evidence, f.recommendation, rank)
+        out.append(f)
+    return out

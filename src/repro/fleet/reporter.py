@@ -2,54 +2,52 @@
 
 Wraps a rank's DarshanRuntime in a ProfileSession (optionally with a
 streaming InsightEngine) and ships the stopped window — per-file
-counters, DXT segments, findings — to the FleetCollector as wire-format
-lines.  Before shipping it measures its clock offset against the
-collector with an NTP-style handshake so the collector can align every
-rank's timeline onto one clock:
+counters, DXT segments, findings — to the FleetCollector as
+``repro.link`` messages over any ``Transport``: ``LoopbackTransport``
+(simulated fleets), ``TcpTransport`` (a CollectorServer), or
+``SpoolTransport`` (a shared directory, no network).  Legacy
+``line -> reply`` callables still work (they are wrapped via
+``as_transport``), so ``reporter.ship(collector.ingest_line)`` remains
+valid.
+
+Shipping opens with ``hello`` — which negotiates the link protocol
+version (``check_hello`` on the reply; a collector that answers with an
+incompatible version raises a loud ``WireError``) — then, on duplex
+transports, measures the clock offset against the collector with an
+NTP-style handshake so the collector can align every rank's timeline
+onto one clock:
 
     probe:  send clock{t_send}, note t_recv on the reply
     offset = t_coll - (t_send + t_recv) / 2      (midpoint estimate)
     keep the sample with the smallest RTT over a few rounds
 
-A transport is any ``send(line) -> reply-line-or-None`` callable: the
-in-process simulated fleet passes ``collector.ingest_line`` directly,
-real deployments use ``SocketTransport`` against a CollectorServer.
+One-way transports (spool) skip the handshake; the offset ships as
+"not measured" and the collector falls back to zero.
+
+Streaming: ``start_streaming(transport)`` polls the session's insight
+engine on a background thread and pushes newly raised findings as
+``findings`` messages mid-run — the collector surfaces them
+immediately and supersedes them with this rank's final report.
 """
 from __future__ import annotations
 
-import socket
-from typing import Callable, Optional
+import threading
+from typing import Optional
 
 from repro.core.analysis import SessionReport
 from repro.core.runtime import DarshanRuntime, get_runtime
-from repro.core.session import ProfileSession, recv_reply
-from repro.fleet import wire
+from repro.core.session import ProfileSession
+from repro.fleet import payloads
+from repro.link import TcpTransport, WireError, as_transport, check_hello
+from repro.link import Transport as LinkTransport
+from repro.link.messages import decode, encode
 
-Transport = Callable[[str], Optional[str]]
+# Legacy protocol alias: a transport used to be Callable[[str],
+# Optional[str]]; as_transport() upgrades those.
+Transport = LinkTransport
 
-
-class SocketTransport:
-    """Line-framed request/response over one TCP connection."""
-
-    def __init__(self, host: str, port: int, timeout: float = 5.0):
-        self._sock = socket.create_connection((host, port), timeout=timeout)
-
-    def __call__(self, line: str) -> Optional[str]:
-        self._sock.sendall(line.encode() + b"\n")
-        return recv_reply(self._sock)
-
-    def close(self) -> None:
-        try:
-            self._sock.close()
-        except OSError:
-            pass
-
-    def __enter__(self) -> "SocketTransport":
-        return self
-
-    def __exit__(self, *exc):
-        self.close()
-        return False
+# The old fleet socket client is exactly a TcpTransport now.
+SocketTransport = TcpTransport
 
 
 class RankReporter:
@@ -72,6 +70,9 @@ class RankReporter:
                                       insight_interval_s=insight_interval_s)
         self.clock_offset_s: Optional[float] = None
         self.clock_rtt_s: Optional[float] = None
+        self._stream_stop = threading.Event()
+        self._stream_thread: Optional[threading.Thread] = None
+        self._streamed_count = 0
 
     # ---------------------------------------------------------- profiling
     def start(self) -> None:
@@ -94,21 +95,48 @@ class RankReporter:
         return False
 
     # ----------------------------------------------------------- shipping
-    def handshake(self, transport: Transport, rounds: int = 5) -> float:
+    def hello(self, transport) -> None:
+        """Announce this rank and negotiate the protocol version.
+
+        The hello reply (when the transport carries one) is checked
+        with ``check_hello`` — an incompatible collector fails loudly
+        here, before any payload ships.  Legacy collectors that answer
+        a bare ``ok`` are accepted as v1."""
+        t = as_transport(transport)
+        reply = t(payloads.encode_hello(self.rank, self.nprocs))
+        if reply is None or not reply.startswith("{"):
+            if reply is not None and reply.startswith("error"):
+                raise WireError(
+                    f"collector rejected hello from rank {self.rank}: "
+                    f"{reply}")
+            if reply == "":
+                # a closed/reset connection reads as EOF, not an ack
+                raise WireError(
+                    f"collector closed the connection during hello from "
+                    f"rank {self.rank}")
+            return                      # one-way transport / legacy ack
+        msg = decode(reply)
+        if msg.kind == "error":
+            raise WireError(f"collector rejected hello from rank "
+                            f"{self.rank}: {msg.payload.get('error')}")
+        if msg.kind == "hello":
+            check_hello(msg.payload, side="collector")
+
+    def handshake(self, transport, rounds: int = 5) -> float:
         """Measure this rank's clock offset against the collector.
 
         Returns the offset such that ``rank_time + offset`` lands on the
         collector's clock; caches it for ``ship``."""
+        t = as_transport(transport)
         best_rtt = float("inf")
         best_offset = 0.0
         for _ in range(max(rounds, 1)):
             t_send = self.rt.now()
-            reply = transport(wire.encode("clock", self.rank,
-                                          {"t_send": t_send}))
+            reply = t(encode("clock", self.rank, {"t_send": t_send}))
             t_recv = self.rt.now()
             if not reply or reply.startswith("error"):
                 continue
-            msg = wire.decode(reply)
+            msg = decode(reply)
             if msg.kind != "clock_reply":
                 continue
             t_coll = float(msg.payload["t_coll"])
@@ -130,29 +158,74 @@ class RankReporter:
                 raise RuntimeError("no stopped window to ship")
             report = self.reports[-1]
         return [
-            wire.encode_hello(self.rank, self.nprocs),
-            wire.encode_report(self.rank, report, nprocs=self.nprocs,
-                               clock_offset_s=self.clock_offset_s,
-                               clock_rtt_s=self.clock_rtt_s),
+            payloads.encode_hello(self.rank, self.nprocs),
+            payloads.encode_report(self.rank, report, nprocs=self.nprocs,
+                                   clock_offset_s=self.clock_offset_s,
+                                   clock_rtt_s=self.clock_rtt_s),
         ]
 
-    def ship(self, transport: Transport,
+    def ship(self, transport,
              report: Optional[SessionReport] = None,
              handshake_rounds: int = 5) -> None:
-        """hello -> clock handshake -> report -> bye over one transport."""
-        transport(wire.encode_hello(self.rank, self.nprocs))
-        self.handshake(transport, rounds=handshake_rounds)
+        """hello -> clock handshake (duplex transports) -> report ->
+        bye, over one transport."""
+        t = as_transport(transport)
+        self.hello(t)
+        if t.duplex:
+            self.handshake(t, rounds=handshake_rounds)
         if report is None:
             if not self.reports:
                 raise RuntimeError("no stopped window to ship")
             report = self.reports[-1]
-        transport(wire.encode_report(
+        t(payloads.encode_report(
             self.rank, report, nprocs=self.nprocs,
             clock_offset_s=self.clock_offset_s,
             clock_rtt_s=self.clock_rtt_s))
-        transport(wire.encode("bye", self.rank, {}))
+        t(encode("bye", self.rank, {}))
 
     def ship_socket(self, host: str, port: int,
                     report: Optional[SessionReport] = None) -> None:
-        with SocketTransport(host, port) as t:
+        with TcpTransport(host, port) as t:
             self.ship(t, report=report)
+
+    # ---------------------------------------------------------- streaming
+    def start_streaming(self, transport, interval_s: float = 0.5) -> bool:
+        """Push newly raised insight findings over ``transport`` on a
+        background thread until ``stop_streaming`` (idempotent; returns
+        False when the session has no insight engine).  The engine
+        coalesces re-firings in place, so index tracking streams each
+        finding once — at first raise; the final shipped report carries
+        the authoritative list."""
+        engine = self.session.insight_engine
+        if engine is None or self._stream_thread is not None:
+            return engine is not None
+        t = as_transport(transport)
+        self._stream_stop.clear()
+
+        def pump() -> None:
+            while not self._stream_stop.wait(interval_s):
+                self._push_new(t, engine)
+            self._push_new(t, engine)      # final drain
+
+        self._stream_thread = threading.Thread(
+            target=pump, name=f"stream-rank-{self.rank}", daemon=True)
+        self._stream_thread.start()
+        return True
+
+    def _push_new(self, transport, engine) -> None:
+        found = engine.findings[self._streamed_count:]
+        if not found:
+            return
+        self._streamed_count += len(found)
+        try:
+            transport(payloads.encode_findings(self.rank, found,
+                                               streaming=True))
+        except (OSError, ValueError):
+            pass                    # streaming is best-effort telemetry
+
+    def stop_streaming(self) -> None:
+        if self._stream_thread is None:
+            return
+        self._stream_stop.set()
+        self._stream_thread.join(timeout=5)
+        self._stream_thread = None

@@ -1,167 +1,50 @@
-"""Versioned JSON-lines wire format between RankReporters and the
-FleetCollector.
+"""Deprecated: ``repro.fleet.wire`` moved.
 
-One message per line: ``{"v": 1, "kind": ..., "rank": ..., "payload":
-{...}}``.  Line-oriented so it rides the same buffered protocol as the
-ProfileServer (core.session.recv_lines) and stays greppable on disk; a
-payload dump IS a replayable collection (``FleetCollector.ingest_line``
-per line).  ``v`` is checked on decode — a newer producer against an
-older collector fails loudly instead of mis-aggregating.
-
-Kinds:
-  * ``hello``        — rank announces itself: nprocs, pid, host.
-  * ``clock``        — handshake probe: ``{"t_send": <rank clock>}``.
-  * ``clock_reply``  — collector's answer: ``{"t_coll": <fleet clock>}``.
-  * ``report``       — one profiled window: per-file POSIX/STDIO counter
-                       records, DXT segments, file sizes, insight
-                       findings, elapsed time, and the measured clock
-                       offset (rank clock + offset = fleet clock).
-  * ``findings``     — standalone findings push (streaming mode).
-  * ``bye``          — rank is done.
+The generic message codec (``encode`` / ``decode`` / ``WireMessage`` /
+``WireError`` / ``WIRE_VERSION`` / ``KINDS``) now lives in
+``repro.link`` (``Message``, ``LINK_VERSION``); the fleet payload
+helpers (``encode_report``, ``encode_hello``, ``encode_segments``, ...)
+live in ``repro.fleet.payloads``.  This module forwards every old name
+with a ``DeprecationWarning`` so existing imports and replayed payload
+dumps keep working one release longer.
 """
 from __future__ import annotations
 
-import json
-from dataclasses import dataclass
-from typing import Dict, List, Optional
+import warnings
 
-from repro.core.dxt import Segment
-from repro.core.records import FileRecord
-from repro.insight.detectors import Finding
-
-WIRE_VERSION = 1
-KINDS = ("hello", "clock", "clock_reply", "report", "findings", "bye")
-
-
-class WireError(ValueError):
-    """Malformed or version-incompatible wire line."""
-
-
-@dataclass(frozen=True)
-class WireMessage:
-    v: int
-    kind: str
-    rank: int
-    payload: dict
-
-
-def encode(kind: str, rank: int, payload: dict) -> str:
-    """One wire line (no trailing newline)."""
-    if kind not in KINDS:
-        raise WireError(f"unknown kind: {kind!r}")
-    return json.dumps({"v": WIRE_VERSION, "kind": kind, "rank": rank,
-                       "payload": payload}, separators=(",", ":"))
+# old name -> (new module, new name)
+_MOVED = {
+    "WIRE_VERSION": ("repro.link.messages", "LINK_VERSION"),
+    "KINDS": ("repro.link.messages", "KINDS"),
+    "WireError": ("repro.link.messages", "WireError"),
+    "WireMessage": ("repro.link.messages", "Message"),
+    "encode": ("repro.link.messages", "encode"),
+    "decode": ("repro.link.messages", "decode"),
+    "encode_segments": ("repro.fleet.payloads", "encode_segments"),
+    "decode_segments": ("repro.fleet.payloads", "decode_segments"),
+    "encode_records": ("repro.fleet.payloads", "encode_records"),
+    "decode_records": ("repro.fleet.payloads", "decode_records"),
+    "encode_summary": ("repro.fleet.payloads", "encode_summary"),
+    "decode_summary": ("repro.fleet.payloads", "decode_summary"),
+    "encode_hello": ("repro.fleet.payloads", "encode_hello"),
+    "encode_report": ("repro.fleet.payloads", "encode_report"),
+    "encode_findings": ("repro.fleet.payloads", "encode_findings"),
+    "decode_findings": ("repro.fleet.payloads", "decode_findings"),
+}
 
 
-def decode(line: str) -> WireMessage:
+def __getattr__(name):
     try:
-        obj = json.loads(line)
-    except json.JSONDecodeError as e:
-        raise WireError(f"bad wire line: {e}") from e
-    if not isinstance(obj, dict) or "kind" not in obj:
-        raise WireError("wire line is not a message object")
-    v = obj.get("v")
-    if not isinstance(v, int) or v > WIRE_VERSION:
-        raise WireError(f"unsupported wire version: {v!r}")
-    kind = obj["kind"]
-    if kind not in KINDS:
-        raise WireError(f"unknown kind: {kind!r}")
-    rank = obj.get("rank")
-    if not isinstance(rank, int) or rank < 0:
-        raise WireError(f"bad rank: {rank!r}")
-    payload = obj.get("payload")
-    if not isinstance(payload, dict):
-        raise WireError("payload must be an object")
-    return WireMessage(v=v, kind=kind, rank=rank, payload=payload)
+        module, new_name = _MOVED[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    warnings.warn(
+        f"repro.fleet.wire.{name} is deprecated; use {module}.{new_name}",
+        DeprecationWarning, stacklevel=2)
+    import importlib
+    return getattr(importlib.import_module(module), new_name)
 
 
-# ----------------------------------------------------------- components
-def encode_segments(segments) -> List[list]:
-    return [[s.module, s.path, s.op, s.offset, s.length, s.start, s.end,
-             s.thread] for s in segments]
-
-
-def decode_segments(rows) -> List[Segment]:
-    return [Segment(r[0], r[1], r[2], int(r[3]), int(r[4]),
-                    float(r[5]), float(r[6]), int(r[7])) for r in rows]
-
-
-def encode_records(records: Dict[str, FileRecord]) -> dict:
-    return {p: {"c": dict(r.counters), "f": dict(r.fcounters)}
-            for p, r in records.items()}
-
-
-def decode_records(obj: dict) -> Dict[str, FileRecord]:
-    return {p: FileRecord(p, dict(d.get("c", {})), dict(d.get("f", {})))
-            for p, d in obj.items()}
-
-
-def encode_summary(summary) -> dict:
-    """Scalar + histogram fields of a ModuleSummary (the per-module
-    rollup analyze() computes; shipped because SessionReport keeps
-    per-file records for POSIX only)."""
-    from repro.fleet.report import _SUM_FLOAT, _SUM_INT
-    d = {name: getattr(summary, name) for name in _SUM_INT + _SUM_FLOAT}
-    d["read_size_hist"] = list(summary.read_size_hist)
-    d["write_size_hist"] = list(summary.write_size_hist)
-    return d
-
-
-def decode_summary(module: str, d: dict):
-    from repro.core.analysis import ModuleSummary
-    from repro.fleet.report import _SUM_FLOAT, _SUM_INT
-    s = ModuleSummary(module)
-    for name in _SUM_INT:
-        setattr(s, name, int(d.get(name, 0)))
-    for name in _SUM_FLOAT:
-        setattr(s, name, float(d.get(name, 0.0)))
-    s.read_size_hist = list(d.get("read_size_hist", [0] * 10))
-    s.write_size_hist = list(d.get("write_size_hist", [0] * 10))
-    return s
-
-
-# -------------------------------------------------------------- messages
-def encode_hello(rank: int, nprocs: int, pid: Optional[int] = None,
-                 host: Optional[str] = None) -> str:
-    import os
-    import socket as _socket
-    return encode("hello", rank, {
-        "nprocs": nprocs,
-        "pid": pid if pid is not None else os.getpid(),
-        "host": host or _socket.gethostname()})
-
-
-def encode_report(rank: int, report, nprocs: int = 1,
-                  clock_offset_s: Optional[float] = None,
-                  clock_rtt_s: Optional[float] = None) -> str:
-    """Serialize one rank's SessionReport window.
-
-    ``clock_offset_s`` is the handshake-measured offset such that
-    rank-local segment times + offset land on the fleet timeline; None
-    means "not measured" (the collector falls back to zero)."""
-    # SessionReport carries POSIX per-file records; STDIO rides as the
-    # module rollup only (mirrors what analyze() retains).
-    payload = {
-        "nprocs": nprocs,
-        "elapsed_s": report.elapsed_s,
-        "posix": encode_records(report.per_file),
-        "stdio_summary": encode_summary(report.stdio),
-        "file_sizes": dict(report.file_sizes),
-        "segments": encode_segments(getattr(report, "segments", []) or []),
-        "findings": [f.to_dict() for f in report.findings],
-        "clock": {"offset_s": clock_offset_s, "rtt_s": clock_rtt_s},
-    }
-    return encode("report", rank, payload)
-
-
-def decode_findings(rows, rank: Optional[int] = None) -> List[Finding]:
-    """Findings from their wire dicts; ``rank`` stamps provenance when
-    the producing side didn't."""
-    out = []
-    for d in rows:
-        f = Finding.from_dict(d)
-        if f.rank is None and rank is not None:
-            f = Finding(f.detector, f.title, f.severity, f.window,
-                        f.evidence, f.recommendation, rank)
-        out.append(f)
-    return out
+def __dir__():
+    return sorted(_MOVED)

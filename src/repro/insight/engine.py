@@ -102,7 +102,14 @@ class InsightEngine:
         if self._bg_thread is None:
             return
         self._bg_stop.set()
-        self._bg_thread.join(timeout=2)
+        try:
+            self._bg_thread.join(timeout=2)
+        except RuntimeError:
+            # a concurrent start() created the thread but hasn't run
+            # .start() yet (one shared engine driven from two rank
+            # threads — the deprecated shim's shape); the stop flag is
+            # set, so the poller exits on its first wait either way
+            pass
         self._bg_thread = None
 
     def __enter__(self) -> "InsightEngine":

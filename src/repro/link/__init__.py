@@ -1,0 +1,74 @@
+"""repro.link — one typed message/transport API for every wire in the
+profiler.
+
+tf-Darshan's core trick is extracting instrumentation state from a
+*running* process and shipping it to an external analysis surface
+(paper §III); at fleet scale that extraction path IS the system.  This
+package is that path's nervous system, unified: the ProfileServer
+control protocol, the fleet collection wire, and on-disk spool captures
+all speak the same versioned ``Message`` lines over interchangeable
+``Transport`` implementations, dispatched through one ``Endpoint``.
+
+Layers (each usable alone):
+
+  * ``messages``  — ``Message`` + the versioned line codec
+    (``encode`` / ``decode``, ``LINK_VERSION``, loud ``WireError`` with
+    the offending field and a line snippet; ``check_hello`` negotiates
+    versions at connection setup).
+  * ``endpoint``  — ``Endpoint``: string-keyed verb handlers with
+    global extension through the plugin registry.
+  * ``transport`` — ``Transport`` ABC with ``LoopbackTransport``
+    (in-process), ``TcpTransport`` (sockets), and ``SpoolTransport``
+    (append-only files; ``SpoolReader`` tails them) +
+    the shared line framing (``recv_lines`` / ``recv_reply``).
+  * ``server``    — ``LineServer``, the one threaded TCP front end
+    behind both ``ProfileServer`` and ``CollectorServer``.
+
+The verb registry contract
+--------------------------
+
+Message kinds are an open set.  The built-ins live in
+``messages.KINDS``; a third party extends the wire with ONE function —
+no changes to repro.link internals, exactly like detectors::
+
+    from repro.profiler import register_verb
+
+    @register_verb("gpu-direct-stats")
+    def _handle(endpoint, msg):
+        # endpoint.context is the owning object (FleetCollector,
+        # ProfileServer, or your own Endpoint's context)
+        endpoint.context.stash(msg.rank, msg.payload)
+        return msg.reply("ok")
+
+Registering a verb does two things everywhere in the process:
+
+  1. the codec accepts the kind — ``encode("gpu-direct-stats", ...)``
+     and ``decode`` of such lines round-trip through every transport
+     (loopback, TCP, spool) and survive in spool captures;
+  2. every ``Endpoint`` resolves the handler for incoming messages of
+     that kind (endpoint-local handlers take precedence, so an owner
+     can override).
+
+Handler contract: ``handler(endpoint, message) -> Message | str |
+None`` — a ``Message`` is encoded as the reply line, a ``str`` passes
+through verbatim (legacy ``"ok"`` acks), ``None`` sends no reply.
+Handlers run on server connection threads: keep them non-blocking and
+route state through ``endpoint.context``.
+"""
+from repro.link.endpoint import Endpoint
+from repro.link.messages import (KINDS, LINK_VERSION, Message, WireError,
+                                 check_hello, decode, encode,
+                                 encode_message, known_kind)
+from repro.link.server import LineServer
+from repro.link.transport import (MAX_LINE_BYTES, CallableTransport,
+                                  LoopbackTransport, SpoolReader,
+                                  SpoolTransport, TcpTransport, Transport,
+                                  as_transport, recv_lines, recv_reply)
+
+__all__ = [
+    "Endpoint", "KINDS", "LINK_VERSION", "Message", "WireError",
+    "check_hello", "decode", "encode", "encode_message", "known_kind",
+    "LineServer", "MAX_LINE_BYTES", "CallableTransport",
+    "LoopbackTransport", "SpoolReader", "SpoolTransport", "TcpTransport",
+    "Transport", "as_transport", "recv_lines", "recv_reply",
+]

@@ -1,0 +1,81 @@
+"""Endpoint: verb-dispatched message handling.
+
+An ``Endpoint`` maps message kinds to handlers.  Resolution is
+two-level: handlers registered on the endpoint instance first (the
+owner's built-in verbs — a collector's ``report``, a profile server's
+``start``), then the global ``verb`` plugin registry
+(``repro.profiler.register_verb``) — so a third-party message kind
+gains behavior on every endpoint in the process with one registration
+and zero changes to ``repro.link`` internals.
+
+Handler contract (also documented on ``register_verb``):
+
+    handler(endpoint, message) -> Message | str | None
+
+``endpoint.context`` carries the owning object (the FleetCollector,
+the ProfileServer) so handlers can reach domain state.  A returned
+``Message`` is encoded as the reply line; a ``str`` passes through
+verbatim (legacy ``"ok"`` acks); ``None`` means no reply.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+from repro.link.messages import Message, decode
+
+
+class Endpoint:
+    def __init__(self, context=None,
+                 handlers: Optional[Dict[str, Callable]] = None,
+                 default: Optional[Callable] = None,
+                 use_registry: bool = True):
+        self.context = context
+        self._handlers: Dict[str, Callable] = dict(handlers or {})
+        self._default = default
+        self._use_registry = use_registry
+
+    # ------------------------------------------------------- registration
+    def register(self, kind: str, handler: Callable) -> Callable:
+        self._handlers[kind] = handler
+        return handler
+
+    def on(self, kind: str):
+        """Decorator form: ``@endpoint.on("report")``."""
+        return lambda fn: self.register(kind, fn)
+
+    def resolve(self, kind: str) -> Optional[Callable]:
+        """The handler for ``kind``: endpoint-local first, then the
+        global verb registry, then the endpoint's default (or None)."""
+        handler = self._handlers.get(kind)
+        if handler is not None:
+            return handler
+        if self._use_registry:
+            # Lazy import: repro.link stays importable on its own.
+            from repro.profiler.registry import get_registry
+            reg = get_registry("verb")
+            if kind in reg:
+                return reg.get(kind)
+        return self._default
+
+    # ----------------------------------------------------------- dispatch
+    def dispatch(self, msg: Message):
+        """Route one decoded message; returns the handler's raw result
+        (Message | str | None).  Unhandled kinds fall to the default
+        handler, or return an ``error`` Message naming the kind."""
+        handler = self.resolve(msg.kind)
+        if handler is None:
+            return msg.reply("error",
+                             {"error": f"no handler for kind {msg.kind!r}"})
+        return handler(self, msg)
+
+    def dispatch_line(self, line: str) -> Optional[str]:
+        """Decode one wire line, dispatch, encode the reply.
+
+        Raises ``WireError`` on a malformed line (server layers catch
+        it and answer with an error line — see ``LineServer``)."""
+        result = self.dispatch(decode(line))
+        if result is None:
+            return None
+        if isinstance(result, Message):
+            return result.encode()
+        return result

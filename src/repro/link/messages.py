@@ -1,0 +1,160 @@
+"""Typed messages and the versioned line codec — the one wire format.
+
+Every wire in the profiler (ProfileServer control, fleet collection,
+spool captures) carries the same unit: a ``Message`` — ``kind`` (a
+string verb), ``rank`` (producer provenance), ``payload`` (a JSON
+object), and ``v`` (the protocol version).  One message per line, JSON
+encoded, so a transport only has to move newline-terminated text and a
+payload dump on disk IS a replayable collection.
+
+Versioning is two-layered:
+
+  * every line carries ``v``; ``decode`` raises a loud ``WireError``
+    when a line declares a version newer than this process supports
+    (a newer producer against an older consumer must fail, not
+    mis-aggregate);
+  * connection setup negotiates in ``hello``: the client's hello
+    payload carries ``link_v``, the server's hello reply echoes its own
+    ``link_v``, and either side raises ``WireError`` on an
+    incompatible peer (``check_hello``).
+
+Kinds are an open set: the built-ins below plus anything registered
+through ``repro.profiler.register_verb`` — the codec consults the verb
+registry, so a third-party message kind round-trips without modifying
+this module.
+
+Codec errors name the offending field and quote a truncated snippet of
+the offending line: a bad byte in a 10k-line spool file is findable
+from the exception alone.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Optional
+
+LINK_VERSION = 1
+
+# Built-in message kinds.  Fleet collection: hello/clock/clock_reply/
+# report/findings/bye.  ProfileServer control: start/stop/status (+
+# report/findings/clock shared with fleet).  Generic replies: ok/error.
+KINDS = ("hello", "clock", "clock_reply", "report", "findings", "bye",
+         "start", "stop", "status", "ok", "error")
+
+_SNIPPET_LEN = 120
+
+
+class WireError(ValueError):
+    """Malformed or version-incompatible wire line."""
+
+
+@dataclass(frozen=True)
+class Message:
+    """One typed wire message.  ``kind`` is the verb, ``rank`` the
+    producing rank (0 for rankless control traffic), ``payload`` an
+    arbitrary JSON object, ``v`` the protocol version stamped by the
+    codec."""
+    kind: str
+    rank: int = 0
+    payload: dict = field(default_factory=dict)
+    v: int = LINK_VERSION
+
+    def encode(self) -> str:
+        return encode(self.kind, self.rank, self.payload, v=self.v)
+
+    def reply(self, kind: str, payload: Optional[dict] = None) -> "Message":
+        """A reply message carrying this message's rank provenance."""
+        return Message(kind, self.rank, payload or {})
+
+
+def _snippet(line: str) -> str:
+    if len(line) <= _SNIPPET_LEN:
+        return line
+    return line[:_SNIPPET_LEN - 3] + "..."
+
+
+def known_kind(kind: str) -> bool:
+    """True for built-in kinds and ``register_verb``-registered ones."""
+    if kind in KINDS:
+        return True
+    # Lazy: repro.link must stay importable without repro.profiler (and
+    # the registry import would otherwise be a package cycle).
+    from repro.profiler.registry import get_registry
+    return kind in get_registry("verb")
+
+
+def encode(kind: str, rank: int = 0, payload: Optional[dict] = None,
+           v: int = LINK_VERSION) -> str:
+    """One wire line (no trailing newline)."""
+    if not known_kind(kind):
+        raise WireError(
+            f"unknown kind: {kind!r} (register it with "
+            "repro.profiler.register_verb to extend the wire)")
+    return json.dumps({"v": v, "kind": kind, "rank": rank,
+                       "payload": payload if payload is not None else {}},
+                      separators=(",", ":"))
+
+
+def encode_message(msg: Message) -> str:
+    return msg.encode()
+
+
+def decode(line: str) -> Message:
+    """Parse one wire line into a ``Message``.
+
+    Raises ``WireError`` naming the offending field and quoting a
+    truncated snippet of the line on any malformation: non-JSON input,
+    a non-object line, a missing/unknown ``kind``, an unsupported
+    ``v``, a bad ``rank``, or a non-object ``payload``."""
+    try:
+        obj = json.loads(line)
+    except json.JSONDecodeError as e:
+        raise WireError(
+            f"bad wire line (not JSON: {e}) in {_snippet(line)!r}") from e
+    if not isinstance(obj, dict):
+        raise WireError(
+            f"wire line is not a message object in {_snippet(line)!r}")
+    if "kind" not in obj:
+        raise WireError(
+            f"missing field 'kind' in {_snippet(line)!r}")
+    v = obj.get("v")
+    if not isinstance(v, int) or v < 1:
+        raise WireError(
+            f"bad field 'v': {v!r} in {_snippet(line)!r}")
+    if v > LINK_VERSION:
+        raise WireError(
+            f"unsupported wire version in field 'v': peer speaks v{v}, "
+            f"this process supports <= v{LINK_VERSION} "
+            f"in {_snippet(line)!r}")
+    kind = obj["kind"]
+    if not isinstance(kind, str) or not known_kind(kind):
+        raise WireError(
+            f"unknown kind in field 'kind': {kind!r} in {_snippet(line)!r}")
+    rank = obj.get("rank")
+    if not isinstance(rank, int) or isinstance(rank, bool) or rank < 0:
+        raise WireError(
+            f"bad field 'rank': {rank!r} in {_snippet(line)!r}")
+    payload = obj.get("payload")
+    if not isinstance(payload, dict):
+        raise WireError(
+            f"bad field 'payload': must be an object, got "
+            f"{type(payload).__name__} in {_snippet(line)!r}")
+    return Message(kind=kind, rank=rank, payload=payload, v=v)
+
+
+def check_hello(payload: dict, side: str = "peer") -> int:
+    """Version negotiation over a ``hello`` payload.
+
+    The payload's ``link_v`` declares what the peer speaks (absent
+    means v1 — pre-negotiation producers).  Returns the agreed version
+    (the minimum of both sides); raises ``WireError`` when the peer
+    requires a newer protocol than this process supports."""
+    v = payload.get("link_v", 1)
+    if not isinstance(v, int) or isinstance(v, bool) or v < 1:
+        raise WireError(f"bad field 'link_v' in {side} hello: {v!r}")
+    min_v = payload.get("link_min_v", 1)
+    if isinstance(min_v, int) and min_v > LINK_VERSION:
+        raise WireError(
+            f"{side} requires link protocol >= v{min_v}; this process "
+            f"supports <= v{LINK_VERSION}")
+    return min(v, LINK_VERSION)

@@ -1,0 +1,136 @@
+"""LineServer: the one threaded TCP front end every wire shares.
+
+``ProfileServer`` (interactive control) and ``CollectorServer`` (fleet
+aggregation) used to hand-roll the same socket plumbing twice — bind +
+SO_REUSEADDR, an accept loop, one thread per connection reading
+buffered lines, and a close() that must join handler threads so a
+successor server on the same port never races a lingering handler.
+``LineServer`` is that plumbing once: it owns sockets and threads, and
+delegates every decoded line to a ``handler(line) -> reply | None``
+callable (typically ``Endpoint.dispatch_line`` or
+``FleetCollector.ingest_line``).
+
+A handler exception is answered with an ``error: ...`` line (and
+reported through ``on_error``) instead of killing the connection —
+a malformed message from one client must not take down the server.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+from typing import Callable, Optional
+
+from repro.link.transport import recv_lines
+
+
+class LineServer:
+    def __init__(self, handler: Callable[[str], Optional[str]],
+                 port: int = 0, host: str = "127.0.0.1",
+                 backlog: int = 16, idle_timeout_s: float = 2.0,
+                 on_error: Optional[Callable[[Exception], None]] = None):
+        self.handler = handler
+        self.idle_timeout_s = idle_timeout_s
+        self.on_error = on_error
+        self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        # SO_REUSEADDR + joining handler threads in close(): back-to-back
+        # servers in one process can re-bind the port immediately instead
+        # of racing lingering TIME_WAIT sockets / still-open connections.
+        self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._srv.bind((host, port))
+        self._srv.listen(backlog)
+        self.port = self._srv.getsockname()[1]
+        self._stop = threading.Event()
+        self._conn_lock = threading.Lock()
+        self._conn_threads: list = []
+        self._conns: set = set()
+        self._thread = threading.Thread(target=self._serve, daemon=True)
+        self._thread.start()
+
+    def _serve(self) -> None:
+        self._srv.settimeout(0.2)
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._srv.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                # fd exhaustion or a closing socket raises immediately:
+                # back off instead of spinning hot on retry
+                self._stop.wait(0.05)
+                continue
+            # connections are long-lived (pipelined commands, a
+            # collector-bound reporter streaming findings): one thread
+            # each, so a persistent client can't starve the others
+            t = threading.Thread(target=self._handle, args=(conn,),
+                                 daemon=True)
+            with self._conn_lock:
+                self._conn_threads.append(t)
+                self._conns.add(conn)
+            t.start()
+
+    def _handle(self, conn: socket.socket) -> None:
+        try:
+            with conn:
+                try:
+                    for line in recv_lines(conn, self.idle_timeout_s):
+                        if self._stop.is_set():
+                            break
+                        try:
+                            reply = self.handler(line)
+                        except Exception as e:  # noqa: BLE001 — answered
+                            if self.on_error is not None:
+                                try:
+                                    self.on_error(e)
+                                except Exception:
+                                    pass
+                            reply = f"error: {e}"
+                        if reply is not None:
+                            conn.sendall(reply.encode() + b"\n")
+                except (ValueError, OSError):
+                    pass
+        finally:
+            with self._conn_lock:
+                self._conns.discard(conn)
+                # prune finished handlers so a reconnect-per-probe
+                # client can't grow the list for the server's lifetime;
+                # keep not-yet-started threads (ident None — registered
+                # by _serve but start() hasn't run), else close() could
+                # miss joining a live handler
+                me = threading.current_thread()
+                self._conn_threads = [
+                    t for t in self._conn_threads
+                    if t is not me and (t.ident is None or t.is_alive())]
+
+    def close(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=2)
+        self._srv.close()
+        # Wake handler threads blocked in recv (their clients may hold
+        # connections open for seconds), then JOIN them: a handler still
+        # running after close() would keep mutating the owner's state
+        # while a successor server on the same port serves new clients.
+        with self._conn_lock:
+            conns = list(self._conns)
+            threads = list(self._conn_threads)
+        for conn in conns:
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                conn.close()
+            except OSError:
+                pass
+        for t in threads:
+            try:
+                t.join(timeout=2)
+            except RuntimeError:
+                # registered by _serve but start() hadn't run yet
+                pass
+
+    def __enter__(self) -> "LineServer":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

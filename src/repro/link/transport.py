@@ -1,0 +1,316 @@
+"""Transports: how one wire line reaches the other side.
+
+A ``Transport`` moves newline-terminated wire lines and (when the
+medium supports replies) returns the peer's reply line.  Three
+implementations cover every deployment shape in the profiler:
+
+  * ``LoopbackTransport`` — synchronous dispatch into an in-process
+    ``Endpoint`` (or any ``line -> reply`` callable).  What the
+    simulated fleet uses; zero copies, zero sockets.
+  * ``TcpTransport``     — line-framed request/response over one TCP
+    connection (subsumes the old ``SocketTransport`` + ``recv_lines``
+    client plumbing).
+  * ``SpoolTransport``   — append-only files in a shared directory; no
+    network at all.  One file per writer, so ranks never interleave;
+    a ``SpoolReader`` tails the directory incrementally and a finished
+    spool dir doubles as a replayable capture
+    (``FleetCollector.ingest_spool`` / ``ingest_line`` per line).
+
+``duplex`` tells callers whether replies exist: a spool cannot answer,
+so request/response exchanges (clock handshakes) are skipped over it.
+
+Every transport is also callable (``transport(line)``), preserving the
+legacy ``Transport = Callable[[str], Optional[str]]`` protocol the
+fleet reporter was first written against; ``as_transport`` wraps a bare
+callable the other way.
+"""
+from __future__ import annotations
+
+import abc
+import os
+import socket
+import threading
+from typing import Callable, Dict, Iterator, List, Optional
+
+from repro.link.messages import Message, decode
+
+MAX_LINE_BYTES = 1 << 24     # one rank's serialized report fits comfortably
+
+
+def recv_lines(conn: socket.socket, idle_timeout: float = 2.0):
+    """Yield newline-terminated commands from a socket, buffered.
+
+    One ``recv`` is NOT one command: multi-command clients pipeline
+    several lines per connection and fleet ``report`` payloads exceed a
+    single segment, so we accumulate until ``\\n``.  A final
+    unterminated chunk before EOF is yielded too — legacy single-shot
+    clients that omit the newline keep working."""
+    conn.settimeout(idle_timeout)
+    buf = b""
+    while True:
+        nl = buf.find(b"\n")
+        if nl >= 0:
+            line, buf = buf[:nl], buf[nl + 1:]
+            yield line.decode()
+            continue
+        try:
+            chunk = conn.recv(65536)
+        except socket.timeout:
+            # an idle client that sent a newline-less command and kept
+            # the connection open still deserves its reply
+            if buf:
+                yield buf.decode()
+                buf = b""
+                continue
+            return
+        except OSError:
+            return
+        if not chunk:
+            if buf:
+                yield buf.decode()
+            return
+        buf += chunk
+        if len(buf) > MAX_LINE_BYTES:
+            raise ValueError("protocol line exceeds MAX_LINE_BYTES")
+
+
+def recv_reply(sock: socket.socket) -> str:
+    """Client side: read one newline-terminated reply (or until EOF)."""
+    buf = b""
+    while b"\n" not in buf:
+        chunk = sock.recv(65536)
+        if not chunk:
+            break
+        buf += chunk
+        if len(buf) > MAX_LINE_BYTES:
+            raise ValueError("reply exceeds MAX_LINE_BYTES")
+    return buf.split(b"\n", 1)[0].decode().strip()
+
+
+class Transport(abc.ABC):
+    """One line out, optionally one reply line back."""
+
+    #: whether the medium carries replies (request/response exchanges —
+    #: e.g. the clock handshake — are only possible when True)
+    duplex: bool = True
+
+    @abc.abstractmethod
+    def send_line(self, line: str) -> Optional[str]:
+        """Ship one wire line; return the peer's reply line (duplex
+        transports) or None."""
+
+    def request(self, msg: Message) -> Optional[Message]:
+        """Typed convenience: encode, send, decode the reply."""
+        reply = self.send_line(msg.encode())
+        if reply is None or not reply.startswith("{"):
+            return None
+        return decode(reply)
+
+    def close(self) -> None:
+        pass
+
+    # Legacy protocol: a transport used to be a bare callable.
+    def __call__(self, line: str) -> Optional[str]:
+        return self.send_line(line)
+
+    def __enter__(self) -> "Transport":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+class CallableTransport(Transport):
+    """Wraps a legacy ``line -> reply`` callable as a Transport."""
+
+    def __init__(self, fn: Callable[[str], Optional[str]],
+                 duplex: bool = True):
+        self._fn = fn
+        self.duplex = duplex
+
+    def send_line(self, line: str) -> Optional[str]:
+        return self._fn(line)
+
+
+def as_transport(obj) -> Transport:
+    """Coerce a Transport or a legacy callable into a Transport."""
+    if isinstance(obj, Transport):
+        return obj
+    if callable(obj):
+        return CallableTransport(obj)
+    raise TypeError(f"not a transport: {obj!r}")
+
+
+class LoopbackTransport(Transport):
+    """In-process dispatch: the 'wire' is a function call.
+
+    ``target`` is an ``Endpoint`` (dispatch_line is used) or any
+    ``line -> reply`` callable, e.g. ``FleetCollector.ingest_line`` —
+    the simulated fleet's path, so the in-proc and networked paths
+    share every byte of codec and aggregation code."""
+
+    def __init__(self, target):
+        dispatch = getattr(target, "dispatch_line", None)
+        self._dispatch = dispatch if dispatch is not None else target
+        if not callable(self._dispatch):
+            raise TypeError(f"loopback target is not dispatchable: "
+                            f"{target!r}")
+
+    def send_line(self, line: str) -> Optional[str]:
+        return self._dispatch(line)
+
+
+class TcpTransport(Transport):
+    """Line-framed request/response over one TCP connection.
+
+    Subsumes the old ``repro.fleet.SocketTransport``: same wire bytes,
+    same one-connection pipelining, plus a lock so a streaming thread
+    and the shipping path can share one connection without interleaving
+    request/response pairs.
+
+    The connection is lazy and self-healing: servers reap connections
+    idle past their ``idle_timeout_s`` (a profiled workload routinely
+    outlives it), so an exchange that fails on a REUSED socket — the
+    reap signature — reconnects once and resends; a fresh connection's
+    failure is raised as-is (the server is genuinely unreachable, and
+    retrying there would double-deliver on ambiguous failures).
+
+    The retry makes delivery at-least-once on reused connections: in
+    the narrow race where the peer processed the line but died before
+    its reply arrived, the line is delivered twice.  The fleet verbs
+    tolerate that (hello/clock/report overwrite; a duplicated
+    ``findings`` push is superseded by the rank's final report); do not
+    route non-idempotent exchanges (e.g. a ProfileServer ``stop``)
+    through a connection you have let go idle past the server's
+    timeout."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 timeout: float = 5.0):
+        self.host, self.port = host, port
+        self.timeout = timeout
+        self._sock: Optional[socket.socket] = None
+        self._lock = threading.Lock()
+
+    def _connect(self) -> socket.socket:
+        self._sock = socket.create_connection((self.host, self.port),
+                                              timeout=self.timeout)
+        return self._sock
+
+    def _drop(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    def _exchange(self, data: bytes) -> str:
+        sock = self._sock if self._sock is not None else self._connect()
+        sock.sendall(data)
+        # recv_reply returns "" on EOF: the peer closed between our
+        # send and its reply — surface it as a connection error so the
+        # retry path (or the caller) sees the truth, not an empty ack.
+        reply = recv_reply(sock)
+        if reply == "":
+            raise ConnectionResetError("peer closed the connection")
+        return reply
+
+    def send_line(self, line: str) -> Optional[str]:
+        data = line.encode() + b"\n"
+        with self._lock:
+            reused = self._sock is not None
+            try:
+                return self._exchange(data)
+            except OSError:
+                self._drop()
+                if not reused:
+                    raise       # a fresh connection failing is real
+                # a reused socket failing is ~always the server's idle
+                # reap while we were quiet: one clean retry, fresh conn
+                return self._exchange(data)
+
+    def close(self) -> None:
+        with self._lock:
+            self._drop()
+
+
+class SpoolTransport(Transport):
+    """Append-only wire lines in a shared directory — fleets with no
+    network path at all (a job-shared filesystem is enough).
+
+    Each writer appends to its own ``<name>.jsonl`` file (no cross-
+    process interleaving); lines are flushed as written so a
+    ``SpoolReader`` can tail mid-run.  One-way: ``duplex`` is False and
+    ``send_line`` returns None, so callers skip request/response
+    exchanges (the clock handshake) over it."""
+
+    duplex = False
+
+    def __init__(self, directory: str, name: Optional[str] = None):
+        os.makedirs(directory, exist_ok=True)
+        self.directory = directory
+        self.name = name if name is not None else f"pid{os.getpid()}"
+        self.path = os.path.join(directory, f"{self.name}.jsonl")
+        self._f = open(self.path, "a", encoding="utf-8")
+        self._lock = threading.Lock()
+
+    def send_line(self, line: str) -> Optional[str]:
+        with self._lock:
+            self._f.write(line + "\n")
+            self._f.flush()
+        return None
+
+    def close(self) -> None:
+        with self._lock:
+            try:
+                self._f.close()
+            except OSError:
+                pass
+
+
+class SpoolReader:
+    """Incremental reader over a spool directory.
+
+    ``poll()`` returns every complete new line since the previous poll
+    (per-file offsets are tracked, a trailing partial line is left for
+    the next round), so a collector can tail a live spool; one final
+    ``poll()`` after the writers exit drains the remainder.  ``lines``
+    iterates a finished spool from the top — the replay path."""
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        self._offsets: Dict[str, int] = {}
+
+    def _files(self) -> List[str]:
+        try:
+            names = os.listdir(self.directory)
+        except FileNotFoundError:
+            return []
+        return sorted(os.path.join(self.directory, n)
+                      for n in names if n.endswith(".jsonl"))
+
+    def poll(self) -> List[str]:
+        out: List[str] = []
+        for path in self._files():
+            pos = self._offsets.get(path, 0)
+            try:
+                with open(path, "rb") as f:
+                    f.seek(pos)
+                    chunk = f.read()
+            except OSError:
+                continue
+            if not chunk:
+                continue
+            complete, sep, _rest = chunk.rpartition(b"\n")
+            if not sep:
+                continue             # no complete line yet
+            self._offsets[path] = pos + len(complete) + 1
+            out.extend(complete.decode("utf-8").split("\n"))
+        return out
+
+    @staticmethod
+    def lines(directory: str) -> Iterator[str]:
+        """Every complete line of a finished spool, file order."""
+        for line in SpoolReader(directory).poll():
+            yield line

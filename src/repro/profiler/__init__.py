@@ -25,7 +25,7 @@ from repro.profiler.registry import (PluginRegistry, RegistryError,
                                      available, create, get_registry,
                                      register_advisor, register_detector,
                                      register_exporter,
-                                     register_fleet_detector)
+                                     register_fleet_detector, register_verb)
 from repro.profiler.report import Report
 
 __all__ = [
@@ -34,5 +34,5 @@ __all__ = [
     "BUILTIN_EXPORTERS", "BUILTIN_FLEET_DETECTORS", "PluginRegistry",
     "RegistryError", "available", "create", "register_advisor",
     "get_registry", "register_detector", "register_exporter",
-    "register_fleet_detector", "Report",
+    "register_fleet_detector", "register_verb", "Report",
 ]

@@ -15,6 +15,11 @@ collection path returns the same unified ``Report``.
 
     fleet = Profiler(ProfilerOptions(mode="fleet", nranks=4))
     report = fleet.run(lambda rank, io: io.read_file(shards[rank]))
+
+    # the same workload on 4 REAL OS processes over TCP (or "spool"):
+    fleet = Profiler(ProfilerOptions(mode="fleet", launch="spawn",
+                                     fleet_ranks=4))
+    report = fleet.run(workload)
 """
 from __future__ import annotations
 
@@ -172,7 +177,8 @@ class Profiler:
         from repro.core.session import ProfileServer
         return ProfileServer(port=self.options.server_port or 0,
                              runtime=self._runtime,
-                             insight=self._make_engine() or False)
+                             insight=self._make_engine() or False,
+                             idle_timeout_s=self.options.idle_timeout_s)
 
     # --------------------------------------------------------------- run
     def run(self, workload: Callable, *args,
@@ -181,9 +187,12 @@ class Profiler:
 
         local mode: ``workload(*args, **kwargs)`` runs inside a session
         window.  fleet mode: ``workload(rank, io)`` runs on
-        ``options.nranks`` simulated ranks (``collector`` overrides the
+        ``options.nranks`` ranks — in-process threads by default, real
+        OS processes with ``launch="spawn"`` (the façade owns the
+        CollectorServer / spool lifecycle; ``transport`` picks the wire
+        — loopback, tcp, or spool).  ``collector`` overrides the
         aggregation endpoint, ``throttles[rank]`` throttles one rank's
-        I/O — see repro.fleet.harness)."""
+        I/O — see repro.fleet.harness."""
         if self.options.mode == "local":
             if collector is not None or throttles is not None:
                 raise RuntimeError("collector/throttles are fleet-mode "
@@ -197,27 +206,104 @@ class Profiler:
         return self._run_fleet(workload, collector=collector,
                                throttles=throttles)
 
-    def _run_fleet(self, workload, collector=None, throttles=None) -> Report:
+    def _make_collector(self, collector):
         from repro.fleet.collector import FleetCollector
-        from repro.fleet.harness import simulate_fleet
         opts = self.options
         if collector is None:
             detectors = [_registry.create("fleet_detector", name, opts)
                          for name in self._fleet_detector_names()]
-            collector = FleetCollector(detectors=detectors)
-        elif opts.fleet_detectors is not None:
+            return FleetCollector(detectors=detectors)
+        if opts.fleet_detectors is not None:
             raise RuntimeError(
                 "pass fleet_detectors in ProfilerOptions OR a "
                 "pre-configured collector, not both: the collector "
                 "already owns its detector set")
+        return collector
+
+    def _run_fleet(self, workload, collector=None, throttles=None) -> Report:
+        opts = self.options
+        collector = self._make_collector(collector)
+        if opts.launch == "spawn":
+            fleet = self._run_fleet_spawn(workload, collector, throttles)
+        else:
+            fleet = self._run_fleet_threads(workload, collector, throttles)
+        report = self._wrap(fleet)
+        self._reports.append(report)
+        return report
+
+    def _run_fleet_threads(self, workload, collector, throttles):
+        """In-process simulated ranks over the selected transport
+        (loopback by default; tcp/spool exercise the real wires from
+        threads — the façade owns the server / spool drain)."""
+        from repro.fleet.harness import simulate_fleet
+        opts = self.options
         make_insight = (self._make_engine if opts.insight else None)
-        fleet = simulate_fleet(
-            opts.nranks, workload, collector,
+        kwargs = dict(
             clock_skew_s=opts.clock_skew_s, throttles=throttles,
             handshake_rounds=opts.handshake_rounds,
             make_insight=make_insight,
             insight_interval_s=opts.insight_interval_s,
             trace=opts.trace)
-        report = self._wrap(fleet)
-        self._reports.append(report)
-        return report
+        transport = opts.resolved_transport()
+        if transport == "loopback":
+            return simulate_fleet(opts.nranks, workload, collector,
+                                  **kwargs)
+        if transport == "tcp":
+            from repro.fleet.collector import CollectorServer
+            from repro.link import TcpTransport
+            server = CollectorServer(collector,
+                                     idle_timeout_s=opts.idle_timeout_s)
+            try:
+                simulate_fleet(
+                    opts.nranks, workload, collector, collect=False,
+                    make_transport=lambda r: TcpTransport("127.0.0.1",
+                                                          server.port),
+                    **kwargs)
+            finally:
+                server.close()
+            return collector.report()
+        # spool: ranks append to a shared dir, the façade drains it
+        import shutil
+        import tempfile
+        from repro.link import SpoolTransport
+        spool = opts.spool_dir or tempfile.mkdtemp(prefix="fleet_spool_")
+        try:
+            simulate_fleet(
+                opts.nranks, workload, collector, collect=False,
+                make_transport=lambda r: SpoolTransport(
+                    spool, name=f"rank{r:05d}"),
+                **kwargs)
+            collector.ingest_spool(spool)
+        finally:
+            if opts.spool_dir is None:
+                shutil.rmtree(spool, ignore_errors=True)
+        return collector.report()
+
+    def _run_fleet_spawn(self, workload, collector, throttles):
+        """Real OS processes: the façade owns the CollectorServer (tcp)
+        or the spool directory, and the launcher streams mid-run
+        findings pushes from child ranks into ``collector``."""
+        from repro.fleet.launch import run_spawned_fleet
+        opts = self.options
+        insight_spec = (self._detector_names() if opts.insight else False)
+        kwargs = dict(
+            clock_skew_s=opts.clock_skew_s, throttles=throttles,
+            handshake_rounds=opts.handshake_rounds,
+            insight=insight_spec, fast_tier_mb_s=opts.fast_tier_mb_s,
+            insight_interval_s=opts.insight_interval_s, trace=opts.trace,
+            idle_timeout_s=opts.idle_timeout_s,
+            mp_start_method=opts.mp_start_method,
+            timeout_s=opts.fleet_timeout_s)
+        if opts.resolved_transport() == "tcp":
+            from repro.fleet.collector import CollectorServer
+            server = CollectorServer(collector,
+                                     idle_timeout_s=opts.idle_timeout_s)
+            try:
+                return run_spawned_fleet(
+                    opts.nranks, workload, collector, transport="tcp",
+                    server=server, **kwargs)
+            finally:
+                server.close()
+        return run_spawned_fleet(
+            opts.nranks, workload, collector, transport="spool",
+            spool_dir=opts.spool_dir, **kwargs)

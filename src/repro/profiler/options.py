@@ -5,8 +5,11 @@ One dataclass replaces the constructor dance previously spread over
 ``ProfileSession``, ``InsightEngine``, ``RankReporter``/``FleetCollector``,
 ``ProfileServer``, and the exporters: mode, insight on/off with detector
 selection, exporter set, advisor set, server port, step window, fleet
-shape.  Plugins are referred to by registry name so options stay plain
-data (serializable, diffable, loggable).
+shape — plus the wire: how ranks run (``launch`` thread|spawn), how
+payloads travel (``transport`` loopback|tcp|spool, ``spool_dir``), and
+the server idle timeout (``idle_timeout_s``).  Plugins are referred to
+by registry name so options stay plain data (serializable, diffable,
+loggable).
 """
 from __future__ import annotations
 
@@ -14,6 +17,8 @@ from dataclasses import dataclass, field, fields, replace
 from typing import Optional, Sequence, Tuple
 
 MODES = ("local", "fleet")
+LAUNCHES = ("thread", "spawn")
+TRANSPORTS = ("loopback", "tcp", "spool")
 
 DEFAULT_EXPORTERS = ("chrome_trace", "json_report", "darshan_log")
 
@@ -40,11 +45,47 @@ class ProfilerOptions:
     server_port: Optional[int] = None   # interactive ProfileServer port
     step_window: Optional[Tuple[int, int]] = None   # [first, last] steps
     step_every: Optional[int] = None
+    # --------------------------------------------------------- wire/link
+    # recv idle timeout for every server this profiler owns
+    # (ProfileServer via serve(), CollectorServer in fleet mode)
+    idle_timeout_s: float = 2.0
     # ------------------------------------------------------------ fleet
     nranks: int = 1
+    fleet_ranks: Optional[int] = None     # spawn-era alias for nranks
     fleet_detectors: Optional[Sequence[str]] = None   # None => built-ins
     clock_skew_s: Optional[Sequence[float]] = field(default=None)
     handshake_rounds: int = 3
+    # how ranks run: "thread" (in-process simulation) or "spawn"
+    # (real OS processes via multiprocessing)
+    launch: str = "thread"
+    # how rank payloads travel: None = auto (thread -> loopback,
+    # spawn -> tcp; a set spool_dir implies "spool")
+    transport: Optional[str] = None
+    spool_dir: Optional[str] = None
+    # multiprocessing start method for launch="spawn"; None = platform
+    # default ("fork" on Linux — closures work as workloads)
+    mp_start_method: Optional[str] = None
+    fleet_timeout_s: float = 120.0        # spawn: per-run watchdog
+
+    def __post_init__(self):
+        # fleet_ranks is the public alias the spawn path documents;
+        # normalize onto nranks so everything downstream reads one field.
+        if self.fleet_ranks is not None:
+            if self.nranks not in (1, self.fleet_ranks):
+                raise ProfilerOptionsError(
+                    f"fleet_ranks={self.fleet_ranks} conflicts with "
+                    f"nranks={self.nranks}; set one")
+            object.__setattr__(self, "nranks", self.fleet_ranks)
+
+    def resolved_transport(self) -> str:
+        """The effective fleet transport: the explicit choice, else
+        "spool" when a spool_dir is set, else loopback for threads and
+        tcp for spawned processes."""
+        if self.transport is not None:
+            return self.transport
+        if self.spool_dir is not None:
+            return "spool"
+        return "tcp" if self.launch == "spawn" else "loopback"
 
     # ------------------------------------------------------- validation
     def validate(self) -> "ProfilerOptions":
@@ -95,6 +136,34 @@ class ProfilerOptions:
             raise ProfilerOptionsError(
                 f"server_port must be in [0, 65535], got "
                 f"{self.server_port}")
+        if self.idle_timeout_s <= 0:
+            raise ProfilerOptionsError(
+                f"idle_timeout_s must be > 0, got {self.idle_timeout_s}")
+        if self.launch not in LAUNCHES:
+            raise ProfilerOptionsError(
+                f"launch must be one of {LAUNCHES}, got {self.launch!r}")
+        if self.transport is not None and self.transport not in TRANSPORTS:
+            raise ProfilerOptionsError(
+                f"transport must be one of {TRANSPORTS}, got "
+                f"{self.transport!r}")
+        if self.launch == "spawn" and self.transport == "loopback":
+            raise ProfilerOptionsError(
+                "launch='spawn' cannot use the loopback transport: "
+                "loopback does not cross process boundaries (use 'tcp' "
+                "or 'spool')")
+        if self.spool_dir is not None \
+                and self.resolved_transport() != "spool":
+            raise ProfilerOptionsError(
+                f"spool_dir is set but transport="
+                f"{self.resolved_transport()!r}; drop one")
+        if self.mp_start_method not in (None, "fork", "spawn",
+                                        "forkserver"):
+            raise ProfilerOptionsError(
+                f"mp_start_method must be None, 'fork', 'spawn', or "
+                f"'forkserver', got {self.mp_start_method!r}")
+        if self.fleet_timeout_s <= 0:
+            raise ProfilerOptionsError(
+                f"fleet_timeout_s must be > 0, got {self.fleet_timeout_s}")
         if self.mode == "fleet":
             if self.nranks < 1:
                 raise ProfilerOptionsError(
@@ -113,11 +182,16 @@ class ProfilerOptions:
                     "step_window/server_port are local-mode options; "
                     "fleet mode profiles each rank's whole window")
         else:
-            for fleet_only in ("fleet_detectors", "clock_skew_s"):
+            for fleet_only in ("fleet_detectors", "clock_skew_s",
+                               "fleet_ranks", "transport", "spool_dir",
+                               "mp_start_method"):
                 if getattr(self, fleet_only) is not None:
                     raise ProfilerOptionsError(
                         f"{fleet_only} is a fleet-mode option but "
                         "mode='local'")
+            if self.launch != "thread":
+                raise ProfilerOptionsError(
+                    f"launch={self.launch!r} requires mode='fleet'")
             if self.nranks != 1:
                 raise ProfilerOptionsError(
                     f"nranks={self.nranks} requires mode='fleet'")

@@ -21,6 +21,14 @@ Factory protocols by kind (every factory receives the active
   * ``exporter``        — ``factory(options) -> fn(report, path=None)``
                           where ``report`` is the unified ``Report``
   * ``advisor``         — ``factory(options) -> obj with advise(report)``
+  * ``verb``            — NOT a factory: the registered object IS the
+                          wire-message handler,
+                          ``handler(endpoint, message) -> Message | str
+                          | None`` (see repro.link).  Registering a
+                          verb both extends the codec's accepted
+                          message kinds and gives every Endpoint a
+                          handler for them; fetch with
+                          ``registry.get(name)``, never ``create``.
 
 Built-ins self-register on first registry use (``_ensure_builtins``), so
 ``available("detector")`` always includes them without import-order
@@ -31,7 +39,7 @@ from __future__ import annotations
 import threading
 from typing import Callable, Dict, List, Optional
 
-KINDS = ("detector", "fleet_detector", "exporter", "advisor")
+KINDS = ("detector", "fleet_detector", "exporter", "advisor", "verb")
 
 
 class RegistryError(ValueError):
@@ -68,14 +76,18 @@ class PluginRegistry:
                 raise RegistryError(f"unknown {self.kind}: {name!r}")
             del self._factories[name]
 
-    def create(self, name: str, options=None):
+    def get(self, name: str) -> Callable:
+        """The registered callable itself, uninvoked — the accessor for
+        kinds whose entries are not factories (``verb`` handlers)."""
         try:
-            factory = self._factories[name]
+            return self._factories[name]
         except KeyError:
             raise RegistryError(
                 f"unknown {self.kind}: {name!r} (available: "
                 f"{', '.join(self.names()) or 'none'})") from None
-        return factory(options)
+
+    def create(self, name: str, options=None):
+        return self.get(name)(options)
 
     def names(self) -> List[str]:
         return sorted(self._factories)
@@ -135,6 +147,25 @@ def register_exporter(name: str, factory: Optional[Callable] = None,
 def register_advisor(name: str, factory: Optional[Callable] = None,
                      override: bool = False):
     return _register("advisor", name, factory, override)
+
+
+def register_verb(kind: str, handler: Optional[Callable] = None,
+                  override: bool = False):
+    """Register a wire-message kind + its handler (repro.link).
+
+    Unlike the factory kinds, the registered object IS the handler:
+    ``handler(endpoint, message) -> Message | str | None``.  One call
+    makes the kind encodable/decodable by the codec AND handled by
+    every ``Endpoint`` in the process — a third-party wire extension
+    is a one-function drop-in, exactly like a detector.  Built-in
+    kinds (``repro.link.KINDS``) cannot be re-registered here;
+    endpoints override those locally."""
+    from repro.link.messages import KINDS as _BUILTIN_KINDS
+    if kind in _BUILTIN_KINDS:
+        raise RegistryError(
+            f"{kind!r} is a built-in wire kind; register an "
+            "endpoint-local handler to override it")
+    return _register("verb", kind, handler, override)
 
 
 def _ensure_builtins() -> None:

@@ -102,6 +102,47 @@ def test_size_bin_total_and_monotone(n):
         assert C.size_bin(n - 1) <= b
 
 
+# -------------------------------------------------- link message codec
+from repro.link import messages as link_messages  # noqa: E402
+
+json_scalars = (st.none() | st.booleans()
+                | st.integers(-(1 << 40), 1 << 40)
+                | st.floats(allow_nan=False, allow_infinity=False)
+                | st.text(max_size=40))
+json_payloads = st.dictionaries(
+    st.text(max_size=20),
+    json_scalars | st.lists(json_scalars, max_size=5)
+    | st.dictionaries(st.text(max_size=10), json_scalars, max_size=4),
+    max_size=8)
+
+
+@given(st.sampled_from(link_messages.KINDS), st.integers(0, 1 << 20),
+       json_payloads)
+@settings(**SETTINGS)
+def test_link_codec_roundtrip(kind, rank, payload):
+    """encode -> decode is the identity over every built-in kind, any
+    rank, and arbitrary JSON payloads (incl. unicode and nesting)."""
+    msg = link_messages.decode(link_messages.encode(kind, rank, payload))
+    assert msg.kind == kind
+    assert msg.rank == rank
+    assert msg.payload == payload
+    assert msg.v == link_messages.LINK_VERSION
+    # a second trip is byte-stable (spool replay determinism)
+    line = msg.encode()
+    assert link_messages.decode(line).encode() == line
+
+
+@given(st.text(max_size=200))
+@settings(**SETTINGS)
+def test_link_decode_raises_only_wire_errors(junk):
+    """Arbitrary junk lines either decode (they happened to be a valid
+    message) or raise WireError — never an unhandled exception type."""
+    try:
+        link_messages.decode(junk)
+    except link_messages.WireError:
+        pass
+
+
 def test_eof_pattern_detector_threshold():
     rt = DarshanRuntime()
     rt.enabled = True

@@ -17,11 +17,12 @@ from repro.core.records import FileRecord
 from repro.core.session import ProfileServer, control
 from repro.data.tiers import TokenBucket
 from repro.fleet import (CollectorServer, FleetCollector, RankReporter,
-                         RankSlice, run_simulated_fleet, wire)
+                         RankSlice, payloads, run_simulated_fleet)
 from repro.fleet.detectors import (LoadImbalanceDetector,
                                    RankStragglerDetector,
                                    SharedFileContentionDetector)
 from repro.insight.detectors import Finding
+from repro.link import LINK_VERSION, WireError, decode, encode
 
 
 def _make_files(root, rank, n, size):
@@ -53,34 +54,49 @@ def test_wire_roundtrip_report_payload():
                             (0.0, 1.0), {"opens": 64.0}, "stage", rank=2)]
     rep.file_sizes = {"/d/a.bin": 4096}
 
-    line = wire.encode_report(2, rep, nprocs=4, clock_offset_s=-3.25,
-                              clock_rtt_s=1e-4)
-    msg = wire.decode(line)
-    assert (msg.v, msg.kind, msg.rank) == (wire.WIRE_VERSION, "report", 2)
-    back = wire.decode_records(msg.payload["posix"])
+    line = payloads.encode_report(2, rep, nprocs=4, clock_offset_s=-3.25,
+                                  clock_rtt_s=1e-4)
+    msg = decode(line)
+    assert (msg.v, msg.kind, msg.rank) == (LINK_VERSION, "report", 2)
+    back = payloads.decode_records(msg.payload["posix"])
     assert back["/d/a.bin"].counters == per_file["/d/a.bin"].counters
     assert back["/d/a.bin"].fcounters == per_file["/d/a.bin"].fcounters
     assert back["/d/b.bin"].counters == per_file["/d/b.bin"].counters
-    segs = wire.decode_segments(msg.payload["segments"])
+    segs = payloads.decode_segments(msg.payload["segments"])
     assert segs == rep.segments
-    founds = wire.decode_findings(msg.payload["findings"])
+    founds = payloads.decode_findings(msg.payload["findings"])
     assert founds == rep.findings
     assert msg.payload["clock"]["offset_s"] == -3.25
     assert msg.payload["file_sizes"] == {"/d/a.bin": 4096}
 
 
 def test_wire_rejects_garbage_and_future_versions():
-    with pytest.raises(wire.WireError):
-        wire.decode("not json at all {")
-    with pytest.raises(wire.WireError):
-        wire.decode(json.dumps({"v": wire.WIRE_VERSION + 1,
-                                "kind": "report", "rank": 0,
-                                "payload": {}}))
-    with pytest.raises(wire.WireError):
-        wire.decode(json.dumps({"v": 1, "kind": "nope", "rank": 0,
-                                "payload": {}}))
-    with pytest.raises(wire.WireError):
-        wire.encode("nope", 0, {})
+    with pytest.raises(WireError):
+        decode("not json at all {")
+    with pytest.raises(WireError):
+        decode(json.dumps({"v": LINK_VERSION + 1,
+                           "kind": "report", "rank": 0,
+                           "payload": {}}))
+    with pytest.raises(WireError):
+        decode(json.dumps({"v": 1, "kind": "nope", "rank": 0,
+                           "payload": {}}))
+    with pytest.raises(WireError):
+        encode("nope", 0, {})
+
+
+def test_fleet_wire_shim_warns_and_forwards():
+    """The moved repro.fleet.wire names keep working one release
+    longer, loudly."""
+    import repro.fleet.wire as legacy
+    with pytest.warns(DeprecationWarning, match="repro.link"):
+        assert legacy.WIRE_VERSION == LINK_VERSION
+    with pytest.warns(DeprecationWarning):
+        msg = legacy.decode(encode("bye", 3, {}))
+    assert (msg.kind, msg.rank) == ("bye", 3)
+    with pytest.warns(DeprecationWarning, match="payloads"):
+        assert legacy.encode_hello(0, 2).startswith("{")
+    with pytest.raises(AttributeError):
+        legacy.never_existed
 
 
 # ------------------------------------------------- simulated fleet e2e

@@ -1,0 +1,570 @@
+"""repro.link: the typed message/transport layer (ISSUE 4 acceptance).
+
+Covers the versioned codec (field-naming errors with line snippets,
+version negotiation), the Endpoint verb dispatch with registry-resolved
+extensions, a transport conformance suite run against ALL THREE
+``Transport`` implementations with the same assertions, the dual-stack
+ProfileServer, and the real multi-process fleet path
+(``launch="spawn"`` over tcp and spool) matching a simulated run."""
+import json
+import os
+import socket
+import time
+
+import pytest
+
+from repro.core import reset_runtime
+from repro.core.analysis import analyze
+from repro.core.dxt import Segment
+from repro.core.records import FileRecord
+from repro.core.runtime import DarshanRuntime
+from repro.core.session import ProfileServer, control
+from repro.fleet import (CollectorServer, FleetCollector, RankReporter,
+                         payloads)
+from repro.insight.detectors import Finding
+from repro.link import (KINDS, LINK_VERSION, CallableTransport, Endpoint,
+                        LoopbackTransport, Message, SpoolReader,
+                        SpoolTransport, TcpTransport, WireError,
+                        as_transport, check_hello, decode, encode)
+from repro.profiler import get_registry, register_verb
+
+
+# ---------------------------------------------------------------- codec
+def test_codec_roundtrip_all_builtin_kinds():
+    for kind in KINDS:
+        line = encode(kind, 7, {"x": 1, "s": "é", "f": 0.25})
+        msg = decode(line)
+        assert (msg.kind, msg.rank, msg.v) == (kind, 7, LINK_VERSION)
+        assert msg.payload == {"x": 1, "s": "é", "f": 0.25}
+        assert msg.encode() == line
+
+
+def test_codec_errors_name_field_and_quote_snippet():
+    with pytest.raises(WireError, match="not JSON") as e:
+        decode("not json at all {")
+    assert "not json at all {" in str(e.value)
+
+    long_line = json.dumps({"v": 1, "kind": "hello", "rank": -3,
+                            "payload": {"pad": "x" * 500}})
+    with pytest.raises(WireError, match="'rank'") as e:
+        decode(long_line)
+    # the snippet is truncated, not the whole 500-byte line
+    assert "..." in str(e.value) and len(str(e.value)) < 250
+
+    with pytest.raises(WireError, match="'payload'"):
+        decode(json.dumps({"v": 1, "kind": "hello", "rank": 0,
+                           "payload": [1, 2]}))
+    with pytest.raises(WireError, match="'v'"):
+        decode(json.dumps({"v": "one", "kind": "hello", "rank": 0,
+                           "payload": {}}))
+    with pytest.raises(WireError, match="'kind'"):
+        decode(json.dumps({"v": 1, "kind": "nope", "rank": 0,
+                           "payload": {}}))
+    with pytest.raises(WireError, match="missing field 'kind'"):
+        decode(json.dumps({"v": 1, "rank": 0, "payload": {}}))
+
+
+def test_codec_rejects_future_versions_loudly():
+    line = json.dumps({"v": LINK_VERSION + 1, "kind": "report", "rank": 0,
+                       "payload": {}})
+    with pytest.raises(WireError, match="unsupported wire version"):
+        decode(line)
+    with pytest.raises(WireError, match="unknown kind"):
+        encode("nope", 0, {})
+
+
+def test_check_hello_negotiates_and_rejects():
+    assert check_hello({"link_v": LINK_VERSION}) == LINK_VERSION
+    assert check_hello({}) == 1                      # pre-negotiation peer
+    # a newer peer negotiates DOWN to what we speak
+    assert check_hello({"link_v": 99}) == LINK_VERSION
+    # ...unless it requires more than we have: loud mismatch
+    with pytest.raises(WireError, match="requires link protocol"):
+        check_hello({"link_v": 99, "link_min_v": 99})
+    with pytest.raises(WireError, match="link_v"):
+        check_hello({"link_v": "new"})
+
+
+# ------------------------------------------------------------- endpoint
+def test_endpoint_dispatches_local_handlers_and_default():
+    seen = []
+    ep = Endpoint(context=seen)
+
+    @ep.on("status")
+    def _status(endpoint, msg):
+        endpoint.context.append(msg.rank)
+        return msg.reply("ok", {"n": len(endpoint.context)})
+
+    reply = decode(ep.dispatch_line(encode("status", 5)))
+    assert reply.kind == "ok" and reply.payload == {"n": 1}
+    assert seen == [5]
+    # built-in kind without a handler -> error reply, not an exception
+    err = decode(ep.dispatch_line(encode("bye", 0)))
+    assert err.kind == "error" and "bye" in err.payload["error"]
+
+
+def test_register_verb_extends_codec_and_every_endpoint():
+    calls = []
+
+    def handler(endpoint, msg):
+        calls.append((endpoint.context, msg.payload["x"]))
+        return msg.reply("ok")
+
+    register_verb("test-custom-kind", handler)
+    try:
+        line = encode("test-custom-kind", 2, {"x": 41})   # codec accepts
+        assert decode(line).kind == "test-custom-kind"
+        ep = Endpoint(context="ctx")
+        assert decode(ep.dispatch_line(line)).kind == "ok"
+        assert calls == [("ctx", 41)]
+        # endpoint-local handlers take precedence over the registry
+        ep.register("test-custom-kind",
+                    lambda endpoint, msg: msg.reply("ok", {"local": True}))
+        assert decode(ep.dispatch_line(line)).payload == {"local": True}
+    finally:
+        get_registry("verb").unregister("test-custom-kind")
+    with pytest.raises(WireError):
+        encode("test-custom-kind", 0, {})      # gone after unregister
+
+
+def test_register_verb_rejects_builtin_kinds():
+    from repro.profiler import RegistryError
+    with pytest.raises(RegistryError, match="built-in"):
+        register_verb("report", lambda endpoint, msg: "ok")
+
+
+# ------------------------------------------- transport conformance suite
+def _synth_report(rank, n_files=4, reads_per_file=3):
+    per_file = {}
+    for i in range(n_files):
+        p = f"/data/r{rank}/f{i:03d}.bin"
+        per_file[p] = FileRecord(p, {"POSIX_OPENS": 1,
+                                     "POSIX_READS": reads_per_file,
+                                     "POSIX_BYTES_READ": 65536},
+                                 {"POSIX_F_READ_TIME": 0.01})
+    rep = analyze(per_file, {}, elapsed_s=1.0, stat_sizes=False)
+    rep.file_sizes = {p: 65536 for p in per_file}
+    rep.segments = [Segment("POSIX", p, "read", 0, 65536,
+                            0.1 * i, 0.1 * i + 0.05, 1)
+                    for i, p in enumerate(sorted(per_file))]
+    rep.findings = [Finding("small-file-storm", "Small-file storm", 0.5,
+                            (0.0, 1.0), {"opens": float(n_files)}, "stage")]
+    return rep
+
+
+class _Rig:
+    """One transport under test: how to build a per-rank transport and
+    how to flush pending lines into the collector."""
+
+    def __init__(self, name, collector, make, finalize, close, duplex):
+        self.name = name
+        self.collector = collector
+        self.make = make            # rank -> Transport
+        self.finalize = finalize    # () -> None (drain/stop servers)
+        self.close = close
+        self.duplex = duplex
+
+
+@pytest.fixture(params=["loopback", "tcp", "spool"])
+def rig(request, tmp_path):
+    collector = FleetCollector(detectors=[])
+    if request.param == "loopback":
+        r = _Rig("loopback", collector,
+                 make=lambda rank: LoopbackTransport(collector.ingest_line),
+                 finalize=lambda: None, close=lambda: None, duplex=True)
+    elif request.param == "tcp":
+        server = CollectorServer(collector, idle_timeout_s=1.0)
+        r = _Rig("tcp", collector,
+                 make=lambda rank: TcpTransport("127.0.0.1", server.port),
+                 finalize=lambda: None, close=server.close, duplex=True)
+    else:
+        spool = str(tmp_path / "spool")
+        reader = SpoolReader(spool)      # persistent: drains incrementally
+        r = _Rig("spool", collector,
+                 make=lambda rank: SpoolTransport(spool,
+                                                  name=f"rank{rank:05d}"),
+                 finalize=lambda: collector.ingest_spool(reader),
+                 close=lambda: None, duplex=False)
+    yield r
+    r.close()
+
+
+def test_transport_conformance_ship_two_ranks(rig):
+    """The same shipping sequence lands the same aggregate through
+    every transport; duplex transports also recover a clock offset."""
+    for rank in range(2):
+        rep = RankReporter(rank, nprocs=2, runtime=DarshanRuntime(),
+                           auto_attach=False)
+        with rig.make(rank) as t:
+            assert t.duplex is rig.duplex
+            rep.ship(t, report=_synth_report(rank), handshake_rounds=3)
+            if rig.duplex:
+                assert rep.clock_offset_s is not None
+            else:
+                assert rep.clock_offset_s is None
+    rig.finalize()
+    fleet = rig.collector.report()
+    assert sorted(fleet.ranks) == [0, 1]
+    assert fleet.nprocs == 2
+    assert fleet.posix.reads == 2 * 4 * 3
+    assert fleet.posix.bytes_read == 2 * 4 * 65536
+    assert {f.detector for f in fleet.findings} == {"small-file-storm"}
+    assert {f.rank for f in fleet.findings} == {0, 1}
+    assert rig.collector.stats["reports"] == 2
+    assert rig.collector.stats["hellos"] == 2
+    assert rig.collector.stats["errors"] == 0
+    # duplex rigs measured offsets; the spool rig fell back to zero
+    for s in fleet.ranks.values():
+        if rig.duplex:
+            assert abs(s.clock_offset_s) < 1.0
+        else:
+            assert s.clock_offset_s == 0.0
+
+
+def test_transport_conformance_register_verb_roundtrip(rig):
+    """A register_verb-added message kind round-trips end to end
+    through every transport without modifying repro.link internals
+    (ISSUE 4 acceptance)."""
+    def handler(endpoint, msg):
+        coll = endpoint.context
+        stash = getattr(coll, "custom_stash", None)
+        if stash is None:
+            stash = coll.custom_stash = []
+        stash.append((msg.rank, msg.payload))
+        return msg.reply("ok")
+
+    register_verb("gpu-direct-stats", handler)
+    try:
+        for rank in range(2):
+            with rig.make(rank) as t:
+                reply = t(encode("gpu-direct-stats", rank,
+                                 {"hits": 10 + rank}))
+                if rig.duplex:
+                    assert decode(reply).kind == "ok"
+                else:
+                    assert reply is None
+        rig.finalize()
+    finally:
+        get_registry("verb").unregister("gpu-direct-stats")
+    assert rig.collector.custom_stash == [(0, {"hits": 10}),
+                                          (1, {"hits": 11})]
+    assert rig.collector.stats["errors"] == 0
+
+
+def test_transport_conformance_streamed_findings_superseded(rig):
+    """Mid-run findings pushes surface immediately and the rank's final
+    report supersedes them — no double counting, on any transport."""
+    finding = Finding("checkpoint-stall", "Checkpoint stall", 0.9,
+                      (0.0, 0.5), {"fsyncs": 4.0}, "async checkpoints")
+    with rig.make(0) as t:
+        t(payloads.encode_findings(0, [finding], streaming=True))
+        rig.finalize()
+        mid = rig.collector.report()
+        assert [f.detector for f in mid.findings] == ["checkpoint-stall"]
+        assert mid.findings[0].rank == 0          # provenance stamped
+        # now the authoritative window report lands for the same rank
+        rep = _synth_report(0)
+        rep.findings = [finding]
+        RankReporter(0, nprocs=1, runtime=DarshanRuntime(),
+                     auto_attach=False).ship(t, report=rep,
+                                             handshake_rounds=1)
+    rig.finalize()
+    final = rig.collector.report()
+    assert [f.detector for f in final.findings] == ["checkpoint-stall"]
+    assert len(final.findings) == 1               # superseded, not added
+
+
+def test_spool_replay_tolerates_corrupt_lines(tmp_path):
+    """One bad byte must not make the rest of a capture unreplayable:
+    ingest_spool counts the error and keeps draining."""
+    spool = str(tmp_path / "spool")
+    t = SpoolTransport(spool, name="rank00000")
+    t(encode("hello", 0, {"nprocs": 1}))
+    t._f.write("{corrupt not json\n")          # torn/corrupt line
+    t._f.flush()
+    t(encode("bye", 0))
+    t.close()
+    coll = FleetCollector(detectors=[])
+    assert coll.ingest_spool(spool) == 2       # both good lines landed
+    assert coll.stats["errors"] == 1
+    assert coll.stats["hellos"] == 1
+
+
+def test_standalone_findings_push_survives_the_report():
+    """Only streaming=True pushes are superseded by the rank's final
+    report; a standalone push is authoritative and persists."""
+    coll = FleetCollector(detectors=[])
+    standalone = Finding("metadata-storm", "Metadata storm", 0.7,
+                         (0.0, 1.0), {"stats": 9.0}, "cache sizes")
+    coll.ingest_line(payloads.encode_findings(0, [standalone],
+                                              streaming=False))
+    coll.ingest_line(payloads.encode_report(0, _synth_report(0)))
+    kinds = [f.detector for f in coll.report().findings]
+    assert "metadata-storm" in kinds           # survived the report
+    assert "small-file-storm" in kinds         # the report's own finding
+
+
+def test_tcp_transport_reconnects_after_idle_reap_but_not_fresh():
+    """A reused connection the server idle-reaped self-heals with one
+    retry; a fresh connection's failure surfaces immediately."""
+    coll = FleetCollector(detectors=[])
+    server = CollectorServer(coll, idle_timeout_s=0.2)
+    try:
+        with TcpTransport("127.0.0.1", server.port) as t:
+            assert t(encode("bye", 0)) == "ok"
+            time.sleep(0.7)                    # server reaps the conn
+            assert t(encode("bye", 0)) == "ok"   # transparent reconnect
+    finally:
+        server.close()
+    # fresh connection against the now-closed port: raises, no retry loop
+    with pytest.raises(OSError):
+        TcpTransport("127.0.0.1", server.port)(encode("bye", 0))
+
+
+def test_loopback_accepts_endpoint_and_callable():
+    got = []
+    ep = Endpoint(handlers={"bye": lambda e, m: "ok"})
+    assert LoopbackTransport(ep)(encode("bye", 0)) == "ok"
+    assert LoopbackTransport(lambda line: got.append(line))(
+        encode("bye", 0)) is None
+    assert len(got) == 1
+    with pytest.raises(TypeError):
+        LoopbackTransport(object())
+
+
+def test_as_transport_wraps_callables():
+    t = as_transport(lambda line: "ok")
+    assert isinstance(t, CallableTransport) and t.duplex
+    assert as_transport(t) is t
+    with pytest.raises(TypeError):
+        as_transport(42)
+
+
+def test_spool_reader_tails_incrementally(tmp_path):
+    spool = str(tmp_path / "spool")
+    t = SpoolTransport(spool, name="rank00000")
+    reader = SpoolReader(spool)
+    t(encode("hello", 0, {"nprocs": 1}))
+    first = reader.poll()
+    assert len(first) == 1 and decode(first[0]).kind == "hello"
+    assert reader.poll() == []                    # nothing new
+    t(encode("bye", 0))
+    t.close()
+    second = reader.poll()
+    assert [decode(x).kind for x in second] == ["bye"]
+    # a fresh reader replays the finished spool from the top
+    assert len(SpoolReader(spool).poll()) == 2
+
+
+# --------------------------------------------- ProfileServer dual stack
+def test_profile_server_speaks_typed_messages(tmp_path):
+    paths = []
+    for i in range(4):
+        p = tmp_path / f"f{i}.bin"
+        p.write_bytes(b"x" * 8192)
+        paths.append(str(p))
+    rt = reset_runtime()
+    srv = ProfileServer(runtime=rt, rank=3, nprocs=8)
+    try:
+        with TcpTransport("127.0.0.1", srv.port) as t:
+            hello = t.request(Message("hello",
+                                      payload={"link_v": LINK_VERSION}))
+            assert hello.kind == "hello"
+            assert hello.payload["link_v"] == LINK_VERSION
+            assert hello.payload["nprocs"] == 8
+            assert t.request(Message("status")).payload["active"] is False
+            assert t.request(Message("start")).kind == "ok"
+            for p in paths:
+                fd = os.open(p, os.O_RDONLY)
+                os.read(fd, 16384)
+                os.close(fd)
+            stop = t.request(Message("stop"))
+            assert stop.kind == "ok" and stop.payload["reads"] >= 4
+            clk = t.request(Message("clock", payload={"t_send": 1.5}))
+            assert clk.kind == "clock_reply"
+            assert clk.payload["echo"] == 1.5 and "t_coll" in clk.payload
+            # typed report reply feeds a collector like any rank payload
+            report_line = t(Message("report").encode())
+            coll = FleetCollector(detectors=[])
+            coll.ingest_line(report_line)
+            assert coll.report().ranks[3].posix.bytes_read == 4 * 8192
+            # and the legacy text protocol still works on the same port
+            assert control(srv.port, "status") == "active=False"
+    finally:
+        srv.close()
+
+
+def test_profile_server_typed_stop_without_start_is_error():
+    rt = reset_runtime()
+    srv = ProfileServer(runtime=rt)
+    try:
+        with TcpTransport("127.0.0.1", srv.port) as t:
+            err = t.request(Message("stop"))
+            assert err.kind == "error"
+            assert "not started" in err.payload["error"]
+            bad = t.request(Message("bye"))      # no handler on this server
+            assert bad.kind == "error"
+    finally:
+        srv.close()
+
+
+def test_idle_timeout_is_plumbed(tmp_path):
+    """A newline-less client's command is answered after the configured
+    idle timeout — the old hardcoded 2.0 s is now a parameter."""
+    rt = reset_runtime()
+    srv = ProfileServer(runtime=rt, idle_timeout_s=0.3)
+    try:
+        assert srv._server.idle_timeout_s == 0.3
+        with socket.create_connection(("127.0.0.1", srv.port)) as s:
+            s.settimeout(5)
+            t0 = time.monotonic()
+            s.sendall(b"status")                 # no newline, kept open
+            assert s.recv(4096) == b"active=False\n"
+            assert time.monotonic() - t0 < 1.5   # ~0.3s idle, not 2s
+    finally:
+        srv.close()
+    from repro.profiler import Profiler, ProfilerOptions
+    prof = Profiler(ProfilerOptions(server_port=0, idle_timeout_s=0.7))
+    srv = prof.serve()
+    try:
+        assert srv._server.idle_timeout_s == 0.7
+    finally:
+        srv.close()
+
+
+def test_collector_server_close_joins_handlers():
+    """CollectorServer.close() got the same handler-thread join
+    hardening ProfileServer.close() has: back-to-back servers on one
+    port are safe."""
+    cs = CollectorServer()
+    port = cs.port
+    sock = socket.create_connection(("127.0.0.1", port), timeout=5)
+    sock.sendall(encode("hello", 0, {"nprocs": 1}).encode() + b"\n")
+    from repro.link import recv_reply
+    assert decode(recv_reply(sock)).kind == "hello"
+    cs.close()
+    assert all(not t.is_alive() for t in cs._server._conn_threads)
+    sock.close()
+    cs2 = CollectorServer(port=port)
+    try:
+        assert cs2.port == port
+    finally:
+        cs2.close()
+
+
+# ------------------------------------------------- spawned fleet (e2e)
+def _fleet_files(root, nranks, per_rank, size):
+    files = {}
+    for r in range(nranks):
+        d = os.path.join(str(root), f"r{r}")
+        os.makedirs(d, exist_ok=True)
+        files[r] = []
+        for i in range(per_rank):
+            p = os.path.join(d, f"{i:03d}.bin")
+            with open(p, "wb") as f:
+                f.write(b"x" * size)
+            files[r].append(p)
+    return files
+
+
+@pytest.mark.parametrize("transport", ["tcp", "spool"])
+def test_spawned_fleet_matches_simulated(tmp_path, transport):
+    """ISSUE 4 acceptance: mode='fleet', launch='spawn' runs real OS
+    processes and its Report matches a simulate_fleet run on the same
+    workload — same global counters, same finding kinds."""
+    from repro.profiler import Profiler, ProfilerOptions
+    files = _fleet_files(tmp_path, 4, 6, 32768)
+
+    def workload(rank, io):
+        for p in files[rank]:
+            io.read_file(p, chunk=8192)
+
+    sim = Profiler(ProfilerOptions(mode="fleet", nranks=4)).run(workload)
+    spawned = Profiler(ProfilerOptions(
+        mode="fleet", launch="spawn", fleet_ranks=4,
+        transport=transport)).run(workload)
+    assert spawned.mode == "fleet" and spawned.nprocs == 4
+    assert sorted(spawned.ranks) == [0, 1, 2, 3]
+    # real processes: every rank ran in its own pid, none in ours
+    pids = {s.pid for s in spawned.fleet.ranks.values()}
+    assert len(pids) == 4 and os.getpid() not in pids
+    assert spawned.counters() == sim.counters()
+    assert ({f.detector for f in spawned.findings}
+            == {f.detector for f in sim.findings})
+    if transport == "tcp":
+        assert any(s.clock_offset_s != 0.0
+                   for s in spawned.fleet.ranks.values())
+
+
+def test_spawned_fleet_streams_insight_findings(tmp_path):
+    """Child ranks push findings mid-run; the tiny-file storm shows up
+    with rank provenance in the final report exactly like a simulated
+    insight fleet."""
+    from repro.profiler import Profiler, ProfilerOptions
+    files = _fleet_files(tmp_path, 2, 48, 1024)
+
+    def workload(rank, io):
+        for p in files[rank]:
+            io.read_file(p, chunk=4096)
+
+    report = Profiler(ProfilerOptions(
+        mode="fleet", launch="spawn", fleet_ranks=2, insight=True,
+        insight_interval_s=0.1)).run(workload)
+    storms = [f for f in report.findings
+              if f.detector == "small-file-storm"]
+    assert {f.rank for f in storms} == {0, 1}
+    assert report.fleet.collector_stats["reports"] == 2
+
+
+def test_spawned_fleet_rank_failure_raises(tmp_path):
+    from repro.profiler import Profiler, ProfilerOptions
+
+    def workload(rank, io):
+        if rank == 1:
+            raise RuntimeError("rank 1 dies")
+
+    with pytest.raises(RuntimeError, match="fleet ranks failed"):
+        Profiler(ProfilerOptions(mode="fleet", launch="spawn",
+                                 fleet_ranks=2)).run(workload)
+
+
+def test_thread_fleet_over_tcp_and_spool_transports(tmp_path):
+    """The simulated (thread) harness rides the real wires too:
+    transport='tcp'/'spool' with launch='thread'."""
+    from repro.profiler import Profiler, ProfilerOptions
+    files = _fleet_files(tmp_path, 2, 4, 16384)
+
+    def workload(rank, io):
+        for p in files[rank]:
+            io.read_file(p)
+
+    base = Profiler(ProfilerOptions(mode="fleet", nranks=2)).run(workload)
+    for transport in ("tcp", "spool"):
+        rep = Profiler(ProfilerOptions(mode="fleet", nranks=2,
+                                       transport=transport)).run(workload)
+        assert rep.counters() == base.counters()
+
+
+def test_options_validate_link_fields():
+    from repro.profiler import ProfilerOptions, ProfilerOptionsError
+    with pytest.raises(ProfilerOptionsError, match="launch"):
+        ProfilerOptions(mode="fleet", launch="mpi").validate()
+    with pytest.raises(ProfilerOptionsError, match="loopback"):
+        ProfilerOptions(mode="fleet", launch="spawn",
+                        transport="loopback").validate()
+    with pytest.raises(ProfilerOptionsError, match="spool_dir"):
+        ProfilerOptions(mode="fleet", transport="tcp",
+                        spool_dir="/tmp/x").validate()
+    with pytest.raises(ProfilerOptionsError, match="idle_timeout_s"):
+        ProfilerOptions(idle_timeout_s=0.0).validate()
+    with pytest.raises(ProfilerOptionsError, match="fleet_ranks"):
+        ProfilerOptions(mode="fleet", nranks=8, fleet_ranks=4)
+    with pytest.raises(ProfilerOptionsError, match="fleet-mode"):
+        ProfilerOptions(transport="tcp").validate()
+    # fleet_ranks is a full alias: with_overrides keeps them in sync
+    opts = ProfilerOptions(mode="fleet", fleet_ranks=4).validate()
+    assert opts.nranks == 4
+    assert opts.with_overrides(handshake_rounds=5).nranks == 4
+    assert ProfilerOptions(mode="fleet", launch="spawn",
+                           spool_dir="/tmp/x").resolved_transport() \
+        == "spool"

@@ -453,7 +453,8 @@ def test_profile_server_close_joins_handlers_and_frees_port(tmp_path):
     from repro.core.session import recv_reply
     assert recv_reply(sock).startswith("active=")
     srv.close()
-    assert all(not t.is_alive() for t in srv._conn_threads)
+    # the close-join hardening lives in the shared repro.link LineServer
+    assert all(not t.is_alive() for t in srv._server._conn_threads)
     sock.close()
     # back-to-back server on the SAME port must bind cleanly
     srv2 = ProfileServer(port=port)
