@@ -18,7 +18,7 @@ from benchmarks.common import Row, cleanup, make_workspace, scaled
 
 
 def _rank_payload(rank: int, nranks: int, n_files: int,
-                  n_segments: int) -> str:
+                  n_segments: int, segments_wire: str = "columns") -> str:
     from repro.core.analysis import analyze
     from repro.core.dxt import Segment
     from repro.core.records import FileRecord
@@ -46,7 +46,8 @@ def _rank_payload(rank: int, nranks: int, n_files: int,
                             (0.0, 2.0), {"opens": float(n_files)}, "stage")]
     return payloads.encode_report(rank, rep, nprocs=nranks,
                                   clock_offset_s=-0.001 * rank,
-                                  clock_rtt_s=5e-5)
+                                  clock_rtt_s=5e-5,
+                                  segments_wire=segments_wire)
 
 
 def run(rows: Row) -> None:
@@ -69,13 +70,21 @@ def run(rows: Row) -> None:
         analyze_s = time.perf_counter() - t0
         dropped = nranks - coll.stats["reports"]
         assert dropped == 0, f"dropped {dropped} payloads"
+        derived = (f"payloads_s={nranks / ingest_s:.0f};"
+                   f"wire_mb_s={wire_mb / ingest_s:.1f};"
+                   f"analyze_ms={analyze_s * 1e3:.1f};"
+                   f"dropped={dropped};"
+                   f"reads={fleet.posix.reads}")
+        if nranks == 4:
+            # what the columnar segments wire buys: same payload, both
+            # shapes (the ingest loop above rode "columns")
+            rows_bytes = len(_rank_payload(0, nranks, n_files, n_segments,
+                                           segments_wire="rows"))
+            cols_bytes = len(lines[0])
+            derived += (f";cols_bytes={cols_bytes};rows_bytes={rows_bytes};"
+                        f"wire_ratio={cols_bytes / rows_bytes:.3f}")
         rows.add(f"fleet_ingest_{nranks}ranks",
-                 ingest_s / nranks * 1e6,
-                 f"payloads_s={nranks / ingest_s:.0f};"
-                 f"wire_mb_s={wire_mb / ingest_s:.1f};"
-                 f"analyze_ms={analyze_s * 1e3:.1f};"
-                 f"dropped={dropped};"
-                 f"reads={fleet.posix.reads}")
+                 ingest_s / nranks * 1e6, derived)
 
     # end-to-end anchor: real 4-rank simulated collection over tmp files
     ws = make_workspace("fleet_")

@@ -8,13 +8,60 @@ The same small-file epoch three ways:
 
 The acceptance bar is end-to-end (c) vs (a) overhead under ~10 %; the
 derived column also reports which detectors fired so the run proves the
-engine was actually diagnosing, not idle."""
+engine was actually diagnosing, not idle.
+
+A second section times window-feature extraction itself — the row loop
+vs the vectorized columnar path (``repro.trace.SegmentColumns`` +
+numpy reductions) on an insight-window-sized segment batch; the smoke
+bar requires the columnar path to be at least 5x faster (ISSUE 5
+acceptance)."""
 from __future__ import annotations
 
 import os
 import time
 
 from benchmarks.common import Row, cleanup, make_workspace, scaled
+
+# smoke bar: the vectorized extract must beat the row loop by this much
+SMOKE_MIN_EXTRACT_SPEEDUP = 5.0
+
+
+def _extract_bench(rows: Row) -> None:
+    from repro.insight.features import extract_columns, extract_rows
+    from repro.trace import Segment, SegmentColumns
+
+    n = scaled(200_000, 20_000)
+    segs = []
+    t = 0.0
+    for i in range(n):
+        op = ("read", "read", "read", "read", "write", "open",
+              "stat", "seek")[i % 8]
+        length = (2048, 65536, 1 << 20)[i % 3] \
+            if op in ("read", "write") else 0
+        dur = (4e-5, 2e-4, 8e-4)[i % 3]
+        segs.append(Segment("POSIX", f"/data/f{i % 48:03d}.bin", op,
+                            (i % 9) << 16, length, t, t + dur, 1))
+        t += dur * 0.5
+    cols = SegmentColumns.from_rows(segs)
+
+    reps = scaled(5, 3)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        f_rows = extract_rows(segs, 0.0, t)
+    dt_rows = (time.perf_counter() - t0) / reps
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        f_cols = extract_columns(cols, 0.0, t)
+    dt_cols = (time.perf_counter() - t0) / reps
+    assert (f_rows.reads, f_rows.bytes_read, f_rows.read_size_hist) \
+        == (f_cols.reads, f_cols.bytes_read, f_cols.read_size_hist)
+    speedup = dt_rows / max(dt_cols, 1e-12)
+    rows.add("insight_extract_rows", dt_rows * 1e6, f"segments={n}")
+    rows.add("insight_extract_columns", dt_cols * 1e6,
+             f"segments={n};speedup={speedup:.1f}x")
+    assert speedup >= SMOKE_MIN_EXTRACT_SPEEDUP, \
+        f"columnar extract bar missed: {speedup:.1f}x < " \
+        f"{SMOKE_MIN_EXTRACT_SPEEDUP}x"
 
 
 def _epoch(paths):
@@ -67,6 +114,8 @@ def run(rows: Row) -> None:
              f"overhead_pct={100 * (full - base) / base:.1f},"
              f"findings={fired}")
     cleanup(ws)
+
+    _extract_bench(rows)
 
 
 if __name__ == "__main__":

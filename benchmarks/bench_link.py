@@ -55,9 +55,17 @@ def _payload_lines():
                             i * 2.5e-4, i * 2.5e-4 + 2e-4, 1)
                     for i in range(n_segments)]
     rep.findings = [finding]
+    # "large" rides the columnar segments_columns wire (the default);
+    # "large_rows" is the same report on the legacy per-row wire — the
+    # pair measures what the columnar batch codec buys end to end.
     large = payloads.encode_report(1, rep, nprocs=4,
                                    clock_offset_s=-0.001, clock_rtt_s=5e-5)
-    return {"small": small, "medium": medium, "large": large}
+    large_rows = payloads.encode_report(1, rep, nprocs=4,
+                                        clock_offset_s=-0.001,
+                                        clock_rtt_s=5e-5,
+                                        segments_wire="rows")
+    return {"small": small, "medium": medium, "large": large,
+            "large_rows": large_rows}
 
 
 def run(rows: Row) -> None:
@@ -70,8 +78,10 @@ def run(rows: Row) -> None:
 
     # ------------------------------------------------------------- codec
     for name, line in lines.items():
-        n = scaled({"small": 20000, "medium": 5000, "large": 50}[name],
-                   {"small": 500, "medium": 100, "large": 5}[name])
+        n = scaled({"small": 20000, "medium": 5000, "large": 50,
+                    "large_rows": 50}[name],
+                   {"small": 500, "medium": 100, "large": 5,
+                    "large_rows": 5}[name])
         t0 = time.perf_counter()
         for _ in range(n):
             decode(line)
@@ -83,6 +93,10 @@ def run(rows: Row) -> None:
         if name == "small":
             assert msgs_s >= SMOKE_MIN_CODEC_MSGS_S, \
                 f"codec regressed: {msgs_s:.0f} msgs/s"
+
+    # columnar report payloads must stay smaller than the row wire
+    assert len(lines["large"]) < len(lines["large_rows"]), \
+        (len(lines["large"]), len(lines["large_rows"]))
 
     # -------------------------------------------------------- transports
     payload = lines["medium"]

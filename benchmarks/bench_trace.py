@@ -1,0 +1,145 @@
+"""Columnar trace data plane benchmark (ISSUE 5 acceptance).
+
+Measures the ``repro.trace`` store in isolation:
+
+  * append — hot-path throughput into the columnar ring (the cost every
+    intercepted I/O call pays), against the legacy list-of-NamedTuple
+    append as the derived baseline;
+  * window — time-window query latency, columnar (``window``) vs the
+    row-materializing compatibility path (``window_rows``);
+  * wire — serialized bytes for the same window, ``segments_columns``
+    parallel arrays vs the legacy per-row lists.
+
+The smoke bars double as the CI regression gates for this PR: append
+throughput must hold a generous floor, the columnar wire must be
+smaller than the row wire, and — on the recorded trace this benchmark
+just produced — the vectorized ``extract_columns`` must agree with the
+row-loop ``extract_rows`` on every feature (ints exactly, floats to
+summation rounding).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+from benchmarks.common import Row, scaled
+
+# smoke bars (full runs clear these by 1-2 orders of magnitude)
+SMOKE_MIN_APPEND_SEGS_S = 50_000.0
+SMOKE_MIN_EXTRACT_SPEEDUP = 2.0
+
+
+def _synth_ops(n: int, n_files: int = 64):
+    """A mixed op stream shaped like an input-pipeline epoch."""
+    ops = []
+    t = 0.0
+    for i in range(n):
+        path = f"/data/shard{i % n_files:03d}.bin"
+        kind = ("read", "read", "read", "read", "read", "read", "write",
+                "open", "stat", "seek")[i % 10]
+        length = (4096, 65536, 1 << 20)[i % 3] \
+            if kind in ("read", "write") else 0
+        dur = (5e-5, 2e-4, 9e-4)[i % 3]
+        ops.append((kind, path, (i % 7) << 16, length, t, t + dur))
+        t += dur * 0.4
+    return ops, t
+
+
+def _features_match(rows_f, cols_f) -> list:
+    """Field-by-field comparison; returns the mismatches."""
+    bad = []
+    for f in dataclasses.fields(rows_f):
+        va, vb = getattr(rows_f, f.name), getattr(cols_f, f.name)
+        if isinstance(va, float) or isinstance(vb, float):
+            ok = va == vb or abs(va - vb) <= 1e-9 * max(1.0, abs(va))
+        else:
+            ok = va == vb
+        if not ok:
+            bad.append((f.name, va, vb))
+    return bad
+
+
+def run(rows: Row) -> None:
+    from repro.fleet import payloads
+    from repro.insight.features import extract_columns, extract_rows
+    from repro.trace import Segment, SegmentColumns, TraceStore
+
+    n = scaled(200_000, 20_000)
+    ops, t_end = _synth_ops(n)
+
+    # ------------------------------------------------------------ append
+    store = TraceStore(capacity=max(n, 1))
+    t0 = time.perf_counter()
+    for kind, path, off, length, s, e in ops:
+        store.append("POSIX", path, kind, off, length, s, e, 1)
+    dt = time.perf_counter() - t0
+    segs_s = n / dt
+    rows.add("trace_append", dt / n * 1e6, f"segs_s={segs_s:.0f}")
+    assert segs_s >= SMOKE_MIN_APPEND_SEGS_S, \
+        f"columnar append regressed: {segs_s:.0f} segs/s"
+
+    baseline: list = []
+    t0 = time.perf_counter()
+    for kind, path, off, length, s, e in ops:
+        baseline.append(Segment("POSIX", path, kind, off, length, s, e, 1))
+    dt_rows = time.perf_counter() - t0
+    rows.add("trace_append_row_baseline", dt_rows / n * 1e6,
+             f"segs_s={n / dt_rows:.0f};columnar_vs_rows="
+             f"{dt / dt_rows:.2f}x")
+
+    # ------------------------------------------------------------ window
+    t_lo = t_end * 0.25
+    reps = scaled(20, 5)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        cols = store.window(t_lo)
+    win_cols_s = (time.perf_counter() - t0) / reps
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        segs = store.window_rows(t_lo)
+    win_rows_s = (time.perf_counter() - t0) / reps
+    assert len(cols) == len(segs)
+    rows.add("trace_window_columns", win_cols_s * 1e6,
+             f"segments={len(cols)}")
+    rows.add("trace_window_rows", win_rows_s * 1e6,
+             f"segments={len(segs)};columns_speedup="
+             f"{win_rows_s / max(win_cols_s, 1e-12):.1f}x")
+
+    # -------------------------------------------------------------- wire
+    wire_n = scaled(5000, 500)
+    sample = cols[:wire_n] if len(cols) >= wire_n else cols
+    col_bytes = len(json.dumps(payloads.encode_segments_columns(sample)))
+    row_bytes = len(json.dumps(payloads.encode_segments(sample)))
+    rows.add("trace_wire_columns_bytes", float(col_bytes),
+             f"rows_bytes={row_bytes};"
+             f"ratio={col_bytes / max(row_bytes, 1):.3f}")
+    assert col_bytes < row_bytes, \
+        f"columnar wire not smaller: {col_bytes} vs {row_bytes}"
+
+    # ------------------------------------- vectorized extract equivalence
+    # CI gate: the numpy extract must reproduce the row loop on the
+    # trace recorded above (ints exactly, floats to rounding).
+    window_cols = store.snapshot()
+    window_rows = window_cols.to_rows()
+    t0 = time.perf_counter()
+    f_rows = extract_rows(window_rows, 0.0, t_end)
+    dt_r = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    f_cols = extract_columns(window_cols, 0.0, t_end)
+    dt_c = time.perf_counter() - t0
+    mismatches = _features_match(f_rows, f_cols)
+    assert not mismatches, f"vectorized extract diverged: {mismatches}"
+    speedup = dt_r / max(dt_c, 1e-12)
+    rows.add("trace_extract_equivalence", dt_c * 1e6,
+             f"segments={len(window_cols)};match=ok;"
+             f"rows_loop_speedup={speedup:.1f}x")
+    assert speedup >= SMOKE_MIN_EXTRACT_SPEEDUP, \
+        f"vectorized extract lost its edge: {speedup:.1f}x"
+
+    # round trip sanity: rows -> columns -> rows is the identity
+    assert SegmentColumns.from_rows(window_rows).to_rows() == window_rows
+
+
+if __name__ == "__main__":
+    run(Row())

@@ -20,7 +20,7 @@ from benchmarks import common
 from benchmarks.common import Row
 
 BENCHES = ("stream", "overhead", "threads", "staging", "checkpoint",
-           "kernels", "insight", "fleet", "profiler", "link")
+           "kernels", "insight", "fleet", "profiler", "link", "trace")
 
 
 def main() -> None:

@@ -12,6 +12,8 @@ from repro.core.runtime import DarshanRuntime, get_runtime, reset_runtime
 from repro.core.session import (ProfileServer, ProfileServerError,
                                 ProfileSession, StepCallback, control)
 from repro.core.staging import StagingManager
+# the columnar segment data plane (DXTBuffer is a view over it)
+from repro.trace import SegmentColumns, TraceStore
 
 
 def __getattr__(name):
@@ -36,5 +38,5 @@ __all__ = [
     "to_chrome_trace", "to_darshan_log", "to_json_report", "IOMonitor",
     "DarshanRuntime", "get_runtime", "reset_runtime", "ProfileServer",
     "ProfileServerError", "ProfileSession", "StepCallback", "control",
-    "StagingManager",
+    "StagingManager", "SegmentColumns", "TraceStore",
 ]

@@ -50,6 +50,34 @@ class SessionReport:
     dxt_segments: int = 0
     analysis_time_s: float = 0.0
     findings: list = field(default_factory=list)   # insight Finding objects
+    # segment-listener exceptions swallowed during this window, keyed by
+    # listener (a broken detector shows up here instead of vanishing)
+    listener_errors: Dict[str, int] = field(default_factory=dict)
+    # the window's DXT batch (repro.trace.SegmentColumns); None when the
+    # report was built without tracing
+    segments_columns: object = field(default=None, repr=False,
+                                     compare=False)
+    _segments_rows: object = field(default=None, init=False, repr=False,
+                                   compare=False)
+
+    # ----------------------------------------------------------- segments
+    @property
+    def segments(self) -> list:
+        """Materialized ``Segment`` rows of the window — derived lazily
+        from ``segments_columns`` (a million-row window should not pay
+        for NamedTuples unless something actually iterates them)."""
+        if self._segments_rows is None:
+            cols = self.segments_columns
+            self._segments_rows = cols.to_rows() if cols is not None \
+                else []
+        return self._segments_rows
+
+    @segments.setter
+    def segments(self, rows) -> None:
+        self._segments_rows = list(rows) if rows is not None else []
+        # the assigned rows are now the authority; a stale columnar
+        # batch would otherwise disagree with them on the wire
+        self.segments_columns = None
 
     # ------------------------------------------------------------ derived
     @property

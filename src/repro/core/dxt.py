@@ -1,62 +1,74 @@
 """DXT-style extended tracing: one timestamped segment per I/O operation,
 mirroring Darshan's DXT module record layout (module, file, op, offset,
-length, start, end, thread)."""
+length, start, end, thread).
+
+.. deprecated:: the row-oriented ``DXTBuffer`` is now a thin
+   compatibility view over the columnar ``repro.trace.TraceStore`` (the
+   single segment data plane).  New code should read the store directly
+   — ``runtime.trace.window(t0, t1)`` returns a ``SegmentColumns`` batch
+   for vectorized analysis; ``DXTBuffer.window()`` keeps returning
+   materialized ``Segment`` rows for existing callers.
+"""
 from __future__ import annotations
 
-import threading
-from typing import List, NamedTuple, Optional
+from typing import List, Optional
 
+# Segment's canonical home is the columnar data plane; re-exported here
+# for the long-standing ``repro.core.dxt.Segment`` import path.
+from repro.trace import Segment, SegmentColumns, TraceStore
 
-class Segment(NamedTuple):
-    # NamedTuple, not frozen dataclass: constructed on every intercepted
-    # I/O call, and frozen-dataclass __init__ costs ~4x more per segment.
-    module: str          # "POSIX" | "STDIO"
-    path: str
-    op: str              # "read" | "write" | "open" | "stat" | "seek" | ...
-    offset: int
-    length: int
-    start: float         # seconds, runtime-relative clock
-    end: float
-    thread: int
+__all__ = ["Segment", "DXTBuffer"]
 
 
 class DXTBuffer:
-    """Bounded trace buffer.  When full, the oldest segments are dropped and
-    ``dropped`` counts them (Darshan DXT instead stops tracing per file;
-    dropping-oldest keeps the *profiling window* semantics of tf-Darshan)."""
+    """Row-compatibility view over a bounded columnar ``TraceStore``.
 
-    def __init__(self, capacity: int = 1 << 20, enabled: bool = True):
-        self.capacity = capacity
-        self.enabled = enabled
-        self.dropped = 0
-        self._segments: List[Segment] = []
-        self._lock = threading.Lock()
+    When full, the oldest segments are dropped and ``dropped`` counts
+    them (Darshan DXT instead stops tracing per file; dropping-oldest
+    keeps the *profiling window* semantics of tf-Darshan).  ``window``
+    snapshots under the store lock — a scan can no longer race the
+    drop path the way the old lock-free list could."""
 
+    def __init__(self, capacity: int = 1 << 20, enabled: bool = True,
+                 store: Optional[TraceStore] = None):
+        self.store = store if store is not None \
+            else TraceStore(capacity=capacity, enabled=enabled)
+
+    # ------------------------------------------------- delegated state
+    @property
+    def capacity(self) -> int:
+        return self.store.capacity
+
+    @property
+    def enabled(self) -> bool:
+        return self.store.enabled
+
+    @enabled.setter
+    def enabled(self, value: bool) -> None:
+        self.store.enabled = value
+
+    @property
+    def dropped(self) -> int:
+        return self.store.dropped
+
+    # ---------------------------------------------------------- row API
     def add(self, seg: Segment) -> None:
-        if not self.enabled:
-            return
-        # list.append is atomic under the GIL: no lock on the hot path
-        # (parallel reader threads contend on every op otherwise).
-        segs = self._segments
-        segs.append(seg)
-        if len(segs) > self.capacity:
-            with self._lock:
-                over = len(segs) - self.capacity
-                if over > 0:
-                    # drop the oldest 1/16th in one go (amortized)
-                    cut = max(over, self.capacity // 16)
-                    del segs[:cut]
-                    self.dropped += cut
+        self.store.add(seg)
 
     def window(self, t0: float, t1: Optional[float] = None) -> List[Segment]:
-        with self._lock:
-            return [s for s in self._segments
-                    if s.start >= t0 and (t1 is None or s.start <= t1)]
+        """Materialized ``Segment`` rows in the window (legacy shape);
+        ``columns()`` returns the same window without materializing."""
+        return self.store.window_rows(t0, t1)
+
+    def columns(self, t0: Optional[float] = None,
+                t1: Optional[float] = None) -> SegmentColumns:
+        """The columnar view of the buffer (optionally time-sliced)."""
+        if t0 is None and t1 is None:
+            return self.store.snapshot()
+        return self.store.window(float("-inf") if t0 is None else t0, t1)
 
     def clear(self) -> None:
-        with self._lock:
-            self._segments.clear()
-            self.dropped = 0
+        self.store.clear()
 
     def __len__(self) -> int:
-        return len(self._segments)
+        return len(self.store)

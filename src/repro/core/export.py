@@ -16,6 +16,16 @@ from typing import Dict, Iterable, Optional
 from repro.core import counters as C
 from repro.core.analysis import SessionReport
 from repro.core.dxt import Segment
+from repro.trace import SegmentColumns
+
+
+def _segment_tuples(segments):
+    """(module, path, op, offset, length, start, end, thread) tuples
+    from either a columnar batch (no per-row NamedTuple construction —
+    the exporters consume column slices directly) or any row iterable."""
+    if isinstance(segments, SegmentColumns):
+        return segments.iter_tuples()
+    return (tuple(s) for s in segments)
 
 
 def to_chrome_trace(segments: Iterable[Segment],
@@ -46,22 +56,24 @@ def to_chrome_trace(segments: Iterable[Segment],
                          "evidence": dict(f.evidence),
                          "recommendation": f.recommendation},
             })
-    for seg in segments:
-        key = (seg.module, seg.path)
-        if key not in tids:
-            tids[key] = len(tids) + 1
-            meta.append({"ph": "M", "pid": seg.module, "tid": tids[key],
+    for module, spath, op, offset, length, start, end, thread \
+            in _segment_tuples(segments):
+        key = (module, spath)
+        tid = tids.get(key)
+        if tid is None:
+            tid = tids[key] = len(tids) + 1
+            meta.append({"ph": "M", "pid": module, "tid": tid,
                          "name": "thread_name",
-                         "args": {"name": seg.path}})
+                         "args": {"name": spath}})
         events.append({
             "ph": "X",
-            "pid": seg.module,
-            "tid": tids[key],
-            "name": f"{seg.op} {os.path.basename(seg.path)}",
-            "ts": seg.start * 1e6,
-            "dur": max((seg.end - seg.start) * 1e6, 0.01),
-            "args": {"offset": seg.offset, "length": seg.length,
-                     "os_thread": seg.thread},
+            "pid": module,
+            "tid": tid,
+            "name": f"{op} {os.path.basename(spath)}",
+            "ts": start * 1e6,
+            "dur": max((end - start) * 1e6, 0.01),
+            "args": {"offset": offset, "length": length,
+                     "os_thread": thread},
         })
     trace = {"traceEvents": meta + events, "displayTimeUnit": "ms"}
     if path:
@@ -135,20 +147,22 @@ def to_fleet_chrome_trace(rank_segments: Dict[int, Iterable[Segment]],
         meta.append({"ph": "M", "pid": pid, "name": "process_name",
                      "args": {"name": f"tf-darshan {pid}"}})
         tids: dict = {}
-        for seg in rank_segments[rank]:
-            key = (seg.module, seg.path)
-            if key not in tids:
-                tids[key] = len(tids) + 1
-                meta.append({"ph": "M", "pid": pid, "tid": tids[key],
+        for module, spath, op, offset, length, start, end, thread \
+                in _segment_tuples(rank_segments[rank]):
+            key = (module, spath)
+            tid = tids.get(key)
+            if tid is None:
+                tid = tids[key] = len(tids) + 1
+                meta.append({"ph": "M", "pid": pid, "tid": tid,
                              "name": "thread_name",
-                             "args": {"name": f"{seg.module} {seg.path}"}})
+                             "args": {"name": f"{module} {spath}"}})
             events.append({
-                "ph": "X", "pid": pid, "tid": tids[key],
-                "name": f"{seg.op} {os.path.basename(seg.path)}",
-                "ts": seg.start * 1e6,
-                "dur": max((seg.end - seg.start) * 1e6, 0.01),
-                "args": {"offset": seg.offset, "length": seg.length,
-                         "os_thread": seg.thread},
+                "ph": "X", "pid": pid, "tid": tid,
+                "name": f"{op} {os.path.basename(spath)}",
+                "ts": start * 1e6,
+                "dur": max((end - start) * 1e6, 0.01),
+                "args": {"offset": offset, "length": length,
+                         "os_thread": thread},
             })
     if findings:
         insight_pids = set()

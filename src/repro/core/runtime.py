@@ -6,12 +6,17 @@ sequential/consecutive detection, exactly as Darshan's POSIX module does).
 The attach layer (repro.core.attach) routes intercepted I/O calls here;
 ProfileSession snapshots these buffers in situ.
 
-Every completed operation is published as a DXT ``Segment`` to both the
-trace buffer and any registered segment listeners — the hook the
-streaming insight engine (repro.insight) subscribes through.  Listeners
-must be O(1) and non-blocking (the engine side uses a bounded
-drop-oldest queue); a listener that raises is silently skipped so the
-instrumented application can never be taken down by a consumer.
+Every completed operation is appended to the columnar trace ring
+(``self.trace``, a ``repro.trace.TraceStore`` — the single segment data
+plane; ``self.dxt`` is the row-compatibility view over the same store)
+and, when segment listeners are registered, published as a DXT
+``Segment`` row — the hook the streaming insight engine (repro.insight)
+subscribes through.  Listeners must be O(1) and non-blocking (the
+engine side uses a bounded drop-oldest queue); a listener that raises
+is skipped so the instrumented application can never be taken down by a
+consumer, but every skip is counted in ``listener_errors`` (keyed by
+listener) so a broken detector surfaces in the report instead of
+silently disappearing.
 """
 from __future__ import annotations
 
@@ -23,6 +28,7 @@ from typing import Callable, Dict, Optional
 from repro.core import counters as C
 from repro.core.dxt import DXTBuffer, Segment
 from repro.core.records import FileRecord, ModuleBuffer
+from repro.trace import TraceStore
 
 DEFAULT_EXCLUDES = ("/proc/", "/sys/", "/dev/", "/etc/")
 
@@ -40,7 +46,8 @@ class DarshanRuntime:
                  dxt_capacity: int = 1 << 20):
         self.posix = ModuleBuffer("POSIX")
         self.stdio = ModuleBuffer("STDIO")
-        self.dxt = DXTBuffer(capacity=dxt_capacity)
+        self.trace = TraceStore(capacity=dxt_capacity)
+        self.dxt = DXTBuffer(store=self.trace)
         self.enabled = False
         self.exclude_prefixes = tuple(exclude_prefixes)
         self._fds: Dict[int, FdState] = {}
@@ -48,6 +55,10 @@ class DarshanRuntime:
         self._t0 = time.perf_counter()
         self.wall_t0 = time.time()
         self._listeners: list = []
+        # listener key -> swallowed-exception count (best-effort under
+        # the GIL; exists to make a crashing consumer visible, not for
+        # exact accounting)
+        self.listener_errors: Dict[str, int] = {}
 
     # ------------------------------------------------------------------ util
     def now(self) -> float:
@@ -75,15 +86,26 @@ class DarshanRuntime:
     def listener_count(self) -> int:
         return len(self._listeners)
 
-    def _emit(self, seg: Segment) -> None:
-        self.dxt.add(seg)
+    @staticmethod
+    def _listener_key(fn: Callable) -> str:
+        return getattr(fn, "__qualname__", None) or repr(fn)
+
+    def _emit(self, module: str, path: str, op: str, offset: int,
+              length: int, t0: float, t1: float) -> None:
+        self.trace.append(module, path, op, offset, length, t0, t1,
+                          threading.get_ident())
         listeners = self._listeners
         if listeners:
+            # the Segment row is only materialized when someone listens
+            seg = Segment(module, path, op, offset, length, t0, t1,
+                          threading.get_ident())
+            errors = self.listener_errors
             for fn in listeners:
                 try:
                     fn(seg)
                 except Exception:
-                    pass
+                    key = self._listener_key(fn)
+                    errors[key] = errors.get(key, 0) + 1
 
     def tracked(self, path: Optional[str]) -> bool:
         if not self.enabled or path is None:
@@ -102,8 +124,7 @@ class DarshanRuntime:
         rec.fadd("POSIX_F_META_TIME", t1 - t0)
         rec.fset_min("POSIX_F_OPEN_START_TIMESTAMP", t0)
         rec.fset_max("POSIX_F_OPEN_END_TIMESTAMP", t1)
-        self._emit(Segment("POSIX", path, "open", 0, 0, t0, t1,
-                             threading.get_ident()))
+        self._emit("POSIX", path, "open", 0, 0, t0, t1)
 
     def posix_read(self, fd: int, offset: Optional[int], length: int,
                    t0: float, t1: float, advance: bool) -> None:
@@ -139,8 +160,7 @@ class DarshanRuntime:
             fc["POSIX_F_READ_START_TIMESTAMP"] = t0
         if t1 > fc.get("POSIX_F_READ_END_TIMESTAMP", float("-inf")):
             fc["POSIX_F_READ_END_TIMESTAMP"] = t1
-        self._emit(Segment("POSIX", st.path, "read", off, length, t0, t1,
-                             threading.get_ident()))
+        self._emit("POSIX", st.path, "read", off, length, t0, t1)
 
     def posix_write(self, fd: int, offset: Optional[int], length: int,
                     t0: float, t1: float, advance: bool) -> None:
@@ -172,8 +192,7 @@ class DarshanRuntime:
             fc["POSIX_F_WRITE_START_TIMESTAMP"] = t0
         if t1 > fc.get("POSIX_F_WRITE_END_TIMESTAMP", float("-inf")):
             fc["POSIX_F_WRITE_END_TIMESTAMP"] = t1
-        self._emit(Segment("POSIX", st.path, "write", off, length, t0, t1,
-                             threading.get_ident()))
+        self._emit("POSIX", st.path, "write", off, length, t0, t1)
 
     def posix_seek(self, fd: int, new_pos: int, t0: float, t1: float) -> None:
         st = self._fds.get(fd)
@@ -183,8 +202,7 @@ class DarshanRuntime:
         rec = self.posix.record(st.path)
         rec.inc("POSIX_SEEKS")
         rec.fadd("POSIX_F_META_TIME", t1 - t0)
-        self._emit(Segment("POSIX", st.path, "seek", new_pos, 0, t0, t1,
-                           threading.get_ident()))
+        self._emit("POSIX", st.path, "seek", new_pos, 0, t0, t1)
 
     def posix_fsync(self, fd: int, t0: float, t1: float) -> None:
         st = self._fds.get(fd)
@@ -193,15 +211,13 @@ class DarshanRuntime:
         rec = self.posix.record(st.path)
         rec.inc("POSIX_FSYNCS")
         rec.fadd("POSIX_F_WRITE_TIME", t1 - t0)
-        self._emit(Segment("POSIX", st.path, "fsync", 0, 0, t0, t1,
-                           threading.get_ident()))
+        self._emit("POSIX", st.path, "fsync", 0, 0, t0, t1)
 
     def posix_stat(self, path: str, t0: float, t1: float) -> None:
         rec = self.posix.record(path)
         rec.inc("POSIX_STATS")
         rec.fadd("POSIX_F_META_TIME", t1 - t0)
-        self._emit(Segment("POSIX", path, "stat", 0, 0, t0, t1,
-                             threading.get_ident()))
+        self._emit("POSIX", path, "stat", 0, 0, t0, t1)
 
     def posix_close(self, fd: int, t0: float, t1: float) -> None:
         st = self._fds.pop(fd, None)
@@ -226,8 +242,7 @@ class DarshanRuntime:
         rec.inc("STDIO_BYTES_WRITTEN", length)
         rec.set_max("STDIO_MAX_BYTE_WRITTEN", max(offset + length - 1, 0))
         rec.fadd("STDIO_F_WRITE_TIME", t1 - t0)
-        self._emit(Segment("STDIO", path, "write", offset, length, t0, t1,
-                             threading.get_ident()))
+        self._emit("STDIO", path, "write", offset, length, t0, t1)
 
     def stdio_read(self, path: str, offset: int, length: int,
                    t0: float, t1: float) -> None:
@@ -236,15 +251,13 @@ class DarshanRuntime:
         rec.inc("STDIO_BYTES_READ", length)
         rec.set_max("STDIO_MAX_BYTE_READ", max(offset + length - 1, 0))
         rec.fadd("STDIO_F_READ_TIME", t1 - t0)
-        self._emit(Segment("STDIO", path, "read", offset, length, t0, t1,
-                             threading.get_ident()))
+        self._emit("STDIO", path, "read", offset, length, t0, t1)
 
     def stdio_flush(self, path: str, t0: float, t1: float) -> None:
         rec = self.stdio.record(path)
         rec.inc("STDIO_FLUSHES")
         rec.fadd("STDIO_F_META_TIME", t1 - t0)
-        self._emit(Segment("STDIO", path, "flush", 0, 0, t0, t1,
-                           threading.get_ident()))
+        self._emit("STDIO", path, "flush", 0, 0, t0, t1)
 
     def stdio_close(self, path: str, t0: float, t1: float) -> None:
         rec = self.stdio.record(path)

@@ -73,13 +73,16 @@ class ProfileSession:
         if self.insight_engine is not None:
             self.insight_engine.attach(self.rt)
             self.insight_engine.start(self.insight_interval_s)
-            self._insight_dropped_mark = self.insight_engine.bus.dropped
+            self._insight_dropped_mark = getattr(
+                self.insight_engine, "dropped_events",
+                self.insight_engine.bus.dropped)
         # Nested sessions share the runtime (e.g. a fleet RankReporter
         # spanning the run with a StepCallback window inside): stop()
         # restores rather than clears, so the inner window's end doesn't
         # blind the outer one.
         self._enabled_before = self.rt.enabled
         self.rt.enabled = True
+        self._listener_errors_mark = dict(self.rt.listener_errors)
         self._start_snap = self.rt.snapshot()
         self._t0 = self._start_snap["time"]
         self._active = True
@@ -98,11 +101,16 @@ class ProfileSession:
         self._active = False
         d_posix = delta(stop_snap["POSIX"], self._start_snap["POSIX"])
         d_stdio = delta(stop_snap["STDIO"], self._start_snap["STDIO"])
-        segs = self.rt.dxt.window(self._t0, stop_snap["time"])
+        cols = self.rt.trace.window(self._t0, stop_snap["time"])
         report = analyze(d_posix, d_stdio,
                          elapsed_s=stop_snap["time"] - self._t0,
-                         dxt_segments=len(segs))
-        report.segments = segs          # for export/TraceViewer
+                         dxt_segments=len(cols))
+        report.segments_columns = cols  # rows derive lazily on access
+        mark = getattr(self, "_listener_errors_mark", {})
+        report.listener_errors = {
+            k: v - mark.get(k, 0)
+            for k, v in self.rt.listener_errors.items()
+            if v - mark.get(k, 0) > 0}
         if self.insight_engine is not None:
             # Only findings active within this window: the owned engine
             # persists across session restarts (StepCallback's every=N
@@ -110,7 +118,8 @@ class ProfileSession:
             report.findings = [f for f in self.insight_engine.findings
                                if f.window[1] >= self._t0]
             report.insight_dropped_events = (
-                self.insight_engine.bus.dropped
+                getattr(self.insight_engine, "dropped_events",
+                        self.insight_engine.bus.dropped)
                 - getattr(self, "_insight_dropped_mark", 0))
         self.reports.append(report)
         return report
@@ -247,7 +256,8 @@ class ProfileServer:
         check_hello(msg.payload, side="client")
         return msg.reply("hello", {"link_v": LINK_VERSION,
                                    "rank": srv.rank,
-                                   "nprocs": srv.nprocs})
+                                   "nprocs": srv.nprocs,
+                                   "caps": ["segments_columns"]})
 
     @staticmethod
     def _msg_start(endpoint, msg: Message) -> Message:

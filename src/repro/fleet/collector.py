@@ -25,7 +25,13 @@ Clock alignment: reporters measure their offset against the collector's
 clock with an NTP-style handshake (``clock`` probe -> ``clock_reply``,
 offset = t_coll - (t_send + t_recv)/2 at minimum RTT) and ship the
 result inside their report payload; the collector applies it to every
-segment timestamp, so the merged timeline is ordered on one clock.
+segment timestamp (one vectorized shift over the columnar batch), so
+the merged timeline is ordered on one clock.  One-way (spool)
+reporters instead ship a *wall* offset measured against the spool
+file's mtime — the filesystem clock is the medium both sides share —
+and the collector converts it onto the fleet clock through its own
+wall anchor (``wall_t0``, captured at the same instant as the fleet
+clock's zero).
 """
 from __future__ import annotations
 
@@ -53,6 +59,9 @@ class FleetCollector:
         # standalone (non-streaming) pushes: persistent, always reported
         self._extra_findings: List[Finding] = []
         self._t0 = time.perf_counter()
+        # wall-clock anchor: time.time() at fleet-clock zero, the pivot
+        # that converts spool-measured wall offsets onto the fleet clock
+        self.wall_t0 = time.time()
         self._lock = threading.Lock()
         self.stats = {"lines": 0, "reports": 0, "hellos": 0,
                       "clock_probes": 0, "findings": 0, "errors": 0,
@@ -127,7 +136,13 @@ class FleetCollector:
             s.host = str(msg.payload.get("host", ""))
             s.pid = int(msg.payload.get("pid", 0))
         self._bump("hellos")
-        return encode("hello", msg.rank, {"link_v": LINK_VERSION})
+        # caps advertises optional payload shapes this collector can
+        # decode; a reporter downgrades to the legacy row wire when the
+        # cap is missing (an old collector would otherwise silently
+        # read zero segments out of a columnar report)
+        return encode("hello", msg.rank,
+                      {"link_v": LINK_VERSION,
+                       "caps": ["segments_columns"]})
 
     @staticmethod
     def _msg_clock(endpoint, msg: Message) -> str:
@@ -166,12 +181,17 @@ class FleetCollector:
         per_file = payloads.decode_records(p.get("posix", {}))
         clock = p.get("clock") or {}
         offset = clock.get("offset_s")
-        offset = 0.0 if offset is None else float(offset)
-        segments = payloads.decode_segments(p.get("segments", []))
-        aligned = [seg._replace(start=seg.start + offset,
-                                end=seg.end + offset)
-                   for seg in segments]
-        aligned.sort(key=lambda s: s.start)
+        if offset is None:
+            # one-way transport fallback: a wall offset (measured
+            # against the spool file mtime) pivoted through this
+            # collector's own wall anchor lands on the fleet clock
+            wall_offset = clock.get("wall_offset_s")
+            offset = (float(wall_offset) - self.wall_t0
+                      if wall_offset is not None else 0.0)
+        else:
+            offset = float(offset)
+        segments = payloads.decode_report_segments(p)
+        aligned = segments.shift_time(offset).sorted_by_start()
         findings = payloads.decode_findings(p.get("findings", []),
                                             rank=msg.rank)
         with self._lock:
@@ -192,6 +212,9 @@ class FleetCollector:
                     "STDIO", payloads.decode_records(p.get("stdio", {})))
             s.segments = aligned
             s.findings = findings
+            s.listener_errors = {
+                str(k): int(v)
+                for k, v in (p.get("listener_errors") or {}).items()}
             # the final report supersedes this rank's mid-run pushes
             self._streamed.pop(msg.rank, None)
 

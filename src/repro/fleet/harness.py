@@ -125,7 +125,8 @@ def simulate_fleet(
         make_insight: Optional[Callable[[], object]] = None,
         insight_interval_s: float = 0.5, trace: bool = True,
         make_transport: Optional[Callable[[int], object]] = None,
-        collect: bool = True) -> Optional[FleetReport]:
+        collect: bool = True,
+        segments_wire: str = "columns") -> Optional[FleetReport]:
     """Run ``workload(rank, io)`` on ``nranks`` threads, each with a
     private runtime + RankReporter, ship every window through the wire
     protocol into ``collector``, and return the aggregated FleetReport.
@@ -153,7 +154,8 @@ def simulate_fleet(
         reporters.append(RankReporter(r, nprocs=nranks, runtime=rt,
                                       auto_attach=False, insight=insight,
                                       insight_interval_s=insight_interval_s,
-                                      trace=trace))
+                                      trace=trace,
+                                      segments_wire=segments_wire))
 
     errors: List[BaseException] = []
 

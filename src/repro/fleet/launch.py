@@ -67,7 +67,8 @@ def _build_insight(spec, fast_tier_mb_s: Optional[float]):
 def _child_main(rank: int, nranks: int, workload, transport_spec,
                 clock_skew: float, throttle, insight_spec,
                 fast_tier_mb_s, insight_interval_s: float, trace: bool,
-                handshake_rounds: int, stream_interval_s: float) -> None:
+                handshake_rounds: int, stream_interval_s: float,
+                segments_wire: str = "columns") -> None:
     """One rank: profile the workload against a private runtime, stream
     findings mid-run, ship the window, exit 0 on success."""
     try:
@@ -78,7 +79,7 @@ def _child_main(rank: int, nranks: int, workload, transport_spec,
         reporter = RankReporter(rank, nprocs=nranks, runtime=rt,
                                 auto_attach=False, insight=insight,
                                 insight_interval_s=insight_interval_s,
-                                trace=trace)
+                                trace=trace, segments_wire=segments_wire)
         kind = transport_spec[0]
         if kind == "tcp":
             transport = TcpTransport(transport_spec[1], transport_spec[2])
@@ -123,7 +124,8 @@ def run_spawned_fleet(
         stream_interval_s: float = 0.25,
         idle_timeout_s: float = 5.0,
         mp_start_method: Optional[str] = None,
-        timeout_s: float = 120.0) -> FleetReport:
+        timeout_s: float = 120.0,
+        segments_wire: str = "columns") -> FleetReport:
     """Run ``workload(rank, io)`` on ``nranks`` OS processes and return
     the aggregated FleetReport.
 
@@ -167,7 +169,7 @@ def run_spawned_fleet(
                       (clock_skew_s[r] if clock_skew_s else 0.0),
                       (throttles or {}).get(r), insight, fast_tier_mb_s,
                       insight_interval_s, trace, handshake_rounds,
-                      stream_interval_s))
+                      stream_interval_s, segments_wire))
             p.start()
             procs.append(p)
 

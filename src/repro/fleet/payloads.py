@@ -18,6 +18,12 @@ Kinds (all built-in ``repro.link`` kinds):
                        records, DXT segments, file sizes, insight
                        findings, elapsed time, and the measured clock
                        offset (rank clock + offset = fleet clock).
+                       Segments ride columnar by default
+                       (``segments_columns``: one object of parallel
+                       arrays + interned string tables — the
+                       ``repro.trace.SegmentColumns`` wire shape) or as
+                       legacy per-row lists (``segments``); consumers
+                       accept both.
   * ``findings``     — standalone findings push (streaming mode;
                        ``{"streaming": true}`` marks mid-run pushes the
                        final report supersedes).
@@ -30,11 +36,13 @@ from typing import Dict, List, Optional
 from repro.core.dxt import Segment
 from repro.core.records import FileRecord
 from repro.insight.detectors import Finding
-from repro.link.messages import LINK_VERSION, encode
+from repro.link.messages import LINK_VERSION, WireError, encode
+from repro.trace import SegmentColumns
 
 
 # ----------------------------------------------------------- components
 def encode_segments(segments) -> List[list]:
+    """Legacy per-row wire shape (one list per segment)."""
     return [[s.module, s.path, s.op, s.offset, s.length, s.start, s.end,
              s.thread] for s in segments]
 
@@ -42,6 +50,35 @@ def encode_segments(segments) -> List[list]:
 def decode_segments(rows) -> List[Segment]:
     return [Segment(r[0], r[1], r[2], int(r[3]), int(r[4]),
                     float(r[5]), float(r[6]), int(r[7])) for r in rows]
+
+
+def encode_segments_columns(segments) -> dict:
+    """The ``segments_columns`` batch shape: parallel arrays + interned
+    string tables, one object for the whole window (the string tables
+    ship once instead of once per row)."""
+    if not isinstance(segments, SegmentColumns):
+        segments = SegmentColumns.from_rows(segments)
+    return segments.to_wire()
+
+
+def decode_segments_columns(obj: dict) -> SegmentColumns:
+    # OverflowError included: numpy raises it (not ValueError) for
+    # values outside the column dtype, and one corrupt line must stay
+    # a WireError so a spool drain survives it
+    try:
+        return SegmentColumns.from_wire(obj)
+    except (KeyError, TypeError, ValueError, OverflowError) as e:
+        raise WireError(f"bad segments_columns payload: {e}") from e
+
+
+def decode_report_segments(payload: dict) -> SegmentColumns:
+    """The DXT batch of a ``report`` payload, whichever wire shape it
+    rode (columnar ``segments_columns`` or legacy per-row
+    ``segments``), as one ``SegmentColumns``."""
+    if "segments_columns" in payload:
+        return decode_segments_columns(payload["segments_columns"])
+    return SegmentColumns.from_rows(
+        decode_segments(payload.get("segments", [])))
 
 
 def encode_records(records: Dict[str, FileRecord]) -> dict:
@@ -92,12 +129,22 @@ def encode_hello(rank: int, nprocs: int, pid: Optional[int] = None,
 
 def encode_report(rank: int, report, nprocs: int = 1,
                   clock_offset_s: Optional[float] = None,
-                  clock_rtt_s: Optional[float] = None) -> str:
+                  clock_rtt_s: Optional[float] = None,
+                  clock_wall_offset_s: Optional[float] = None,
+                  segments_wire: str = "columns") -> str:
     """Serialize one rank's SessionReport window.
 
     ``clock_offset_s`` is the handshake-measured offset such that
     rank-local segment times + offset land on the fleet timeline; None
-    means "not measured" (the collector falls back to zero)."""
+    means "not measured".  ``clock_wall_offset_s`` is the one-way
+    (spool) fallback: rank clock + wall offset = wall-clock time, from
+    which the collector derives the fleet offset against its own wall
+    anchor.  ``segments_wire`` picks the DXT batch shape: ``"columns"``
+    (default — one ``segments_columns`` object of parallel arrays) or
+    ``"rows"`` (the legacy per-row ``segments`` list)."""
+    if segments_wire not in ("columns", "rows"):
+        raise ValueError(f"segments_wire must be 'columns' or 'rows', "
+                         f"got {segments_wire!r}")
     # SessionReport carries POSIX per-file records; STDIO rides as the
     # module rollup only (mirrors what analyze() retains).
     payload = {
@@ -106,10 +153,20 @@ def encode_report(rank: int, report, nprocs: int = 1,
         "posix": encode_records(report.per_file),
         "stdio_summary": encode_summary(report.stdio),
         "file_sizes": dict(report.file_sizes),
-        "segments": encode_segments(getattr(report, "segments", []) or []),
         "findings": [f.to_dict() for f in report.findings],
-        "clock": {"offset_s": clock_offset_s, "rtt_s": clock_rtt_s},
+        "listener_errors": dict(getattr(report, "listener_errors", None)
+                                or {}),
+        "clock": {"offset_s": clock_offset_s, "rtt_s": clock_rtt_s,
+                  "wall_offset_s": clock_wall_offset_s},
     }
+    if segments_wire == "columns":
+        cols = getattr(report, "segments_columns", None)
+        if cols is None:
+            cols = getattr(report, "segments", []) or []
+        payload["segments_columns"] = encode_segments_columns(cols)
+    else:
+        payload["segments"] = encode_segments(
+            getattr(report, "segments", []) or [])
     return encode("report", rank, payload)
 
 

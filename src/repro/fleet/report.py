@@ -19,11 +19,17 @@ from repro.core.export import (darshan_header_lines, darshan_record_lines,
                                to_fleet_chrome_trace)
 from repro.core.records import FileRecord
 from repro.insight.detectors import Finding
+from repro.trace import SegmentColumns
 
 
 @dataclass
 class RankSlice:
-    """Everything one rank shipped, normalized onto the fleet timeline."""
+    """Everything one rank shipped, normalized onto the fleet timeline.
+
+    ``segments`` is a columnar ``SegmentColumns`` batch when the slice
+    was ingested from the wire (it iterates as ``Segment`` rows, so
+    row-world consumers keep working); hand-built slices may still
+    assign a plain list of rows."""
     rank: int
     nprocs: int = 1
     host: str = ""
@@ -37,8 +43,18 @@ class RankSlice:
         default_factory=lambda: ModuleSummary("STDIO"))
     per_file: Dict[str, FileRecord] = field(default_factory=dict)
     file_sizes: Dict[str, int] = field(default_factory=dict)
-    segments: List[Segment] = field(default_factory=list)  # fleet clock
+    # fleet clock; SegmentColumns (wire-ingested) or List[Segment]
+    segments: object = field(default_factory=list)
     findings: List[Finding] = field(default_factory=list)  # rank set
+    # swallowed segment-listener exceptions, keyed by listener
+    listener_errors: Dict[str, int] = field(default_factory=dict)
+
+    def segments_table(self) -> SegmentColumns:
+        """This rank's window as a columnar batch (converting once when
+        the slice was hand-built from rows)."""
+        if isinstance(self.segments, SegmentColumns):
+            return self.segments
+        return SegmentColumns.from_rows(self.segments)
 
 
 _SUM_INT = ("files_opened", "read_only_files", "write_only_files",
@@ -93,6 +109,13 @@ class FleetReport:
         out = [(r, seg) for r, s in self.ranks.items() for seg in s.segments]
         out.sort(key=lambda rs: rs[1].start)
         return out
+
+    def merged_columns(self) -> SegmentColumns:
+        """The whole fleet's segments as one columnar batch on the
+        fleet clock (the table behind ``Report.segments_table()``)."""
+        return SegmentColumns.concat(
+            [self.ranks[r].segments_table()
+             for r in sorted(self.ranks)]).sorted_by_start()
 
     def rank_findings(self, rank: int) -> List[Finding]:
         return [f for f in self.findings if f.rank == rank]

@@ -21,8 +21,12 @@ onto one clock:
     offset = t_coll - (t_send + t_recv) / 2      (midpoint estimate)
     keep the sample with the smallest RTT over a few rounds
 
-One-way transports (spool) skip the handshake; the offset ships as
-"not measured" and the collector falls back to zero.
+One-way transports (spool) cannot carry the reply, so they handshake
+against the *filesystem* clock instead: the reporter appends a probe
+line and reads the spool file's mtime (``SpoolTransport.mtime_probe``),
+measuring a wall offset (rank clock + offset = wall time) that the
+collector pivots onto the fleet clock through its own wall anchor —
+spool-only fleets get aligned timelines too, at mtime resolution.
 
 Streaming: ``start_streaming(transport)`` polls the session's insight
 engine on a background thread and pushes newly raised findings as
@@ -61,15 +65,24 @@ class RankReporter:
     def __init__(self, rank: int, nprocs: int = 1,
                  runtime: Optional[DarshanRuntime] = None,
                  auto_attach: bool = True, insight=False,
-                 insight_interval_s: float = 0.5, trace: bool = True):
+                 insight_interval_s: float = 0.5, trace: bool = True,
+                 segments_wire: str = "columns"):
         self.rank = rank
         self.nprocs = nprocs
         self.rt = runtime or get_runtime()
         self.session = ProfileSession(self.rt, auto_attach=auto_attach,
                                       trace=trace, insight=insight,
                                       insight_interval_s=insight_interval_s)
+        # DXT batch wire shape: "columns" (segments_columns parallel
+        # arrays, default) or "rows" (legacy per-row lists).  hello()
+        # may downgrade to rows when the collector doesn't advertise
+        # the segments_columns cap (old collectors read zero segments
+        # out of a columnar payload — silently).
+        self.segments_wire = segments_wire
+        self._negotiated_wire: Optional[str] = None
         self.clock_offset_s: Optional[float] = None
         self.clock_rtt_s: Optional[float] = None
+        self.clock_wall_offset_s: Optional[float] = None
         self._stream_stop = threading.Event()
         self._stream_thread: Optional[threading.Thread] = None
         self._streamed_count = 0
@@ -104,8 +117,17 @@ class RankReporter:
         a bare ``ok`` are accepted as v1."""
         t = as_transport(transport)
         reply = t(payloads.encode_hello(self.rank, self.nprocs))
-        if reply is None or not reply.startswith("{"):
-            if reply is not None and reply.startswith("error"):
+        if reply is None:
+            # One-way transport: no reply to negotiate against, so the
+            # configured wire shape stands (columns by default).  A
+            # spool is written and drained by the same deployment, so
+            # both ends share a version; draining a *columnar* spool
+            # capture with pre-columnar code is the one unsupported
+            # direction — ship with segments_wire="rows" if a capture
+            # must stay readable by older tooling.
+            return
+        if not reply.startswith("{"):
+            if reply.startswith("error"):
                 raise WireError(
                     f"collector rejected hello from rank {self.rank}: "
                     f"{reply}")
@@ -114,13 +136,20 @@ class RankReporter:
                 raise WireError(
                     f"collector closed the connection during hello from "
                     f"rank {self.rank}")
-            return                      # one-way transport / legacy ack
+            # bare legacy ack: the peer predates typed hello (and the
+            # columnar segments wire) — ship rows it can decode
+            self._negotiated_wire = "rows"
+            return
         msg = decode(reply)
         if msg.kind == "error":
             raise WireError(f"collector rejected hello from rank "
                             f"{self.rank}: {msg.payload.get('error')}")
         if msg.kind == "hello":
             check_hello(msg.payload, side="collector")
+            caps = msg.payload.get("caps") or []
+            self._negotiated_wire = (
+                self.segments_wire if "segments_columns" in caps
+                else "rows")
 
     def handshake(self, transport, rounds: int = 5) -> float:
         """Measure this rank's clock offset against the collector.
@@ -150,6 +179,27 @@ class RankReporter:
         self.clock_rtt_s = best_rtt
         return best_offset
 
+    def handshake_spool(self, transport, rounds: int = 3) -> float:
+        """One-way clock alignment over a spool: probe the spool file's
+        mtime (the filesystem clock) and keep the sample with the
+        smallest local write latency.  Returns the wall offset such
+        that ``rank_time + offset`` is wall-clock time; cached for
+        ``ship`` (the collector pivots it onto the fleet clock)."""
+        best_lat = float("inf")
+        best_offset = 0.0
+        for _ in range(max(rounds, 1)):
+            t_send = self.rt.now()
+            mtime = transport.mtime_probe(
+                encode("clock", self.rank, {"t_send": t_send}))
+            t_recv = self.rt.now()
+            lat = t_recv - t_send
+            if lat < best_lat:
+                best_lat = lat
+                best_offset = mtime - (t_send + t_recv) / 2.0
+        self.clock_wall_offset_s = best_offset
+        self.clock_rtt_s = best_lat
+        return best_offset
+
     def payload_lines(self, report: Optional[SessionReport] = None) -> list:
         """The hello + report wire lines for the given (default: last)
         window — what ``ship`` sends, exposed for dumps and replay."""
@@ -159,20 +209,31 @@ class RankReporter:
             report = self.reports[-1]
         return [
             payloads.encode_hello(self.rank, self.nprocs),
-            payloads.encode_report(self.rank, report, nprocs=self.nprocs,
-                                   clock_offset_s=self.clock_offset_s,
-                                   clock_rtt_s=self.clock_rtt_s),
+            payloads.encode_report(
+                self.rank, report, nprocs=self.nprocs,
+                clock_offset_s=self.clock_offset_s,
+                clock_rtt_s=self.clock_rtt_s,
+                clock_wall_offset_s=self.clock_wall_offset_s,
+                segments_wire=self.effective_segments_wire),
         ]
+
+    @property
+    def effective_segments_wire(self) -> str:
+        """The configured wire shape, unless hello negotiation had to
+        downgrade to rows for a pre-columnar collector."""
+        return self._negotiated_wire or self.segments_wire
 
     def ship(self, transport,
              report: Optional[SessionReport] = None,
              handshake_rounds: int = 5) -> None:
-        """hello -> clock handshake (duplex transports) -> report ->
-        bye, over one transport."""
+        """hello -> clock handshake (duplex: reply-based; one-way spool:
+        file-mtime) -> report -> bye, over one transport."""
         t = as_transport(transport)
         self.hello(t)
         if t.duplex:
             self.handshake(t, rounds=handshake_rounds)
+        elif hasattr(t, "mtime_probe"):
+            self.handshake_spool(t, rounds=handshake_rounds)
         if report is None:
             if not self.reports:
                 raise RuntimeError("no stopped window to ship")
@@ -180,7 +241,9 @@ class RankReporter:
         t(payloads.encode_report(
             self.rank, report, nprocs=self.nprocs,
             clock_offset_s=self.clock_offset_s,
-            clock_rtt_s=self.clock_rtt_s))
+            clock_rtt_s=self.clock_rtt_s,
+            clock_wall_offset_s=self.clock_wall_offset_s,
+            segments_wire=self.effective_segments_wire))
         t(encode("bye", self.rank, {}))
 
     def ship_socket(self, host: str, port: int,

@@ -50,6 +50,13 @@ class InsightEngine:
         self._rt: Optional[DarshanRuntime] = None
         self._window_start = 0.0
         self._zero_reads_total = 0
+        # columnar fast path: cursor into the runtime's TraceStore ring
+        self._seq = 0
+        self._use_store = False
+        # events lost before analysis saw them (ring overwrites on the
+        # columnar path, bus drops on the row path)
+        self.dropped_events = 0
+        self._bus_dropped_mark = 0
         self._active_idx: Dict[str, int] = {}
         self._last_new: List[Finding] = []
         self._poll_lock = threading.Lock()
@@ -66,11 +73,34 @@ class InsightEngine:
         if self._rt is not None:
             self.detach()
         self.bus.drain()    # stale segments carry a previous clock origin
-        rt.add_segment_listener(self.bus.push)
+        self._bus_dropped_mark = self.bus.dropped
+        store = getattr(rt, "trace", None)
+        # Columnar runtimes feed poll() straight from the trace ring —
+        # subscribing the bus there would make every intercepted op
+        # materialize a Segment row just for poll() to throw it away.
+        # The bus listener is only wired when the ring cannot serve
+        # (no store, or tracing disabled for this runtime).
+        self._use_store = store is not None and store.enabled
+        if not self._use_store:
+            rt.add_segment_listener(self.bus.push)
         self._rt = rt
+        self._seq = store.seq if store is not None else 0
         self._window_start = rt.now()
         self._zero_reads_total = self._zero_read_total(rt)
         return self
+
+    def _switch_source(self, rt: DarshanRuntime, store) -> None:
+        """Follow the runtime's trace flag: ring on -> read by cursor
+        and drop the bus hook; ring off -> hook the bus so segments
+        keep reaching analysis the way the pre-columnar engine did."""
+        if store.enabled:
+            rt.remove_segment_listener(self.bus.push)
+            self._seq = store.seq
+            self._use_store = True
+        else:
+            rt.add_segment_listener(self.bus.push)
+            self._bus_dropped_mark = self.bus.dropped
+            self._use_store = False
 
     def detach(self) -> None:
         """Unsubscribe and stop the background poller.  Idempotent."""
@@ -144,7 +174,35 @@ class InsightEngine:
                 total = self._zero_read_total(rt)
                 zero_delta = total - self._zero_reads_total
                 self._zero_reads_total = total
-            feats = extract(segs, t0, t1, zero_reads=zero_delta,
+            # Columnar fast path: read the window straight out of the
+            # runtime's TraceStore ring (a SegmentColumns slice — the
+            # vectorized extract runs with no per-segment Python loop,
+            # and attach() skipped the bus listener so the hot path
+            # never materialized row objects either).  Detached engines
+            # and trace-disabled runtimes keep the bus row path, and a
+            # runtime whose trace flag flips mid-engagement (a nested
+            # session constructed with trace=False) switches the engine
+            # between the two sources at poll granularity instead of
+            # going silently blind.
+            store = getattr(rt, "trace", None) if rt is not None else None
+            # this window is analyzed from the PRE-switch source: a ring
+            # that just went dark still owes its tail (cursor drain), a
+            # ring that just lit up starts at the next window (the bus
+            # carried the interim)
+            use_store_now = store is not None and self._use_store
+            if rt is not None and store is not None \
+                    and store.enabled != self._use_store:
+                self._switch_source(rt, store)
+            if use_store_now:
+                window, self._seq, ring_dropped = store.since(self._seq)
+                self.dropped_events += ring_dropped
+                self._bus_dropped_mark = self.bus.dropped
+            else:
+                window = segs
+                self.dropped_events += \
+                    self.bus.dropped - self._bus_dropped_mark
+                self._bus_dropped_mark = self.bus.dropped
+            feats = extract(window, t0, t1, zero_reads=zero_delta,
                             monitor_read_mb_s=self._monitor_mb_s(t0, t1))
             new: List[Finding] = []
             for det in self.detectors:

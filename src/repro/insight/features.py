@@ -8,14 +8,26 @@ ratios, and the read-latency tail computed inside the dominant size bin
 so that latency variance across access sizes is not mistaken for
 stragglers (the paper's §V-B diagnostic: same-length reads varying by
 milliseconds).
+
+``extract`` accepts either a row iterable (``Segment``s — the legacy
+shape) or a columnar ``repro.trace.SegmentColumns`` batch.  The
+columnar path (``extract_columns``) computes the identical features
+with numpy reductions over the column slices — no per-segment Python
+loop — and is the hot path the insight engine drives; the row loop
+(``extract_rows``) is kept both for row-world callers and as the
+reference implementation the vectorized path is checked against in
+tests and the benchmark smoke bar.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional
 
+import numpy as np
+
 from repro.core import counters as C
 from repro.core.dxt import Segment
+from repro.trace import SegmentColumns
 
 @dataclass
 class WindowFeatures:
@@ -73,16 +85,48 @@ class WindowFeatures:
         return self.reads + self.writes
 
 
-def _pct(sorted_vals: List[float], q: float) -> float:
-    if not sorted_vals:
+def _pct(sorted_vals, q: float) -> float:
+    """Index-style percentile over a pre-sorted list or numpy array —
+    one formula shared by the row and columnar extractors."""
+    if len(sorted_vals) == 0:
         return 0.0
     idx = min(len(sorted_vals) - 1, int(q / 100.0 * len(sorted_vals)))
     return sorted_vals[idx]
 
 
-def extract(segments: Iterable[Segment], t0: float, t1: float,
+def _finalize_rates(f: WindowFeatures) -> WindowFeatures:
+    """Derived rate/ratio fields, shared by BOTH extractors — one copy,
+    so the vectorized path can never drift from the reference loop on
+    this arithmetic."""
+    f.read_mb_s = f.bytes_read / f.duration_s / 1e6
+    f.write_mb_s = f.bytes_written / f.duration_s / 1e6
+    f.reads_per_open = f.reads / max(f.opens, 1)
+    f.meta_ops = f.opens + f.stats + f.seeks
+    f.meta_ratio = f.meta_ops / max(f.data_ops, 1)
+    meta_busy = f.busy_s - f.read_busy_s - f.write_busy_s - f.sync_busy_s
+    if f.busy_s > 0:
+        f.meta_time_frac = meta_busy / f.busy_s
+        f.sync_time_frac = (f.write_busy_s + f.sync_busy_s) / f.busy_s
+    return f
+
+
+def extract(segments, t0: float, t1: float,
             zero_reads: int = 0,
             monitor_read_mb_s: Optional[float] = None) -> WindowFeatures:
+    """Window features over ``segments`` — a columnar
+    ``SegmentColumns`` batch (vectorized path) or any iterable of
+    ``Segment`` rows (reference loop)."""
+    if isinstance(segments, SegmentColumns):
+        return extract_columns(segments, t0, t1, zero_reads=zero_reads,
+                               monitor_read_mb_s=monitor_read_mb_s)
+    return extract_rows(segments, t0, t1, zero_reads=zero_reads,
+                        monitor_read_mb_s=monitor_read_mb_s)
+
+
+def extract_rows(segments: Iterable[Segment], t0: float, t1: float,
+                 zero_reads: int = 0,
+                 monitor_read_mb_s: Optional[float] = None) \
+        -> WindowFeatures:
     f = WindowFeatures(t0=t0, t1=t1, zero_reads=zero_reads,
                        monitor_read_mb_s=monitor_read_mb_s)
     f.duration_s = max(t1 - t0, 1e-9)
@@ -138,29 +182,24 @@ def extract(segments: Iterable[Segment], t0: float, t1: float,
     f.files_read = len(read_files)
     f.files_written = len(write_files)
     f.files_touched = len(all_files)
-    f.read_mb_s = f.bytes_read / f.duration_s / 1e6
-    f.write_mb_s = f.bytes_written / f.duration_s / 1e6
 
     if f.reads:
         read_sizes.sort()
         f.avg_read_size = f.bytes_read / f.reads
         f.p50_read_size = _pct(read_sizes, 50)
-    f.reads_per_open = f.reads / max(f.opens, 1)
 
     f.eligible_seq_reads = eligible
     if eligible:
         f.seq_read_frac = seq / eligible
         f.consec_read_frac = consec / eligible
 
-    f.meta_ops = f.opens + f.stats + f.seeks
-    f.meta_ratio = f.meta_ops / max(f.data_ops, 1)
-    meta_busy = f.busy_s - f.read_busy_s - f.write_busy_s - f.sync_busy_s
-    if f.busy_s > 0:
-        f.meta_time_frac = meta_busy / f.busy_s
-        f.sync_time_frac = (f.write_busy_s + f.sync_busy_s) / f.busy_s
+    _finalize_rates(f)
 
     if lat_by_bin:
-        dominant = max(lat_by_bin, key=lambda b: len(lat_by_bin[b]))
+        # dominant bin = most populated; ties break to the smallest bin
+        # index (the deterministic rule the columnar path shares)
+        maxc = max(len(v) for v in lat_by_bin.values())
+        dominant = min(b for b, v in lat_by_bin.items() if len(v) == maxc)
         lats = sorted(lat_by_bin[dominant])
         f.tail_bin_reads = len(lats)
         f.read_lat_p50 = _pct(lats, 50)
@@ -168,3 +207,80 @@ def extract(segments: Iterable[Segment], t0: float, t1: float,
         f.read_lat_max = lats[-1]
         f.lat_tail_ratio = f.read_lat_p95 / max(f.read_lat_p50, 1e-9)
     return f
+
+
+def extract_columns(cols: SegmentColumns, t0: float, t1: float,
+                    zero_reads: int = 0,
+                    monitor_read_mb_s: Optional[float] = None) \
+        -> WindowFeatures:
+    """The vectorized twin of ``extract_rows``: identical features from
+    a columnar batch via numpy reductions (no per-segment loop).  Int
+    features match the row loop exactly; float features to summation
+    rounding."""
+    f = WindowFeatures(t0=t0, t1=t1, zero_reads=zero_reads,
+                       monitor_read_mb_s=monitor_read_mb_s)
+    f.duration_s = max(t1 - t0, 1e-9)
+
+    if len(cols):
+        dur = cols.durations()
+        lengths = cols.length
+        pids = cols.path_ids
+        f.busy_s = float(dur.sum())
+        f.files_touched = int(np.unique(pids).size)
+
+        read_m = cols.op_mask("read")
+        write_m = cols.op_mask("write")
+        flush_m = cols.op_mask("flush")
+        fsync_m = cols.op_mask("fsync")
+        f.reads = int(read_m.sum())
+        f.writes = int(write_m.sum())
+        f.opens = int(cols.op_mask("open").sum())
+        f.stats = int(cols.op_mask("stat").sum())
+        f.seeks = int(cols.op_mask("seek").sum())
+        f.flushes = int(flush_m.sum())
+        f.fsyncs = int(fsync_m.sum())
+        f.read_busy_s = float(dur[read_m].sum())
+        f.write_busy_s = float(dur[write_m].sum())
+        f.sync_busy_s = float(dur[flush_m | fsync_m].sum())
+        f.bytes_read = int(lengths[read_m].sum())
+        f.bytes_written = int(lengths[write_m].sum())
+        f.files_read = int(np.unique(pids[read_m]).size)
+        f.files_written = int(np.unique(pids[write_m]).size)
+
+        if f.reads:
+            sizes = lengths[read_m]
+            bins = np.searchsorted(C.SIZE_BIN_BOUNDS, sizes, side="right")
+            hist = np.bincount(bins, minlength=len(C.SIZE_BIN_NAMES))
+            f.read_size_hist = hist.tolist()
+            f.avg_read_size = f.bytes_read / f.reads
+            f.p50_read_size = float(_pct(np.sort(sizes), 50))
+
+            # sequential / consecutive fractions: within each file, in
+            # arrival order, compare each read's offset to the previous
+            # read's end — a stable sort by path id keeps arrival order
+            # inside every group, so "the previous row in the group" IS
+            # the row-loop's prev_end.
+            offs = cols.offset[read_m]
+            ends = offs + sizes
+            order = np.argsort(pids[read_m], kind="stable")
+            ps, offs, ends = pids[read_m][order], offs[order], ends[order]
+            same = ps[1:] == ps[:-1]
+            eligible = int(same.sum())
+            f.eligible_seq_reads = eligible
+            if eligible:
+                f.consec_read_frac = \
+                    int((same & (offs[1:] == ends[:-1])).sum()) / eligible
+                f.seq_read_frac = \
+                    int((same & (offs[1:] >= ends[:-1])).sum()) / eligible
+
+            # read-latency tail inside the dominant size bin (argmax
+            # breaks ties toward the smallest bin, like the row loop)
+            dominant = int(np.argmax(hist))
+            lats = np.sort(dur[read_m][bins == dominant])
+            f.tail_bin_reads = int(lats.size)
+            f.read_lat_p50 = float(_pct(lats, 50))
+            f.read_lat_p95 = float(_pct(lats, 95))
+            f.read_lat_max = float(lats[-1])
+            f.lat_tail_ratio = f.read_lat_p95 / max(f.read_lat_p50, 1e-9)
+
+    return _finalize_rates(f)

@@ -261,6 +261,21 @@ class SpoolTransport(Transport):
             self._f.flush()
         return None
 
+    def mtime_probe(self, line: str) -> float:
+        """Append ``line``, flush, and return the spool file's mtime —
+        the *filesystem* clock's stamp for the write.
+
+        This is the one-way substitute for a clock-handshake reply: the
+        shared filesystem is the medium both ends can read, so a
+        reporter can measure ``mtime - local_now`` and ship a wall
+        offset instead of skipping alignment entirely.  Resolution is
+        whatever the filesystem grants (ns on ext4/tmpfs, as coarse as
+        1 s on some network mounts)."""
+        with self._lock:
+            self._f.write(line + "\n")
+            self._f.flush()
+            return os.stat(self.path).st_mtime
+
     def close(self) -> None:
         with self._lock:
             try:

@@ -243,7 +243,7 @@ class Profiler:
             handshake_rounds=opts.handshake_rounds,
             make_insight=make_insight,
             insight_interval_s=opts.insight_interval_s,
-            trace=opts.trace)
+            trace=opts.trace, segments_wire=opts.segments_wire)
         transport = opts.resolved_transport()
         if transport == "loopback":
             return simulate_fleet(opts.nranks, workload, collector,
@@ -293,7 +293,8 @@ class Profiler:
             insight_interval_s=opts.insight_interval_s, trace=opts.trace,
             idle_timeout_s=opts.idle_timeout_s,
             mp_start_method=opts.mp_start_method,
-            timeout_s=opts.fleet_timeout_s)
+            timeout_s=opts.fleet_timeout_s,
+            segments_wire=opts.segments_wire)
         if opts.resolved_transport() == "tcp":
             from repro.fleet.collector import CollectorServer
             server = CollectorServer(collector,

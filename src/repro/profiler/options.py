@@ -49,6 +49,10 @@ class ProfilerOptions:
     # recv idle timeout for every server this profiler owns
     # (ProfileServer via serve(), CollectorServer in fleet mode)
     idle_timeout_s: float = 2.0
+    # DXT batch wire shape: "columns" (one segments_columns object of
+    # parallel arrays — the columnar data plane) or "rows" (legacy
+    # per-row lists); consumers decode both
+    segments_wire: str = "columns"
     # ------------------------------------------------------------ fleet
     nranks: int = 1
     fleet_ranks: Optional[int] = None     # spawn-era alias for nranks
@@ -117,6 +121,10 @@ class ProfilerOptions:
             raise ProfilerOptionsError(
                 f"insight_interval_s must be > 0, got "
                 f"{self.insight_interval_s}")
+        if self.segments_wire not in ("columns", "rows"):
+            raise ProfilerOptionsError(
+                f"segments_wire must be 'columns' or 'rows', got "
+                f"{self.segments_wire!r}")
         if self.step_window is not None:
             try:
                 first, last = self.step_window

@@ -28,7 +28,12 @@ def _export_chrome_trace(report, path: Optional[str] = None):
     if report.mode == "fleet":
         return report.fleet.to_chrome_trace(path)
     from repro.core.export import to_chrome_trace
-    return to_chrome_trace(report.session.segments, path,
+    # feed the exporter the columnar batch when the session has one
+    # (no per-row NamedTuple materialization on the way out)
+    segments = getattr(report.session, "segments_columns", None)
+    if segments is None:
+        segments = report.session.segments
+    return to_chrome_trace(segments, path,
                            findings=report.session.findings)
 
 

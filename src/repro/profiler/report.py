@@ -137,10 +137,38 @@ class Report:
 
     @cached_property
     def segments(self) -> list:
-        """DXT segments on one timeline (fleet: clock-aligned merge)."""
+        """DXT segments as materialized rows on one timeline (fleet:
+        clock-aligned merge).  ``segments_table()`` is the columnar
+        view of the same data — prefer it for anything quantitative."""
         if self.mode == "local":
             return list(getattr(self.session, "segments", []) or [])
         return [seg for _, seg in self.fleet.merged_segments()]
+
+    def segments_table(self):
+        """The same window as one columnar ``SegmentColumns`` batch —
+        numpy arrays for offset/length/start/end/thread plus interned
+        module/path/op tables, ready for vectorized analysis."""
+        from repro.trace import SegmentColumns
+        if self.mode == "local":
+            cols = getattr(self.session, "segments_columns", None)
+            if cols is not None:
+                return cols
+            return SegmentColumns.from_rows(
+                getattr(self.session, "segments", []) or [])
+        return self.fleet.merged_columns()
+
+    @property
+    def listener_errors(self) -> Dict[str, int]:
+        """Segment-listener exceptions swallowed during collection,
+        keyed by listener — a crashing detector shows up here instead
+        of silently disappearing (fleet: summed across ranks)."""
+        if self.mode == "local":
+            return dict(getattr(self.session, "listener_errors", {}) or {})
+        merged: Dict[str, int] = {}
+        for _, s in sorted(self.fleet.ranks.items()):
+            for k, v in (getattr(s, "listener_errors", {}) or {}).items():
+                merged[k] = merged.get(k, 0) + v
+        return merged
 
     @property
     def ranks(self) -> dict:
@@ -188,6 +216,9 @@ class Report:
              "bandwidth_mb_s": self.bandwidth_mb_s,
              "counters": self.counters(),
              "findings": [f.to_dict() for f in self.findings]}
+        errors = self.listener_errors
+        if errors:
+            d["listener_errors"] = errors
         if self.advice:
             d["advice"] = {name: _advice_text(res)
                            for name, res in self.advice.items()}

@@ -1,0 +1,14 @@
+"""repro.trace — the columnar DXT segment data plane.
+
+One bounded structure-of-arrays ring (``TraceStore``) holds every
+traced I/O operation; ``SegmentColumns`` batches of it flow to the
+insight feature extractor (vectorized numpy reductions), the Chrome /
+darshan exporters, and the fleet wire (``segments_columns`` payloads —
+parallel arrays instead of per-row JSON).  ``Segment`` remains the row
+type; any columnar batch iterates as rows, so row-world consumers keep
+working unchanged.
+"""
+from repro.trace.columns import SEG_DTYPE, Segment, SegmentColumns
+from repro.trace.store import TraceStore
+
+__all__ = ["SEG_DTYPE", "Segment", "SegmentColumns", "TraceStore"]

@@ -1,0 +1,306 @@
+"""Columnar DXT segment batches (structure-of-arrays).
+
+``SegmentColumns`` is the unit every layer of the profiler exchanges:
+one batch of trace segments stored as parallel numpy arrays plus
+interned id tables for the three string fields (module, path, op).
+Consumers that want vectorized math read the arrays directly
+(``cols.start``, ``cols.length``, ...); consumers written against the
+row world iterate it (``for seg in cols``) and get ``Segment``
+NamedTuples materialized lazily, so a columnar batch drops into any
+API that used to take a list of segments.
+
+The row type ``Segment`` is canonically defined here (``repro.core.dxt``
+re-exports it for the long-standing import path).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Iterator, List, NamedTuple, Optional, \
+    Sequence, Tuple
+
+import numpy as np
+
+
+class Segment(NamedTuple):
+    # NamedTuple, not frozen dataclass: constructed on every materialized
+    # row, and frozen-dataclass __init__ costs ~4x more per segment.
+    module: str          # "POSIX" | "STDIO"
+    path: str
+    op: str              # "read" | "write" | "open" | "stat" | "seek" | ...
+    offset: int
+    length: int
+    start: float         # seconds, runtime-relative clock
+    end: float
+    thread: int
+
+
+#: One trace row in the structure-of-arrays layout: string fields as
+#: interned ids, the rest as fixed-width scalars.  A single structured
+#: assignment fills a whole row, which keeps the hot-path append one
+#: C-level store instead of eight.
+SEG_DTYPE = np.dtype([
+    ("module", np.int16),
+    ("path", np.int32),
+    ("op", np.int16),
+    ("offset", np.int64),
+    ("length", np.int64),
+    ("start", np.float64),
+    ("end", np.float64),
+    ("thread", np.uint64),
+])
+
+_COLUMN_NAMES = ("module", "path", "op", "offset", "length", "start",
+                 "end", "thread")
+
+
+class SegmentColumns:
+    """An immutable columnar batch of trace segments.
+
+    ``data`` is a structured numpy array (``SEG_DTYPE``); ``modules`` /
+    ``paths`` / ``ops`` map the interned ids back to strings.  Batches
+    are value objects: every derived batch (time slice, shift, sort)
+    is a new instance and the tables are shared, never mutated.
+    """
+
+    __slots__ = ("data", "modules", "paths", "ops")
+
+    def __init__(self, data: np.ndarray, modules: Sequence[str],
+                 paths: Sequence[str], ops: Sequence[str]):
+        self.data = data
+        self.modules = tuple(modules)
+        self.paths = tuple(paths)
+        self.ops = tuple(ops)
+
+    # ------------------------------------------------------ construction
+    @classmethod
+    def empty(cls) -> "SegmentColumns":
+        return cls(np.empty(0, dtype=SEG_DTYPE), (), (), ())
+
+    @classmethod
+    def from_rows(cls, segments: Iterable[Segment]) -> "SegmentColumns":
+        """Intern and pack an iterable of ``Segment`` rows."""
+        mod_ids: Dict[str, int] = {}
+        path_ids: Dict[str, int] = {}
+        op_ids: Dict[str, int] = {}
+
+        def intern(table: Dict[str, int], key: str) -> int:
+            i = table.get(key)
+            if i is None:
+                i = table[key] = len(table)
+            return i
+
+        rows = [(intern(mod_ids, s.module), intern(path_ids, s.path),
+                 intern(op_ids, s.op), s.offset, s.length, s.start, s.end,
+                 s.thread) for s in segments]
+        data = np.array(rows, dtype=SEG_DTYPE) if rows \
+            else np.empty(0, dtype=SEG_DTYPE)
+        return cls(data, tuple(mod_ids), tuple(path_ids), tuple(op_ids))
+
+    @staticmethod
+    def concat(batches: Sequence["SegmentColumns"]) -> "SegmentColumns":
+        """One batch over several (ids re-interned onto shared tables)."""
+        batches = [b for b in batches if len(b)]
+        if not batches:
+            return SegmentColumns.empty()
+        if len(batches) == 1:
+            return batches[0]
+        mod_ids: Dict[str, int] = {}
+        path_ids: Dict[str, int] = {}
+        op_ids: Dict[str, int] = {}
+        parts = []
+        for b in batches:
+            data = b.data.copy()
+            for field, table, ids in (("module", b.modules, mod_ids),
+                                      ("path", b.paths, path_ids),
+                                      ("op", b.ops, op_ids)):
+                remap = np.array(
+                    [ids.setdefault(name, len(ids)) for name in table],
+                    dtype=np.int64)
+                if len(remap):
+                    data[field] = remap[b.data[field]]
+            parts.append(data)
+        return SegmentColumns(np.concatenate(parts), tuple(mod_ids),
+                              tuple(path_ids), tuple(op_ids))
+
+    # ---------------------------------------------------------- columns
+    @property
+    def module_ids(self) -> np.ndarray:
+        return self.data["module"]
+
+    @property
+    def path_ids(self) -> np.ndarray:
+        return self.data["path"]
+
+    @property
+    def op_ids(self) -> np.ndarray:
+        return self.data["op"]
+
+    @property
+    def offset(self) -> np.ndarray:
+        return self.data["offset"]
+
+    @property
+    def length(self) -> np.ndarray:
+        return self.data["length"]
+
+    @property
+    def start(self) -> np.ndarray:
+        return self.data["start"]
+
+    @property
+    def end(self) -> np.ndarray:
+        return self.data["end"]
+
+    @property
+    def thread(self) -> np.ndarray:
+        return self.data["thread"]
+
+    def durations(self) -> np.ndarray:
+        """Per-segment service time, clamped at zero like the row code."""
+        return np.maximum(self.end - self.start, 0.0)
+
+    def op_mask(self, op: str) -> np.ndarray:
+        """Boolean mask selecting one operation kind."""
+        try:
+            oid = self.ops.index(op)
+        except ValueError:
+            return np.zeros(len(self.data), dtype=bool)
+        return self.op_ids == oid
+
+    # ------------------------------------------------------- row surface
+    def __len__(self) -> int:
+        return len(self.data)
+
+    def row(self, i: int) -> Segment:
+        r = self.data[i]
+        return Segment(self.modules[r["module"]], self.paths[r["path"]],
+                       self.ops[r["op"]], int(r["offset"]),
+                       int(r["length"]), float(r["start"]),
+                       float(r["end"]), int(r["thread"]))
+
+    def __getitem__(self, i) -> Segment:
+        if isinstance(i, slice):
+            return SegmentColumns(self.data[i], self.modules, self.paths,
+                                  self.ops)
+        n = len(self.data)
+        if i < 0:
+            i += n
+        if not 0 <= i < n:
+            raise IndexError(i)
+        return self.row(i)
+
+    def __iter__(self) -> Iterator[Segment]:
+        for t in self.iter_tuples():
+            yield Segment(*t)
+
+    def iter_tuples(self) -> Iterator[Tuple]:
+        """(module, path, op, offset, length, start, end, thread) tuples
+        with native Python scalars — the export fast path (no NamedTuple
+        construction, one ``tolist`` per column)."""
+        d = self.data
+        mods, paths, ops = self.modules, self.paths, self.ops
+        return zip((mods[i] for i in d["module"].tolist()),
+                   (paths[i] for i in d["path"].tolist()),
+                   (ops[i] for i in d["op"].tolist()),
+                   d["offset"].tolist(), d["length"].tolist(),
+                   d["start"].tolist(), d["end"].tolist(),
+                   d["thread"].tolist())
+
+    def to_rows(self) -> List[Segment]:
+        return list(self)
+
+    # ----------------------------------------------------------- queries
+    def time_slice(self, t0: float,
+                   t1: Optional[float] = None) -> "SegmentColumns":
+        """Segments with ``t0 <= start`` (``<= t1`` when given) — the
+        same window rule ``DXTBuffer.window`` applies."""
+        mask = self.start >= t0
+        if t1 is not None:
+            mask &= self.start <= t1
+        return SegmentColumns(self.data[mask], self.modules, self.paths,
+                              self.ops)
+
+    def shift_time(self, offset_s: float) -> "SegmentColumns":
+        """start/end shifted by ``offset_s`` (clock alignment)."""
+        if not offset_s:
+            return self
+        data = self.data.copy()
+        data["start"] += offset_s
+        data["end"] += offset_s
+        return SegmentColumns(data, self.modules, self.paths, self.ops)
+
+    def sorted_by_start(self) -> "SegmentColumns":
+        order = np.argsort(self.start, kind="stable")
+        return SegmentColumns(self.data[order], self.modules, self.paths,
+                              self.ops)
+
+    def compact(self) -> "SegmentColumns":
+        """Tables restricted to the ids this batch actually references
+        (ids remapped).  A slice of a long-lived store otherwise drags
+        the store's whole interning history along."""
+        if len(self.data) == 0:
+            return SegmentColumns.empty()
+        data = self.data.copy()
+        tables = []
+        for field, table in (("module", self.modules),
+                             ("path", self.paths), ("op", self.ops)):
+            used = np.unique(self.data[field])
+            remap = np.zeros(max(len(table), 1), dtype=np.int64)
+            remap[used] = np.arange(len(used))
+            data[field] = remap[self.data[field]]
+            tables.append(tuple(table[int(i)] for i in used))
+        return SegmentColumns(data, *tables)
+
+    # -------------------------------------------------------------- wire
+    def to_wire(self) -> dict:
+        """JSON-ready parallel arrays — the ``segments_columns`` payload
+        shape (one object of parallel lists instead of N row lists; the
+        string tables ship once, compacted to the ids this batch uses)."""
+        c = self.compact()
+        d = c.data
+        return {
+            "tables": {"module": list(c.modules),
+                       "path": list(c.paths),
+                       "op": list(c.ops)},
+            "module": d["module"].tolist(),
+            "path": d["path"].tolist(),
+            "op": d["op"].tolist(),
+            "offset": d["offset"].tolist(),
+            "length": d["length"].tolist(),
+            "start": d["start"].tolist(),
+            "end": d["end"].tolist(),
+            "thread": d["thread"].tolist(),
+        }
+
+    @classmethod
+    def from_wire(cls, obj: dict) -> "SegmentColumns":
+        """Decode (and validate) a ``to_wire`` object.  Raises
+        ``ValueError`` on ragged columns or out-of-range table ids —
+        a malformed payload must fail at the wire boundary, not crash
+        (or silently alias rows) in a consumer later."""
+        tables = obj.get("tables", {})
+        n = len(obj.get("start", ()))
+        data = np.empty(n, dtype=SEG_DTYPE)
+        for name in _COLUMN_NAMES:
+            vals = np.asarray(obj.get(name, ()), dtype=SEG_DTYPE[name])
+            if vals.shape != (n,):
+                raise ValueError(
+                    f"column {name!r} has shape {vals.shape}, expected "
+                    f"({n},)")
+            data[name] = vals
+        out = cls(data, tuple(tables.get("module", ())),
+                  tuple(tables.get("path", ())),
+                  tuple(tables.get("op", ())))
+        if n:
+            for field, table in (("module", out.modules),
+                                 ("path", out.paths), ("op", out.ops)):
+                ids = data[field]
+                lo, hi = int(ids.min()), int(ids.max())
+                if lo < 0 or hi >= len(table):
+                    raise ValueError(
+                        f"{field} id out of range: [{lo}, {hi}] vs "
+                        f"table of {len(table)}")
+        return out
+
+    def __repr__(self) -> str:
+        return (f"SegmentColumns(n={len(self.data)}, "
+                f"paths={len(self.paths)}, ops={len(self.ops)})")

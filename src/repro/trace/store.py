@@ -1,0 +1,193 @@
+"""TraceStore: the bounded columnar trace ring — the one segment data
+plane behind ``DarshanRuntime``, the insight engine, the fleet wire,
+and every exporter.
+
+Layout is structure-of-arrays: one preallocated structured numpy array
+(``SEG_DTYPE``) of ``capacity`` rows plus interning tables for the
+module / path / op strings, written circularly.  When the ring is full
+the oldest row is overwritten and counted in ``dropped`` — the same
+drop-oldest *profiling window* semantics the old list-backed
+``DXTBuffer`` amortized with chunked deletes, now O(1) per append with
+no deletes at all.
+
+Concurrency: ``append`` takes the store lock (a handful of scalar
+stores — the uncontended case is nanoseconds), and every read-side
+query (``snapshot``, ``window``, ``since``) copies the relevant rows
+*under the same lock*, so a scan can never observe a half-written row
+or a mid-drop list the way the old lock-free ``DXTBuffer.add`` /
+``window`` pair could.
+"""
+from __future__ import annotations
+
+import threading
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.trace.columns import SEG_DTYPE, Segment, SegmentColumns
+
+
+class TraceStore:
+    def __init__(self, capacity: int = 1 << 20, enabled: bool = True):
+        if capacity <= 0:
+            raise ValueError("capacity must be positive")
+        self.capacity = capacity
+        self.enabled = enabled
+        self.dropped = 0
+        self._buf = np.empty(capacity, dtype=SEG_DTYPE)
+        self._seq = 0            # total rows ever appended (monotonic)
+        self._lock = threading.Lock()
+        self._modules: dict = {}
+        self._paths: dict = {}
+        self._ops: dict = {}
+        # id -> string views rebuilt lazily from the interning dicts
+        self._tables_dirty = True
+        self._tables: Tuple[tuple, tuple, tuple] = ((), (), ())
+        # interning is compacted (dead strings evicted, ids remapped in
+        # the live ring rows) when the path table outgrows this bound —
+        # without it a long-lived runtime streaming distinct paths
+        # would retain every path string ever seen
+        self._compact_at = self._next_compact_bound(0)
+
+    # ------------------------------------------------------------ append
+    def append(self, module: str, path: str, op: str, offset: int,
+               length: int, start: float, end: float, thread: int) -> None:
+        if not self.enabled:
+            return
+        with self._lock:
+            mods, paths, ops = self._modules, self._paths, self._ops
+            m = mods.get(module)
+            if m is None:
+                m = mods[module] = len(mods)
+                self._tables_dirty = True
+            p = paths.get(path)
+            if p is None:
+                p = paths[path] = len(paths)
+                self._tables_dirty = True
+            o = ops.get(op)
+            if o is None:
+                o = ops[op] = len(ops)
+                self._tables_dirty = True
+            seq = self._seq
+            if seq >= self.capacity:
+                self.dropped += 1        # overwriting the oldest row
+            self._buf[seq % self.capacity] = (m, p, o, offset, length,
+                                              start, end, thread)
+            self._seq = seq + 1
+            if len(paths) >= self._compact_at:
+                self._compact_tables_locked()
+
+    def add(self, seg: Segment) -> None:
+        """Row-shaped convenience over ``append``."""
+        self.append(seg.module, seg.path, seg.op, seg.offset, seg.length,
+                    seg.start, seg.end, seg.thread)
+
+    # ------------------------------------------------------------- state
+    @property
+    def seq(self) -> int:
+        """Total segments ever appended (the ``since`` cursor space)."""
+        return self._seq
+
+    def __len__(self) -> int:
+        return min(self._seq, self.capacity)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._seq = 0
+            self.dropped = 0
+            self._modules, self._paths, self._ops = {}, {}, {}
+            self._tables_dirty = True
+            self._compact_at = self._next_compact_bound(0)
+
+    # ------------------------------------------------------- compaction
+    def _next_compact_bound(self, live_paths: int) -> int:
+        # amortized: between compactions at least half the bound must be
+        # NEW paths, and the bound never drops below capacity/4, so the
+        # O(capacity) remap stays a constant per-append cost
+        return max(256, self.capacity // 4, 2 * live_paths)
+
+    def _live_regions(self):
+        """Slices of ``_buf`` holding live rows (callers hold the lock)."""
+        lo = max(0, self._seq - self.capacity)
+        n = self._seq - lo
+        cap = self.capacity
+        i0, i1 = lo % cap, self._seq % cap
+        if n == 0:
+            return []
+        if n == cap or i1 <= i0:
+            return [slice(i0, cap), slice(0, i1)]
+        return [slice(i0, i1)]
+
+    def _compact_tables_locked(self) -> None:
+        """Evict interned strings no live row references and remap the
+        ring's id columns in place."""
+        regions = self._live_regions()
+        for fld, attr in (("module", "_modules"), ("path", "_paths"),
+                          ("op", "_ops")):
+            table = getattr(self, attr)
+            names = list(table)
+            col = self._buf[fld]
+            if regions:
+                used = np.unique(
+                    np.concatenate([col[r] for r in regions]))
+            else:
+                used = np.empty(0, dtype=np.int64)
+            remap = np.zeros(max(len(names), 1), dtype=np.int64)
+            remap[used] = np.arange(len(used))
+            for r in regions:
+                col[r] = remap[col[r]]
+            setattr(self, attr,
+                    {names[int(i)]: k for k, i in enumerate(used)})
+        self._tables_dirty = True
+        self._compact_at = self._next_compact_bound(len(self._paths))
+
+    # ------------------------------------------------------------ queries
+    def _tables_locked(self) -> Tuple[tuple, tuple, tuple]:
+        if self._tables_dirty:
+            self._tables = (tuple(self._modules), tuple(self._paths),
+                            tuple(self._ops))
+            self._tables_dirty = False
+        return self._tables
+
+    def _copy_range_locked(self, lo: int, hi: int) -> np.ndarray:
+        """Rows with sequence numbers in [lo, hi), oldest first, copied
+        out of the ring (callers hold the lock)."""
+        if hi <= lo:
+            return np.empty(0, dtype=SEG_DTYPE)
+        cap = self.capacity
+        i0, i1 = lo % cap, hi % cap
+        if hi - lo == cap or i1 <= i0:
+            return np.concatenate((self._buf[i0:], self._buf[:i1]))
+        return self._buf[i0:i1].copy()
+
+    def snapshot(self) -> SegmentColumns:
+        """Everything currently retained, oldest -> newest."""
+        with self._lock:
+            lo = max(0, self._seq - self.capacity)
+            data = self._copy_range_locked(lo, self._seq)
+            mods, paths, ops = self._tables_locked()
+        return SegmentColumns(data, mods, paths, ops)
+
+    def window(self, t0: float,
+               t1: Optional[float] = None) -> SegmentColumns:
+        """Columnar batch of segments with ``start`` in the window —
+        the vectorized form of the old ``DXTBuffer.window`` scan."""
+        return self.snapshot().time_slice(t0, t1)
+
+    def window_rows(self, t0: float,
+                    t1: Optional[float] = None) -> List[Segment]:
+        return self.window(t0, t1).to_rows()
+
+    def since(self, seq: int) -> Tuple[SegmentColumns, int, int]:
+        """Everything appended after cursor ``seq``; returns
+        ``(columns, new_cursor, dropped)`` where ``dropped`` counts rows
+        the ring already overwrote before this read (consumer fell more
+        than ``capacity`` rows behind).  A cursor from before a
+        ``clear()`` is clamped."""
+        with self._lock:
+            hi = self._seq
+            seq = min(max(seq, 0), hi)
+            lo = max(seq, hi - self.capacity)
+            data = self._copy_range_locked(lo, hi)
+            mods, paths, ops = self._tables_locked()
+        return SegmentColumns(data, mods, paths, ops), hi, lo - seq

@@ -62,12 +62,26 @@ def test_wire_roundtrip_report_payload():
     assert back["/d/a.bin"].counters == per_file["/d/a.bin"].counters
     assert back["/d/a.bin"].fcounters == per_file["/d/a.bin"].fcounters
     assert back["/d/b.bin"].counters == per_file["/d/b.bin"].counters
-    segs = payloads.decode_segments(msg.payload["segments"])
-    assert segs == rep.segments
+    # segments ride columnar by default: one object of parallel arrays
+    cols = payloads.decode_segments_columns(
+        msg.payload["segments_columns"])
+    assert cols.to_rows() == rep.segments
+    assert payloads.decode_report_segments(msg.payload).to_rows() \
+        == rep.segments
     founds = payloads.decode_findings(msg.payload["findings"])
     assert founds == rep.findings
     assert msg.payload["clock"]["offset_s"] == -3.25
     assert msg.payload["file_sizes"] == {"/d/a.bin": 4096}
+
+    # the legacy per-row shape remains selectable and decodes the same
+    legacy_line = payloads.encode_report(2, rep, nprocs=4,
+                                         segments_wire="rows")
+    legacy_msg = decode(legacy_line)
+    assert "segments_columns" not in legacy_msg.payload
+    segs = payloads.decode_segments(legacy_msg.payload["segments"])
+    assert segs == rep.segments
+    assert payloads.decode_report_segments(legacy_msg.payload).to_rows() \
+        == rep.segments
 
 
 def test_wire_rejects_garbage_and_future_versions():
@@ -484,3 +498,117 @@ def test_trainer_attaches_rank_reporter(tmp_path):
     slice0 = coll.report().ranks[0]
     assert slice0.stdio.bytes_written == rep.stdio.bytes_written
     assert slice0.elapsed_s > 0
+
+
+# ----------------------------------------- columnar wire equivalence
+def _recorded_report(rank):
+    """A deterministic SessionReport window (fixed counters, segments,
+    findings) — the same recording ships over every wire shape."""
+    per_file = {}
+    for i in range(3):
+        p = f"/data/r{rank}/f{i}.bin"
+        per_file[p] = FileRecord(p, {"POSIX_OPENS": 1, "POSIX_READS": 4,
+                                     "POSIX_BYTES_READ": 1 << 18},
+                                 {"POSIX_F_READ_TIME": 0.01 * (i + 1)})
+    rep = analyze(per_file, {}, elapsed_s=1.25, stat_sizes=False)
+    rep.file_sizes = {p: 1 << 18 for p in per_file}
+    paths = sorted(per_file)
+    rep.segments = [Segment("POSIX", paths[i % 3], "read",
+                            i * 4096, 4096, 0.05 * i, 0.05 * i + 0.01,
+                            rank + 1)
+                    for i in range(12)]
+    rep.findings = [Finding("small-file-storm", "Small-file storm",
+                            0.5 + 0.1 * rank, (0.0, 1.0),
+                            {"opens": 3.0}, "stage", rank=rank)]
+    return rep
+
+
+def _ship_fixed(transport, rank, wire):
+    """hello + report (fixed clock offset — alignment must not depend
+    on handshake timing for this comparison) + bye."""
+    transport(payloads.encode_hello(rank, 2))
+    transport(payloads.encode_report(rank, _recorded_report(rank),
+                                     nprocs=2, clock_offset_s=0.125,
+                                     clock_rtt_s=1e-4,
+                                     segments_wire=wire))
+    transport(encode("bye", rank, {}))
+
+
+def _collect_over(transport_kind, wire, tmp_path):
+    from repro.link import SpoolReader, SpoolTransport, TcpTransport
+    coll = FleetCollector()
+    if transport_kind == "tcp":
+        server = CollectorServer(coll, idle_timeout_s=1.0)
+        try:
+            for rank in range(2):
+                with TcpTransport("127.0.0.1", server.port) as t:
+                    _ship_fixed(t, rank, wire)
+        finally:
+            server.close()
+    else:
+        spool = str(tmp_path / f"spool_{wire}")
+        for rank in range(2):
+            with SpoolTransport(spool, name=f"rank{rank:05d}") as t:
+                _ship_fixed(t, rank, wire)
+        coll.ingest_spool(SpoolReader(spool))
+    return coll.report()
+
+
+@pytest.mark.parametrize("transport_kind", ["tcp", "spool"])
+def test_columns_wire_reproduces_row_wire_fleet_report(tmp_path,
+                                                       transport_kind):
+    """ISSUE 5 acceptance: the same recorded windows shipped as
+    segments_columns payloads and as legacy per-row payloads produce
+    byte-for-byte the same FleetReport counters, findings, and aligned
+    segments — over tcp and spool alike."""
+    cols_fleet = _collect_over(transport_kind, "columns", tmp_path)
+    rows_fleet = _collect_over(transport_kind, "rows", tmp_path)
+
+    assert cols_fleet.posix == rows_fleet.posix
+    assert cols_fleet.stdio == rows_fleet.stdio
+    assert cols_fleet.findings == rows_fleet.findings
+    assert cols_fleet.nprocs == rows_fleet.nprocs
+    assert cols_fleet.window == rows_fleet.window
+    for r in (0, 1):
+        a, b = cols_fleet.ranks[r], rows_fleet.ranks[r]
+        assert list(a.segments) == list(b.segments)
+        assert a.per_file == b.per_file
+        assert a.clock_offset_s == b.clock_offset_s == 0.125
+    # the panel payloads agree wholesale (collector transfer stats are
+    # the only legitimate difference: the wires have different bytes)
+    da, db = cols_fleet.to_dict(), rows_fleet.to_dict()
+    da.pop("collector"), db.pop("collector")
+    assert da == db
+    # and the columnar wire is the smaller one
+    cols_line = payloads.encode_report(0, _recorded_report(0), nprocs=2)
+    rows_line = payloads.encode_report(0, _recorded_report(0), nprocs=2,
+                                       segments_wire="rows")
+    assert len(cols_line) < len(rows_line)
+
+
+# -------------------------------------------------- spool clock (mtime)
+def test_spool_mtime_handshake_recovers_skew(tmp_path):
+    """Spool-only fleets get aligned timelines too: the file-mtime
+    handshake recovers an injected 6 s clock skew (within filesystem
+    mtime resolution)."""
+    from repro.fleet.harness import simulate_fleet
+    from repro.link import SpoolTransport
+    files = _make_files(tmp_path / "d", 0, 4, 16384)
+
+    def workload(rank, io):
+        for p in files:
+            io.read_file(p, chunk=8192)
+
+    spool = str(tmp_path / "spool")
+    coll = FleetCollector()
+    simulate_fleet(2, workload, coll, clock_skew_s=[0.0, 6.0],
+                   make_transport=lambda r: SpoolTransport(
+                       spool, name=f"rank{r:05d}"),
+                   collect=False)
+    coll.ingest_spool(spool)
+    fleet = coll.report()
+    rel = fleet.ranks[1].clock_offset_s - fleet.ranks[0].clock_offset_s
+    assert rel == pytest.approx(-6.0, abs=2.0)
+    # aligned: both ranks' segments land in the same real-time window
+    s0, s1 = fleet.ranks[0].segments, fleet.ranks[1].segments
+    assert abs(s0[0].start - s1[0].start) < 2.0

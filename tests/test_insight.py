@@ -170,28 +170,54 @@ def test_engine_attach_detach_does_not_leak_listener():
     assert rt.listener_count() == 0
     eng.attach(rt)
     eng.attach(rt)                       # idempotent
-    assert rt.listener_count() == 1
+    # columnar runtime: poll() reads the trace ring by cursor, so no
+    # bus listener is registered (the hot path stays row-free)
+    assert rt.listener_count() == 0
+    assert eng.attached
     eng.detach()
     eng.detach()                         # idempotent
     assert rt.listener_count() == 0
+    assert not eng.attached
+
+    # tracing disabled => the ring can't serve; the bus hook returns,
+    # and detach must still not leak it
+    rt2 = reset_runtime()
+    rt2.trace.enabled = False
+    eng2 = InsightEngine().attach(rt2)
+    eng2.attach(rt2)                     # idempotent
+    assert rt2.listener_count() == 1
+    eng2.detach()
+    eng2.detach()
+    assert rt2.listener_count() == 0
 
 
 def test_session_owned_engine_detaches_on_stop(tmp_path):
     rt = reset_runtime()
     sess = ProfileSession(rt, insight=True)
     sess.start()
-    assert rt.listener_count() == 1
+    eng = sess.insight_engine
+    assert eng.attached
+    assert rt.listener_count() == 0      # columnar path: ring, no hook
     p = tmp_path / "x.bin"
     p.write_bytes(b"b" * 64)
     fd = os.open(str(p), os.O_RDONLY)
     os.read(fd, 64)
     os.close(fd)
     sess.stop()
-    assert rt.listener_count() == 0
+    assert not eng.attached
     # restartable: second window re-attaches cleanly
     sess.start()
-    assert rt.listener_count() == 1
+    assert eng.attached
     sess.stop()
+    assert not eng.attached
+    assert rt.listener_count() == 0
+
+    # with tracing off the engine listens on the bus instead, and the
+    # stop() detach must remove that hook
+    sess2 = ProfileSession(rt, insight=True, trace=False)
+    sess2.start()
+    assert rt.listener_count() == 1
+    sess2.stop()
     assert rt.listener_count() == 0
 
 

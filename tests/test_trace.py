@@ -1,0 +1,562 @@
+"""The columnar trace data plane (repro.trace): ring wraparound,
+interning, window queries, the DXTBuffer compatibility view, the
+vectorized feature extraction, and the listener-error surfacing that
+rides on the new runtime emit path."""
+import dataclasses
+import os
+import threading
+
+import pytest
+
+from repro.core import ProfileSession, reset_runtime
+from repro.insight.features import extract, extract_columns, extract_rows
+from repro.trace import SEG_DTYPE, Segment, SegmentColumns, TraceStore
+
+
+def _seg(i, path="/d/a.bin", op="read", length=4096):
+    return Segment("POSIX", path, op, i * length, length,
+                   float(i), i + 0.5, 7)
+
+
+# ------------------------------------------------------------ ring store
+def test_ring_keeps_everything_under_capacity():
+    st = TraceStore(capacity=16)
+    for i in range(10):
+        st.add(_seg(i))
+    assert len(st) == 10
+    assert st.dropped == 0
+    assert st.snapshot().to_rows() == [_seg(i) for i in range(10)]
+
+
+def test_ring_wraparound_drops_oldest_and_counts():
+    st = TraceStore(capacity=16)
+    for i in range(40):
+        st.add(_seg(i))
+    assert len(st) == 16
+    assert st.dropped == 24
+    rows = st.snapshot().to_rows()
+    # exactly the newest 16, oldest -> newest
+    assert rows == [_seg(i) for i in range(24, 40)]
+
+
+def test_ring_wraparound_at_exact_capacity_boundary():
+    st = TraceStore(capacity=8)
+    for i in range(8):
+        st.add(_seg(i))
+    assert st.dropped == 0
+    st.add(_seg(8))
+    assert st.dropped == 1
+    assert st.snapshot().to_rows() == [_seg(i) for i in range(1, 9)]
+
+
+def test_interning_tables_shared_across_rows():
+    st = TraceStore(capacity=64)
+    for i in range(30):
+        st.append("POSIX", f"/d/f{i % 3}", ("read", "write")[i % 2],
+                  0, 10, float(i), i + 0.1, 1)
+    cols = st.snapshot()
+    assert set(cols.paths) == {"/d/f0", "/d/f1", "/d/f2"}
+    assert set(cols.ops) == {"read", "write"}
+    assert cols.modules == ("POSIX",)
+    # ids stay within table bounds after wraparound too
+    assert int(cols.path_ids.max()) < len(cols.paths)
+
+
+def test_window_queries_match_row_filter():
+    st = TraceStore(capacity=128)
+    for i in range(50):
+        st.add(_seg(i))
+    assert st.window(10.0, 19.0).to_rows() == \
+        [_seg(i) for i in range(10, 20)]
+    assert st.window_rows(45.0) == [_seg(i) for i in range(45, 50)]
+    assert len(st.window(1e9)) == 0
+
+
+def test_since_cursor_and_overrun_accounting():
+    st = TraceStore(capacity=8)
+    for i in range(4):
+        st.add(_seg(i))
+    cols, cur, dropped = st.since(0)
+    assert (len(cols), cur, dropped) == (4, 4, 0)
+    for i in range(4, 20):           # overruns the ring by 4 past cursor
+        st.add(_seg(i))
+    cols, cur2, dropped = st.since(cur)
+    assert cur2 == 20
+    assert dropped == 8              # rows 4..11 were overwritten
+    assert cols.to_rows() == [_seg(i) for i in range(12, 20)]
+    # a stale (pre-clear) cursor clamps instead of exploding
+    st.clear()
+    cols, cur3, dropped = st.since(cur2)
+    assert (len(cols), cur3, dropped) == (0, 0, 0)
+
+
+def test_disabled_store_records_nothing():
+    st = TraceStore(capacity=8, enabled=False)
+    st.add(_seg(0))
+    assert len(st) == 0
+    st.enabled = True
+    st.add(_seg(1))
+    assert len(st) == 1
+
+
+def test_concurrent_append_and_window_never_tear():
+    """The satellite fix: a window scan concurrent with wrapping
+    appends must observe only fully written rows."""
+    st = TraceStore(capacity=256)
+    stop = threading.Event()
+    bad = []
+
+    def writer():
+        i = 0
+        while not stop.is_set():
+            st.append("POSIX", f"/d/f{i % 7}", "read", i, 64,
+                      float(i), float(i) + 0.25, 1)
+            i += 1
+
+    def scanner():
+        while not stop.is_set():
+            for seg in st.snapshot():
+                # end - start is always exactly 0.25 in this stream; a
+                # torn row would pair a start with another row's end
+                if abs((seg.end - seg.start) - 0.25) > 1e-9:
+                    bad.append(seg)
+
+    threads = [threading.Thread(target=writer) for _ in range(2)] + \
+        [threading.Thread(target=scanner) for _ in range(2)]
+    for t in threads:
+        t.start()
+    import time
+    time.sleep(0.3)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not bad
+
+
+# ------------------------------------------------------- columnar batches
+def test_columns_row_surface():
+    rows = [_seg(i, path=f"/d/{i % 2}", op=("read", "open")[i % 2])
+            for i in range(9)]
+    cols = SegmentColumns.from_rows(rows)
+    assert len(cols) == 9
+    assert list(cols) == rows
+    assert cols[0] == rows[0]
+    assert cols[-1] == rows[-1]
+    assert cols[2:5].to_rows() == rows[2:5]
+    with pytest.raises(IndexError):
+        cols[9]
+    assert SegmentColumns.empty().to_rows() == []
+
+
+def test_columns_shift_sort_and_slice():
+    rows = [_seg(i) for i in (3, 1, 2)]
+    cols = SegmentColumns.from_rows(rows)
+    shifted = cols.shift_time(10.0)
+    assert [s.start for s in shifted] == [13.0, 11.0, 12.0]
+    assert [s.end - s.start for s in shifted] == \
+        [s.end - s.start for s in cols]
+    assert [s.start for s in cols.sorted_by_start()] == [1.0, 2.0, 3.0]
+    assert cols.time_slice(2.0).to_rows() == [_seg(3), _seg(2)]
+    # shift by zero is the identity (and shares the data)
+    assert cols.shift_time(0.0) is cols
+
+
+def test_columns_concat_reinterns():
+    a = SegmentColumns.from_rows([_seg(0, path="/p/a"), _seg(1, "/p/b")])
+    b = SegmentColumns.from_rows([_seg(2, path="/p/b"), _seg(3, "/p/c")])
+    cat = SegmentColumns.concat([a, b])
+    assert cat.to_rows() == a.to_rows() + b.to_rows()
+    assert set(cat.paths) == {"/p/a", "/p/b", "/p/c"}
+
+
+def test_columns_wire_roundtrip_through_json():
+    import json
+    rows = [Segment("STDIO", "/log/x", "write", 5, 11, 0.25, 0.5, 42),
+            Segment("POSIX", "/d/y", "read", 0, 1 << 30, 1e-7, 2e-7, 9)]
+    cols = SegmentColumns.from_rows(rows)
+    wire = json.loads(json.dumps(cols.to_wire()))
+    assert SegmentColumns.from_wire(wire).to_rows() == rows
+
+
+def test_seg_dtype_is_stable_layout():
+    # the wire and the ring share this layout; renames/reorders are a
+    # protocol change and must be deliberate
+    assert SEG_DTYPE.names == ("module", "path", "op", "offset",
+                               "length", "start", "end", "thread")
+
+
+# ------------------------------------------------ dxt compatibility view
+def test_dxtbuffer_view_shares_runtime_store():
+    rt = reset_runtime()
+    assert rt.dxt.store is rt.trace
+    rt.enabled = True
+    rt.posix_open(3, "/d/z.bin", 0.0, 0.1)
+    rt.posix_read(3, 0, 100, 0.2, 0.3, advance=False)
+    assert len(rt.dxt) == len(rt.trace) == 2
+    segs = rt.dxt.window(0.0)
+    assert [s.op for s in segs] == ["open", "read"]
+    assert rt.dxt.columns(0.0).to_rows() == segs
+    # t1 alone still slices (upper bound only)
+    assert rt.dxt.columns(t1=0.15).to_rows() == segs[:1]
+    rt.dxt.clear()
+    assert len(rt.trace) == 0
+
+
+def test_dxtbuffer_enabled_toggles_store():
+    from repro.core.dxt import DXTBuffer
+    buf = DXTBuffer(capacity=8)
+    buf.enabled = False
+    buf.add(_seg(0))
+    assert len(buf) == 0
+    buf.enabled = True
+    buf.add(_seg(1))
+    assert len(buf) == 1 and buf.store.enabled
+
+
+# -------------------------------------------------- vectorized extraction
+def _mixed_stream(n=600, files=7):
+    segs = []
+    t = 0.0
+    for i in range(n):
+        op = ("read", "read", "read", "write", "open", "stat", "seek",
+              "flush", "fsync")[i % 9]
+        length = (0, 512, 4096, 1 << 20)[i % 4] \
+            if op in ("read", "write") else 0
+        dur = (1e-5, 3e-4, 2e-3)[i % 3]
+        segs.append(Segment("POSIX", f"/d/f{(i * 5) % files}", op,
+                            (i % 11) * 4096, length, t, t + dur, 1))
+        t += dur * 0.6
+    return segs, t
+
+
+def test_extract_columns_matches_row_loop():
+    segs, t1 = _mixed_stream()
+    cols = SegmentColumns.from_rows(segs)
+    a = extract_rows(segs, 0.0, t1, zero_reads=5, monitor_read_mb_s=3.5)
+    b = extract_columns(cols, 0.0, t1, zero_reads=5,
+                        monitor_read_mb_s=3.5)
+    for f in dataclasses.fields(a):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(va, float) or isinstance(vb, float):
+            assert vb == pytest.approx(va, rel=1e-9, abs=1e-12), f.name
+        else:
+            assert va == vb, f.name
+
+
+def test_extract_dispatches_on_input_shape():
+    segs, t1 = _mixed_stream(90)
+    cols = SegmentColumns.from_rows(segs)
+    assert extract(cols, 0.0, t1).reads == extract(segs, 0.0, t1).reads
+    assert extract(SegmentColumns.empty(), 0.0, 1.0).data_ops == 0
+
+
+def test_engine_poll_uses_columnar_window(tmp_path):
+    """The engine reads the runtime's trace ring directly; detectors
+    see the same storm either way."""
+    from repro.insight import InsightEngine
+    paths = []
+    for i in range(48):
+        p = tmp_path / f"s{i:03d}.bin"
+        p.write_bytes(b"x" * 256)
+        paths.append(str(p))
+    rt = reset_runtime()
+    eng = InsightEngine()
+    sess = ProfileSession(rt, insight=eng, insight_interval_s=60.0)
+    with sess:
+        for p in paths:
+            fd = os.open(p, os.O_RDONLY)
+            os.read(fd, 1024)
+            os.close(fd)
+    rep = sess.reports[0]
+    assert "small-file-storm" in {f.detector for f in rep.findings}
+    # the columnar cursor advanced past everything it analyzed
+    assert eng._seq == rt.trace.seq
+
+
+# ------------------------------------------------- listener error surface
+def test_listener_errors_counted_and_on_report(tmp_path):
+    rt = reset_runtime()
+
+    def broken_listener(seg):
+        raise ValueError("detector bug")
+
+    def fine_listener(seg):
+        pass
+
+    rt.add_segment_listener(broken_listener)
+    rt.add_segment_listener(fine_listener)
+    sess = ProfileSession(rt)
+    p = tmp_path / "x.bin"
+    p.write_bytes(b"y" * 128)
+    with sess:
+        fd = os.open(str(p), os.O_RDONLY)
+        os.read(fd, 128)
+        os.close(fd)
+    rep = sess.reports[0]
+    assert len(rep.segments) >= 2
+    key = next(iter(rep.listener_errors))
+    assert "broken_listener" in key
+    assert rep.listener_errors[key] == len(rep.segments)
+    assert len(rep.listener_errors) == 1      # the healthy one is absent
+    # a second, clean window starts from zero again
+    with sess:
+        pass
+    assert sess.reports[1].listener_errors == {}
+
+
+def test_listener_errors_reach_profiler_report(tmp_path):
+    from repro.profiler import Profiler, ProfilerOptions
+    rt = reset_runtime()
+
+    def bad(seg):
+        raise RuntimeError("boom")
+
+    rt.add_segment_listener(bad)
+    p = tmp_path / "w.bin"
+    p.write_bytes(b"z" * 64)
+
+    def workload():
+        fd = os.open(str(p), os.O_RDONLY)
+        os.read(fd, 64)
+        os.close(fd)
+
+    report = Profiler(ProfilerOptions(), runtime=rt).run(workload)
+    assert sum(report.listener_errors.values()) >= 2
+    assert "listener_errors" in report.to_dict()
+
+
+# ------------------------------------------------------ report table view
+def test_profiler_report_segments_table(tmp_path):
+    from repro.profiler import Profiler, ProfilerOptions
+    rt = reset_runtime()
+    p = tmp_path / "t.bin"
+    p.write_bytes(b"k" * 4096)
+
+    def workload():
+        fd = os.open(str(p), os.O_RDONLY)
+        os.read(fd, 4096)
+        os.close(fd)
+
+    report = Profiler(ProfilerOptions(), runtime=rt).run(workload)
+    table = report.segments_table()
+    assert isinstance(table, SegmentColumns)
+    assert table.to_rows() == report.segments
+    assert int(table.op_mask("read").sum()) == report.posix.reads
+
+
+# ----------------------------------------------- wire validation + size
+def test_from_wire_rejects_malformed_payloads():
+    rows = [_seg(i, path=f"/p/{i}") for i in range(3)]
+    good = SegmentColumns.from_rows(rows).to_wire()
+
+    import copy
+    out_of_range = copy.deepcopy(good)
+    out_of_range["op"][1] = 7                 # no such op id
+    with pytest.raises(ValueError):
+        SegmentColumns.from_wire(out_of_range)
+
+    negative = copy.deepcopy(good)
+    negative["path"][0] = -1                  # would alias the last path
+    with pytest.raises(ValueError):
+        SegmentColumns.from_wire(negative)
+
+    ragged = copy.deepcopy(good)
+    ragged["offset"] = ragged["offset"][:1]   # would broadcast silently
+    with pytest.raises(ValueError):
+        SegmentColumns.from_wire(ragged)
+
+    from repro.link import WireError
+    from repro.fleet import payloads
+    with pytest.raises(WireError):
+        payloads.decode_segments_columns(out_of_range)
+
+
+def test_to_wire_ships_only_referenced_strings():
+    """A window sliced from a long-lived store must not drag the
+    store's whole interning history over the wire."""
+    st = TraceStore(capacity=4)
+    for i in range(500):                      # 500 distinct paths seen
+        st.append("POSIX", f"/d/f{i:04d}", "read", 0, 64,
+                  float(i), i + 0.5, 1)
+    cols = st.snapshot()
+    wire = cols.to_wire()
+    assert len(wire["tables"]["path"]) == 4   # only the live rows' paths
+    assert SegmentColumns.from_wire(wire).to_rows() == cols.to_rows()
+    compacted = cols.compact()
+    assert compacted.to_rows() == cols.to_rows()
+    assert set(compacted.paths) == {s.path for s in cols}
+
+
+def test_store_compacts_interning_and_clear_resets_tables():
+    st = TraceStore(capacity=8)
+    for i in range(1000):
+        st.append("POSIX", f"/d/f{i:05d}", "read", 0, 64,
+                  float(i), i + 0.5, 1)
+    # the table is bounded (compaction evicts dead strings), not the
+    # full 1000-path history
+    assert len(st._paths) <= 300
+    assert st.snapshot().to_rows() == \
+        [Segment("POSIX", f"/d/f{i:05d}", "read", 0, 64, float(i),
+                 i + 0.5, 1) for i in range(992, 1000)]
+    st.clear()
+    assert st._paths == {} and st._ops == {}
+    assert len(st.snapshot().paths) == 0
+
+
+def test_columnar_engine_path_materializes_no_rows(tmp_path):
+    """With an attached engine on a columnar runtime the hot path
+    registers no listener, so _emit never constructs Segment rows."""
+    from repro.insight import InsightEngine
+    rt = reset_runtime()
+    eng = InsightEngine().attach(rt)
+    try:
+        assert rt.listener_count() == 0
+        assert len(eng.bus) == 0
+        rt.enabled = True
+        rt.posix_open(5, "/d/q.bin", 0.0, 0.1)
+        rt.posix_read(5, 0, 128, 0.2, 0.3, advance=False)
+        assert len(eng.bus) == 0              # nothing rode the bus
+        eng.poll()
+        assert eng.history[-1].reads == 1     # yet the window saw it
+    finally:
+        rt.enabled = False
+        eng.detach()
+
+
+def test_session_report_rows_are_lazy(tmp_path):
+    rt = reset_runtime()
+    p = tmp_path / "lz.bin"
+    p.write_bytes(b"m" * 1024)
+    sess = ProfileSession(rt)
+    with sess:
+        fd = os.open(str(p), os.O_RDONLY)
+        os.read(fd, 1024)
+        os.close(fd)
+    rep = sess.reports[0]
+    assert rep._segments_rows is None         # nothing materialized yet
+    rows = rep.segments
+    assert rows and rep._segments_rows is rows
+    assert rows == rep.segments_columns.to_rows()
+    # explicit assignment (synthetic reports) still wins
+    rep.segments = rows[:1]
+    assert rep.segments == rows[:1]
+
+
+def test_decode_segments_columns_wraps_overflow():
+    """numpy raises OverflowError (not ValueError) for out-of-dtype
+    values; one corrupt line must stay a WireError so spool drains
+    survive it."""
+    from repro.fleet import payloads
+    from repro.link import WireError
+    good = SegmentColumns.from_rows([_seg(0)]).to_wire()
+    import copy
+    huge = copy.deepcopy(good)
+    huge["offset"] = [2 ** 70]
+    with pytest.raises(WireError):
+        payloads.decode_segments_columns(huge)
+    negative_thread = copy.deepcopy(good)
+    negative_thread["thread"] = [-1]
+    with pytest.raises(WireError):
+        payloads.decode_segments_columns(negative_thread)
+
+
+def test_segments_setter_invalidates_stale_columns():
+    """Assigned rows are the authority: the wire must ship them, not a
+    stale columnar batch from before the assignment."""
+    from repro.core.analysis import analyze
+    from repro.fleet import payloads
+    from repro.link.messages import decode
+    rep = analyze({}, {}, elapsed_s=1.0, stat_sizes=False)
+    rep.file_sizes = {}
+    rep.segments_columns = SegmentColumns.from_rows(
+        [_seg(i) for i in range(5)])
+    rep.segments = [_seg(99)]              # caller overrides the window
+    assert rep.segments_columns is None
+    msg = decode(payloads.encode_report(0, rep))
+    shipped = payloads.decode_report_segments(msg.payload).to_rows()
+    assert shipped == [_seg(99)]
+
+
+def test_reporter_downgrades_wire_for_legacy_collector():
+    """A collector that answers hello with a bare ack (or a typed hello
+    without the segments_columns cap) predates the columnar wire; the
+    reporter must ship rows it can decode."""
+    from repro.core.analysis import analyze
+    from repro.core.runtime import DarshanRuntime
+    from repro.fleet.reporter import RankReporter
+    from repro.link.messages import decode
+
+    def synth():
+        rep = analyze({}, {}, elapsed_s=1.0, stat_sizes=False)
+        rep.file_sizes = {}
+        rep.segments = [_seg(0)]
+        return rep
+
+    from repro.link.messages import encode as _encode
+
+    def make_legacy(shipped, hello_reply):
+        def legacy_collector(line):
+            shipped.append(line)
+            msg = decode(line)
+            if msg.kind == "clock":       # legacy peers did speak clock
+                return _encode("clock_reply", msg.rank, {"t_coll": 0.0})
+            if msg.kind == "hello":
+                return hello_reply
+            return "ok"
+        return legacy_collector
+
+    # case 1: bare-ack hello (pre-typed-hello peer)
+    # case 2: typed hello without the caps field (PR-4-era collector)
+    for hello_reply in ("ok", _encode("hello", 0, {"link_v": 1})):
+        shipped = []
+        r = RankReporter(0, runtime=DarshanRuntime(), auto_attach=False)
+        assert r.effective_segments_wire == "columns"
+        r.ship(make_legacy(shipped, hello_reply), report=synth())
+        assert r.effective_segments_wire == "rows"
+        report_lines = [ln for ln in shipped
+                        if decode(ln).kind == "report"]
+        assert len(report_lines) == 1
+        payload = decode(report_lines[0]).payload
+        assert "segments" in payload
+        assert "segments_columns" not in payload
+
+    # a modern collector advertises the cap, so columns ride the wire
+    from repro.fleet import FleetCollector
+    coll = FleetCollector()
+    r2 = RankReporter(1, runtime=DarshanRuntime(), auto_attach=False)
+    r2.ship(coll.ingest_line, report=synth())
+    assert r2.effective_segments_wire == "columns"
+    s = coll.report().ranks[1]
+    seg = s.segments[0]                    # clock-aligned by the offset
+    assert (seg.module, seg.path, seg.op, seg.offset, seg.length) \
+        == ("POSIX", "/d/a.bin", "read", 0, 4096)
+    assert seg.start - s.clock_offset_s == pytest.approx(0.0, abs=1e-9)
+
+
+def test_engine_follows_trace_flag_flips(tmp_path):
+    """A nested session constructed with trace=False disables the
+    runtime's ring; an attached engine must fall back to the bus hook
+    instead of going silently blind (and return to the ring when the
+    flag comes back)."""
+    from repro.insight import InsightEngine
+    rt = reset_runtime()
+    eng = InsightEngine().attach(rt)
+    rt.enabled = True
+    try:
+        assert rt.listener_count() == 0      # columnar path
+        rt.trace.enabled = False             # nested trace=False session
+        eng.poll()                           # notices, hooks the bus
+        assert rt.listener_count() == 1
+        rt.posix_open(9, "/d/n.bin", 0.0, 0.1)
+        rt.posix_read(9, 0, 256, 0.2, 0.3, advance=False)
+        eng.poll()
+        assert eng.history[-1].reads == 1    # still seeing segments
+        rt.trace.enabled = True              # tracing restored
+        eng.poll()                           # switches back to the ring
+        assert rt.listener_count() == 0
+        rt.posix_read(9, 256, 256, 0.4, 0.5, advance=False)
+        eng.poll()
+        assert eng.history[-1].reads == 1
+    finally:
+        rt.enabled = False
+        eng.detach()
