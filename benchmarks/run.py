@@ -1,26 +1,58 @@
 """Benchmark harness: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only stream,staging,...]
-                                            [--smoke]
+                                            [--smoke] [--no-json]
 
 Prints ``name,us_per_call,derived`` CSV rows (the contract in the repo
 skeleton); per-figure details live in each bench module's docstring.
 ``--smoke`` shrinks every workload to regression-detector size (CI runs
 the whole suite this way, so an exporter or benchmark crash fails the
 build without paying full-figure runtimes).
-"""
+
+Every bench additionally persists a machine-readable result —
+``BENCH_<name>.json`` in the repo root — carrying its rows, pass/fail,
+the error (if any), wall time, and whether it ran at smoke size, so CI
+artifacts and regression dashboards read structured results instead of
+scraping the CSV stream (``--no-json`` disables the files)."""
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
+import time
 import traceback
 
 from benchmarks import common
 from benchmarks.common import Row
 
 BENCHES = ("stream", "overhead", "threads", "staging", "checkpoint",
-           "kernels", "insight", "fleet", "profiler", "link", "trace")
+           "kernels", "insight", "fleet", "profiler", "link", "trace",
+           "tune")
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _persist(name: str, bench_rows: Row, passed: bool,
+             error: Exception, elapsed_s: float) -> str:
+    """Write one bench's BENCH_<name>.json into the repo root."""
+    payload = {
+        "bench": name,
+        "smoke": bool(common.SMOKE),
+        "passed": bool(passed),
+        "error": (f"{type(error).__name__}: {error}"
+                  if error is not None else None),
+        "elapsed_s": round(elapsed_s, 3),
+        "rows": [{"name": n, "us_per_call": us, "derived": derived}
+                 for n, us, derived in bench_rows.rows],
+    }
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path
 
 
 def main() -> None:
@@ -29,6 +61,8 @@ def main() -> None:
                     help="comma-separated subset of: " + ",".join(BENCHES))
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workloads: regression check, not figures")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip writing BENCH_<name>.json result files")
     args = ap.parse_args()
     if args.smoke:
         common.SMOKE = True
@@ -40,12 +74,20 @@ def main() -> None:
     failed = []
     for name in chosen:
         mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        bench_rows = Row()
+        error = None
+        t0 = time.perf_counter()
         try:
-            mod.run(rows)
+            mod.run(bench_rows)
         except Exception as e:  # noqa: BLE001 — finish the suite, report
+            error = e
             failed.append(name)
             print(f"{name}_FAILED,0.0,{type(e).__name__}", flush=True)
             traceback.print_exc(file=sys.stderr)
+        elapsed = time.perf_counter() - t0
+        rows.extend(bench_rows)
+        if not args.no_json:
+            _persist(name, bench_rows, error is None, error, elapsed)
     if failed:
         raise SystemExit(f"benchmarks failed: {failed}")
 

@@ -1,0 +1,130 @@
+"""repro.tune demo: the profiler closes its own loop, mid-run.
+
+Part 1 — local closed loop.  An ImageNet-like small-file dataset sits
+on a throttled HDD-class tier (per-file seek penalty).  A
+``Profiler(ProfilerOptions(insight=True, tune=True))`` watches epoch 1,
+the small-file-storm finding drives the ``stage-hot-files`` policy, the
+applier migrates the files onto the Optane-class tier between epochs,
+and later epochs read the fast copies through ``applier.resolve`` —
+the paper's +19% offline-staging result, earned online in one run.
+Prints the audit log and the before/after bandwidth.
+
+Part 2 — spawned 4-rank dry-run fleet.  Four REAL OS processes stream
+findings to the collector over TCP; the controller answers each rank's
+poll with a dry-run action which the rank acks with its before-state —
+the full wire round trip with zero knob changes.  CI runs this file as
+the closed-loop tuning smoke: it asserts at least one action was
+planned AND acked.
+
+    PYTHONPATH=src python examples/tune_demo.py
+"""
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import reset_runtime
+from repro.profiler import Profiler, ProfilerOptions
+
+NRANKS = 4
+FILES = {}
+
+
+def _epoch(paths, reader):
+    return sum(len(reader(p)) for p in paths)
+
+
+def local_closed_loop(root) -> None:
+    from repro.data.synthetic import make_imagenet_like
+    from repro.data.tiers import default_tiers, make_tiered_reader
+
+    ws = os.path.join(root, "local")
+    tm = default_tiers(ws, throttled=True)
+    paths = make_imagenet_like(os.path.join(ws, "hdd", "imgs"),
+                               n_files=32, seed=7)
+
+    prof = Profiler(ProfilerOptions(insight=True, tune=True),
+                    runtime=reset_runtime())
+    with prof:
+        prof.bind_tune(dataset=paths, tier_manager=tm)
+        reader = make_tiered_reader(tm, resolver=prof.tune_applier.resolve)
+        for epoch in range(3):
+            t0 = time.perf_counter()
+            nbytes = _epoch(paths, reader)
+            dt = time.perf_counter() - t0
+            applied = prof.tune_tick()    # poll -> plan -> migrate
+            print(f"  epoch {epoch}: {nbytes / dt / 1e6:7.1f} MB/s"
+                  + (f"   <- {applied} tune action(s) applied"
+                     if applied else ""))
+
+    stats = prof.tune_applier.stats
+    print(f"  migrated {stats['migrated_files']} files "
+          f"({stats['migrated_bytes'] / 2**20:.1f} MiB) onto optane")
+    print("  audit log:")
+    for entry in prof.report.tune_audit:
+        act = entry["action"]
+        acks = ", ".join(f"r{a['rank']}:{a['status']}"
+                         for a in entry["acks"])
+        print(f"    {act['action_id']} {act['kind']} ({act['policy']}) "
+              f"{entry['status']}: {acks}")
+    assert stats["migrated_files"] > 0, "local loop migrated nothing"
+
+
+def rank_workload(rank, io):
+    for p in FILES[rank]:
+        io.read_file(p, chunk=4096)
+
+
+def spawned_dry_run_fleet(root) -> None:
+    for rank in range(NRANKS):
+        d = os.path.join(root, f"rank{rank}")
+        os.makedirs(d)
+        FILES[rank] = []
+        for i in range(48):
+            p = os.path.join(d, f"tiny_{i:03d}.bin")
+            with open(p, "wb") as f:
+                f.write(os.urandom(1024))
+            FILES[rank].append(p)
+
+    report = Profiler(ProfilerOptions(
+        mode="fleet", launch="spawn", fleet_ranks=NRANKS,
+        transport="tcp", insight=True, insight_interval_s=0.1,
+        tune=True, tune_dry_run=True,
+        tune_policies=("stage-hot-files",),
+        tune_cooldown_s=60.0)).run(rank_workload)
+
+    stats = report.fleet.tune_stats
+    audit = report.tune_audit
+    acked = [e for e in audit if e["status"] == "acked"]
+    print(f"  {NRANKS} spawned ranks over tcp: "
+          f"{stats['planned']} planned, {stats['issued']} issued, "
+          f"{stats['acked']} acked (dry run)")
+    for entry in acked:
+        act = entry["action"]
+        (ack,) = entry["acks"]
+        print(f"    {act['action_id']} {act['kind']} -> rank "
+              f"{act['rank']}: {ack['status']} "
+              f"(before={ack['before']})")
+    # the CI smoke bar: the loop round-tripped on a real fleet
+    assert stats["planned"] >= 1, "no tune action planned"
+    assert acked, "no tune action acked by a spawned rank"
+
+
+def main() -> None:
+    root = tempfile.mkdtemp(prefix="tune_demo_")
+    try:
+        print("== local closed loop (throttled tiers, real migration)")
+        local_closed_loop(root)
+        print("== spawned 4-rank dry-run fleet (tcp round trip)")
+        spawned_dry_run_fleet(root)
+        print("OK: closed-loop tuning round-tripped locally and "
+              "on a spawned fleet")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,49 @@ from typing import Any, Callable, Iterable, List, Optional, Sequence
 AUTOTUNE = -1
 
 
+class PipelineControl:
+    """Thread-safe external control handle for AUTOTUNE pipelines.
+
+    ``_mapped_autotune`` polls it between windows: the pipeline
+    publishes the thread count each window actually ran with
+    (``note_threads`` -> ``current_threads``), and an outside party —
+    the closed-loop ``repro.tune`` applier, or any local code — can
+    ``request_threads(n)``; the request wins over the hill-climb/bias
+    advice for the next window, then the climb continues from there.
+    One handle may be shared across threads; requests are
+    take-once (``take_request``)."""
+
+    def __init__(self, threads: int = 0):
+        self._lock = threading.Lock()
+        self._current = int(threads)
+        self._requested: Optional[int] = None
+
+    @property
+    def current_threads(self) -> int:
+        """The thread count of the most recent window (0 before the
+        first window runs)."""
+        with self._lock:
+            return self._current
+
+    def note_threads(self, n: int) -> None:
+        """Pipeline-side: publish the count the window runs with."""
+        with self._lock:
+            self._current = int(n)
+
+    def request_threads(self, n: int) -> None:
+        """Ask the pipeline to run its next window with ``n`` threads
+        (clamped to >= 1).  The latest request before a window boundary
+        wins."""
+        with self._lock:
+            self._requested = max(int(n), 1)
+
+    def take_request(self) -> Optional[int]:
+        """Pipeline-side: consume the pending request, if any."""
+        with self._lock:
+            req, self._requested = self._requested, None
+            return req
+
+
 @dataclass(frozen=True)
 class _Spec:
     items: Sequence
@@ -33,6 +76,7 @@ class _Spec:
     autotune_start: int = 4
     drop_remainder: bool = False
     insight_engine: Optional[Any] = None
+    control: Optional[PipelineControl] = None
 
 
 class Pipeline:
@@ -71,6 +115,13 @@ class Pipeline:
                 "with_profiler() needs insight enabled: construct the "
                 "Profiler with ProfilerOptions(insight=True)")
         return Pipeline(None, replace(self.spec, insight_engine=engine))
+
+    def with_control(self, control: PipelineControl) -> "Pipeline":
+        """Attach an external ``PipelineControl`` handle that AUTOTUNE
+        polls between windows — the closed-loop tuning hook
+        (``repro.tune`` resize-threads actions land here), equally
+        usable by local code."""
+        return Pipeline(None, replace(self.spec, control=control))
 
     def with_insight(self, engine) -> "Pipeline":
         """Deprecated shim for ``with_profiler`` (same behavior)."""
@@ -166,6 +217,8 @@ class Pipeline:
         while i < len(items):
             window = items[i:i + spec.autotune_window]
             i += len(window)
+            if spec.control is not None:
+                spec.control.note_threads(threads)
             t0 = time.perf_counter()
             nbytes = 0
             with ThreadPoolExecutor(max_workers=threads) as pool:
@@ -186,6 +239,14 @@ class Pipeline:
                 if biased is not None:
                     advice = biased
             threads = advice.threads
+            if spec.control is not None:
+                # an external request (closed-loop tuning) speaks last:
+                # it overrides this window's advice, then the climb
+                # continues from the requested count
+                requested = spec.control.take_request()
+                if requested is not None:
+                    advisor.current = requested
+                    threads = requested
 
 
 def _ordered_parallel(pool: ThreadPoolExecutor, fn, items,

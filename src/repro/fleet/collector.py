@@ -63,6 +63,10 @@ class FleetCollector:
         # that converts spool-measured wall offsets onto the fleet clock
         self.wall_t0 = time.time()
         self._lock = threading.Lock()
+        # closed-loop tuning: TuneController.attach(collector) sets
+        # this; streamed findings then feed it and the ``tune`` verb
+        # polls route to it (repro.tune)
+        self.tune_controller = None
         self.stats = {"lines": 0, "reports": 0, "hellos": 0,
                       "clock_probes": 0, "findings": 0, "errors": 0,
                       "bytes": 0}
@@ -170,6 +174,12 @@ class FleetCollector:
                 # standalone push: authoritative, survives the report
                 self._extra_findings.extend(found)
         self._bump("findings", len(found))
+        # the closed loop: every streamed finding reaches the attached
+        # TuneController the moment it lands (not at report() time —
+        # actions must go out while the run can still benefit)
+        controller = self.tune_controller
+        if controller is not None and found:
+            controller.on_findings(found)
         return "ok"
 
     @staticmethod
@@ -246,6 +256,7 @@ class FleetCollector:
         t1s = [s.segments[-1].end for s in ranks.values() if s.segments]
         window = (min(t0s), max(t1s)) if t0s else (0.0, 0.0)
         nprocs = max([len(ranks)] + [s.nprocs for s in ranks.values()])
+        controller = self.tune_controller
         return FleetReport(
             nprocs=nprocs,
             ranks=ranks,
@@ -257,7 +268,11 @@ class FleetCollector:
             window=window,
             elapsed_s=max([s.elapsed_s for s in ranks.values()],
                           default=0.0),
-            collector_stats=dict(self.stats))
+            collector_stats=dict(self.stats),
+            tune_audit=(controller.audit_log()
+                        if controller is not None else []),
+            tune_stats=(dict(controller.stats)
+                        if controller is not None else {}))
 
 
 class CollectorServer:

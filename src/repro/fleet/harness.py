@@ -126,7 +126,10 @@ def simulate_fleet(
         insight_interval_s: float = 0.5, trace: bool = True,
         make_transport: Optional[Callable[[int], object]] = None,
         collect: bool = True,
-        segments_wire: str = "columns") -> Optional[FleetReport]:
+        segments_wire: str = "columns",
+        tune_controller=None,
+        make_applier: Optional[Callable[[int], object]] = None,
+        tune_interval_s: float = 0.1) -> Optional[FleetReport]:
     """Run ``workload(rank, io)`` on ``nranks`` threads, each with a
     private runtime + RankReporter, ship every window through the wire
     protocol into ``collector``, and return the aggregated FleetReport.
@@ -144,7 +147,16 @@ def simulate_fleet(
     harness closes what it builds.  ``collect=False`` skips the final
     ``collector.report()`` and returns None — for one-way transports
     (spool) whose lines the caller must drain into the collector before
-    aggregating."""
+    aggregating.
+
+    ``tune_controller`` closes the loop (repro.tune): it is attached to
+    ``collector``, each rank streams findings mid-run and polls for
+    actions over its transport, and a per-rank ``TuneApplier``
+    (``make_applier(rank)`` or a bare default) applies them — published
+    thread-locally so the workload can ``current_applier().bind(...)``.
+    Requires per-rank insight (``make_insight``)."""
+    if tune_controller is not None:
+        tune_controller.attach(collector)
     reporters: List[RankReporter] = []
     for r in range(nranks):
         rt = DarshanRuntime()
@@ -158,16 +170,52 @@ def simulate_fleet(
                                       segments_wire=segments_wire))
 
     errors: List[BaseException] = []
+    tuning = tune_controller is not None
+    # with tuning the transports must exist DURING the run (the poll
+    # pump needs a live wire); without it they are created at ship time
+    transports: List[Optional[object]] = [None] * nranks
+
+    def rank_transport(rank: int):
+        if transports[rank] is None:
+            if make_transport is not None:
+                transports[rank] = as_transport(make_transport(rank))
+            else:
+                transports[rank] = LoopbackTransport(collector.ingest_line)
+        return transports[rank]
 
     def run_rank(rank: int, rep: RankReporter) -> None:
         io = RankIO(rep.rt, throttle=(throttles or {}).get(rank))
+        applier = None
+        if tuning:
+            from repro.tune.applier import TuneApplier, set_current_applier
+            t = rank_transport(rank)
+            if not t.duplex:
+                # the poll reply cannot come back: the controller logs
+                # its plan as a dry run instead of silently dropping it
+                tune_controller.mark_one_way()
+            applier = (make_applier(rank) if make_applier is not None
+                       else TuneApplier(rank=rank))
+            set_current_applier(applier)
         rep.start()
+        if tuning:
+            t = rank_transport(rank)
+            rep.start_streaming(t, interval_s=tune_interval_s)
+            rep.start_tuning(t, applier, interval_s=tune_interval_s)
         try:
             workload(rank, io)
         except BaseException as e:  # noqa: BLE001 — surfaced after join
             errors.append(e)
         finally:
+            # stop() performs the session's final insight poll;
+            # stop_streaming's final drain then ships those findings,
+            # and stop_tuning's final polls collect the resulting
+            # actions and ship their acks — order matters
             rep.stop()
+            rep.stop_streaming()
+            rep.stop_tuning()
+            if tuning:
+                from repro.tune.applier import set_current_applier
+                set_current_applier(None)
 
     threads = [threading.Thread(target=run_rank, args=(r, rep),
                                 name=f"sim-rank-{r}")
@@ -180,10 +228,7 @@ def simulate_fleet(
         raise errors[0]
 
     for r, rep in enumerate(reporters):
-        if make_transport is not None:
-            transport = as_transport(make_transport(r))
-        else:
-            transport = LoopbackTransport(collector.ingest_line)
+        transport = rank_transport(r)
         try:
             rep.ship(transport, handshake_rounds=handshake_rounds)
         finally:

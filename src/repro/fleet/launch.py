@@ -68,9 +68,15 @@ def _child_main(rank: int, nranks: int, workload, transport_spec,
                 clock_skew: float, throttle, insight_spec,
                 fast_tier_mb_s, insight_interval_s: float, trace: bool,
                 handshake_rounds: int, stream_interval_s: float,
-                segments_wire: str = "columns") -> None:
+                segments_wire: str = "columns",
+                tune_spec: Optional[dict] = None) -> None:
     """One rank: profile the workload against a private runtime, stream
-    findings mid-run, ship the window, exit 0 on success."""
+    findings mid-run, ship the window, exit 0 on success.
+
+    ``tune_spec`` (plain data: ``{"interval_s": ...}`` or None) turns on
+    the closed loop: the child builds a ``TuneApplier``, publishes it
+    process-wide for the workload to bind knobs onto, and polls the
+    collector for actions over the duplex transport."""
     try:
         rt = DarshanRuntime()
         if clock_skew:
@@ -90,15 +96,29 @@ def _child_main(rank: int, nranks: int, workload, transport_spec,
             raise ValueError(f"unknown transport spec: {transport_spec!r}")
         try:
             io = RankIO(rt, throttle=throttle)
+            applier = None
+            if tune_spec is not None:
+                from repro.tune.applier import (TuneApplier,
+                                                set_current_applier)
+                applier = TuneApplier(rank=rank)
+                set_current_applier(applier, process_wide=True)
             reporter.start()
             if insight:
                 reporter.start_streaming(transport,
                                          interval_s=stream_interval_s)
+            if applier is not None and transport.duplex:
+                reporter.start_tuning(
+                    transport, applier,
+                    interval_s=float(tune_spec.get("interval_s", 0.25)))
             try:
                 workload(rank, io)
             finally:
-                reporter.stop_streaming()
+                # final insight poll first, then drain its findings to
+                # the collector, then the tune pump's final polls pick
+                # up the actions they triggered and ship the acks
                 reporter.stop()
+                reporter.stop_streaming()
+                reporter.stop_tuning()
             reporter.ship(transport, handshake_rounds=handshake_rounds)
         finally:
             transport.close()
@@ -125,7 +145,9 @@ def run_spawned_fleet(
         idle_timeout_s: float = 5.0,
         mp_start_method: Optional[str] = None,
         timeout_s: float = 120.0,
-        segments_wire: str = "columns") -> FleetReport:
+        segments_wire: str = "columns",
+        tune_controller=None,
+        tune_interval_s: float = 0.1) -> FleetReport:
     """Run ``workload(rank, io)`` on ``nranks`` OS processes and return
     the aggregated FleetReport.
 
@@ -135,10 +157,21 @@ def run_spawned_fleet(
     it mid-run and drains it after the children exit).  ``insight`` is
     False, True, or a sequence of registry detector names (plain data —
     it must cross the process boundary).  A rank that dies or hangs past
-    ``timeout_s`` raises RuntimeError naming the rank."""
+    ``timeout_s`` raises RuntimeError naming the rank.
+
+    ``tune_controller`` closes the loop: it is attached to the
+    collector, and every child polls it for ``TuneAction``s over the
+    transport (tcp).  Spool is one-way — the controller logs its plan
+    as a dry run instead (``mark_one_way``)."""
     import tempfile
 
     collector = collector if collector is not None else FleetCollector()
+    if tune_controller is not None:
+        tune_controller.attach(collector)
+        if transport == "spool":
+            tune_controller.mark_one_way()
+    tune_spec = ({"interval_s": tune_interval_s}
+                 if tune_controller is not None else None)
     own_server: Optional[CollectorServer] = None
     reader: Optional[SpoolReader] = None
     own_spool: Optional[str] = None
@@ -169,7 +202,7 @@ def run_spawned_fleet(
                       (clock_skew_s[r] if clock_skew_s else 0.0),
                       (throttles or {}).get(r), insight, fast_tier_mb_s,
                       insight_interval_s, trace, handshake_rounds,
-                      stream_interval_s, segments_wire))
+                      stream_interval_s, segments_wire, tune_spec))
             p.start()
             procs.append(p)
 

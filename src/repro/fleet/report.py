@@ -89,6 +89,11 @@ class FleetReport:
     window: Tuple[float, float] = (0.0, 0.0)   # fleet-clock [min, max]
     elapsed_s: float = 0.0                # max per-rank elapsed (wall window)
     collector_stats: dict = field(default_factory=dict)
+    # closed-loop tuning (repro.tune): the controller's audit trail —
+    # one dict per planned action with its per-rank acks — and its
+    # counters; empty when no TuneController was attached
+    tune_audit: List[dict] = field(default_factory=list)
+    tune_stats: dict = field(default_factory=dict)
 
     # ------------------------------------------------------------ queries
     @property
@@ -173,6 +178,8 @@ class FleetReport:
                 for r, s in self.ranks.items()},
             "findings": [f.to_dict() for f in self.findings],
             "collector": dict(self.collector_stats),
+            "tune": {"audit": [dict(e) for e in self.tune_audit],
+                     "stats": dict(self.tune_stats)},
         }
 
     def summary(self) -> str:
@@ -192,4 +199,13 @@ class FleetReport:
             who = "fleet" if f.rank is None else f"rank {f.rank}"
             lines.append(f"  [{who}] {f.detector} sev={f.severity:.2f}: "
                          f"{f.recommendation}")
+        for e in self.tune_audit:
+            a = e.get("action", {})
+            who = ("fleet" if a.get("rank") is None
+                   else f"rank {a.get('rank')}")
+            acks = ", ".join(
+                f"r{k.get('rank')}:{k.get('status')}"
+                for k in e.get("acks", [])) or "no acks"
+            lines.append(f"  [tune -> {who}] {a.get('kind')} "
+                         f"({a.get('policy')}) {e.get('status')}: {acks}")
         return "\n".join(lines)

@@ -32,6 +32,14 @@ Streaming: ``start_streaming(transport)`` polls the session's insight
 engine on a background thread and pushes newly raised findings as
 ``findings`` messages mid-run — the collector surfaces them
 immediately and supersedes them with this rank's final report.
+
+Tuning: ``start_tuning(transport, applier)`` closes the loop in the
+other direction — a second pump polls the collector with ``tune``
+messages (carrying the acks of everything applied so far), receives
+pending ``TuneAction``s from the attached TuneController, dispatches
+them to the rank-side ``TuneApplier``, and ships the resulting acks on
+the next poll.  Delivery is at-least-once (the controller redelivers
+until acked); the applier's action-id seen-set makes redelivery safe.
 """
 from __future__ import annotations
 
@@ -86,6 +94,10 @@ class RankReporter:
         self._stream_stop = threading.Event()
         self._stream_thread: Optional[threading.Thread] = None
         self._streamed_count = 0
+        self._tune_stop = threading.Event()
+        self._tune_thread: Optional[threading.Thread] = None
+        self._tune_applier = None
+        self.tune_applied = 0
 
     # ---------------------------------------------------------- profiling
     def start(self) -> None:
@@ -292,3 +304,73 @@ class RankReporter:
         self._stream_stop.set()
         self._stream_thread.join(timeout=5)
         self._stream_thread = None
+
+    # ------------------------------------------------------------- tuning
+    def start_tuning(self, transport, applier,
+                     interval_s: float = 0.25) -> bool:
+        """Poll the collector for ``TuneAction``s on a background thread
+        and dispatch them to ``applier`` (a ``repro.tune.TuneApplier``)
+        until ``stop_tuning``.  Returns False on a one-way transport —
+        the poll reply cannot come back, so the controller logs its plan
+        as a dry run instead (see ``TuneController.mark_one_way``)."""
+        t = as_transport(transport)
+        if not t.duplex or self._tune_thread is not None:
+            return t.duplex
+        self._tune_applier = applier
+        self._tune_stop.clear()
+
+        def pump() -> None:
+            while not self._tune_stop.wait(interval_s):
+                self._tune_poll(t, applier)
+            # two final polls: the first applies any still-pending
+            # actions, the second ships their acks — without it the
+            # controller's audit ends "issued", never "acked"
+            self._tune_poll(t, applier)
+            self._tune_poll(t, applier)
+
+        self._tune_thread = threading.Thread(
+            target=pump, name=f"tune-rank-{self.rank}", daemon=True)
+        self._tune_thread.start()
+        return True
+
+    def _tune_poll(self, transport, applier) -> int:
+        """One poll round-trip: ship queued acks, apply what comes back.
+        Returns the number of actions applied this round."""
+        from repro.tune.actions import TuneAction, encode_poll
+
+        acks = applier.take_acks()
+        try:
+            reply = transport(encode_poll(self.rank, acks))
+        except (OSError, ValueError):
+            # the acks are not lost: requeue and retry next poll (the
+            # controller redelivers unacked actions anyway, and the
+            # applier's seen-set absorbs the duplicates)
+            applier.requeue_acks(acks)
+            return 0
+        if not reply or not reply.startswith("{"):
+            return 0
+        try:
+            msg = decode(reply)
+        except WireError:
+            return 0
+        if msg.kind != "tune":
+            return 0
+        dry_run = bool(msg.payload.get("dry_run"))
+        applied = 0
+        for raw in msg.payload.get("actions", []):
+            try:
+                action = TuneAction.from_dict(raw)
+            except WireError:
+                continue
+            ack = applier.apply(action, dry_run=dry_run)
+            applier.queue_ack(ack)
+            applied += 1
+        self.tune_applied += applied
+        return applied
+
+    def stop_tuning(self) -> None:
+        if self._tune_thread is None:
+            return
+        self._tune_stop.set()
+        self._tune_thread.join(timeout=5)
+        self._tune_thread = None

@@ -162,9 +162,11 @@ class InsightEngine:
             elif segs:
                 t1 = max(s.end for s in segs)
             else:
-                # nothing observed: no finding is active any more (else
-                # active_findings() would replay the last window forever,
-                # e.g. into Pipeline autotune biasing)
+                # nothing observed: no finding is active any more.
+                # active_findings() feeds Pipeline autotune biasing and
+                # the repro.tune closed loop (which turns the advice
+                # into PipelineControl requests), so a stale window
+                # replaying forever would keep steering both
                 self._active_idx = {}
                 self._last_new = []
                 return []

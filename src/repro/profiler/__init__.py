@@ -20,19 +20,22 @@ from repro.profiler.options import (DEFAULT_EXPORTERS, ProfilerOptions,
                                     ProfilerOptionsError)
 from repro.profiler.plugins import (BUILTIN_ADVISORS, BUILTIN_DETECTORS,
                                     BUILTIN_EXPORTERS,
-                                    BUILTIN_FLEET_DETECTORS)
+                                    BUILTIN_FLEET_DETECTORS,
+                                    BUILTIN_POLICIES)
 from repro.profiler.registry import (PluginRegistry, RegistryError,
                                      available, create, get_registry,
                                      register_advisor, register_detector,
                                      register_exporter,
-                                     register_fleet_detector, register_verb)
+                                     register_fleet_detector,
+                                     register_policy, register_verb)
 from repro.profiler.report import Report
 
 __all__ = [
     "Profiler", "ProfilerOptions", "ProfilerOptionsError",
     "DEFAULT_EXPORTERS", "BUILTIN_ADVISORS", "BUILTIN_DETECTORS",
-    "BUILTIN_EXPORTERS", "BUILTIN_FLEET_DETECTORS", "PluginRegistry",
-    "RegistryError", "available", "create", "register_advisor",
-    "get_registry", "register_detector", "register_exporter",
-    "register_fleet_detector", "register_verb", "Report",
+    "BUILTIN_EXPORTERS", "BUILTIN_FLEET_DETECTORS", "BUILTIN_POLICIES",
+    "PluginRegistry", "RegistryError", "available", "create",
+    "register_advisor", "get_registry", "register_detector",
+    "register_exporter", "register_fleet_detector", "register_policy",
+    "register_verb", "Report",
 ]

@@ -41,6 +41,11 @@ class Profiler:
         self._runtime = runtime
         self._session = None
         self._reports: List[Report] = []
+        # closed-loop tuning (repro.tune), built lazily when tune=True
+        self._tune_controller = None
+        self._tune_loop = None
+        self._tune_applier = None
+        self._pipeline_control = None
         # Fail fast on plugin names: a typo'd detector/exporter/advisor
         # surfaces at construction, not at the end of an hour-long run.
         self._resolve_names()
@@ -55,7 +60,8 @@ class Profiler:
         checks = [("exporter", self.options.exporters),
                   ("advisor", self.options.advisors),
                   ("detector", self.options.detectors or ()),
-                  ("fleet_detector", self.options.fleet_detectors or ())]
+                  ("fleet_detector", self.options.fleet_detectors or ()),
+                  ("policy", self.options.tune_policies or ())]
         for kind, names in checks:
             reg = _registry.get_registry(kind)
             for name in names:
@@ -86,6 +92,26 @@ class Profiler:
                      for name in self._detector_names()]
         return InsightEngine(detectors=detectors)
 
+    def _policy_names(self):
+        if self.options.tune_policies is not None:
+            return tuple(self.options.tune_policies)
+        from repro.profiler.plugins import BUILTIN_POLICIES
+        return BUILTIN_POLICIES
+
+    def _make_tune_controller(self):
+        """A TuneController with the selected policy set, or None when
+        tune is off (one per façade — audit accumulates across runs)."""
+        if not self.options.tune:
+            return None
+        if self._tune_controller is None:
+            from repro.tune.controller import TuneController
+            policies = [_registry.create("policy", name, self.options)
+                        for name in self._policy_names()]
+            self._tune_controller = TuneController(
+                policies, dry_run=self.options.tune_dry_run,
+                cooldown_s=self.options.tune_cooldown_s)
+        return self._tune_controller
+
     @property
     def insight_engine(self):
         """The façade-owned engine (local mode), e.g. for
@@ -107,6 +133,8 @@ class Profiler:
                 report.advice[name] = advisor.advise(report)
             except Exception as e:     # advisors must never kill a run
                 report.advice[name] = f"advisor error: {e!r}"
+        if self.options.mode == "local" and self._tune_controller is not None:
+            report.tune_audit = self._tune_controller.audit_log()
         return report
 
     @property
@@ -140,11 +168,72 @@ class Profiler:
 
     def start(self) -> "Profiler":
         self._ensure_session().start()
+        if self.options.tune:
+            self._ensure_tune().start()
         return self
 
     def stop(self) -> Report:
+        # session first: its final insight poll raises the last
+        # findings; the loop's final tick (inside loop.stop) then turns
+        # them into actions and acks before the report is wrapped
         self._ensure_session().stop()
+        if self._tune_loop is not None:
+            self._tune_loop.stop()
         return self.reports[-1]
+
+    # ------------------------------------------------------- local tuning
+    def _ensure_tune(self):
+        """The local closed loop: engine -> controller -> applier, no
+        wire.  Built once; start()/stop() ride the session window."""
+        if self.options.mode != "local" or not self.options.tune:
+            raise RuntimeError("local tuning needs mode='local' and "
+                               "ProfilerOptions(tune=True)")
+        if self._tune_loop is None:
+            from repro.data.pipeline import PipelineControl
+            from repro.tune.applier import TuneApplier, set_current_applier
+            from repro.tune.controller import LocalTuneLoop
+            controller = self._make_tune_controller()
+            self._pipeline_control = PipelineControl()
+            self._tune_applier = TuneApplier(
+                rank=0, pipeline_control=self._pipeline_control)
+            set_current_applier(self._tune_applier)
+            self._tune_loop = LocalTuneLoop(
+                self._engine, controller, self._tune_applier,
+                interval_s=self.options.tune_interval_s, rank=0)
+        return self._tune_loop
+
+    def bind_tune(self, **knobs) -> bool:
+        """Bind knob objects (tier_manager=, dataset=,
+        checkpoint_manager=, pipeline_control=) onto the local tune
+        applier; no-op returning False when tune is off."""
+        if not self.options.tune or self.options.mode != "local":
+            return False
+        self._ensure_tune()
+        self._tune_applier.bind(**knobs)
+        return True
+
+    def tune_tick(self) -> int:
+        """One deterministic closed-loop iteration (poll the insight
+        engine, plan, apply, ack); for epoch-boundary callers that want
+        tuning without trusting thread timing.  Returns the number of
+        actions applied."""
+        if self._tune_loop is None:
+            return 0
+        return self._tune_loop.tick(poll_engine=True)
+
+    @property
+    def tune_controller(self):
+        return self._tune_controller
+
+    @property
+    def tune_applier(self):
+        return self._tune_applier
+
+    @property
+    def pipeline_control(self):
+        """The PipelineControl resize-threads actions land on; pass it
+        to ``Pipeline.with_control`` (local tune mode only)."""
+        return self._pipeline_control
 
     def __enter__(self) -> "Profiler":
         return self.start()
@@ -243,7 +332,9 @@ class Profiler:
             handshake_rounds=opts.handshake_rounds,
             make_insight=make_insight,
             insight_interval_s=opts.insight_interval_s,
-            trace=opts.trace, segments_wire=opts.segments_wire)
+            trace=opts.trace, segments_wire=opts.segments_wire,
+            tune_controller=self._make_tune_controller(),
+            tune_interval_s=opts.tune_interval_s)
         transport = opts.resolved_transport()
         if transport == "loopback":
             return simulate_fleet(opts.nranks, workload, collector,
@@ -294,7 +385,9 @@ class Profiler:
             idle_timeout_s=opts.idle_timeout_s,
             mp_start_method=opts.mp_start_method,
             timeout_s=opts.fleet_timeout_s,
-            segments_wire=opts.segments_wire)
+            segments_wire=opts.segments_wire,
+            tune_controller=self._make_tune_controller(),
+            tune_interval_s=opts.tune_interval_s)
         if opts.resolved_transport() == "tcp":
             from repro.fleet.collector import CollectorServer
             server = CollectorServer(collector,

@@ -70,6 +70,15 @@ class ProfilerOptions:
     # default ("fork" on Linux — closures work as workloads)
     mp_start_method: Optional[str] = None
     fleet_timeout_s: float = 120.0        # spawn: per-run watchdog
+    # ------------------------------------------------------------- tune
+    # closed-loop tuning (repro.tune): streamed findings drive policies
+    # that push TuneActions back to ranks; requires insight=True (the
+    # controller's input IS the streamed finding flow)
+    tune: bool = False
+    tune_policies: Optional[Sequence[str]] = None   # None => built-ins
+    tune_dry_run: bool = False            # deliver + audit, change nothing
+    tune_cooldown_s: float = 2.0          # per (policy, kind, rank) pacing
+    tune_interval_s: float = 0.1          # rank poll / local loop cadence
 
     def __post_init__(self):
         # fleet_ranks is the public alias the spawn path documents;
@@ -103,8 +112,28 @@ class ProfilerOptions:
             raise ProfilerOptionsError(
                 "detectors were selected but insight is off; pass "
                 "insight=True alongside detectors=[...]")
+        if not self.tune:
+            if self.tune_policies is not None:
+                raise ProfilerOptionsError(
+                    "tune_policies were selected but tune is off; pass "
+                    "tune=True alongside tune_policies=[...]")
+            if self.tune_dry_run:
+                raise ProfilerOptionsError(
+                    "tune_dry_run=True but tune is off; pass tune=True")
+        elif not self.insight:
+            raise ProfilerOptionsError(
+                "tune=True requires insight=True: the controller "
+                "consumes streamed insight findings")
+        if self.tune_cooldown_s < 0:
+            raise ProfilerOptionsError(
+                f"tune_cooldown_s must be >= 0, got "
+                f"{self.tune_cooldown_s}")
+        if self.tune_interval_s <= 0:
+            raise ProfilerOptionsError(
+                f"tune_interval_s must be > 0, got "
+                f"{self.tune_interval_s}")
         for name_field in ("detectors", "fleet_detectors", "exporters",
-                           "advisors"):
+                           "advisors", "tune_policies"):
             names = getattr(self, name_field)
             if names is None:
                 continue

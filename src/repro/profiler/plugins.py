@@ -21,6 +21,8 @@ BUILTIN_FLEET_DETECTORS = ("rank-straggler", "load-imbalance",
                            "shared-file-contention")
 BUILTIN_EXPORTERS = ("chrome_trace", "darshan_log", "json_report")
 BUILTIN_ADVISORS = ("staging", "thread-autotune", "workload-character")
+BUILTIN_POLICIES = ("stage-hot-files", "autotune-threads",
+                    "checkpoint-backoff")
 
 
 # ------------------------------------------------------------- exporters
@@ -138,3 +140,21 @@ def register_builtins(registries) -> None:
     adv.register("staging", _StagingAdvisorPlugin)
     adv.register("thread-autotune", _ThreadAutotunePlugin)
     adv.register("workload-character", _WorkloadCharacterPlugin)
+
+    def _policy_factory(name):
+        def make(opts):
+            from repro.tune.policies import make_builtin_policy
+            return make_builtin_policy(name, opts)
+        return make
+
+    pol = registries["policy"]
+    for name in BUILTIN_POLICIES:
+        pol.register(name, _policy_factory(name))
+
+    # The closed-loop ``tune`` verb (repro.tune): registered directly on
+    # the verb table because this function already runs under the
+    # registry's builtin lock — going back through register_verb would
+    # self-deadlock.  Same surface, same effect: every Endpoint
+    # dispatches ``tune`` messages, the codec accepts the kind.
+    from repro.tune.actions import handle_tune
+    registries["verb"].register("tune", handle_tune)

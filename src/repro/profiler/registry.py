@@ -21,6 +21,9 @@ Factory protocols by kind (every factory receives the active
   * ``exporter``        — ``factory(options) -> fn(report, path=None)``
                           where ``report`` is the unified ``Report``
   * ``advisor``         — ``factory(options) -> obj with advise(report)``
+  * ``policy``          — ``factory(options) -> repro.tune TunePolicy``
+                          (maps streamed findings to TuneActions in
+                          the closed-loop controller)
   * ``verb``            — NOT a factory: the registered object IS the
                           wire-message handler,
                           ``handler(endpoint, message) -> Message | str
@@ -39,7 +42,8 @@ from __future__ import annotations
 import threading
 from typing import Callable, Dict, List, Optional
 
-KINDS = ("detector", "fleet_detector", "exporter", "advisor", "verb")
+KINDS = ("detector", "fleet_detector", "exporter", "advisor", "verb",
+         "policy")
 
 
 class RegistryError(ValueError):
@@ -147,6 +151,14 @@ def register_exporter(name: str, factory: Optional[Callable] = None,
 def register_advisor(name: str, factory: Optional[Callable] = None,
                      override: bool = False):
     return _register("advisor", name, factory, override)
+
+
+def register_policy(name: str, factory: Optional[Callable] = None,
+                    override: bool = False):
+    """Register a tuning-policy factory (``factory(options) ->
+    repro.tune TunePolicy``) for selection via
+    ``ProfilerOptions(tune_policies=(name, ...))``."""
+    return _register("policy", name, factory, override)
 
 
 def register_verb(kind: str, handler: Optional[Callable] = None,

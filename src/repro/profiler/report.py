@@ -72,6 +72,11 @@ class Report:
         self.exporters = tuple(exporters)
         self.options = options
         self.advice: Dict[str, object] = {}   # advisor name -> result
+        # closed-loop tuning audit (repro.tune): fleet reports carry it
+        # natively; the local façade assigns its controller's log
+        self.tune_audit: List[dict] = (
+            list(fleet.tune_audit) if mode == "fleet"
+            and getattr(fleet, "tune_audit", None) else [])
 
     # ----------------------------------------------------- constructors
     @classmethod
@@ -222,6 +227,8 @@ class Report:
         if self.advice:
             d["advice"] = {name: _advice_text(res)
                            for name, res in self.advice.items()}
+        if self.tune_audit:
+            d["tune_audit"] = [dict(e) for e in self.tune_audit]
         return d
 
     def to_json(self, path: Optional[str] = None) -> str:

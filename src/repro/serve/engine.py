@@ -29,9 +29,14 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4,
-                 max_len: int = 256, greedy: bool = True):
+                 max_len: int = 256, greedy: bool = True,
+                 profiler=None):
         self.cfg = cfg
         self.params = params
+        # optional repro.profiler façade: each serve() call runs inside
+        # one profiling window (tune=True closes the loop on the
+        # serving fleet's I/O knobs too — paper §VII applied to serving)
+        self.profiler = profiler
         self.slots = batch_slots
         self.max_len = max_len
         self.cache = init_cache(cfg, batch_slots, max_len)
@@ -66,7 +71,15 @@ class ServeEngine:
                 req.out.append(int(nxt[i]))
 
     def serve(self, requests: List[Request]) -> List[Request]:
-        """Run until all requests complete; returns them with .out filled."""
+        """Run until all requests complete; returns them with .out filled.
+        With a ``profiler`` attached, the whole call is one profiled
+        window (``profiler.report`` afterwards holds it)."""
+        if self.profiler is not None:
+            with self.profiler:
+                return self._serve(requests)
+        return self._serve(requests)
+
+    def _serve(self, requests: List[Request]) -> List[Request]:
         queue = list(requests)
         self._admit(queue)
         while any(r is not None for r in self.active) or queue:

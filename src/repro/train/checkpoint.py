@@ -19,6 +19,7 @@ from __future__ import annotations
 import json
 import os
 import threading
+import time
 import zlib
 from typing import Any, Callable, Dict, List, Optional
 
@@ -54,6 +55,19 @@ class CheckpointManager:
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        # writer throttle (repro.tune throttle-checkpoint actions):
+        # async saves within min_interval_s of the previous save are
+        # skipped; sync saves always land (the final save must commit)
+        self.min_interval_s = 0.0
+        self.throttle_skipped = 0
+        self._last_save_t: Optional[float] = None
+
+    def set_throttle(self, min_interval_s: float) -> float:
+        """Space async saves at least ``min_interval_s`` apart (0
+        disables).  Returns the previous interval."""
+        prev = self.min_interval_s
+        self.min_interval_s = max(float(min_interval_s), 0.0)
+        return prev
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: Dict[str, Any],
@@ -76,12 +90,20 @@ class CheckpointManager:
         _write_atomic(os.path.join(stage, MANIFEST),
                       json.dumps(manifest, indent=1).encode())
         os.rename(stage, ckpt_dir)          # commit
+        self._last_save_t = time.monotonic()
         self._gc()
         return ckpt_dir
 
-    def save_async(self, step: int, tree, extra: Optional[dict] = None):
-        """Snapshot to host now; write on a background thread."""
+    def save_async(self, step: int, tree,
+                   extra: Optional[dict] = None) -> bool:
+        """Snapshot to host now; write on a background thread.  Returns
+        False when the writer throttle skipped this save (a more recent
+        save is close enough behind us)."""
         self.wait()                          # one in flight at a time
+        if self.min_interval_s > 0 and self._last_save_t is not None \
+                and time.monotonic() - self._last_save_t < self.min_interval_s:
+            self.throttle_skipped += 1
+            return False
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
                                  tree)
 
@@ -93,6 +115,7 @@ class CheckpointManager:
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
+        return True
 
     def wait(self) -> None:
         if self._thread is not None:

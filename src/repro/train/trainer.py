@@ -84,6 +84,11 @@ class Trainer:
         self.profiler: Optional[StepCallback] = (
             self.profiler_facade.step_callback()
             if self.profiler_facade is not None else None)
+        # closed-loop tuning: throttle-checkpoint actions need the
+        # checkpoint manager bound on the applier (no-op if tune is off)
+        if self.profiler_facade is not None \
+                and getattr(self.profiler_facade.options, "tune", False):
+            self.profiler_facade.bind_tune(checkpoint_manager=self.ckpt)
         # Distributed profiling: a repro.fleet.RankReporter profiles this
         # process's whole run and ships it to the FleetCollector (the
         # shipping — reporter.ship / ship_socket — is the caller's call,

@@ -1,0 +1,33 @@
+"""repro.tune — the closed-loop tuning subsystem.
+
+Turns the profiler from a report generator into an online controller:
+streamed findings (``repro.insight`` detectors, shipped mid-run over
+``repro.link``) drive policies that issue typed ``TuneAction``s back to
+ranks, where a ``TuneApplier`` turns each into a real knob change —
+file staging onto a faster tier, reader-thread resizing through
+``PipelineControl``, checkpoint-writer throttling — and acks it with
+before/after state into an audit log on the ``FleetReport``.
+
+Enable it from the façade — ``Profiler(ProfilerOptions(insight=True,
+tune=True))`` — in local, simulated-fleet, and spawned-fleet modes
+alike; see the README's "Closed-loop tuning" section.
+"""
+from repro.tune.actions import (ACK_STATUSES, ACTION_KINDS, TUNE_VERSION,
+                                TuneAck, TuneAction)
+from repro.tune.applier import (TuneApplier, current_applier,
+                                set_current_applier)
+from repro.tune.controller import (AuditEntry, LocalTuneLoop,
+                                   TuneController)
+from repro.tune.policies import (BUILTIN_POLICIES, AutotuneThreadsPolicy,
+                                 CheckpointBackoffPolicy,
+                                 StageHotFilesPolicy, TunePolicy,
+                                 make_builtin_policy)
+
+__all__ = [
+    "ACK_STATUSES", "ACTION_KINDS", "TUNE_VERSION", "TuneAck",
+    "TuneAction", "TuneApplier", "current_applier",
+    "set_current_applier", "AuditEntry", "LocalTuneLoop",
+    "TuneController", "BUILTIN_POLICIES", "AutotuneThreadsPolicy",
+    "CheckpointBackoffPolicy", "StageHotFilesPolicy", "TunePolicy",
+    "make_builtin_policy",
+]

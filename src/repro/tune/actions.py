@@ -1,0 +1,156 @@
+"""Typed, versioned tuning actions and their wire codec.
+
+A ``TuneAction`` is one concrete knob turn the controller asks a rank
+to perform — the closed-loop counterpart of a ``Finding``'s prose
+recommendation.  Three kinds cover the paper's optimization surface:
+
+  * ``migrate-file``         — stage hot small files onto a faster
+                               storage tier (the tf-Darshan headline
+                               move: +19% POSIX bandwidth from
+                               profiler-selected staging).  Parameters
+                               are a *selection policy* (target tier,
+                               size threshold, max files), not a path
+                               list: the rank owns per-file visibility
+                               mid-run, the controller owns the signal.
+  * ``resize-threads``       — grow/shrink reader parallelism through a
+                               shared ``PipelineControl`` handle that
+                               ``Pipeline._mapped_autotune`` polls
+                               between windows (paper §VII).
+  * ``throttle-checkpoint``  — back off async checkpoint writes to a
+                               minimum interval when checkpoint stalls
+                               dominate a window.
+
+Actions ride ``repro.link`` as a ``tune`` verb registered through the
+plugin registry (``register_verb`` surface — the same drop-in path a
+third-party wire extension uses), so every transport and every
+``Endpoint`` carries them without touching the link layer.  Delivery is
+poll-based: ranks ask the collector for pending actions and carry acks
+in the same message, because only duplex transports can answer — and
+``TcpTransport`` retries make delivery at-least-once, so every action
+is idempotent by ``action_id`` (appliers skip duplicates, the
+controller dedupes acks).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.link.messages import Message, WireError, encode
+
+TUNE_VERSION = 1
+
+ACTION_KINDS = ("migrate-file", "resize-threads", "throttle-checkpoint")
+
+# Terminal ack statuses a rank can report for one action.
+ACK_STATUSES = ("applied", "rejected", "failed", "skipped", "dry-run")
+
+
+@dataclass(frozen=True)
+class TuneAction:
+    """One controller-issued knob turn, addressed to a rank.
+
+    ``rank=None`` broadcasts (every polling rank receives and acks it
+    once).  ``params`` must stay JSON-plain — the record crosses every
+    transport verbatim."""
+    action_id: str
+    kind: str                          # one of ACTION_KINDS
+    params: Dict[str, object] = field(default_factory=dict)
+    policy: str = ""                   # issuing policy's registry name
+    reason: str = ""                   # the finding that triggered it
+    rank: Optional[int] = None         # target rank; None = every rank
+    issued_at: float = 0.0             # fleet clock
+    v: int = TUNE_VERSION
+
+    def to_dict(self) -> dict:
+        return {"action_id": self.action_id, "kind": self.kind,
+                "params": dict(self.params), "policy": self.policy,
+                "reason": self.reason, "rank": self.rank,
+                "issued_at": self.issued_at, "v": self.v}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TuneAction":
+        try:
+            kind = d["kind"]
+            action_id = d["action_id"]
+        except (KeyError, TypeError) as e:
+            raise WireError(f"bad tune action payload: {e!r}") from e
+        if kind not in ACTION_KINDS:
+            raise WireError(f"unknown tune action kind: {kind!r} "
+                            f"(known: {', '.join(ACTION_KINDS)})")
+        v = int(d.get("v", 1))
+        if v > TUNE_VERSION:
+            raise WireError(f"tune action {action_id!r} is v{v}; this "
+                            f"process supports <= v{TUNE_VERSION}")
+        return cls(action_id=str(action_id), kind=kind,
+                   params=dict(d.get("params", {})),
+                   policy=str(d.get("policy", "")),
+                   reason=str(d.get("reason", "")),
+                   rank=d.get("rank"),
+                   issued_at=float(d.get("issued_at", 0.0)), v=v)
+
+
+@dataclass(frozen=True)
+class TuneAck:
+    """A rank's receipt for one action: terminal status plus the
+    before/after state of the knob it touched."""
+    action_id: str
+    rank: int
+    status: str                        # one of ACK_STATUSES
+    before: Dict[str, object] = field(default_factory=dict)
+    after: Dict[str, object] = field(default_factory=dict)
+    detail: str = ""
+
+    def to_dict(self) -> dict:
+        return {"action_id": self.action_id, "rank": self.rank,
+                "status": self.status, "before": dict(self.before),
+                "after": dict(self.after), "detail": self.detail}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TuneAck":
+        try:
+            status = str(d["status"])
+            action_id = str(d["action_id"])
+        except (KeyError, TypeError) as e:
+            raise WireError(f"bad tune ack payload: {e!r}") from e
+        if status not in ACK_STATUSES:
+            raise WireError(f"unknown tune ack status: {status!r}")
+        return cls(action_id=action_id, rank=int(d.get("rank", -1)),
+                   status=status, before=dict(d.get("before", {})),
+                   after=dict(d.get("after", {})),
+                   detail=str(d.get("detail", "")))
+
+
+# --------------------------------------------------------------- codec
+def encode_poll(rank: int, acks: Optional[List[dict]] = None) -> str:
+    """The rank-side poll line: deliver these acks, send me pending
+    actions."""
+    return encode("tune", rank, {"poll": True, "acks": list(acks or [])})
+
+
+def encode_actions(rank: int, actions: List[TuneAction],
+                   dry_run: bool = False, enabled: bool = True) -> Message:
+    """The collector-side poll reply (a Message so Endpoint encodes it)."""
+    return Message("tune", rank,
+                   {"actions": [a.to_dict() for a in actions],
+                    "dry_run": bool(dry_run), "enabled": bool(enabled)})
+
+
+def decode_actions(payload: dict) -> List[TuneAction]:
+    return [TuneAction.from_dict(d) for d in payload.get("actions", [])]
+
+
+def decode_acks(payload: dict) -> List[TuneAck]:
+    return [TuneAck.from_dict(d) for d in payload.get("acks", [])]
+
+
+# ---------------------------------------------------------------- verb
+def handle_tune(endpoint, msg: Message) -> Message:
+    """The ``tune`` verb handler every ``Endpoint`` resolves through
+    the plugin registry.  When the endpoint's context (a
+    ``FleetCollector``) has a ``TuneController`` attached, the poll is
+    delegated to it; otherwise the reply says tuning is disabled so
+    polling ranks idle quietly instead of erroring."""
+    controller = getattr(endpoint.context, "tune_controller", None)
+    if controller is None:
+        return encode_actions(msg.rank, [], enabled=False)
+    return controller.handle_poll(msg)

@@ -1,0 +1,265 @@
+"""TuneApplier: the rank-side half of the closed loop.
+
+Receives ``TuneAction``s (polled off the collector by
+``RankReporter.start_tuning``, or handed over directly by the local
+loop), applies each to the knob it names, and produces a ``TuneAck``
+carrying the knob's before/after state:
+
+  * ``migrate-file``        -> ``TierManager``: pick this rank's hot
+    small files (bound dataset paths under a slow tier, below the
+    action's size threshold), copy them atomically onto the target
+    tier's root, and serve the mapping through ``resolve()`` — the
+    resolver hook ``data.tiers.make_tiered_reader`` already takes.
+  * ``resize-threads``      -> ``PipelineControl``: request a new
+    reader-thread count that ``Pipeline._mapped_autotune`` picks up at
+    its next window boundary.  Directive form ({direction, factor})
+    scales the rank's *current* count — rank-side state stays
+    rank-side.
+  * ``throttle-checkpoint`` -> ``CheckpointManager.set_throttle``.
+
+Idempotency: transports deliver at-least-once and the controller
+re-delivers until acked, so the applier keeps a seen-set by
+``action_id`` — a duplicate is acked ``skipped`` without re-running.
+Dry-run actions snapshot the before-state and change nothing.
+
+Knob binding: the harness creates the applier before the workload runs
+and publishes it through ``current_applier()`` (thread-local in
+simulated fleets, process-global in spawned ranks), so workload code
+binds its own objects:
+
+    from repro.tune import current_applier
+    app = current_applier()
+    if app is not None:
+        app.bind(dataset=paths, tier_manager=tiers)
+        reader = make_tiered_reader(tiers, resolver=app.resolve)
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import Dict, List, Optional
+
+from repro.tune.actions import TuneAck, TuneAction
+
+_BINDABLE = ("tier_manager", "pipeline_control", "checkpoint_manager",
+             "dataset")
+
+_local = threading.local()
+_process_applier: Optional["TuneApplier"] = None
+
+
+def set_current_applier(applier: Optional["TuneApplier"],
+                        process_wide: bool = False) -> None:
+    """Publish the ambient applier workload code binds knobs onto.
+    Simulated fleets set one per rank *thread*; spawned ranks (one
+    rank per process) set the process-wide slot."""
+    global _process_applier
+    if process_wide:
+        _process_applier = applier
+    else:
+        _local.applier = applier
+
+
+def current_applier() -> Optional["TuneApplier"]:
+    applier = getattr(_local, "applier", None)
+    return applier if applier is not None else _process_applier
+
+
+class TuneApplier:
+    def __init__(self, rank: int = 0,
+                 tier_manager=None, pipeline_control=None,
+                 checkpoint_manager=None,
+                 dataset: Optional[List[str]] = None,
+                 staging_subdir: str = "tune_staged"):
+        self.rank = rank
+        self.tier_manager = tier_manager
+        self.pipeline_control = pipeline_control
+        self.checkpoint_manager = checkpoint_manager
+        self.dataset = list(dataset) if dataset else []
+        self.staging_subdir = staging_subdir
+        self._lock = threading.Lock()
+        self._seen: set = set()
+        self._migrated: Dict[str, str] = {}
+        self._ack_queue: List[dict] = []
+        self.stats = {"applied": 0, "rejected": 0, "failed": 0,
+                      "skipped": 0, "dry_run": 0,
+                      "migrated_files": 0, "migrated_bytes": 0}
+
+    # --------------------------------------------------------- binding
+    def bind(self, **knobs) -> "TuneApplier":
+        """Late-bind knob objects from workload code (see module
+        docstring); unknown names raise so typos surface."""
+        with self._lock:
+            for name, value in knobs.items():
+                if name not in _BINDABLE:
+                    raise ValueError(
+                        f"unknown tune binding: {name!r} "
+                        f"(one of {_BINDABLE})")
+                if name == "dataset":
+                    self.dataset = list(value)
+                else:
+                    setattr(self, name, value)
+        return self
+
+    def resolve(self, path: str) -> str:
+        """Migrated location of ``path`` (or ``path`` unchanged) — the
+        resolver contract of ``make_tiered_reader``."""
+        return self._migrated.get(path, path)
+
+    @property
+    def migrated(self) -> Dict[str, str]:
+        with self._lock:
+            return dict(self._migrated)
+
+    # ------------------------------------------------------- ack queue
+    def queue_ack(self, ack: TuneAck) -> None:
+        with self._lock:
+            self._ack_queue.append(ack.to_dict())
+
+    def take_acks(self) -> List[dict]:
+        with self._lock:
+            out, self._ack_queue = self._ack_queue, []
+            return out
+
+    def requeue_acks(self, acks: List[dict]) -> None:
+        """Put un-shipped acks back (a poll's send failed); they ride
+        the next poll."""
+        with self._lock:
+            self._ack_queue = list(acks) + self._ack_queue
+
+    # ----------------------------------------------------------- apply
+    def apply(self, action: TuneAction, dry_run: bool = False) -> TuneAck:
+        """Apply one action and return its ack.  Never raises — failures
+        become ``failed`` acks so the loop keeps turning."""
+        with self._lock:
+            if action.action_id in self._seen:
+                self.stats["skipped"] += 1
+                return TuneAck(action.action_id, self.rank, "skipped",
+                               detail="duplicate delivery")
+            self._seen.add(action.action_id)
+            try:
+                if dry_run:
+                    self.stats["dry_run"] += 1
+                    return TuneAck(action.action_id, self.rank, "dry-run",
+                                   before=self._snapshot(action.kind),
+                                   detail="dry-run: no change applied")
+                if action.kind == "migrate-file":
+                    ack = self._apply_migrate(action)
+                elif action.kind == "resize-threads":
+                    ack = self._apply_resize(action)
+                elif action.kind == "throttle-checkpoint":
+                    ack = self._apply_throttle(action)
+                else:
+                    ack = TuneAck(action.action_id, self.rank, "rejected",
+                                  detail=f"unknown kind {action.kind!r}")
+            except Exception as e:       # noqa: BLE001 — acked, not fatal
+                self.stats["failed"] += 1
+                return TuneAck(action.action_id, self.rank, "failed",
+                               detail=repr(e))
+            self.stats[ack.status.replace("-", "_")] = \
+                self.stats.get(ack.status.replace("-", "_"), 0) + 1
+            return ack
+
+    def _snapshot(self, kind: str) -> Dict[str, object]:
+        if kind == "migrate-file":
+            return {"files_on_fast_tier": len(self._migrated)}
+        if kind == "resize-threads":
+            control = self.pipeline_control
+            return {"threads": (control.current_threads
+                                if control is not None else None)}
+        if kind == "throttle-checkpoint":
+            ckpt = self.checkpoint_manager
+            return {"min_interval_s": (getattr(ckpt, "min_interval_s", 0.0)
+                                       if ckpt is not None else None)}
+        return {}
+
+    # ---------------------------------------------------- action kinds
+    def _apply_migrate(self, action: TuneAction) -> TuneAck:
+        if self.tier_manager is None or not self.dataset:
+            return TuneAck(action.action_id, self.rank, "rejected",
+                           before=self._snapshot(action.kind),
+                           detail="no tier_manager/dataset bound on "
+                                  "this rank")
+        tier_name = str(action.params.get("tier", "optane"))
+        tier = self.tier_manager.tiers.get(tier_name)
+        if tier is None:
+            return TuneAck(action.action_id, self.rank, "rejected",
+                           before=self._snapshot(action.kind),
+                           detail=f"no tier named {tier_name!r}")
+        threshold = int(action.params.get("size_threshold", 2 << 20))
+        max_files = int(action.params.get("max_files", 256))
+        before = self._snapshot(action.kind)
+        dst_root = os.path.join(tier.root, self.staging_subdir,
+                                f"rank{self.rank:05d}")
+        os.makedirs(dst_root, exist_ok=True)
+        moved, nbytes = 0, 0
+        for path in self.dataset:
+            if moved >= max_files:
+                break
+            if path in self._migrated:
+                continue
+            src_tier = self.tier_manager.tier_of(path)
+            if src_tier is tier:
+                continue               # already on the target tier
+            try:
+                size = os.path.getsize(path)
+            except OSError:
+                continue
+            if size >= threshold:
+                continue
+            dst = os.path.join(dst_root, os.path.basename(path))
+            tmp = dst + ".tmp"
+            with open(path, "rb") as fsrc, open(tmp, "wb") as fdst:
+                fdst.write(fsrc.read())
+            os.replace(tmp, dst)       # atomic: readers never see a torn copy
+            self._migrated[path] = dst
+            moved += 1
+            nbytes += size
+        self.stats["migrated_files"] += moved
+        self.stats["migrated_bytes"] += nbytes
+        after = {"files_on_fast_tier": len(self._migrated),
+                 "migrated_files": moved, "migrated_bytes": nbytes,
+                 "tier": tier_name}
+        return TuneAck(action.action_id, self.rank, "applied",
+                       before=before, after=after,
+                       detail=f"staged {moved} files "
+                              f"({nbytes / 2**20:.2f} MiB) on "
+                              f"{tier_name}")
+
+    def _apply_resize(self, action: TuneAction) -> TuneAck:
+        control = self.pipeline_control
+        if control is None:
+            return TuneAck(action.action_id, self.rank, "rejected",
+                           detail="no pipeline_control bound on this "
+                                  "rank")
+        before = self._snapshot(action.kind)
+        if "threads" in action.params:
+            target = int(action.params["threads"])
+        else:
+            base = control.current_threads or 1
+            factor = max(int(action.params.get("factor", 2)), 1)
+            if action.params.get("direction") == "up":
+                target = base * factor
+            else:
+                target = max(base // factor, 1)
+        control.request_threads(target)
+        return TuneAck(action.action_id, self.rank, "applied",
+                       before=before,
+                       after={"threads": target, "pending": True},
+                       detail=f"requested {target} reader threads "
+                              "(applied at the next autotune window)")
+
+    def _apply_throttle(self, action: TuneAction) -> TuneAck:
+        ckpt = self.checkpoint_manager
+        if ckpt is None:
+            return TuneAck(action.action_id, self.rank, "rejected",
+                           detail="no checkpoint_manager bound on this "
+                                  "rank")
+        before = self._snapshot(action.kind)
+        interval = float(action.params.get("min_interval_s", 0.0))
+        ckpt.set_throttle(interval)
+        return TuneAck(action.action_id, self.rank, "applied",
+                       before=before,
+                       after={"min_interval_s": interval},
+                       detail=f"async checkpoint saves throttled to "
+                              f">= {interval:.3f}s apart")

@@ -1,0 +1,268 @@
+"""TuneController: the collector-side half of the closed loop.
+
+Attached to a ``FleetCollector``, the controller sees every streamed
+``Finding`` the moment ``_msg_findings`` ingests it, runs the selected
+policies over it, and queues the resulting ``TuneAction``s for
+delivery.  Delivery is pull-based: ranks poll with ``tune`` messages
+(acks ride in the poll, pending actions ride in the reply), because
+only duplex transports carry replies.  An action stays deliverable
+until the target rank acks it — combined with at-least-once transports
+(``TcpTransport`` retries) this makes the loop loss-proof as long as
+appliers are idempotent by ``action_id``, which they are.
+
+Degradation on one-way transports (spool): no poll will ever arrive,
+so ``mark_one_way()`` switches the controller to plan-and-log — every
+action is audited and immediately self-acked ``dry-run`` with a detail
+naming the limitation, never silently dropped.
+
+Pacing: a per-(policy, kind, rank) cooldown stops a persistent finding
+(the engine re-raises across windows after quiet gaps) from machine-
+gunning the same knob.  ``dry_run=True`` still delivers actions — the
+rank acks with its before-state but changes nothing — so a dry fleet
+exercises the full wire round trip.
+
+Everything the controller does lands in an audit log (planned/issued/
+acked entries with before/after state) surfaced in
+``FleetReport.tune_audit``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.insight.detectors import Finding
+from repro.link.messages import Message
+from repro.tune.actions import (TuneAck, TuneAction, decode_acks,
+                                encode_actions)
+from repro.tune.policies import TunePolicy
+
+
+class AuditEntry:
+    """One action's lifecycle: planned -> issued -> acked."""
+
+    def __init__(self, action: TuneAction, dry_run: bool = False):
+        self.action = action
+        self.status = "planned"
+        self.dry_run = dry_run
+        self.acks: List[TuneAck] = []
+        self.acked_ranks: set = set()
+        self.delivered_ranks: set = set()
+
+    def to_dict(self) -> dict:
+        return {"action": self.action.to_dict(), "status": self.status,
+                "dry_run": self.dry_run,
+                "delivered_ranks": sorted(self.delivered_ranks),
+                "acks": [a.to_dict() for a in self.acks]}
+
+
+class TuneController:
+    def __init__(self, policies: Sequence[TunePolicy],
+                 dry_run: bool = False, cooldown_s: float = 2.0):
+        self.policies = list(policies)
+        self.dry_run = bool(dry_run)
+        self.cooldown_s = float(cooldown_s)
+        self.one_way = False
+        self._lock = threading.Lock()
+        self._entries: List[AuditEntry] = []
+        self._by_id: Dict[str, AuditEntry] = {}
+        self._last_issue: Dict[Tuple[str, str, Optional[int]], float] = {}
+        self._seq = 0
+        self._t0 = time.perf_counter()
+        self._clock = None            # collector.now once attached
+        self.stats = {"planned": 0, "issued": 0, "acked": 0,
+                      "rejected": 0, "cooldown_suppressed": 0,
+                      "duplicate_acks": 0}
+
+    # ---------------------------------------------------------- wiring
+    def attach(self, collector) -> "TuneController":
+        """Become ``collector.tune_controller``: the findings hook and
+        the ``tune`` verb both reach this instance, and action
+        timestamps land on the fleet clock."""
+        collector.tune_controller = self
+        self._clock = collector.now
+        return self
+
+    def mark_one_way(self) -> None:
+        """The fleet transport carries no replies (spool): degrade to
+        plan-and-log — see module docstring."""
+        self.one_way = True
+
+    def now(self) -> float:
+        if self._clock is not None:
+            return self._clock()
+        return time.perf_counter() - self._t0
+
+    # -------------------------------------------------------- planning
+    def on_findings(self, findings: Sequence[Finding]) -> List[TuneAction]:
+        """Run every policy over newly streamed findings; queue (or, on
+        one-way transports, log-and-self-ack) the planned actions.
+        Called by ``FleetCollector._msg_findings``; also usable
+        directly (the local single-process loop)."""
+        planned: List[TuneAction] = []
+        with self._lock:
+            now = self.now()
+            for finding in findings:
+                for policy in self.policies:
+                    try:
+                        proposals = policy.plan(finding)
+                    except Exception:
+                        continue       # a broken policy must not kill a run
+                    for action in proposals:
+                        key = (action.policy, action.kind, action.rank)
+                        last = self._last_issue.get(key)
+                        if last is not None \
+                                and now - last < self.cooldown_s:
+                            self.stats["cooldown_suppressed"] += 1
+                            continue
+                        self._last_issue[key] = now
+                        self._seq += 1
+                        action = TuneAction(
+                            action_id=f"a{self._seq:04d}",
+                            kind=action.kind, params=action.params,
+                            policy=action.policy, reason=action.reason,
+                            rank=action.rank, issued_at=now)
+                        entry = AuditEntry(action, dry_run=self.dry_run)
+                        self._entries.append(entry)
+                        self._by_id[action.action_id] = entry
+                        self.stats["planned"] += 1
+                        planned.append(action)
+                        if self.one_way:
+                            self._self_ack(entry)
+        return planned
+
+    def _self_ack(self, entry: AuditEntry) -> None:
+        """One-way degradation: audit the plan as an undeliverable
+        dry run instead of dropping it on the floor."""
+        rank = entry.action.rank if entry.action.rank is not None else -1
+        ack = TuneAck(
+            entry.action.action_id, rank, "dry-run",
+            detail="one-way transport: plan logged, not delivered")
+        entry.dry_run = True
+        entry.acks.append(ack)
+        entry.acked_ranks.add(rank)
+        entry.status = "acked"
+        self.stats["acked"] += 1
+
+    # -------------------------------------------------------- delivery
+    def poll_actions(self, rank: int) -> List[TuneAction]:
+        """Pending actions for ``rank``: targeted at it (or broadcast)
+        and not yet acked by it.  Unacked actions are re-delivered on
+        every poll — a lost reply heals on the next round trip, and
+        idempotent appliers make redelivery safe."""
+        with self._lock:
+            out = []
+            for entry in self._entries:
+                if self.one_way:
+                    break
+                if entry.action.rank not in (None, rank):
+                    continue
+                if rank in entry.acked_ranks:
+                    continue
+                if rank not in entry.delivered_ranks:
+                    entry.delivered_ranks.add(rank)
+                    self.stats["issued"] += 1
+                if entry.status == "planned":
+                    entry.status = "issued"
+                out.append(entry.action)
+            return out
+
+    def record_ack(self, ack: TuneAck) -> bool:
+        """Record one rank's receipt; returns False for duplicates
+        (at-least-once transports may re-send a poll's acks) and for
+        unknown action ids."""
+        with self._lock:
+            entry = self._by_id.get(ack.action_id)
+            if entry is None:
+                return False
+            if ack.rank in entry.acked_ranks:
+                self.stats["duplicate_acks"] += 1
+                return False
+            entry.acked_ranks.add(ack.rank)
+            entry.acks.append(ack)
+            entry.status = "acked"
+            self.stats["acked"] += 1
+            if ack.status in ("rejected", "failed"):
+                self.stats["rejected"] += 1
+            return True
+
+    def handle_poll(self, msg: Message) -> Message:
+        """One ``tune`` poll: ingest the acks it carries, answer with
+        the rank's pending actions (the collector Endpoint encodes the
+        returned Message)."""
+        for ack in decode_acks(msg.payload):
+            self.record_ack(ack)
+        actions = self.poll_actions(msg.rank)
+        return encode_actions(msg.rank, actions, dry_run=self.dry_run)
+
+    # ----------------------------------------------------------- audit
+    def audit_log(self) -> List[dict]:
+        with self._lock:
+            return [e.to_dict() for e in self._entries]
+
+    @property
+    def entries(self) -> List[AuditEntry]:
+        with self._lock:
+            return list(self._entries)
+
+
+class LocalTuneLoop:
+    """The single-process closed loop: insight engine -> controller ->
+    applier, no wire.  ``Profiler(ProfilerOptions(tune=True))`` runs one
+    of these next to its local session; ``tick()`` is also callable
+    directly for deterministic step-at-a-time tuning (benchmarks,
+    tests, epoch boundaries)."""
+
+    def __init__(self, engine, controller: TuneController, applier,
+                 interval_s: float = 0.25, rank: int = 0):
+        self.engine = engine
+        self.controller = controller
+        self.applier = applier
+        self.interval_s = float(interval_s)
+        self.rank = rank
+        self._seen = 0
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def tick(self, poll_engine: bool = False) -> int:
+        """One loop iteration: feed new findings to the controller,
+        apply and ack the rank's pending actions.  Returns the number
+        of actions applied this tick.  ``poll_engine=True`` forces an
+        engine poll first (deterministic callers)."""
+        if poll_engine:
+            self.engine.poll()
+        with self._lock:
+            found = list(self.engine.findings[self._seen:])
+            self._seen += len(found)
+            if found:
+                self.controller.on_findings(found)
+            applied = 0
+            for action in self.controller.poll_actions(self.rank):
+                ack = self.applier.apply(action,
+                                         dry_run=self.controller.dry_run)
+                self.controller.record_ack(ack)
+                applied += 1
+            return applied
+
+    def start(self) -> "LocalTuneLoop":
+        if self._thread is not None:
+            return self
+        self._stop.clear()
+
+        def loop() -> None:
+            while not self._stop.wait(self.interval_s):
+                self.tick()
+            self.tick()                # final drain
+
+        self._thread = threading.Thread(target=loop, daemon=True,
+                                        name="tune-local-loop")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join(timeout=5)
+        self._thread = None

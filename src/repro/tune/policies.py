@@ -1,0 +1,132 @@
+"""Built-in tuning policies: findings -> actions.
+
+A policy is the declarative half of the closed loop — it looks at one
+streamed ``Finding`` and proposes zero or more ``TuneAction``s; the
+``TuneController`` owns pacing (cooldowns), delivery, and the audit
+trail.  Policies are registered under the ``policy`` kind in
+``repro.profiler.registry`` (factory protocol:
+``factory(options) -> TunePolicy``), so ``ProfilerOptions(
+tune_policies=(...))`` selects them by name exactly like detectors.
+
+The built-ins mirror the existing advisory layer, turned active:
+
+  * ``stage-hot-files``    — small-file storms, shared-file contention,
+                             and rank stragglers trigger a
+                             ``migrate-file`` action (StagingAdvisor's
+                             plan, executed mid-run — the paper's +19%
+                             staging result as a runtime move).
+  * ``autotune-threads``   — mirrors ``ThreadAutotuneAdvisor.
+                             bias_from_findings``: storms widen reader
+                             parallelism, straggler tails and saturated
+                             fast tiers narrow it — as a directive the
+                             rank applies to its own current count.
+  * ``checkpoint-backoff`` — checkpoint stalls throttle the async
+                             checkpoint writer to a minimum interval
+                             scaled by severity.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.insight.detectors import Finding
+from repro.tune.actions import TuneAction
+
+BUILTIN_POLICIES = ("stage-hot-files", "autotune-threads",
+                    "checkpoint-backoff")
+
+# Matches StagingAdvisor's default small-file bar (2 MiB).
+DEFAULT_SIZE_THRESHOLD = 2 * 1024 * 1024
+
+
+class TunePolicy:
+    """Base: ``plan(finding)`` returns the actions one finding earns.
+
+    Returned actions need no ``action_id``/``issued_at`` — the
+    controller stamps both (ids must be controller-unique, timestamps
+    belong to the fleet clock)."""
+
+    name = "policy"
+
+    def plan(self, finding: Finding) -> List[TuneAction]:
+        raise NotImplementedError
+
+
+class StageHotFilesPolicy(TunePolicy):
+    name = "stage-hot-files"
+    triggers = ("small-file-storm", "shared-file-contention",
+                "rank-straggler")
+
+    def __init__(self, tier: str = "optane",
+                 size_threshold: int = DEFAULT_SIZE_THRESHOLD,
+                 max_files: int = 256):
+        self.tier = tier
+        self.size_threshold = int(size_threshold)
+        self.max_files = int(max_files)
+
+    def plan(self, finding: Finding) -> List[TuneAction]:
+        if finding.detector not in self.triggers:
+            return []
+        return [TuneAction(
+            action_id="", kind="migrate-file",
+            params={"tier": self.tier,
+                    "size_threshold": self.size_threshold,
+                    "max_files": self.max_files},
+            policy=self.name,
+            reason=f"{finding.detector}: {finding.recommendation}",
+            rank=finding.rank)]
+
+
+class AutotuneThreadsPolicy(TunePolicy):
+    name = "autotune-threads"
+    widen = ("small-file-storm",)
+    narrow = ("straggler-read-tail", "fast-tier-saturation",
+              "rank-straggler")
+
+    def __init__(self, factor: int = 2):
+        self.factor = int(factor)
+
+    def plan(self, finding: Finding) -> List[TuneAction]:
+        if finding.detector in self.widen:
+            direction = "up"
+        elif finding.detector in self.narrow:
+            direction = "down"
+        else:
+            return []
+        return [TuneAction(
+            action_id="", kind="resize-threads",
+            params={"direction": direction, "factor": self.factor},
+            policy=self.name,
+            reason=f"{finding.detector}: {finding.recommendation}",
+            rank=finding.rank)]
+
+
+class CheckpointBackoffPolicy(TunePolicy):
+    name = "checkpoint-backoff"
+    triggers = ("checkpoint-stall",)
+
+    def __init__(self, base_interval_s: float = 5.0):
+        self.base_interval_s = float(base_interval_s)
+
+    def plan(self, finding: Finding) -> List[TuneAction]:
+        if finding.detector not in self.triggers:
+            return []
+        interval = round(self.base_interval_s
+                         * max(finding.severity, 0.2), 3)
+        return [TuneAction(
+            action_id="", kind="throttle-checkpoint",
+            params={"min_interval_s": interval},
+            policy=self.name,
+            reason=f"{finding.detector}: {finding.recommendation}",
+            rank=finding.rank)]
+
+
+def make_builtin_policy(name: str, options=None) -> TunePolicy:
+    """Factory behind the registry entries; ``options`` is the active
+    ProfilerOptions (or None for direct construction)."""
+    if name == "stage-hot-files":
+        return StageHotFilesPolicy()
+    if name == "autotune-threads":
+        return AutotuneThreadsPolicy()
+    if name == "checkpoint-backoff":
+        return CheckpointBackoffPolicy()
+    raise ValueError(f"unknown built-in policy: {name!r}")
