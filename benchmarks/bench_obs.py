@@ -1,0 +1,140 @@
+"""repro.obs: self-telemetry cost and dashboard render time.
+
+Three questions, one bench:
+
+  * hot-path primitives — ns per ``Counter.inc`` / ``Histogram.observe``
+    / ``MetricsRegistry.snapshot`` (the costs every instrumented
+    subsystem pays);
+  * instrumented-op overhead — ``rt.posix_read`` in a tight loop on a
+    runtime with its metrics registry on vs ``metrics=False``,
+    interleaved min-of-repeats; this isolates exactly the metrics code
+    on the hot path and is smoke-asserted under 2 % (the file-read
+    epoch rides along as an informational row — at smoke sizes its
+    syscall noise is several times the effect being measured);
+  * dashboard — ``render_dashboard`` wall time over a real profiled
+    window, plus an assert that the chrome-trace export carries the
+    "ph": "C" counter events the dashboard's numbers mirror.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import SMOKE, Row, cleanup, make_workspace, scaled
+
+
+def _hot_loop(fn, n: int) -> float:
+    """us per call of ``fn`` over ``n`` iterations."""
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def _read_epoch(rt, paths, read_size=65536) -> float:
+    from repro.fleet.harness import RankIO
+    io = RankIO(rt)
+    t0 = time.perf_counter()
+    for p in paths:
+        fd = io.open(p)
+        while io.read(fd, read_size):
+            pass
+        io.close(fd)
+    return time.perf_counter() - t0
+
+
+def run(rows: Row) -> None:
+    from repro.core.runtime import DarshanRuntime
+    from repro.obs.metrics import MetricsRegistry
+    from repro.profiler import Profiler, ProfilerOptions
+
+    # ------------------------------------------------- hot primitives
+    n = scaled(1_000_000, 50_000)
+    reg = MetricsRegistry()
+    c = reg.counter("bench.counter")
+    h = reg.histogram("bench.histogram")
+    rows.add("obs_counter_inc", _hot_loop(c.inc, n), f"n={n}")
+    rows.add("obs_histogram_observe",
+             _hot_loop(lambda: h.observe(4096), n), f"n={n}")
+    rows.add("obs_registry_snapshot",
+             _hot_loop(reg.snapshot, scaled(20_000, 2_000)),
+             f"metrics={len(reg.snapshot()['counters']) + 1}")
+
+    # ------------------------------------ instrumented-op hot-path cost
+    nops = scaled(400_000, 100_000)
+    op_repeats = scaled(5, 6)   # smoke: more samples, tighter min
+
+    def op_loop(metrics_on: bool) -> float:
+        rt = DarshanRuntime(metrics=None if metrics_on else False)
+        rt.enabled = True
+        rt.posix_open(5, "/bench/hot.bin", 0.0, 0.0)
+        t0 = time.perf_counter()
+        for _ in range(nops):
+            rt.posix_read(5, None, 4096, 0.0, 0.001, advance=True)
+        return (time.perf_counter() - t0) / nops * 1e6
+
+    op_loop(False)                      # warm-up, not timed
+    on_op, off_op = [], []
+    for _ in range(op_repeats):         # interleaved like bench_overhead
+        off_op.append(op_loop(False))
+        on_op.append(op_loop(True))
+    base_op, inst_op = min(off_op), min(on_op)
+    op_overhead_pct = 100 * (inst_op - base_op) / base_op
+    rows.add("obs_op_metrics_off", base_op, "baseline")
+    rows.add("obs_op_metrics_on", inst_op,
+             f"overhead_pct={op_overhead_pct:.2f}")
+    if SMOKE:
+        assert op_overhead_pct < 2, (
+            f"metrics hot-path overhead {op_overhead_pct:.2f}% "
+            "breaches the 2% budget")
+
+    # --------------------------- end-to-end file reads (informational)
+    from repro.data.synthetic import make_imagenet_like
+    ws = make_workspace("obs_")
+    paths = make_imagenet_like(os.path.join(ws, "img"),
+                               n_files=scaled(256, 48), seed=11)
+    repeats = scaled(5, 3)
+
+    def epoch(metrics_on: bool) -> float:
+        rt = DarshanRuntime(metrics=None if metrics_on else False)
+        rt.enabled = True
+        return _read_epoch(rt, paths)
+
+    epoch(False)                       # warm-up, not timed
+    on_times, off_times = [], []
+    for _ in range(repeats):
+        off_times.append(epoch(False))
+        on_times.append(epoch(True))
+    base, inst = min(off_times), min(on_times)
+    rows.add("obs_epoch_metrics_off", base * 1e6, "baseline")
+    rows.add("obs_epoch_metrics_on", inst * 1e6,
+             f"overhead_pct={100 * (inst - base) / base:.2f}")
+
+    # --------------------------------------------- dashboard rendering
+    from repro.obs.dashboard import render_dashboard
+    prof = Profiler(ProfilerOptions(mode="local"))
+    with prof:
+        with open(paths[0], "rb") as f:
+            while f.read(65536):
+                pass
+        for p in paths[:scaled(64, 16)]:
+            with open(p, "rb") as f:
+                f.read(4096)
+    report = prof.report
+    t0 = time.perf_counter()
+    html = render_dashboard(report)
+    render_s = time.perf_counter() - t0
+    rows.add("obs_dashboard_render", render_s * 1e6,
+             f"html_kb={len(html) // 1024}")
+    assert 'id="per-file-heatmap"' in html
+    trace = report.export("chrome_trace")
+    counter_events = [e for e in trace["traceEvents"]
+                      if e.get("ph") == "C"]
+    assert counter_events, "chrome trace carries no counter events"
+    rows.add("obs_chrome_counter_events", float(len(counter_events)),
+             "ph=C present")
+    cleanup(ws)
+
+
+if __name__ == "__main__":
+    run(Row())

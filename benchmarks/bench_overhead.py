@@ -3,13 +3,23 @@
 The same STREAM workload under three configurations: (a) no profiler,
 (b) automatic full-window profiling (TensorBoard-callback mode), and
 (c) manual profiling restarted every 5 steps.  The paper reports 10-20 %
-for (b) and 0.6-7 % for (c), dominated by post-stop trace analysis."""
+for (b) and 0.6-7 % for (c), dominated by post-stop trace analysis.
+
+Methodology: a warm-up epoch first (page cache + thread pools settle
+before anything is timed), then the three modes run INTERLEAVED within
+each repeat rather than as back-to-back blocks — timing all baseline
+epochs first systematically favored whichever mode ran later as the
+cache warmed, which is how this bench once reported a -31 % "overhead".
+Each mode's score is its minimum over repeats (least-noise estimate).
+"""
 from __future__ import annotations
 
 import os
 import time
 
-from benchmarks.common import Row, cleanup, make_workspace, scaled
+from benchmarks.common import SMOKE, Row, cleanup, make_workspace, scaled
+
+MODES = ("none", "auto", "manual")
 
 
 def _run_epoch(paths, batch=32, threads=16, callback=None):
@@ -36,30 +46,45 @@ def run(rows: Row) -> None:
     ws = make_workspace("overhead_")
     paths = make_imagenet_like(os.path.join(ws, "img"),
                                n_files=scaled(640, 64), seed=3)
-    repeats = scaled(3, 1)
+    # smoke epochs are ~4 ms: the min-estimate needs more interleaved
+    # samples than the full-size (~100x longer) epochs do to stay
+    # inside the assert band below
+    repeats = scaled(3, 6)
 
-    def bench(mode: str):
-        times = []
-        for _ in range(repeats):
-            rt = reset_runtime()
-            n_steps = len(paths) // 32
-            cb = None
-            if mode == "auto":
-                cb = StepCallback(0, n_steps - 1, runtime=rt)
-            elif mode == "manual":
-                cb = StepCallback(0, n_steps - 1, every=5, runtime=rt)
-            wall, steps = _run_epoch(paths, callback=cb)
-            times.append(wall)
-        return min(times)
+    def run_mode(mode: str) -> float:
+        rt = reset_runtime()
+        n_steps = len(paths) // 32
+        cb = None
+        if mode == "auto":
+            cb = StepCallback(0, n_steps - 1, runtime=rt)
+        elif mode == "manual":
+            cb = StepCallback(0, n_steps - 1, every=5, runtime=rt)
+        wall, _ = _run_epoch(paths, callback=cb)
+        return wall
 
-    base = bench("none")
-    auto = bench("auto")
-    manual = bench("manual")
+    run_mode("none")                  # warm-up epoch, not timed
+    times = {m: [] for m in MODES}
+    for _ in range(repeats):
+        for m in MODES:               # interleaved: cache drift hits
+            times[m].append(run_mode(m))   # every mode equally
+
+    base = min(times["none"])
     rows.add("overhead_none", base * 1e6, "baseline")
-    rows.add("overhead_auto", auto * 1e6,
-             f"overhead_pct={100 * (auto - base) / base:.1f}")
-    rows.add("overhead_manual", manual * 1e6,
-             f"overhead_pct={100 * (manual - base) / base:.1f}")
+    for mode in ("auto", "manual"):
+        best = min(times[mode])
+        overhead_pct = 100 * (best - base) / base
+        rows.add(f"overhead_{mode}", best * 1e6,
+                 f"overhead_pct={overhead_pct:.1f}")
+        if SMOKE:
+            # instrumented must not beat the baseline beyond jitter: a
+            # clearly negative overhead means the methodology is broken
+            # again (the back-to-back-blocks version once reported -31%),
+            # not that profiling is free.  Smoke epochs are ~4 ms and
+            # jitter ±7% run to run even interleaved, so the floor sits
+            # below the noise band, not at zero.
+            assert overhead_pct >= -10, (
+                f"overhead_{mode} measured {overhead_pct:.1f}% (< -10%): "
+                "baseline/instrumented phases are not comparable")
     cleanup(ws)
 
 

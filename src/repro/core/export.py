@@ -28,14 +28,58 @@ def _segment_tuples(segments):
     return (tuple(s) for s in segments)
 
 
+# the self-telemetry counters worth a TraceViewer counter track: each
+# one non-zero means the profile itself lost or mishandled data
+_TRACKED_COUNTERS = ("trace.dropped", "runtime.listener_errors",
+                     "insight.ring_dropped")
+
+_BANDWIDTH_BINS = 60
+
+
+def _bandwidth_counter_events(pid, segments, nbins=_BANDWIDTH_BINS) -> list:
+    """TraceViewer counter-track events ("ph": "C"): the window's byte
+    throughput binned over time — the counter graph that sits above the
+    op timeline (segments must already be on the target timeline)."""
+    import numpy as np
+    cols = (segments if isinstance(segments, SegmentColumns)
+            else SegmentColumns.from_rows(list(segments)))
+    if len(cols) == 0:
+        return []
+    t0 = float(np.min(cols.start))
+    t1 = float(np.max(cols.end))
+    span = max(t1 - t0, 1e-9)
+    dt = span / nbins
+    hist, _ = np.histogram(cols.start, bins=nbins, range=(t0, t0 + span),
+                           weights=cols.length)
+    return [{"ph": "C", "pid": pid, "tid": 0, "name": "bandwidth_mb_s",
+             "ts": (t0 + i * dt) * 1e6,
+             "args": {"MB/s": float(b) / dt / 1e6}}
+            for i, b in enumerate(hist)]
+
+
+def _metrics_counter_events(pid, metrics, ts_s: float) -> list:
+    """Counter-track events for the tracked self-telemetry counters
+    (drops / swallowed errors) at the window's end."""
+    counters = (metrics or {}).get("counters") or {}
+    return [{"ph": "C", "pid": pid, "tid": 0, "name": name,
+             "ts": ts_s * 1e6, "args": {"count": int(counters[name])}}
+            for name in _TRACKED_COUNTERS if name in counters]
+
+
 def to_chrome_trace(segments: Iterable[Segment],
                     path: Optional[str] = None,
-                    findings: Optional[Iterable] = None) -> dict:
+                    findings: Optional[Iterable] = None,
+                    metrics: Optional[dict] = None) -> dict:
     """One TraceViewer row per (module, file): pid=module, tid=file.
 
     Insight findings render as global instant events ("ph": "i") on an
     INSIGHT row at their window end, with severity/evidence/
-    recommendation in args — visible alongside the op timeline."""
+    recommendation in args — visible alongside the op timeline.  A
+    COUNTERS row carries "ph": "C" counter tracks: the binned bandwidth
+    series plus the tracked self-telemetry counters (drops, swallowed
+    listener errors) from ``metrics`` (a repro.obs snapshot)."""
+    if not isinstance(segments, SegmentColumns):
+        segments = list(segments)
     tids: dict = {}
     events = []
     meta = []
@@ -75,6 +119,14 @@ def to_chrome_trace(segments: Iterable[Segment],
             "args": {"offset": offset, "length": length,
                      "os_thread": thread},
         })
+    counter_events = _bandwidth_counter_events("COUNTERS", segments)
+    counter_events += _metrics_counter_events(
+        "COUNTERS", metrics,
+        counter_events[-1]["ts"] / 1e6 if counter_events else 0.0)
+    if counter_events:
+        meta.append({"ph": "M", "pid": "COUNTERS", "name": "process_name",
+                     "args": {"name": "tf-darshan counters"}})
+        events += counter_events
     trace = {"traceEvents": meta + events, "displayTimeUnit": "ms"}
     if path:
         with open(path, "w") as f:
@@ -134,21 +186,32 @@ def to_darshan_log(report: SessionReport, path: Optional[str] = None,
 
 def to_fleet_chrome_trace(rank_segments: Dict[int, Iterable[Segment]],
                           path: Optional[str] = None,
-                          findings: Optional[Iterable] = None) -> dict:
+                          findings: Optional[Iterable] = None,
+                          metrics: Optional[dict] = None) -> dict:
     """Merged multi-rank TraceViewer export: one pid per rank (named
     ``rank N``), one tid per (module, file) within the rank.  Segment
     timestamps are expected to be already clock-aligned to the fleet
     timeline (FleetCollector's handshake offsets).  Findings render on a
     per-rank INSIGHT row (fleet-level findings, rank=None, go to pid
-    "fleet")."""
+    "fleet").  Each rank gets a "ph": "C" bandwidth counter track, and
+    the fleet-level ``metrics`` rollup's tracked counters land on a
+    COUNTERS row."""
     events, meta = [], []
+    last_ts = 0.0
     for rank in sorted(rank_segments):
         pid = f"rank {rank}"
         meta.append({"ph": "M", "pid": pid, "name": "process_name",
                      "args": {"name": f"tf-darshan {pid}"}})
+        segs = rank_segments[rank]
+        if not isinstance(segs, SegmentColumns):
+            segs = list(segs)
+        bw = _bandwidth_counter_events(pid, segs)
+        if bw:
+            events += bw
+            last_ts = max(last_ts, bw[-1]["ts"] / 1e6)
         tids: dict = {}
         for module, spath, op, offset, length, start, end, thread \
-                in _segment_tuples(rank_segments[rank]):
+                in _segment_tuples(segs):
             key = (module, spath)
             tid = tids.get(key)
             if tid is None:
@@ -183,6 +246,11 @@ def to_fleet_chrome_trace(rank_segments: Dict[int, Iterable[Segment]],
                          "evidence": dict(f.evidence),
                          "recommendation": f.recommendation},
             })
+    mevents = _metrics_counter_events("COUNTERS", metrics, last_ts)
+    if mevents:
+        meta.append({"ph": "M", "pid": "COUNTERS", "name": "process_name",
+                     "args": {"name": "tf-darshan counters"}})
+        events += mevents
     trace = {"traceEvents": meta + events, "displayTimeUnit": "ms"}
     if path:
         with open(path, "w") as f:

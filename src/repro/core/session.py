@@ -83,6 +83,10 @@ class ProfileSession:
         self._enabled_before = self.rt.enabled
         self.rt.enabled = True
         self._listener_errors_mark = dict(self.rt.listener_errors)
+        # self-telemetry window mark: stop() attaches the registry's
+        # delta over this window as report.metrics (repro.obs)
+        reg = getattr(self.rt, "metrics", None)
+        self._metrics_mark = reg.snapshot() if reg is not None else None
         self._start_snap = self.rt.snapshot()
         self._t0 = self._start_snap["time"]
         self._active = True
@@ -111,6 +115,10 @@ class ProfileSession:
             k: v - mark.get(k, 0)
             for k, v in self.rt.listener_errors.items()
             if v - mark.get(k, 0) > 0}
+        reg = getattr(self.rt, "metrics", None)
+        report.metrics = (
+            reg.delta(getattr(self, "_metrics_mark", None))
+            if reg is not None else {})
         if self.insight_engine is not None:
             # Only findings active within this window: the owned engine
             # persists across session restarts (StepCallback's every=N

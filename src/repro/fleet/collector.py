@@ -50,10 +50,19 @@ from repro.link import (LINK_VERSION, Endpoint, LineServer, Message,
 
 class FleetCollector:
     def __init__(self,
-                 detectors: Optional[List[FleetDetector]] = None):
+                 detectors: Optional[List[FleetDetector]] = None,
+                 metrics=None):
+        from repro.obs.metrics import MetricsRegistry
         self.detectors = (list(detectors) if detectors is not None
                           else default_fleet_detectors())
         self.ranks: Dict[int, RankSlice] = {}
+        # self-telemetry (repro.obs): every ``stats`` bump mirrors into
+        # this registry, and ``report()`` folds it into the fleet-level
+        # metrics rollup next to what the ranks shipped
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        # rank -> fleet-clock time of that rank's last ingested message
+        # (the per-rank staleness gauges read at report() time)
+        self._last_seen: Dict[int, float] = {}
         # streaming pushes by rank, superseded by that rank's final report
         self._streamed: Dict[int, List[Finding]] = {}
         # standalone (non-streaming) pushes: persistent, always reported
@@ -88,6 +97,11 @@ class FleetCollector:
         # dropped" checks lie in both directions.
         with self._lock:
             self.stats[key] += by
+        self.metrics.counter(f"collector.{key}").inc(by)
+
+    def _mark_seen(self, rank: int) -> None:
+        with self._lock:
+            self._last_seen[rank] = self.now()
 
     # ------------------------------------------------------------- clock
     def now(self) -> float:
@@ -123,6 +137,7 @@ class FleetCollector:
                 self.ingest_line(line)
             except WireError:
                 self._bump("errors")
+                self.metrics.counter("collector.corrupt_lines").inc()
                 continue
             n += 1
         return n
@@ -140,6 +155,7 @@ class FleetCollector:
             s.host = str(msg.payload.get("host", ""))
             s.pid = int(msg.payload.get("pid", 0))
         self._bump("hellos")
+        self._mark_seen(msg.rank)
         # caps advertises optional payload shapes this collector can
         # decode; a reporter downgrades to the legacy row wire when the
         # cap is missing (an old collector would otherwise silently
@@ -152,6 +168,7 @@ class FleetCollector:
     def _msg_clock(endpoint, msg: Message) -> str:
         self = endpoint.context
         self._bump("clock_probes")
+        self._mark_seen(msg.rank)
         return encode("clock_reply", msg.rank, {"t_coll": self.now()})
 
     @staticmethod
@@ -159,6 +176,7 @@ class FleetCollector:
         self = endpoint.context
         self._ingest_report(msg)
         self._bump("reports")
+        self._mark_seen(msg.rank)
         return "ok"
 
     @staticmethod
@@ -174,6 +192,7 @@ class FleetCollector:
                 # standalone push: authoritative, survives the report
                 self._extra_findings.extend(found)
         self._bump("findings", len(found))
+        self._mark_seen(msg.rank)
         # the closed loop: every streamed finding reaches the attached
         # TuneController the moment it lands (not at report() time —
         # actions must go out while the run can still benefit)
@@ -225,6 +244,10 @@ class FleetCollector:
             s.listener_errors = {
                 str(k): int(v)
                 for k, v in (p.get("listener_errors") or {}).items()}
+            # per-rank self-telemetry shipped inside the report (the
+            # fleet rollup merges these at report() time)
+            if "metrics" in p:
+                s.metrics = dict(p.get("metrics") or {})
             # the final report supersedes this rank's mid-run pushes
             self._streamed.pop(msg.rank, None)
 
@@ -257,6 +280,7 @@ class FleetCollector:
         window = (min(t0s), max(t1s)) if t0s else (0.0, 0.0)
         nprocs = max([len(ranks)] + [s.nprocs for s in ranks.values()])
         controller = self.tune_controller
+        metrics = self._metrics_rollup(ranks, controller)
         return FleetReport(
             nprocs=nprocs,
             ranks=ranks,
@@ -272,7 +296,32 @@ class FleetCollector:
             tune_audit=(controller.audit_log()
                         if controller is not None else []),
             tune_stats=(dict(controller.stats)
-                        if controller is not None else {}))
+                        if controller is not None else {}),
+            metrics=metrics)
+
+    def _metrics_rollup(self, ranks: Dict[int, RankSlice],
+                        controller) -> dict:
+        """Fleet-level metrics: every rank's shipped snapshot merged
+        with the collector's own registry (counters sum, gauges keep
+        the max, histogram bins add) — ``FleetReport.metrics``."""
+        from repro.obs.metrics import merge_snapshots
+        now = self.now()
+        with self._lock:
+            for r, t in self._last_seen.items():
+                self.metrics.gauge(
+                    f"collector.rank_staleness_s.rank{r}").set(now - t)
+            lines = self.stats["lines"]
+        # ingest rate over the collector's whole lifetime — a live
+        # dashboard polling report() sees it move with the fleet
+        self.metrics.gauge("collector.ingest_lines_per_s").set(
+            lines / now if now > 0 else 0.0)
+        snaps = [ranks[r].metrics for r in sorted(ranks)
+                 if ranks[r].metrics]
+        snaps.append(self.metrics.snapshot())
+        if controller is not None:
+            snaps.append({"counters": {
+                f"tune.{k}": int(v) for k, v in controller.stats.items()}})
+        return merge_snapshots(snaps)
 
 
 class CollectorServer:

@@ -127,6 +127,7 @@ def simulate_fleet(
         make_transport: Optional[Callable[[int], object]] = None,
         collect: bool = True,
         segments_wire: str = "columns",
+        ship_metrics: bool = True,
         tune_controller=None,
         make_applier: Optional[Callable[[int], object]] = None,
         tune_interval_s: float = 0.1) -> Optional[FleetReport]:
@@ -167,7 +168,8 @@ def simulate_fleet(
                                       auto_attach=False, insight=insight,
                                       insight_interval_s=insight_interval_s,
                                       trace=trace,
-                                      segments_wire=segments_wire))
+                                      segments_wire=segments_wire,
+                                      ship_metrics=ship_metrics))
 
     errors: List[BaseException] = []
     tuning = tune_controller is not None

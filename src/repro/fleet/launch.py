@@ -69,7 +69,8 @@ def _child_main(rank: int, nranks: int, workload, transport_spec,
                 fast_tier_mb_s, insight_interval_s: float, trace: bool,
                 handshake_rounds: int, stream_interval_s: float,
                 segments_wire: str = "columns",
-                tune_spec: Optional[dict] = None) -> None:
+                tune_spec: Optional[dict] = None,
+                ship_metrics: bool = True) -> None:
     """One rank: profile the workload against a private runtime, stream
     findings mid-run, ship the window, exit 0 on success.
 
@@ -85,7 +86,8 @@ def _child_main(rank: int, nranks: int, workload, transport_spec,
         reporter = RankReporter(rank, nprocs=nranks, runtime=rt,
                                 auto_attach=False, insight=insight,
                                 insight_interval_s=insight_interval_s,
-                                trace=trace, segments_wire=segments_wire)
+                                trace=trace, segments_wire=segments_wire,
+                                ship_metrics=ship_metrics)
         kind = transport_spec[0]
         if kind == "tcp":
             transport = TcpTransport(transport_spec[1], transport_spec[2])
@@ -146,6 +148,7 @@ def run_spawned_fleet(
         mp_start_method: Optional[str] = None,
         timeout_s: float = 120.0,
         segments_wire: str = "columns",
+        ship_metrics: bool = True,
         tune_controller=None,
         tune_interval_s: float = 0.1) -> FleetReport:
     """Run ``workload(rank, io)`` on ``nranks`` OS processes and return
@@ -202,7 +205,8 @@ def run_spawned_fleet(
                       (clock_skew_s[r] if clock_skew_s else 0.0),
                       (throttles or {}).get(r), insight, fast_tier_mb_s,
                       insight_interval_s, trace, handshake_rounds,
-                      stream_interval_s, segments_wire, tune_spec))
+                      stream_interval_s, segments_wire, tune_spec,
+                      ship_metrics))
             p.start()
             procs.append(p)
 

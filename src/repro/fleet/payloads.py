@@ -131,7 +131,8 @@ def encode_report(rank: int, report, nprocs: int = 1,
                   clock_offset_s: Optional[float] = None,
                   clock_rtt_s: Optional[float] = None,
                   clock_wall_offset_s: Optional[float] = None,
-                  segments_wire: str = "columns") -> str:
+                  segments_wire: str = "columns",
+                  metrics: Optional[dict] = None) -> str:
     """Serialize one rank's SessionReport window.
 
     ``clock_offset_s`` is the handshake-measured offset such that
@@ -141,7 +142,10 @@ def encode_report(rank: int, report, nprocs: int = 1,
     which the collector derives the fleet offset against its own wall
     anchor.  ``segments_wire`` picks the DXT batch shape: ``"columns"``
     (default — one ``segments_columns`` object of parallel arrays) or
-    ``"rows"`` (the legacy per-row ``segments`` list)."""
+    ``"rows"`` (the legacy per-row ``segments`` list).  ``metrics`` is
+    the rank's self-telemetry snapshot (``repro.obs`` shape: counters /
+    gauges / histograms); the collector rolls shipped snapshots up into
+    ``FleetReport.metrics``."""
     if segments_wire not in ("columns", "rows"):
         raise ValueError(f"segments_wire must be 'columns' or 'rows', "
                          f"got {segments_wire!r}")
@@ -159,6 +163,8 @@ def encode_report(rank: int, report, nprocs: int = 1,
         "clock": {"offset_s": clock_offset_s, "rtt_s": clock_rtt_s,
                   "wall_offset_s": clock_wall_offset_s},
     }
+    if metrics:
+        payload["metrics"] = metrics
     if segments_wire == "columns":
         cols = getattr(report, "segments_columns", None)
         if cols is None:

@@ -48,6 +48,9 @@ class RankSlice:
     findings: List[Finding] = field(default_factory=list)  # rank set
     # swallowed segment-listener exceptions, keyed by listener
     listener_errors: Dict[str, int] = field(default_factory=dict)
+    # this rank's self-telemetry snapshot (repro.obs shape:
+    # counters/gauges/histograms), shipped inside the report payload
+    metrics: dict = field(default_factory=dict)
 
     def segments_table(self) -> SegmentColumns:
         """This rank's window as a columnar batch (converting once when
@@ -94,6 +97,9 @@ class FleetReport:
     # counters; empty when no TuneController was attached
     tune_audit: List[dict] = field(default_factory=list)
     tune_stats: dict = field(default_factory=dict)
+    # fleet-level self-telemetry rollup (repro.obs): every rank's
+    # shipped snapshot merged with the collector's own registry
+    metrics: dict = field(default_factory=dict)
 
     # ------------------------------------------------------------ queries
     @property
@@ -133,7 +139,7 @@ class FleetReport:
     def to_chrome_trace(self, path: Optional[str] = None) -> dict:
         return to_fleet_chrome_trace(
             {r: s.segments for r, s in self.ranks.items()},
-            path=path, findings=self.findings)
+            path=path, findings=self.findings, metrics=self.metrics)
 
     def to_darshan_log(self, path: Optional[str] = None,
                        exe: Optional[str] = None) -> str:
@@ -180,6 +186,7 @@ class FleetReport:
             "collector": dict(self.collector_stats),
             "tune": {"audit": [dict(e) for e in self.tune_audit],
                      "stats": dict(self.tune_stats)},
+            "metrics": dict(self.metrics),
         }
 
     def summary(self) -> str:

@@ -74,7 +74,8 @@ class RankReporter:
                  runtime: Optional[DarshanRuntime] = None,
                  auto_attach: bool = True, insight=False,
                  insight_interval_s: float = 0.5, trace: bool = True,
-                 segments_wire: str = "columns"):
+                 segments_wire: str = "columns",
+                 ship_metrics: bool = True):
         self.rank = rank
         self.nprocs = nprocs
         self.rt = runtime or get_runtime()
@@ -88,6 +89,9 @@ class RankReporter:
         # out of a columnar payload — silently).
         self.segments_wire = segments_wire
         self._negotiated_wire: Optional[str] = None
+        # ship the rank's self-telemetry snapshot (repro.obs) inside
+        # the report payload; the collector rolls the fleet up
+        self.ship_metrics = ship_metrics
         self.clock_offset_s: Optional[float] = None
         self.clock_rtt_s: Optional[float] = None
         self.clock_wall_offset_s: Optional[float] = None
@@ -226,8 +230,38 @@ class RankReporter:
                 clock_offset_s=self.clock_offset_s,
                 clock_rtt_s=self.clock_rtt_s,
                 clock_wall_offset_s=self.clock_wall_offset_s,
-                segments_wire=self.effective_segments_wire),
+                segments_wire=self.effective_segments_wire,
+                metrics=self._collect_metrics(report)),
         ]
+
+    def _collect_metrics(self, report,
+                         transport=None) -> Optional[dict]:
+        """The self-telemetry snapshot shipped with a report: the
+        session's windowed delta (``report.metrics``) when present,
+        else the runtime registry's full snapshot, with the transport's
+        own ``stats`` (``link.<name>.*``) and the tune applier's
+        counts (``tune.applier.*``) folded in as counters."""
+        if not self.ship_metrics:
+            return None
+        from repro.obs.metrics import copy_snapshot, empty_snapshot
+        snap = getattr(report, "metrics", None)
+        if snap:
+            snap = copy_snapshot(snap)
+        else:
+            reg = getattr(self.rt, "metrics", None)
+            snap = reg.snapshot() if reg is not None else empty_snapshot()
+        counters = snap.setdefault("counters", {})
+        stats = getattr(transport, "stats", None)
+        if stats:
+            name = getattr(transport, "stats_name", "transport")
+            for k, v in stats.items():
+                counters[f"link.{name}.{k}"] = int(v)
+        applier = self._tune_applier
+        astats = getattr(applier, "stats", None)
+        if astats:
+            for k, v in astats.items():
+                counters[f"tune.applier.{k}"] = int(v)
+        return snap
 
     @property
     def effective_segments_wire(self) -> str:
@@ -255,7 +289,8 @@ class RankReporter:
             clock_offset_s=self.clock_offset_s,
             clock_rtt_s=self.clock_rtt_s,
             clock_wall_offset_s=self.clock_wall_offset_s,
-            segments_wire=self.effective_segments_wire))
+            segments_wire=self.effective_segments_wire,
+            metrics=self._collect_metrics(report, transport=t)))
         t(encode("bye", self.rank, {}))
 
     def ship_socket(self, host: str, port: int,

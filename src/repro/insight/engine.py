@@ -59,6 +59,9 @@ class InsightEngine:
         self._bus_dropped_mark = 0
         self._active_idx: Dict[str, int] = {}
         self._last_new: List[Finding] = []
+        # self-telemetry (repro.obs): bound to the attached runtime's
+        # registry so per-rank engines report per-rank poll health
+        self._metrics = None
         self._poll_lock = threading.Lock()
         self._bg_stop = threading.Event()
         self._bg_thread: Optional[threading.Thread] = None
@@ -84,6 +87,7 @@ class InsightEngine:
         if not self._use_store:
             rt.add_segment_listener(self.bus.push)
         self._rt = rt
+        self._metrics = getattr(rt, "metrics", None)
         self._seq = store.seq if store is not None else 0
         self._window_start = rt.now()
         self._zero_reads_total = self._zero_read_total(rt)
@@ -108,6 +112,7 @@ class InsightEngine:
         if self._rt is not None:
             self._rt.remove_segment_listener(self.bus.push)
             self._rt = None
+            self._metrics = None
 
     @property
     def attached(self) -> bool:
@@ -171,6 +176,7 @@ class InsightEngine:
                 self._last_new = []
                 return []
             t0 = self._window_start
+            dropped_mark = self.dropped_events
             zero_delta = 0
             if rt is not None:
                 total = self._zero_read_total(rt)
@@ -219,6 +225,17 @@ class InsightEngine:
                 del self.history[:len(self.history) - MAX_HISTORY]
             self._window_start = t1
             self._last_new = self._coalesce(new)
+            m = self._metrics
+            if m is not None:
+                m.counter("insight.polls").inc()
+                # how far behind the live clock this window's close is
+                # when the poll actually ran — a stalled poller shows
+                # up as a growing lag gauge, not silence
+                m.gauge("insight.poll_lag_s").set(
+                    (rt.now() - t1) if rt is not None else 0.0)
+                dropped = self.dropped_events - dropped_mark
+                if dropped:
+                    m.counter("insight.ring_dropped").inc(dropped)
             return list(self._last_new)
 
     def _coalesce(self, new: List[Finding]) -> List[Finding]:

@@ -185,16 +185,33 @@ class TcpTransport(Transport):
     through a connection you have let go idle past the server's
     timeout."""
 
+    #: subsystem label for shipped telemetry (``link.tcp.*``)
+    stats_name = "tcp"
+
     def __init__(self, host: str = "127.0.0.1", port: int = 0,
-                 timeout: float = 5.0):
+                 timeout: float = 5.0, metrics=None):
         self.host, self.port = host, port
         self.timeout = timeout
         self._sock: Optional[socket.socket] = None
         self._lock = threading.Lock()
+        # Plain per-transport counts, maintained even with no registry
+        # attached: the request path's at-least-once retries must stay
+        # auditable from the transport object alone.
+        self.stats = {"connects": 0, "reconnects": 0, "resends": 0,
+                      "bytes_out": 0, "bytes_in": 0}
+        if metrics is None:
+            # lazy: repro.link stays importable without repro.obs
+            from repro.obs.metrics import default_registry
+            metrics = default_registry()
+        self._m_reconnects = metrics.counter("link.tcp.reconnects")
+        self._m_resends = metrics.counter("link.tcp.resends")
+        self._m_bytes_out = metrics.counter("link.tcp.bytes_out")
+        self._m_bytes_in = metrics.counter("link.tcp.bytes_in")
 
     def _connect(self) -> socket.socket:
         self._sock = socket.create_connection((self.host, self.port),
                                               timeout=self.timeout)
+        self.stats["connects"] += 1
         return self._sock
 
     def _drop(self) -> None:
@@ -214,6 +231,10 @@ class TcpTransport(Transport):
         reply = recv_reply(sock)
         if reply == "":
             raise ConnectionResetError("peer closed the connection")
+        self.stats["bytes_out"] += len(data)
+        self.stats["bytes_in"] += len(reply)
+        self._m_bytes_out.inc(len(data))
+        self._m_bytes_in.inc(len(reply))
         return reply
 
     def send_line(self, line: str) -> Optional[str]:
@@ -228,6 +249,10 @@ class TcpTransport(Transport):
                     raise       # a fresh connection failing is real
                 # a reused socket failing is ~always the server's idle
                 # reap while we were quiet: one clean retry, fresh conn
+                self.stats["reconnects"] += 1
+                self.stats["resends"] += 1
+                self._m_reconnects.inc()
+                self._m_resends.inc()
                 return self._exchange(data)
 
     def close(self) -> None:
@@ -247,18 +272,36 @@ class SpoolTransport(Transport):
 
     duplex = False
 
-    def __init__(self, directory: str, name: Optional[str] = None):
+    #: subsystem label for shipped telemetry (``link.spool.*``)
+    stats_name = "spool"
+
+    def __init__(self, directory: str, name: Optional[str] = None,
+                 metrics=None):
         os.makedirs(directory, exist_ok=True)
         self.directory = directory
         self.name = name if name is not None else f"pid{os.getpid()}"
         self.path = os.path.join(directory, f"{self.name}.jsonl")
         self._f = open(self.path, "a", encoding="utf-8")
         self._lock = threading.Lock()
+        self.stats = {"lines": 0, "bytes_out": 0}
+        if metrics is None:
+            from repro.obs.metrics import default_registry
+            metrics = default_registry()
+        self._m_lines = metrics.counter("link.spool.lines")
+        self._m_bytes_out = metrics.counter("link.spool.bytes_out")
+
+    def _count_line(self, line: str) -> None:
+        # callers hold self._lock
+        self.stats["lines"] += 1
+        self.stats["bytes_out"] += len(line) + 1
+        self._m_lines.inc()
+        self._m_bytes_out.inc(len(line) + 1)
 
     def send_line(self, line: str) -> Optional[str]:
         with self._lock:
             self._f.write(line + "\n")
             self._f.flush()
+            self._count_line(line)
         return None
 
     def mtime_probe(self, line: str) -> float:
@@ -274,6 +317,7 @@ class SpoolTransport(Transport):
         with self._lock:
             self._f.write(line + "\n")
             self._f.flush()
+            self._count_line(line)
             return os.stat(self.path).st_mtime
 
     def close(self) -> None:

@@ -1,0 +1,41 @@
+"""repro.obs: the profiler's self-telemetry plane and dashboard.
+
+The collection stack (runtime, trace ring, wire, fleet, tune loop) is a
+distributed system in its own right; this package gives it the
+system-level observability the paper faults platform profilers for
+lacking — applied to ourselves:
+
+  * ``metrics``   — lock-cheap ``Counter``/``Gauge``/``Histogram`` in a
+    ``MetricsRegistry`` (histograms reuse the Darshan access-size bins),
+    snapshot/delta reads, fleet-level rollup, and the ``metrics`` wire
+    verb every ``repro.link`` Endpoint answers.
+  * ``dashboard`` — a self-contained offline HTML dashboard exporter
+    (registered as exporter kind ``"dashboard"``) rendering the paper's
+    TensorBoard views from ``SegmentColumns``: per-file and per-rank
+    bandwidth timeline heatmaps, the access-size histogram, findings
+    annotations, the tune-action audit overlay, and the self-telemetry
+    health panel.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               default_registry, empty_snapshot,
+                               handle_metrics, health_summary,
+                               merge_snapshots, reset_default_registry,
+                               snapshot_delta)
+
+
+def __getattr__(name):
+    # dashboard imports the exporter world (core/export, trace); keep it
+    # lazy so importing repro.obs.metrics from inside repro.core never
+    # re-enters a partially initialized package.
+    if name == "render_dashboard":
+        from repro.obs.dashboard import render_dashboard
+        return render_dashboard
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "default_registry", "reset_default_registry", "empty_snapshot",
+    "snapshot_delta", "merge_snapshots", "health_summary",
+    "handle_metrics", "render_dashboard",
+]

@@ -1,0 +1,387 @@
+"""Offline HTML dashboard: one self-contained file, zero dependencies.
+
+``render_dashboard(report, path)`` turns a unified ``repro.profiler``
+Report — local session or fleet aggregate, live or replayed from a
+spool capture — into a single HTML document with inline SVG:
+
+  * per-file bandwidth timeline heatmap (top files by bytes moved),
+  * per-rank bandwidth timeline heatmap (one row in local mode),
+  * the Darshan access-size histogram (read + write, the 10 bins of
+    ``repro.core.counters.SIZE_BIN_BOUNDS``),
+  * insight findings as timeline markers plus a detail table,
+  * the tune-action audit trail overlaid on the same timeline,
+  * the self-telemetry health panel and raw metrics table (repro.obs).
+
+Everything renders from ``report.segments_table()`` (the columnar
+``SegmentColumns`` batch) with numpy binning — no per-segment Python
+loop — and the document references no external asset, so the file can
+be archived next to a spool capture and opened years later.
+
+The section ids (``per-file-heatmap``, ``per-rank-heatmap``,
+``size-hist``, ``findings``, ``tune-audit``, ``health-panel``,
+``metrics``) are a stable contract: tests golden-match them, and
+tooling may deep-link ``dashboard.html#findings``.
+"""
+from __future__ import annotations
+
+import html
+import json
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.counters import SIZE_BIN_NAMES
+
+TIME_BINS = 60
+MAX_FILE_ROWS = 16
+
+_CELL_W, _CELL_H = 13, 18
+_LABEL_W = 240
+
+# two-stop heat ramp: quiet bins stay dark, hot bins go amber
+_COLD = (24, 32, 74)
+_MID = (54, 92, 141)
+_HOT = (247, 183, 51)
+
+
+def _heat_color(frac: float) -> str:
+    frac = min(max(frac, 0.0), 1.0)
+    if frac <= 0.5:
+        a, b, t = _COLD, _MID, frac * 2
+    else:
+        a, b, t = _MID, _HOT, (frac - 0.5) * 2
+    return "#%02x%02x%02x" % tuple(
+        int(round(a[i] + (b[i] - a[i]) * t)) for i in range(3))
+
+
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(n) < 1024 or unit == "GiB":
+            return f"{n:.1f} {unit}" if unit != "B" else f"{int(n)} B"
+        n /= 1024
+    return f"{n:.1f} GiB"
+
+
+def _bin_rows(cols, row_of: np.ndarray, nrows: int,
+              window: Tuple[float, float]) -> np.ndarray:
+    """(nrows, TIME_BINS) byte totals: segment ``length`` summed into
+    its row's time bin (vectorized ``np.add.at`` scatter)."""
+    mat = np.zeros((nrows, TIME_BINS), dtype=np.float64)
+    if len(cols) == 0 or nrows == 0:
+        return mat
+    t0, t1 = window
+    span = max(t1 - t0, 1e-9)
+    bins = ((np.asarray(cols.start, dtype=np.float64) - t0)
+            / span * TIME_BINS).astype(np.int64)
+    np.clip(bins, 0, TIME_BINS - 1, out=bins)
+    np.add.at(mat, (row_of, bins),
+              np.asarray(cols.length, dtype=np.float64))
+    return mat
+
+
+def _heatmap_svg(section_id: str, labels: Sequence[str],
+                 mat: np.ndarray, window: Tuple[float, float],
+                 markers: Sequence[Tuple[float, str, str]] = ()) -> str:
+    """One heatmap: a row per label, a column per time bin, optional
+    vertical markers (``(time_s, css_class, tooltip)`` — findings and
+    tune actions land on the shared timeline)."""
+    nrows = len(labels)
+    t0, t1 = window
+    span = max(t1 - t0, 1e-9)
+    w = _LABEL_W + TIME_BINS * _CELL_W + 10
+    h = nrows * _CELL_H + 34
+    peak = float(mat.max()) if mat.size else 0.0
+    out = [f'<svg id="{section_id}" width="{w}" height="{h}" '
+           f'xmlns="http://www.w3.org/2000/svg" font-family="monospace" '
+           f'font-size="11">']
+    for r, label in enumerate(labels):
+        y = r * _CELL_H
+        out.append(f'<text x="{_LABEL_W - 6}" y="{y + 13}" '
+                   f'text-anchor="end">{html.escape(label)}</text>')
+        for b in range(TIME_BINS):
+            v = mat[r, b]
+            color = _heat_color(v / peak if peak > 0 else 0.0)
+            x = _LABEL_W + b * _CELL_W
+            tb0 = t0 + span * b / TIME_BINS
+            title = (f"{html.escape(label)} @ {tb0:.3f}s: "
+                     f"{_fmt_bytes(v)}")
+            out.append(
+                f'<rect x="{x}" y="{y}" width="{_CELL_W - 1}" '
+                f'height="{_CELL_H - 1}" fill="{color}">'
+                f'<title>{title}</title></rect>')
+    grid_h = nrows * _CELL_H
+    for t, css, tip in markers:
+        frac = min(max((t - t0) / span, 0.0), 1.0)
+        x = _LABEL_W + frac * TIME_BINS * _CELL_W
+        out.append(f'<line class="{css}" x1="{x:.1f}" y1="0" '
+                   f'x2="{x:.1f}" y2="{grid_h}" stroke-width="2">'
+                   f'<title>{html.escape(tip)}</title></line>')
+    out.append(f'<text x="{_LABEL_W}" y="{grid_h + 16}">'
+               f'{t0:.3f}s</text>')
+    out.append(f'<text x="{_LABEL_W + TIME_BINS * _CELL_W}" '
+               f'y="{grid_h + 16}" text-anchor="end">{t1:.3f}s</text>')
+    out.append("</svg>")
+    return "".join(out)
+
+
+def _size_hist_svg(read_hist: Sequence[int],
+                   write_hist: Sequence[int]) -> str:
+    """The Darshan access-size histogram: paired read/write bars over
+    the 10 ``SIZE_BIN_NAMES`` buckets."""
+    bar_w, gap, height = 22, 16, 140
+    peak = max(list(read_hist) + list(write_hist) + [1])
+    w = len(SIZE_BIN_NAMES) * (2 * bar_w + gap) + 40
+    h = height + 80
+    out = [f'<svg id="size-hist" width="{w}" height="{h}" '
+           f'xmlns="http://www.w3.org/2000/svg" font-family="monospace" '
+           f'font-size="10">']
+    for i, name in enumerate(SIZE_BIN_NAMES):
+        x = 20 + i * (2 * bar_w + gap)
+        for j, (hist, color) in enumerate(
+                ((read_hist, "#365c8d"), (write_hist, "#f7b733"))):
+            v = int(hist[i]) if i < len(hist) else 0
+            bh = height * v / peak
+            out.append(
+                f'<rect x="{x + j * bar_w}" y="{height - bh + 10}" '
+                f'width="{bar_w - 2}" height="{bh:.1f}" fill="{color}">'
+                f'<title>{name} {"reads" if j == 0 else "writes"}: {v}'
+                f'</title></rect>')
+        short = name.replace("SIZE_", "")
+        out.append(
+            f'<text x="{x + bar_w}" y="{height + 24}" text-anchor="end" '
+            f'transform="rotate(-45 {x + bar_w} {height + 24})">'
+            f'{short}</text>')
+    out.append(f'<text x="20" y="{h - 4}">'
+               f'reads (blue) / writes (amber) per Darshan size bin'
+               f'</text>')
+    out.append("</svg>")
+    return "".join(out)
+
+
+def _findings_rows(findings) -> str:
+    rows = []
+    for f in findings:
+        who = "fleet" if getattr(f, "rank", None) is None \
+            else f"rank {f.rank}"
+        rows.append(
+            "<tr>"
+            f"<td>{html.escape(f.detector)}</td>"
+            f"<td>{who}</td>"
+            f"<td>{f.severity:.2f}</td>"
+            f"<td>{f.window[0]:.3f}&ndash;{f.window[1]:.3f}s</td>"
+            f"<td>{html.escape(f.recommendation)}</td>"
+            "</tr>")
+    return "".join(rows)
+
+
+def _tune_rows(audit: Sequence[dict]) -> str:
+    rows = []
+    for e in audit:
+        a = e.get("action", {}) or {}
+        who = ("fleet" if a.get("rank") is None
+               else f"rank {a.get('rank')}")
+        acks = ", ".join(f"r{k.get('rank')}:{k.get('status')}"
+                         for k in e.get("acks", [])) or "&mdash;"
+        rows.append(
+            "<tr>"
+            f"<td>{html.escape(str(a.get('kind', '?')))}</td>"
+            f"<td>{html.escape(str(a.get('policy', '?')))}</td>"
+            f"<td>{who}</td>"
+            f"<td>{html.escape(str(e.get('status', '?')))}</td>"
+            f"<td>{acks}</td>"
+            "</tr>")
+    return "".join(rows)
+
+
+def _health_panel(health: dict) -> str:
+    status = health.get("status", "ok")
+    cls = "ok" if status == "ok" else "degraded"
+    out = [f'<div id="health-panel" class="panel health-{cls}">',
+           f'<h2>Self-telemetry health: '
+           f'<span class="badge {cls}">{status}</span></h2>', "<ul>"]
+    for label, check in sorted((health.get("checks") or {}).items()):
+        ccls = "ok" if check.get("status") == "ok" else "degraded"
+        out.append(
+            f'<li class="check-{ccls}"><b>{html.escape(label)}</b>: '
+            f'{check.get("status")} (value={check.get("value")}) '
+            f'&mdash; {html.escape(str(check.get("detail", "")))}</li>')
+    out.append("</ul></div>")
+    return "".join(out)
+
+
+def _metrics_table(metrics: dict) -> str:
+    counters = (metrics or {}).get("counters") or {}
+    gauges = (metrics or {}).get("gauges") or {}
+    hists = (metrics or {}).get("histograms") or {}
+    rows = []
+    for name in sorted(counters):
+        rows.append(f"<tr><td>{html.escape(name)}</td><td>counter</td>"
+                    f"<td>{int(counters[name])}</td></tr>")
+    for name in sorted(gauges):
+        rows.append(f"<tr><td>{html.escape(name)}</td><td>gauge</td>"
+                    f"<td>{gauges[name]:.6g}</td></tr>")
+    for name in sorted(hists):
+        h = hists[name] or {}
+        rows.append(
+            f"<tr><td>{html.escape(name)}</td><td>histogram</td>"
+            f"<td>n={int(h.get('count', 0))}, "
+            f"sum={float(h.get('sum', 0.0)):.6g}</td></tr>")
+    return (
+        '<table id="metrics"><thead><tr><th>metric</th><th>type</th>'
+        '<th>value</th></tr></thead><tbody>'
+        + ("".join(rows) or '<tr><td colspan="3">no metrics</td></tr>')
+        + "</tbody></table>")
+
+
+_STYLE = """
+body { font-family: monospace; background: #0e1117; color: #dbe2ef;
+       margin: 24px; }
+h1, h2 { color: #f7b733; font-weight: normal; }
+.panel { background: #161b26; border: 1px solid #2a3245;
+         border-radius: 6px; padding: 12px 16px; margin: 14px 0; }
+table { border-collapse: collapse; margin: 8px 0; }
+td, th { border: 1px solid #2a3245; padding: 3px 10px;
+         text-align: left; }
+th { color: #9fb4d8; }
+.badge.ok { color: #7bd389; }
+.badge.degraded { color: #ff6b6b; }
+li.check-degraded { color: #ff9f68; }
+line.finding-marker { stroke: #ff6b6b; }
+line.tune-marker { stroke: #7bd389; stroke-dasharray: 4 3; }
+.meta { color: #9fb4d8; }
+"""
+
+
+def _report_window(cols) -> Tuple[float, float]:
+    if len(cols) == 0:
+        return (0.0, 0.0)
+    return (float(np.min(cols.start)), float(np.max(cols.end)))
+
+
+def _markers(findings, audit) -> List[Tuple[float, str, str]]:
+    marks: List[Tuple[float, str, str]] = []
+    for f in findings:
+        marks.append((float(f.window[1]), "finding-marker",
+                      f"{f.detector} (sev {f.severity:.2f}): "
+                      f"{f.recommendation}"))
+    for e in audit:
+        a = e.get("action", {}) or {}
+        t = a.get("issued_at")
+        if not t:
+            continue
+        marks.append((float(t), "tune-marker",
+                      f"tune {a.get('kind', '?')} ({a.get('policy', '?')})"
+                      f" -> {e.get('status', '?')}"))
+    return marks
+
+
+def render_dashboard(report, path: Optional[str] = None) -> str:
+    """Render ``report`` (a unified ``repro.profiler.Report``) as one
+    offline HTML document; writes it to ``path`` when given and returns
+    the HTML text either way."""
+    cols = report.segments_table()
+    window = _report_window(cols)
+    findings = list(report.findings)
+    audit = list(getattr(report, "tune_audit", None) or [])
+    marks = _markers(findings, audit)
+
+    # per-file heatmap: top files by bytes moved
+    npaths = len(cols.paths)
+    if npaths and len(cols):
+        per_path = np.zeros(npaths, dtype=np.float64)
+        np.add.at(per_path, cols.path_ids,
+                  np.asarray(cols.length, dtype=np.float64))
+        top = np.argsort(per_path)[::-1][:MAX_FILE_ROWS]
+        row_of_path = np.full(npaths, -1, dtype=np.int64)
+        row_of_path[top] = np.arange(len(top))
+        keep = row_of_path[cols.path_ids] >= 0
+        sub = cols.data[keep]
+        from repro.trace import SegmentColumns
+        sub_cols = SegmentColumns(sub, cols.modules, cols.paths, cols.ops)
+        file_mat = _bin_rows(sub_cols,
+                             row_of_path[sub_cols.path_ids],
+                             len(top), window)
+        file_labels = [cols.paths[i] for i in top]
+        dropped_files = npaths - len(top)
+    else:
+        file_mat = np.zeros((0, TIME_BINS))
+        file_labels, dropped_files = [], 0
+
+    # per-rank heatmap: fleet slices, or the one local timeline
+    ranks = report.ranks
+    if ranks:
+        rank_ids = sorted(ranks)
+        rank_labels = [f"rank {r}" for r in rank_ids]
+        mats = []
+        for r in rank_ids:
+            rc = ranks[r].segments_table()
+            mats.append(_bin_rows(rc, np.zeros(len(rc), dtype=np.int64),
+                                  1, window)[0])
+        rank_mat = (np.vstack(mats) if mats
+                    else np.zeros((0, TIME_BINS)))
+    else:
+        rank_labels = ["rank 0"]
+        rank_mat = _bin_rows(cols, np.zeros(len(cols), dtype=np.int64),
+                             1, window)
+
+    p = report.posix
+    health = report.health()
+    metrics = report.metrics
+
+    file_note = (f'<p class="meta">{dropped_files} more file(s) below '
+                 f'the top {MAX_FILE_ROWS} not shown</p>'
+                 if dropped_files > 0 else "")
+    parts = [
+        "<!DOCTYPE html>",
+        '<html><head><meta charset="utf-8">',
+        "<title>tf-darshan dashboard</title>",
+        f"<style>{_STYLE}</style></head><body>",
+        "<h1>tf-darshan dashboard</h1>",
+        f'<p class="meta">mode={report.mode} nprocs={report.nprocs} '
+        f'elapsed={report.elapsed_s:.3f}s '
+        f'bandwidth={report.bandwidth_mb_s:.1f} MB/s '
+        f'segments={len(cols)} window=[{window[0]:.3f}, '
+        f'{window[1]:.3f}]s</p>',
+        _health_panel(health),
+        '<div class="panel"><h2>Per-file bandwidth timeline</h2>',
+        _heatmap_svg("per-file-heatmap", file_labels, file_mat, window,
+                     markers=marks),
+        file_note,
+        "</div>",
+        '<div class="panel"><h2>Per-rank bandwidth timeline</h2>',
+        _heatmap_svg("per-rank-heatmap", rank_labels, rank_mat, window,
+                     markers=marks),
+        "</div>",
+        '<div class="panel"><h2>Access sizes (Darshan bins)</h2>',
+        _size_hist_svg(p.read_size_hist, p.write_size_hist),
+        "</div>",
+        '<div class="panel"><h2>Insight findings</h2>',
+        '<table id="findings"><thead><tr><th>detector</th><th>scope</th>'
+        '<th>severity</th><th>window</th><th>recommendation</th></tr>'
+        "</thead><tbody>"
+        + (_findings_rows(findings)
+           or '<tr><td colspan="5">no findings</td></tr>')
+        + "</tbody></table></div>",
+        '<div class="panel"><h2>Tune-action audit</h2>',
+        '<table id="tune-audit"><thead><tr><th>kind</th><th>policy</th>'
+        '<th>scope</th><th>status</th><th>acks</th></tr></thead><tbody>'
+        + (_tune_rows(audit)
+           or '<tr><td colspan="5">no tune actions</td></tr>')
+        + "</tbody></table></div>",
+        '<div class="panel"><h2>Self-telemetry metrics</h2>',
+        _metrics_table(metrics),
+        "</div>",
+        # the raw numbers ride along so the file doubles as a data
+        # capture (tooling can re-plot without re-running anything)
+        '<script type="application/json" id="dashboard-data">',
+        json.dumps({"health": health, "metrics": metrics,
+                    "window": list(window),
+                    "findings": [f.to_dict() for f in findings]}),
+        "</script>",
+        "</body></html>",
+    ]
+    text = "\n".join(parts)
+    if path:
+        with open(path, "w") as f:
+            f.write(text)
+    return text

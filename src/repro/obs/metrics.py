@@ -1,0 +1,372 @@
+"""MetricsRegistry: lock-cheap self-telemetry counters for the profiler.
+
+Three instrument types, all safe for concurrent writers:
+
+  * ``Counter``   — monotonic int (``inc``); drops, errors, bytes,
+    reconnects.
+  * ``Gauge``     — last-written float (``set``); staleness, lag,
+    rates.
+  * ``Histogram`` — bounded-bucket distribution (``observe``); the
+    bucket bounds default to the Darshan access-size bins
+    (``repro.core.counters.SIZE_BIN_BOUNDS``), so a byte-sized
+    observation lands in the same 10 bins the POSIX module uses.
+    Latency histograms observe **nanoseconds** against the same bounds
+    (100 ns, 1 µs, 10 µs, ... 1 s+) — one bin vocabulary everywhere.
+
+Each instrument carries its own lock: an uncontended ``inc`` is two
+attribute loads and an add (~100 ns), cheap enough for per-append
+paths; genuinely per-op hot paths (``DarshanRuntime._emit``) sample.
+
+Reads are ``snapshot()`` — one plain-dict copy of everything —
+with ``snapshot_delta`` for windowed views (what a ProfileSession
+attaches to its report) and ``merge_snapshots`` for the fleet rollup
+(counters and histogram buckets add across ranks; gauges take the max,
+the "worst level" convention).
+
+Naming convention (dotted, subsystem-first): ``trace.dropped``,
+``runtime.listener_errors``, ``runtime.emit_ns``, ``link.tcp.resends``,
+``collector.lines``, ``insight.poll_lag_s``, ``tune.applier.failed``.
+``health_summary`` keys off these names to produce the ok/degraded
+panel the dashboard renders.
+
+``default_registry()`` is the process-global registry for components
+with no natural owner (transports); per-rank components
+(``DarshanRuntime``) own private registries so simulated fleets —
+N ranks in one process — keep per-rank telemetry separate.
+"""
+from __future__ import annotations
+
+import threading
+from bisect import bisect_right
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.counters import SIZE_BIN_BOUNDS
+
+
+class Counter:
+    """Monotonic integer. ``inc`` under a per-instrument lock so
+    concurrent writers never lose counts."""
+
+    __slots__ = ("name", "_value", "_lock")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value = 0
+        self._lock = threading.Lock()
+
+    def inc(self, n: int = 1) -> None:
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> int:
+        return self._value
+
+    def __repr__(self) -> str:
+        return f"Counter({self.name}={self._value})"
+
+
+class Gauge:
+    """Last-written float level (staleness, lag, rate)."""
+
+    __slots__ = ("name", "_value", "_lock")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value = 0.0
+        self._lock = threading.Lock()
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self._value = float(v)
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+    def __repr__(self) -> str:
+        return f"Gauge({self.name}={self._value})"
+
+
+class Histogram:
+    """Bounded-bucket distribution over the Darshan access-size bins.
+
+    ``bounds`` are the right-open bucket edges: an observation ``v``
+    lands in bucket ``bisect_right(bounds, v)`` — exactly
+    ``repro.core.counters.size_bin`` when the default bounds are used,
+    so ``counts`` always has ``len(bounds) + 1`` buckets and their sum
+    equals the observation count (the invariant the property tests
+    pin)."""
+
+    __slots__ = ("name", "bounds", "_counts", "_count", "_sum", "_lock")
+
+    def __init__(self, name: str,
+                 bounds: Optional[Sequence[float]] = None):
+        self.name = name
+        self.bounds = tuple(bounds if bounds is not None
+                            else SIZE_BIN_BOUNDS)
+        self._counts = [0] * (len(self.bounds) + 1)
+        self._count = 0
+        self._sum = 0.0
+        self._lock = threading.Lock()
+
+    def observe(self, v) -> None:
+        i = bisect_right(self.bounds, v)
+        with self._lock:
+            self._counts[i] += 1
+            self._count += 1
+            self._sum += v
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    @property
+    def counts(self) -> List[int]:
+        with self._lock:
+            return list(self._counts)
+
+    def to_dict(self) -> dict:
+        with self._lock:
+            return {"counts": list(self._counts), "count": self._count,
+                    "sum": self._sum}
+
+    def __repr__(self) -> str:
+        return f"Histogram({self.name}, n={self._count})"
+
+
+class MetricsRegistry:
+    """Named instruments, created on first use (``counter(name)`` etc.
+    get-or-create; asking for an existing name with a different type
+    raises)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, Histogram] = {}
+
+    # ------------------------------------------------------- instruments
+    def _get(self, table: dict, name: str, make):
+        m = table.get(name)
+        if m is not None:
+            return m
+        with self._lock:
+            self._check_free(name, table)
+            m = table.get(name)
+            if m is None:
+                m = table[name] = make()
+            return m
+
+    def _check_free(self, name: str, table: dict) -> None:
+        for other in (self._counters, self._gauges, self._histograms):
+            if other is not table and name in other:
+                raise ValueError(
+                    f"metric name {name!r} already registered as a "
+                    f"different instrument type")
+
+    def counter(self, name: str) -> Counter:
+        return self._get(self._counters, name, lambda: Counter(name))
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(self._gauges, name, lambda: Gauge(name))
+
+    def histogram(self, name: str,
+                  bounds: Optional[Sequence[float]] = None) -> Histogram:
+        return self._get(self._histograms, name,
+                         lambda: Histogram(name, bounds=bounds))
+
+    # ------------------------------------------------------------- reads
+    def snapshot(self) -> dict:
+        """Everything, as one JSON-ready plain dict (the wire/rollup
+        shape)."""
+        with self._lock:
+            counters = list(self._counters.values())
+            gauges = list(self._gauges.values())
+            hists = list(self._histograms.values())
+        return {
+            "counters": {c.name: c.value for c in counters},
+            "gauges": {g.name: g.value for g in gauges},
+            "histograms": {h.name: h.to_dict() for h in hists},
+        }
+
+    def delta(self, mark: Optional[dict]) -> dict:
+        """The change since ``mark`` (an earlier ``snapshot()``)."""
+        return snapshot_delta(mark, self.snapshot())
+
+
+# ------------------------------------------------------- snapshot algebra
+def empty_snapshot() -> dict:
+    return {"counters": {}, "gauges": {}, "histograms": {}}
+
+
+def copy_snapshot(snap: Optional[dict]) -> dict:
+    snap = snap or {}
+    return {
+        "counters": dict(snap.get("counters", {})),
+        "gauges": dict(snap.get("gauges", {})),
+        "histograms": {k: {"counts": list(v.get("counts", [])),
+                           "count": v.get("count", 0),
+                           "sum": v.get("sum", 0.0)}
+                       for k, v in snap.get("histograms", {}).items()},
+    }
+
+
+def snapshot_delta(old: Optional[dict], new: dict) -> dict:
+    """Counter and histogram *changes* from ``old`` to ``new``; gauges
+    are levels, so the new value stands.  Instruments created after
+    ``old`` appear whole."""
+    if not old:
+        return copy_snapshot(new)
+    out = empty_snapshot()
+    oc = old.get("counters", {})
+    for k, v in new.get("counters", {}).items():
+        out["counters"][k] = v - oc.get(k, 0)
+    out["gauges"] = dict(new.get("gauges", {}))
+    oh = old.get("histograms", {})
+    for k, h in new.get("histograms", {}).items():
+        prev = oh.get(k, {})
+        pcounts = prev.get("counts", [])
+        out["histograms"][k] = {
+            "counts": [c - (pcounts[i] if i < len(pcounts) else 0)
+                       for i, c in enumerate(h.get("counts", []))],
+            "count": h.get("count", 0) - prev.get("count", 0),
+            "sum": h.get("sum", 0.0) - prev.get("sum", 0.0),
+        }
+    return out
+
+
+def merge_snapshots(snaps: Iterable[Optional[dict]]) -> dict:
+    """The fleet rollup: counters and histogram buckets sum across
+    snapshots (additive telemetry, Darshan's job-level convention);
+    gauges take the max — the worst level wins, which is what a health
+    panel wants from staleness/lag."""
+    out = empty_snapshot()
+    for snap in snaps:
+        if not snap:
+            continue
+        for k, v in snap.get("counters", {}).items():
+            out["counters"][k] = out["counters"].get(k, 0) + v
+        for k, v in snap.get("gauges", {}).items():
+            prev = out["gauges"].get(k)
+            out["gauges"][k] = v if prev is None else max(prev, v)
+        for k, h in snap.get("histograms", {}).items():
+            tgt = out["histograms"].get(k)
+            if tgt is None:
+                out["histograms"][k] = {
+                    "counts": list(h.get("counts", [])),
+                    "count": h.get("count", 0),
+                    "sum": h.get("sum", 0.0)}
+                continue
+            counts = h.get("counts", [])
+            tc = tgt["counts"]
+            if len(counts) > len(tc):
+                tc.extend([0] * (len(counts) - len(tc)))
+            for i, c in enumerate(counts):
+                tc[i] += c
+            tgt["count"] += h.get("count", 0)
+            tgt["sum"] += h.get("sum", 0.0)
+    return out
+
+
+# --------------------------------------------------------- global registry
+_DEFAULT: Optional[MetricsRegistry] = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def default_registry() -> MetricsRegistry:
+    """The process-global registry (transports and other components with
+    no per-rank owner)."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        with _DEFAULT_LOCK:
+            if _DEFAULT is None:
+                _DEFAULT = MetricsRegistry()
+    return _DEFAULT
+
+
+def reset_default_registry() -> MetricsRegistry:
+    """Fresh process-global registry (tests)."""
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        _DEFAULT = MetricsRegistry()
+    return _DEFAULT
+
+
+# ----------------------------------------------------------------- health
+# (check label, summed counter names, what a non-zero value means)
+_HEALTH_CHECKS: Tuple[Tuple[str, Tuple[str, ...], str], ...] = (
+    ("trace-drops", ("trace.dropped",),
+     "trace ring overwrote unread segments (raise dxt_capacity)"),
+    ("listener-errors", ("runtime.listener_errors",),
+     "segment listeners raised (a detector is crashing)"),
+    ("insight-drops", ("insight.ring_dropped",),
+     "insight fell behind the trace ring (shorten insight_interval_s)"),
+    ("tcp-retries", ("link.tcp.reconnects", "link.tcp.resends"),
+     "TCP exchanges were retried (idle reaps or an unstable collector)"),
+    ("ingest-errors", ("collector.errors", "collector.corrupt_lines"),
+     "collector hit malformed/corrupt wire lines"),
+    ("tune-failures", ("tune.rejected", "tune.applier.failed",
+                       "tune.applier.rejected"),
+     "tune actions failed or were rejected"),
+)
+
+
+def health_summary(metrics: Optional[dict],
+                   listener_errors: Optional[dict] = None) -> dict:
+    """Degraded/ok rollup over a metrics snapshot.
+
+    Each check sums a fixed set of counter names; any positive sum
+    degrades that check (and the overall status).  ``listener_errors``
+    (the report-level dict) folds into the listener check so pre-metrics
+    payloads still surface a crashing listener."""
+    counters = (metrics or {}).get("counters", {})
+    checks = {}
+    degraded = False
+    for label, names, meaning in _HEALTH_CHECKS:
+        value = sum(int(counters.get(n, 0)) for n in names)
+        if label == "listener-errors" and listener_errors:
+            value += sum(int(v) for v in listener_errors.values())
+        bad = value > 0
+        degraded = degraded or bad
+        checks[label] = {"status": "degraded" if bad else "ok",
+                         "value": value, "detail": meaning}
+    return {"status": "degraded" if degraded else "ok", "checks": checks}
+
+
+# -------------------------------------------------------------- wire verb
+def handle_metrics(endpoint, msg):
+    """The ``metrics`` verb every ``repro.link`` Endpoint resolves
+    through the plugin registry.
+
+    Query (empty payload): replies with a ``metrics`` message carrying
+    the context's snapshot — a FleetCollector answers with its own
+    registry, a ProfileServer with its session runtime's, anything else
+    with the process default.
+
+    Push (``{"push": true, "metrics": {...}}``): stores the snapshot on
+    the sender's rank slice when the context aggregates ranks (the
+    one-way spool path — a spool cannot answer a query, but a pushed
+    line lands in the capture and replays into the collector)."""
+    payload = msg.payload or {}
+    ctx = endpoint.context
+    if payload.get("push"):
+        slice_of = getattr(ctx, "_slice", None)
+        lock = getattr(ctx, "_lock", None)
+        if slice_of is not None and lock is not None:
+            snap = copy_snapshot(payload.get("metrics"))
+            with lock:
+                slice_of(msg.rank).metrics = snap
+        return msg.reply("ok")
+    reg = getattr(ctx, "metrics", None)
+    if not isinstance(reg, MetricsRegistry):
+        session = getattr(ctx, "session", None)
+        rt = getattr(session, "rt", None) or getattr(ctx, "rt", None)
+        reg = getattr(rt, "metrics", None)
+    if not isinstance(reg, MetricsRegistry):
+        reg = default_registry()
+    return msg.reply("metrics", {"metrics": reg.snapshot()})

@@ -333,6 +333,7 @@ class Profiler:
             make_insight=make_insight,
             insight_interval_s=opts.insight_interval_s,
             trace=opts.trace, segments_wire=opts.segments_wire,
+            ship_metrics=opts.metrics,
             tune_controller=self._make_tune_controller(),
             tune_interval_s=opts.tune_interval_s)
         transport = opts.resolved_transport()
@@ -386,6 +387,7 @@ class Profiler:
             mp_start_method=opts.mp_start_method,
             timeout_s=opts.fleet_timeout_s,
             segments_wire=opts.segments_wire,
+            ship_metrics=opts.metrics,
             tune_controller=self._make_tune_controller(),
             tune_interval_s=opts.tune_interval_s)
         if opts.resolved_transport() == "tcp":

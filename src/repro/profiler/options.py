@@ -53,6 +53,11 @@ class ProfilerOptions:
     # parallel arrays — the columnar data plane) or "rows" (legacy
     # per-row lists); consumers decode both
     segments_wire: str = "columns"
+    # ship each rank's self-telemetry snapshot (repro.obs) inside its
+    # report payload; the collector rolls the fleet up into
+    # FleetReport.metrics.  Off = smaller payloads, no fleet rollup
+    # (each rank's registry still records locally)
+    metrics: bool = True
     # ------------------------------------------------------------ fleet
     nranks: int = 1
     fleet_ranks: Optional[int] = None     # spawn-era alias for nranks

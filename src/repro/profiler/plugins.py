@@ -19,7 +19,8 @@ BUILTIN_DETECTORS = ("small-file-storm", "random-read-thrash",
                      "checkpoint-stall", "fast-tier-saturation")
 BUILTIN_FLEET_DETECTORS = ("rank-straggler", "load-imbalance",
                            "shared-file-contention")
-BUILTIN_EXPORTERS = ("chrome_trace", "darshan_log", "json_report")
+BUILTIN_EXPORTERS = ("chrome_trace", "darshan_log", "json_report",
+                     "dashboard")
 BUILTIN_ADVISORS = ("staging", "thread-autotune", "workload-character")
 BUILTIN_POLICIES = ("stage-hot-files", "autotune-threads",
                     "checkpoint-backoff")
@@ -36,7 +37,8 @@ def _export_chrome_trace(report, path: Optional[str] = None):
     if segments is None:
         segments = report.session.segments
     return to_chrome_trace(segments, path,
-                           findings=report.session.findings)
+                           findings=report.session.findings,
+                           metrics=report.metrics)
 
 
 def _export_darshan_log(report, path: Optional[str] = None):
@@ -55,6 +57,14 @@ def _export_json_report(report, path: Optional[str] = None):
         return payload
     from repro.core.export import to_json_report
     return to_json_report(report.session, path)
+
+
+def _export_dashboard(report, path: Optional[str] = None):
+    # one self-contained offline HTML file (inline SVG, no external
+    # assets) — works the same for a live session and a replayed spool
+    # capture, because it reads only the unified Report surface
+    from repro.obs.dashboard import render_dashboard
+    return render_dashboard(report, path)
 
 
 # -------------------------------------------------------------- advisors
@@ -135,6 +145,7 @@ def register_builtins(registries) -> None:
     exp.register("chrome_trace", lambda opts: _export_chrome_trace)
     exp.register("darshan_log", lambda opts: _export_darshan_log)
     exp.register("json_report", lambda opts: _export_json_report)
+    exp.register("dashboard", lambda opts: _export_dashboard)
 
     adv = registries["advisor"]
     adv.register("staging", _StagingAdvisorPlugin)
@@ -158,3 +169,10 @@ def register_builtins(registries) -> None:
     # dispatches ``tune`` messages, the codec accepts the kind.
     from repro.tune.actions import handle_tune
     registries["verb"].register("tune", handle_tune)
+
+    # The ``metrics`` verb (repro.obs): query any endpoint's registry
+    # snapshot over the wire, or push one (the one-way spool shape a
+    # collector stores into the sender's rank slice).  Registered the
+    # same direct way, for the same lock reason.
+    from repro.obs.metrics import handle_metrics
+    registries["verb"].register("metrics", handle_metrics)

@@ -180,6 +180,25 @@ class Report:
         """Fleet: rank -> RankSlice; local: empty (no rank dimension)."""
         return {} if self.mode == "local" else self.fleet.ranks
 
+    @property
+    def metrics(self) -> dict:
+        """The profiler's self-telemetry (repro.obs snapshot shape:
+        counters/gauges/histograms).  Local: the session's windowed
+        registry delta; fleet: the collector's rollup over every rank's
+        shipped snapshot plus its own registry."""
+        if self.mode == "local":
+            return dict(getattr(self.session, "metrics", None) or {})
+        return dict(getattr(self.fleet, "metrics", None) or {})
+
+    def health(self) -> dict:
+        """Self-telemetry triage: ``{"status": "ok"|"degraded",
+        "checks": {...}}`` — a non-zero drop/error/retry count anywhere
+        in the stack degrades the matching check (the dashboard's
+        health panel, also JSON-exported via ``to_dict``)."""
+        from repro.obs.metrics import health_summary
+        return health_summary(self.metrics,
+                              listener_errors=self.listener_errors)
+
     def counters(self) -> dict:
         """The POSIX rollup as one flat dict — the cross-mode
         equivalence surface (same workload => same numbers whichever
@@ -207,8 +226,9 @@ class Report:
         import os
         os.makedirs(directory, exist_ok=True)
         out: Dict[str, str] = {}
+        exts = {"darshan_log": "txt", "dashboard": "html"}
         for kind in self.exporters:
-            ext = "txt" if kind == "darshan_log" else "json"
+            ext = exts.get(kind, "json")
             path = os.path.join(directory, f"{kind}.{ext}")
             self.export(kind, path)
             out[kind] = path
@@ -229,6 +249,10 @@ class Report:
                            for name, res in self.advice.items()}
         if self.tune_audit:
             d["tune_audit"] = [dict(e) for e in self.tune_audit]
+        metrics = self.metrics
+        if metrics:
+            d["metrics"] = metrics
+        d["health"] = self.health()
         return d
 
     def to_json(self, path: Optional[str] = None) -> str:

@@ -28,12 +28,21 @@ from repro.trace.columns import SEG_DTYPE, Segment, SegmentColumns
 
 
 class TraceStore:
-    def __init__(self, capacity: int = 1 << 20, enabled: bool = True):
+    def __init__(self, capacity: int = 1 << 20, enabled: bool = True,
+                 metrics=None):
         if capacity <= 0:
             raise ValueError("capacity must be positive")
         self.capacity = capacity
         self.enabled = enabled
         self.dropped = 0
+        self.compactions = 0
+        # self-telemetry (repro.obs): ``metrics`` is a MetricsRegistry
+        # (duck-typed — this module stays obs-free); the owning runtime
+        # passes its own so per-rank stores report per-rank drops
+        self._m_dropped = (metrics.counter("trace.dropped")
+                           if metrics is not None else None)
+        self._m_compactions = (metrics.counter("trace.compactions")
+                               if metrics is not None else None)
         self._buf = np.empty(capacity, dtype=SEG_DTYPE)
         self._seq = 0            # total rows ever appended (monotonic)
         self._lock = threading.Lock()
@@ -71,6 +80,8 @@ class TraceStore:
             seq = self._seq
             if seq >= self.capacity:
                 self.dropped += 1        # overwriting the oldest row
+                if self._m_dropped is not None:
+                    self._m_dropped.inc()
             self._buf[seq % self.capacity] = (m, p, o, offset, length,
                                               start, end, thread)
             self._seq = seq + 1
@@ -95,6 +106,7 @@ class TraceStore:
         with self._lock:
             self._seq = 0
             self.dropped = 0
+            self.compactions = 0
             self._modules, self._paths, self._ops = {}, {}, {}
             self._tables_dirty = True
             self._compact_at = self._next_compact_bound(0)
@@ -140,6 +152,9 @@ class TraceStore:
                     {names[int(i)]: k for k, i in enumerate(used)})
         self._tables_dirty = True
         self._compact_at = self._next_compact_bound(len(self._paths))
+        self.compactions += 1
+        if self._m_compactions is not None:
+            self._m_compactions.inc()
 
     # ------------------------------------------------------------ queries
     def _tables_locked(self) -> Tuple[tuple, tuple, tuple]:

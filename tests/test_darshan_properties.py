@@ -203,6 +203,51 @@ def test_ring_retains_exactly_the_newest(segs, capacity):
     assert len(store) == min(len(segs), capacity)
 
 
+# --------------------------------------------- obs metrics histograms
+from repro.obs.metrics import (MetricsRegistry, merge_snapshots,  # noqa: E402
+                               snapshot_delta)
+
+observations = st.lists(st.integers(0, 1 << 40), min_size=1, max_size=80)
+
+
+@given(observations)
+@settings(**SETTINGS)
+def test_obs_histogram_bins_partition_observations(values):
+    """An obs Histogram conserves mass: the bin counts always sum to
+    the observation count, every observation lands in its Darshan size
+    bin, and the running sum is exact."""
+    h = MetricsRegistry().histogram("h")
+    for v in values:
+        h.observe(v)
+    counts = h.counts
+    assert sum(counts) == h.count == len(values)
+    assert h.sum == float(sum(values))
+    expected = [0] * len(C.SIZE_BIN_NAMES)
+    for v in values:
+        expected[C.size_bin(v)] += 1
+    assert counts == expected
+
+
+@given(observations, observations)
+@settings(**SETTINGS)
+def test_obs_snapshot_algebra_conserves_counts(before, during):
+    """delta and merge are inverse-ish: delta(start, stop) holds
+    exactly the window's observations, and merging it back onto the
+    start snapshot reproduces the full histogram."""
+    reg = MetricsRegistry()
+    h = reg.histogram("h")
+    for v in before:
+        h.observe(v)
+    mark = reg.snapshot()
+    for v in during:
+        h.observe(v)
+    d = snapshot_delta(mark, reg.snapshot())
+    assert d["histograms"]["h"]["count"] == len(during)
+    assert sum(d["histograms"]["h"]["counts"]) == len(during)
+    rebuilt = merge_snapshots([mark, d])
+    assert rebuilt["histograms"]["h"] == reg.snapshot()["histograms"]["h"]
+
+
 def test_eof_pattern_detector_threshold():
     rt = DarshanRuntime()
     rt.enabled = True

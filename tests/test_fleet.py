@@ -574,11 +574,18 @@ def test_columns_wire_reproduces_row_wire_fleet_report(tmp_path,
         assert list(a.segments) == list(b.segments)
         assert a.per_file == b.per_file
         assert a.clock_offset_s == b.clock_offset_s == 0.125
-    # the panel payloads agree wholesale (collector transfer stats are
-    # the only legitimate difference: the wires have different bytes)
+    # the panel payloads agree wholesale (collector transfer stats and
+    # the self-telemetry rollup are the only legitimate differences:
+    # the wires have different byte counts and ingest timings)
     da, db = cols_fleet.to_dict(), rows_fleet.to_dict()
     da.pop("collector"), db.pop("collector")
+    ma, mb = da.pop("metrics"), db.pop("metrics")
     assert da == db
+    # ...and even there, only byte/timing metrics may differ
+    for volatile in ("collector.bytes",):
+        ma["counters"].pop(volatile), mb["counters"].pop(volatile)
+    assert ma["counters"] == mb["counters"]
+    assert set(ma["gauges"]) == set(mb["gauges"])
     # and the columnar wire is the smaller one
     cols_line = payloads.encode_report(0, _recorded_report(0), nprocs=2)
     rows_line = payloads.encode_report(0, _recorded_report(0), nprocs=2,

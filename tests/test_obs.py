@@ -1,0 +1,390 @@
+"""repro.obs: self-telemetry registry, wire verb, rollup, dashboard
+(ISSUE 7 acceptance).
+
+Covers the MetricsRegistry semantics (get-or-create, type conflicts,
+snapshot/delta algebra, lock-correct concurrent increments), the
+``metrics`` wire verb round-tripping through loopback/tcp/spool
+transports, the fleet rollup (counters sum, gauges max, histogram bins
+add — per-rank snapshots plus the collector's own registry), the
+instrumented profiler surface (report.metrics / health / chrome-trace
+counter events), and the offline HTML dashboard golden ids for both a
+live local session and a spool-capture replay.
+"""
+import os
+import threading
+
+import pytest
+
+from repro.core.counters import SIZE_BIN_NAMES, size_bin
+from repro.core.runtime import DarshanRuntime
+from repro.core.session import ProfileServer
+from repro.fleet import CollectorServer, FleetCollector, payloads
+from repro.link import Message, SpoolTransport, TcpTransport, decode, encode
+from repro.obs.metrics import (MetricsRegistry, default_registry,
+                               empty_snapshot, health_summary,
+                               merge_snapshots, reset_default_registry,
+                               snapshot_delta)
+from repro.profiler import Profiler, ProfilerOptions
+from repro.profiler.report import Report
+
+DASHBOARD_IDS = ('id="per-file-heatmap"', 'id="per-rank-heatmap"',
+                 'id="size-hist"', 'id="findings"', 'id="tune-audit"',
+                 'id="health-panel"', 'id="metrics"',
+                 'id="dashboard-data"')
+
+
+# ------------------------------------------------------------- registry
+def test_registry_get_or_create_and_type_conflict():
+    reg = MetricsRegistry()
+    c = reg.counter("x.count")
+    assert reg.counter("x.count") is c          # same instrument back
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    g = reg.gauge("x.level")
+    g.set(2.5)
+    assert reg.gauge("x.level").value == 2.5
+    h = reg.histogram("x.sizes")
+    h.observe(4096)
+    assert reg.histogram("x.sizes").count == 1
+    # one namespace across all three types: re-registering a name as a
+    # different instrument is a bug, not a fresh metric
+    with pytest.raises(ValueError, match="different instrument type"):
+        reg.gauge("x.count")
+    with pytest.raises(ValueError, match="different instrument type"):
+        reg.counter("x.sizes")
+
+
+def test_histogram_buckets_are_the_darshan_size_bins():
+    h = MetricsRegistry().histogram("h")
+    values = [0, 99, 100, 4095, 65536, 10_000_000, 5_000_000_000]
+    for v in values:
+        h.observe(v)
+    counts = h.counts
+    assert len(counts) == len(SIZE_BIN_NAMES)
+    for v in values:
+        assert counts[size_bin(v)] > 0          # same bin vocabulary
+    assert sum(counts) == h.count == len(values)
+    assert h.sum == float(sum(values))
+
+
+def test_snapshot_delta_windows_counters_and_hists():
+    reg = MetricsRegistry()
+    reg.counter("c").inc(10)
+    reg.gauge("g").set(1.0)
+    reg.histogram("h").observe(50)
+    mark = reg.snapshot()
+    reg.counter("c").inc(3)
+    reg.gauge("g").set(0.25)                    # gauges are levels
+    reg.histogram("h").observe(50)
+    reg.histogram("h").observe(5000)
+    reg.counter("new").inc(7)                   # born after the mark
+    d = reg.delta(mark)
+    assert d["counters"] == {"c": 3, "new": 7}
+    assert d["gauges"]["g"] == 0.25
+    h = d["histograms"]["h"]
+    assert h["count"] == 2 and h["sum"] == 5050.0
+    assert h["counts"][size_bin(50)] == 1
+    assert h["counts"][size_bin(5000)] == 1
+    # no mark -> the delta IS the snapshot (first window of a session)
+    assert snapshot_delta(None, reg.snapshot()) == reg.snapshot()
+
+
+def test_merge_snapshots_sums_counters_maxes_gauges_adds_bins():
+    a = {"counters": {"c": 2}, "gauges": {"g": 0.5, "only_a": 9.0},
+         "histograms": {"h": {"counts": [1, 0, 2], "count": 3,
+                              "sum": 30.0}}}
+    b = {"counters": {"c": 5, "d": 1}, "gauges": {"g": 3.0},
+         "histograms": {"h": {"counts": [0, 4, 1, 7], "count": 12,
+                              "sum": 70.0}}}
+    m = merge_snapshots([a, None, b, empty_snapshot()])
+    assert m["counters"] == {"c": 7, "d": 1}
+    assert m["gauges"] == {"g": 3.0, "only_a": 9.0}   # worst level wins
+    h = m["histograms"]["h"]
+    assert h["counts"] == [1, 4, 3, 7]          # ragged lengths align
+    assert h["count"] == 15 and h["sum"] == 100.0
+    # merge never mutates its inputs (rank slices are re-merged on
+    # every report() call)
+    assert a["histograms"]["h"]["counts"] == [1, 0, 2]
+
+
+def test_concurrent_increments_lose_nothing():
+    reg = MetricsRegistry()
+    n_threads, n_incs = 8, 2000
+
+    def work():
+        c = reg.counter("shared")
+        h = reg.histogram("sizes")
+        for _ in range(n_incs):
+            c.inc()
+            h.observe(4096)
+
+    threads = [threading.Thread(target=work) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert reg.counter("shared").value == n_threads * n_incs
+    assert reg.histogram("sizes").count == n_threads * n_incs
+    assert sum(reg.histogram("sizes").counts) == n_threads * n_incs
+
+
+def test_default_registry_is_process_global_until_reset():
+    reg = reset_default_registry()
+    assert default_registry() is reg
+    reg.counter("x").inc()
+    fresh = reset_default_registry()
+    assert fresh is default_registry() and fresh is not reg
+    assert fresh.snapshot()["counters"] == {}
+
+
+# --------------------------------------------------------------- health
+def test_health_summary_ok_degraded_and_listener_fold():
+    ok = health_summary(empty_snapshot())
+    assert ok["status"] == "ok"
+    assert all(c["status"] == "ok" for c in ok["checks"].values())
+    bad = health_summary({"counters": {"trace.dropped": 3,
+                                       "link.tcp.resends": 1}})
+    assert bad["status"] == "degraded"
+    assert bad["checks"]["trace-drops"]["value"] == 3
+    assert bad["checks"]["tcp-retries"]["status"] == "degraded"
+    assert bad["checks"]["tune-failures"]["status"] == "ok"
+    # pre-metrics payloads: the report-level listener_errors dict still
+    # degrades the listener check
+    folded = health_summary(None, listener_errors={"det": 2})
+    assert folded["checks"]["listener-errors"]["value"] == 2
+    assert folded["status"] == "degraded"
+
+
+# ------------------------------------------------------------ wire verb
+def test_metrics_verb_loopback_query_answers_collector_registry():
+    coll = FleetCollector(detectors=[])
+    coll.ingest_line(encode("hello", 0, {"nprocs": 1}))
+    reply = decode(coll.ingest_line(encode("metrics", 0)))
+    assert reply.kind == "metrics"
+    counters = reply.payload["metrics"]["counters"]
+    # the reply reflects the collector's own registry, including the
+    # lines that carried this very exchange
+    assert counters["collector.hellos"] == 1
+    assert counters["collector.lines"] >= 2
+
+
+def test_metrics_verb_tcp_query_against_collector_and_profile_server():
+    coll = FleetCollector(detectors=[])
+    server = CollectorServer(coll, idle_timeout_s=1.0)
+    try:
+        with TcpTransport("127.0.0.1", server.port) as t:
+            reply = t.request(Message("metrics"))
+            assert reply.kind == "metrics"
+            assert reply.payload["metrics"]["counters"]["collector.lines"] >= 1
+    finally:
+        server.close()
+    # a ProfileServer answers with its session runtime's registry
+    rt = DarshanRuntime()
+    rt.metrics.counter("runtime.listener_errors").inc(5)
+    srv = ProfileServer(runtime=rt)
+    try:
+        with TcpTransport("127.0.0.1", srv.port) as t:
+            reply = t.request(Message("metrics"))
+            assert reply.kind == "metrics"
+            counters = reply.payload["metrics"]["counters"]
+            assert counters["runtime.listener_errors"] == 5
+    finally:
+        srv.close()
+
+
+def test_metrics_verb_spool_push_lands_in_rank_slice(tmp_path):
+    spool = str(tmp_path / "spool")
+    reg = MetricsRegistry()
+    reg.counter("runtime.listener_errors").inc(2)
+    reg.gauge("insight.poll_lag_s").set(0.75)
+    with SpoolTransport(spool, name="rank00003") as t:
+        # a spool cannot answer a query; the push form writes the
+        # snapshot into the capture instead
+        assert t(encode("metrics", 3, {"push": True,
+                                       "metrics": reg.snapshot()})) is None
+    coll = FleetCollector(detectors=[])
+    assert coll.ingest_spool(spool) == 1
+    slice_metrics = coll.ranks[3].metrics
+    assert slice_metrics["counters"]["runtime.listener_errors"] == 2
+    assert slice_metrics["gauges"]["insight.poll_lag_s"] == 0.75
+    # and the rollup folds the pushed snapshot into the fleet metrics
+    fleet = coll.report()
+    assert fleet.metrics["counters"]["runtime.listener_errors"] == 2
+
+
+# ---------------------------------------------------------- fleet rollup
+def _report_with_metrics(rank, snap):
+    rt = DarshanRuntime()
+    from repro.core.session import ProfileSession
+    sess = ProfileSession(rt, auto_attach=False)
+    sess.start()
+    rt.posix_open(5, f"/data/r{rank}.bin", 0.0, 0.001)
+    rt.posix_read(5, None, 8192, 0.1, 0.11, advance=True)
+    rep = sess.stop()
+    rep.metrics = snap
+    return payloads.encode_report(rank, rep, nprocs=2, metrics=snap)
+
+
+def test_fleet_rollup_merges_rank_snapshots_and_collector_registry():
+    coll = FleetCollector(detectors=[])
+    snap_a = {"counters": {"trace.dropped": 2},
+              "gauges": {"insight.poll_lag_s": 0.2},
+              "histograms": {"runtime.emit_ns": {
+                  "counts": [0, 3, 0, 0, 0, 0, 0, 0, 0, 0],
+                  "count": 3, "sum": 900.0}}}
+    snap_b = {"counters": {"trace.dropped": 5},
+              "gauges": {"insight.poll_lag_s": 0.9},
+              "histograms": {"runtime.emit_ns": {
+                  "counts": [1, 1, 0, 0, 0, 0, 0, 0, 0, 0],
+                  "count": 2, "sum": 400.0}}}
+    coll.ingest_line(_report_with_metrics(0, snap_a))
+    coll.ingest_line(_report_with_metrics(1, snap_b))
+    fleet = coll.report()
+    m = fleet.metrics
+    assert m["counters"]["trace.dropped"] == 7            # summed
+    assert m["gauges"]["insight.poll_lag_s"] == 0.9       # max
+    h = m["histograms"]["runtime.emit_ns"]
+    assert h["counts"][:2] == [1, 4] and h["count"] == 5  # bins add
+    # the collector's own registry rides along...
+    assert m["counters"]["collector.reports"] == 2
+    assert m["counters"]["collector.lines"] == 2
+    # ...as do the report()-time staleness/rate gauges, one per rank
+    assert "collector.rank_staleness_s.rank0" in m["gauges"]
+    assert "collector.rank_staleness_s.rank1" in m["gauges"]
+    assert m["gauges"]["collector.ingest_lines_per_s"] > 0
+    # and the health rollup sees through the merge
+    assert Report.from_fleet(fleet).health()["status"] == "degraded"
+
+
+def _fleet_files(root, nranks, per_rank=4, size=16384):
+    files = {}
+    for r in range(nranks):
+        d = os.path.join(str(root), f"r{r}")
+        os.makedirs(d, exist_ok=True)
+        files[r] = []
+        for i in range(per_rank):
+            p = os.path.join(d, f"{i:03d}.bin")
+            with open(p, "wb") as f:
+                f.write(b"x" * size)
+            files[r].append(p)
+    return files
+
+
+def test_profiler_fleet_report_ships_and_rolls_up_metrics(tmp_path):
+    files = _fleet_files(tmp_path, 2)
+
+    def workload(rank, io):
+        for p in files[rank]:
+            io.read_file(p, chunk=8192)
+
+    report = Profiler(ProfilerOptions(mode="fleet", nranks=2)).run(workload)
+    m = report.metrics
+    assert m["counters"]["collector.reports"] == 2
+    # per-rank runtime registries shipped inside the report payloads
+    assert "runtime.emit_ns" in m["histograms"]
+    for r in (0, 1):
+        assert report.fleet.ranks[r].metrics   # slice kept its snapshot
+        assert f"collector.rank_staleness_s.rank{r}" in m["gauges"]
+    assert report.health()["status"] in ("ok", "degraded")
+    d = report.to_dict()
+    assert d["health"]["checks"] and d["metrics"]["counters"]
+    # opting out: ship_metrics=False leaves the payloads metrics-free
+    quiet = Profiler(ProfilerOptions(mode="fleet", nranks=2,
+                                     metrics=False)).run(workload)
+    assert all(not s.metrics for s in quiet.fleet.ranks.values())
+
+
+# -------------------------------------------- local surface + exporters
+def test_local_report_metrics_health_and_chrome_counters(tmp_path):
+    p = tmp_path / "data.bin"
+    p.write_bytes(b"x" * 262144)
+    prof = Profiler(ProfilerOptions(mode="local"))
+    with prof:
+        with open(p, "rb") as f:
+            while f.read(4096):
+                pass
+    report = prof.report
+    m = report.metrics
+    assert "trace.dropped" in m["counters"]
+    assert "runtime.emit_ns" in m["histograms"]
+    assert report.health()["status"] == "ok"
+    assert report.to_dict()["health"]["status"] == "ok"
+    trace = report.export("chrome_trace")
+    counters = [e for e in trace["traceEvents"] if e.get("ph") == "C"]
+    assert counters                              # ph "C" counter track
+    assert any(e["name"] == "bandwidth_mb_s" for e in counters)
+    tracked = {e["name"] for e in counters if e["name"] != "bandwidth_mb_s"}
+    assert "trace.dropped" in tracked
+
+
+def test_runtime_metrics_opt_out_and_shared_registry():
+    off = DarshanRuntime(metrics=False)
+    assert off.metrics is None
+    off.enabled = True
+    off.posix_open(5, "/x", 0.0, 0.001)
+    off.posix_read(5, None, 4096, 0.0, 0.001, advance=True)   # no crash
+    shared = MetricsRegistry()
+    a = DarshanRuntime(metrics=shared)
+    b = DarshanRuntime(metrics=shared)
+    assert a.metrics is shared and b.metrics is shared
+    # default: private per-runtime registries (per-rank isolation)
+    assert DarshanRuntime().metrics is not DarshanRuntime().metrics
+
+
+# ------------------------------------------------------------- dashboard
+def test_dashboard_export_local_is_one_offline_html(tmp_path):
+    p = tmp_path / "data.bin"
+    p.write_bytes(b"y" * 131072)
+    prof = Profiler(ProfilerOptions(mode="local"))
+    with prof:
+        with open(p, "rb") as f:
+            while f.read(8192):
+                pass
+    out = str(tmp_path / "dashboard.html")
+    prof.report.export("dashboard", out)
+    with open(out) as f:
+        html = f.read()
+    for marker in DASHBOARD_IDS:
+        assert marker in html, f"dashboard missing {marker}"
+    assert html.startswith("<!DOCTYPE html>")
+    assert "http://" not in html.replace("http://www.w3.org", "")
+    assert str(p) in html                        # the per-file row label
+
+
+def test_dashboard_renders_fleet_spool_replay(tmp_path):
+    from repro.obs.dashboard import render_dashboard
+    files = _fleet_files(tmp_path, 2)
+    spool = str(tmp_path / "spool")
+
+    def workload(rank, io):
+        for p in files[rank]:
+            io.read_file(p, chunk=4096)
+
+    live = Profiler(ProfilerOptions(mode="fleet", nranks=2,
+                                    spool_dir=spool)).run(workload)
+    # the finished spool dir is a capture: a fresh collector replays it
+    # into the same aggregate, and the dashboard renders from that
+    coll = FleetCollector(detectors=[])
+    assert coll.ingest_spool(spool) > 0
+    replayed = Report.from_fleet(coll.report())
+    assert replayed.counters() == live.counters()
+    html = render_dashboard(replayed)
+    for marker in DASHBOARD_IDS:
+        assert marker in html, f"replay dashboard missing {marker}"
+    assert ">rank 0</text>" in html and ">rank 1</text>" in html
+    assert replayed.metrics["counters"]["collector.lines"] > 0
+
+
+def test_export_all_writes_dashboard_html(tmp_path):
+    p = tmp_path / "data.bin"
+    p.write_bytes(b"z" * 65536)
+    prof = Profiler(ProfilerOptions(mode="local",
+                                    exporters=("json_report", "dashboard")))
+    with prof:
+        with open(p, "rb") as f:
+            f.read()
+    out = prof.report.export_all(str(tmp_path / "exports"))
+    assert out["dashboard"].endswith("dashboard.html")
+    with open(out["dashboard"]) as f:
+        assert 'id="health-panel"' in f.read()
