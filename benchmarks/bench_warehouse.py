@@ -1,0 +1,157 @@
+"""Trace warehouse benchmark (ISSUE 8 acceptance).
+
+Measures the archive/query layer against the thing it replaces —
+re-ingesting a line-JSON spool capture from scratch for every
+analysis:
+
+  * compact — spool capture -> partitioned binary archive throughput
+    (rows/s and bytes-at-rest MB/s, the one-time cost);
+  * query — a time-sliced scan with partition/block pushdown vs a
+    full ``FleetCollector.ingest_spool`` replay + ``time_slice`` of
+    the same capture (the per-analysis cost the archive amortizes);
+  * bytes — archive size at rest vs the line-JSON capture.
+
+Smoke bars double as CI gates: the pushdown query must beat the
+re-ingest path by >= 5x (the acceptance criterion), both paths must
+return identical rows, and the archive must be smaller at rest than
+the JSON it compacted.
+"""
+from __future__ import annotations
+
+import os
+import time
+from types import SimpleNamespace
+
+import numpy as np
+
+from benchmarks.common import Row, cleanup, make_workspace, scaled
+
+# smoke bars (full runs clear these by an order of magnitude or more)
+SMOKE_MIN_QUERY_SPEEDUP = 5.0
+SMOKE_MAX_REST_RATIO = 1.0
+
+SPAN_S = 600.0          # synthetic run length; 10 slices at 60 s
+N_FILES = 32
+
+
+def _synth_columns(rank: int, n: int):
+    """One rank's deterministic segment batch as raw columns."""
+    from repro.trace import SegmentColumns
+    from repro.trace.columns import SEG_DTYPE
+
+    i = np.arange(n)
+    data = np.empty(n, dtype=SEG_DTYPE)
+    data["module"] = 0
+    data["path"] = i % N_FILES
+    data["op"] = (i % 10 < 6).astype(np.int16)       # 0=write, 1=read
+    data["op"][i % 10 == 9] = 2                      # sprinkle opens
+    data["offset"] = (i.astype(np.int64) * 4096) % (1 << 30)
+    data["length"] = np.where(data["op"] == 2, 0,
+                              4096 + (i % 7) * 8192).astype(np.int64)
+    # full-precision wall-clock style timestamps and pthread-sized
+    # thread ids — what a real capture carries on the JSON wire
+    data["start"] = (i + 0.6180339887) / max(n, 1) * SPAN_S + rank * 1e-3
+    data["end"] = data["start"] + 2.000123e-4
+    data["thread"] = 139872316049152 + i % 4
+    return SegmentColumns(
+        data, ("POSIX",),
+        tuple(f"/data/shard{j:03d}.bin" for j in range(N_FILES)),
+        ("write", "read", "open"))
+
+
+def _synth_spool(spool: str, nranks: int, segs_per_rank: int) -> int:
+    """A spool capture shaped like a finished fleet run: one report
+    line per rank (clock offsets measured at zero so both replay
+    paths land on identical timelines)."""
+    from repro.core.analysis import summarize_module
+    from repro.fleet import payloads
+
+    os.makedirs(spool, exist_ok=True)
+    total = 0
+    for rank in range(nranks):
+        cols = _synth_columns(rank, segs_per_rank)
+        total += len(cols)
+        report = SimpleNamespace(
+            elapsed_s=SPAN_S, per_file={},
+            stdio=summarize_module("STDIO", {}), file_sizes={},
+            findings=[], listener_errors={}, segments_columns=cols)
+        line = payloads.encode_report(rank, report, nprocs=nranks,
+                                      clock_offset_s=0.0)
+        with open(os.path.join(spool, f"rank{rank:05d}.jsonl"),
+                  "w") as fh:
+            fh.write(line + "\n")
+    return total
+
+
+def _dir_bytes(root: str) -> int:
+    return sum(os.path.getsize(os.path.join(d, f))
+               for d, _dirs, files in os.walk(root) for f in files)
+
+
+def run(rows: Row) -> None:
+    from repro.fleet.collector import FleetCollector
+    from repro.warehouse import Archive, ArchiveWriter
+
+    nranks = scaled(8, 4)
+    segs_per_rank = scaled(100_000, 10_000)
+    ws = make_workspace("bench_wh_")
+    try:
+        spool = os.path.join(ws, "spool")
+        arch_dir = os.path.join(ws, "wh")
+        total = _synth_spool(spool, nranks, segs_per_rank)
+        spool_bytes = _dir_bytes(spool)
+
+        # --------------------------------------------------- compaction
+        t0 = time.perf_counter()
+        w = ArchiveWriter(arch_dir, run="cap", slice_s=60.0)
+        assert w.ingest_spool(spool) == total
+        parts = w.finalize()
+        dt = time.perf_counter() - t0
+        arch_bytes = _dir_bytes(arch_dir)
+        rows.add("warehouse_compact", dt / total * 1e6,
+                 f"rows_s={total / dt:.0f};parts={len(parts)};"
+                 f"mb_s={arch_bytes / dt / 1e6:.1f}")
+
+        # --------------------------------- time-sliced query: pushdown
+        t_lo, t_hi = SPAN_S * 0.5, SPAN_S * 0.55     # one 30 s window
+        arch = Archive(arch_dir)
+        reps = scaled(10, 5)
+        scan = None
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            scan = arch.scan("cap").where(t0=t_lo, t1=t_hi)
+            fast = scan.table()
+        dt_scan = (time.perf_counter() - t0) / reps
+        st = scan.stats
+        assert st["partitions_pruned"] > 0, \
+            "pushdown never pruned a partition"
+        rows.add("warehouse_query_pushdown", dt_scan * 1e6,
+                 f"rows={len(fast)};parts_read={st['partitions']};"
+                 f"parts_pruned={st['partitions_pruned']}")
+
+        # ------------------------- baseline: full line-JSON re-ingest
+        t0 = time.perf_counter()
+        coll = FleetCollector(detectors=[])
+        coll.ingest_spool(spool)
+        slow = coll.report().merged_columns().time_slice(t_lo, t_hi)
+        dt_replay = time.perf_counter() - t0
+        assert sorted(fast.iter_tuples()) == sorted(slow.iter_tuples()), \
+            "archive scan diverged from spool replay"
+        speedup = dt_replay / max(dt_scan, 1e-12)
+        rows.add("warehouse_query_replay_baseline", dt_replay * 1e6,
+                 f"rows={len(slow)};archive_speedup={speedup:.1f}x")
+        assert speedup >= SMOKE_MIN_QUERY_SPEEDUP, \
+            f"pushdown query lost its edge: {speedup:.1f}x"
+
+        # ------------------------------------------------ bytes at rest
+        ratio = arch_bytes / max(spool_bytes, 1)
+        rows.add("warehouse_bytes_at_rest", float(arch_bytes),
+                 f"spool_bytes={spool_bytes};ratio={ratio:.3f}")
+        assert ratio <= SMOKE_MAX_REST_RATIO, \
+            f"archive larger than the capture it compacted: {ratio:.3f}"
+    finally:
+        cleanup(ws)
+
+
+if __name__ == "__main__":
+    run(Row())

@@ -76,6 +76,10 @@ class FleetCollector:
         # this; streamed findings then feed it and the ``tune`` verb
         # polls route to it (repro.tune)
         self.tune_controller = None
+        # archive-as-collected (repro.warehouse): when an ArchiveWriter
+        # is attached here, every ingested rank report also appends its
+        # clock-aligned segments to the archive
+        self.archive = None
         self.stats = {"lines": 0, "reports": 0, "hellos": 0,
                       "clock_probes": 0, "findings": 0, "errors": 0,
                       "bytes": 0}
@@ -221,6 +225,14 @@ class FleetCollector:
             offset = float(offset)
         segments = payloads.decode_report_segments(p)
         aligned = segments.shift_time(offset).sorted_by_start()
+        if self.archive is not None:
+            # an archive write failure must not drop the report itself
+            try:
+                self.archive.add_batch(aligned, rank=msg.rank)
+            except Exception:
+                self._bump("errors")
+                self.metrics.counter(
+                    "warehouse.archive_errors").inc()
         findings = payloads.decode_findings(p.get("findings", []),
                                             rank=msg.rank)
         with self._lock:

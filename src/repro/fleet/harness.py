@@ -130,7 +130,8 @@ def simulate_fleet(
         ship_metrics: bool = True,
         tune_controller=None,
         make_applier: Optional[Callable[[int], object]] = None,
-        tune_interval_s: float = 0.1) -> Optional[FleetReport]:
+        tune_interval_s: float = 0.1,
+        archive_dir: Optional[str] = None) -> Optional[FleetReport]:
     """Run ``workload(rank, io)`` on ``nranks`` threads, each with a
     private runtime + RankReporter, ship every window through the wire
     protocol into ``collector``, and return the aggregated FleetReport.
@@ -155,7 +156,22 @@ def simulate_fleet(
     actions over its transport, and a per-rank ``TuneApplier``
     (``make_applier(rank)`` or a bare default) applies them — published
     thread-locally so the workload can ``current_applier().bind(...)``.
-    Requires per-rank insight (``make_insight``)."""
+    Requires per-rank insight (``make_insight``).
+
+    ``archive_dir`` archives every ingested rank report into a
+    partitioned column-segment warehouse (repro.warehouse) as it is
+    collected; needs ``collect=True`` (with ``collect=False`` the
+    caller owns collection — attach an ``ArchiveWriter`` to
+    ``collector.archive`` and finalize it after draining)."""
+    archive_writer = None
+    if archive_dir is not None:
+        if not collect:
+            raise ValueError(
+                "archive_dir requires collect=True; with collect=False "
+                "attach an ArchiveWriter to collector.archive and "
+                "finalize it after draining the transport")
+        from repro.warehouse import ArchiveWriter
+        collector.archive = archive_writer = ArchiveWriter(archive_dir)
     if tune_controller is not None:
         tune_controller.attach(collector)
     reporters: List[RankReporter] = []
@@ -235,7 +251,11 @@ def simulate_fleet(
             rep.ship(transport, handshake_rounds=handshake_rounds)
         finally:
             transport.close()
-    return collector.report() if collect else None
+    report = collector.report() if collect else None
+    if archive_writer is not None:
+        archive_writer.finalize()
+        collector.archive = None
+    return report
 
 
 def run_simulated_fleet(

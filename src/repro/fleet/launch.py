@@ -150,7 +150,8 @@ def run_spawned_fleet(
         segments_wire: str = "columns",
         ship_metrics: bool = True,
         tune_controller=None,
-        tune_interval_s: float = 0.1) -> FleetReport:
+        tune_interval_s: float = 0.1,
+        archive_dir: Optional[str] = None) -> FleetReport:
     """Run ``workload(rank, io)`` on ``nranks`` OS processes and return
     the aggregated FleetReport.
 
@@ -165,10 +166,17 @@ def run_spawned_fleet(
     ``tune_controller`` closes the loop: it is attached to the
     collector, and every child polls it for ``TuneAction``s over the
     transport (tcp).  Spool is one-way — the controller logs its plan
-    as a dry run instead (``mark_one_way``)."""
+    as a dry run instead (``mark_one_way``).
+
+    ``archive_dir`` archives every rank report into a partitioned
+    column-segment warehouse (repro.warehouse) as it is collected."""
     import tempfile
 
     collector = collector if collector is not None else FleetCollector()
+    archive_writer = None
+    if archive_dir is not None:
+        from repro.warehouse import ArchiveWriter
+        collector.archive = archive_writer = ArchiveWriter(archive_dir)
     if tune_controller is not None:
         tune_controller.attach(collector)
         if transport == "spool":
@@ -247,4 +255,8 @@ def run_spawned_fleet(
             # spool_dir is left intact (it is the replayable capture)
             import shutil
             shutil.rmtree(own_spool, ignore_errors=True)
-    return collector.report()
+    report = collector.report()
+    if archive_writer is not None:
+        archive_writer.finalize()
+        collector.archive = None
+    return report

@@ -278,7 +278,11 @@ def _markers(findings, audit) -> List[Tuple[float, str, str]]:
 def render_dashboard(report, path: Optional[str] = None) -> str:
     """Render ``report`` (a unified ``repro.profiler.Report``) as one
     offline HTML document; writes it to ``path`` when given and returns
-    the HTML text either way."""
+    the HTML text either way.  A ``repro.warehouse.Archive`` works as
+    a data source too — it adapts itself to the report surface."""
+    if not hasattr(report, "segments_table") \
+            and hasattr(report, "as_report"):
+        report = report.as_report()    # repro.warehouse.Archive
     cols = report.segments_table()
     window = _report_window(cols)
     findings = list(report.findings)

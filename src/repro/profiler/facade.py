@@ -118,6 +118,17 @@ class Profiler:
         ``Pipeline.with_profiler``; None when insight is off."""
         return self._engine
 
+    def _make_archive_writer(self):
+        """An ArchiveWriter per ``options.archive_dir``, or None when
+        archiving is off."""
+        if self.options.archive_dir is None:
+            return None
+        from repro.warehouse import ArchiveWriter
+        return ArchiveWriter(self.options.archive_dir,
+                             run=self.options.archive_run,
+                             codec=self.options.archive_codec,
+                             slice_s=self.options.archive_slice_s)
+
     # ------------------------------------------------------------ wrapping
     def _wrap(self, native) -> Report:
         if self.options.mode == "local":
@@ -135,6 +146,13 @@ class Profiler:
                 report.advice[name] = f"advisor error: {e!r}"
         if self.options.mode == "local" and self._tune_controller is not None:
             report.tune_audit = self._tune_controller.audit_log()
+        # local archiving happens at wrap time (one append per profiled
+        # window); fleet runs archive live inside the collector instead
+        if self.options.mode == "local" \
+                and self.options.archive_dir is not None:
+            writer = self._make_archive_writer()
+            writer.ingest_report(report)
+            writer.finalize()
         return report
 
     @property
@@ -312,10 +330,23 @@ class Profiler:
     def _run_fleet(self, workload, collector=None, throttles=None) -> Report:
         opts = self.options
         collector = self._make_collector(collector)
-        if opts.launch == "spawn":
-            fleet = self._run_fleet_spawn(workload, collector, throttles)
-        else:
-            fleet = self._run_fleet_threads(workload, collector, throttles)
+        # archive-as-they-collect: every ingested rank report appends
+        # its aligned segments through the collector hook, whichever
+        # wire (loopback/tcp/spool) or launch (thread/spawn) is in play
+        writer = self._make_archive_writer()
+        if writer is not None:
+            collector.archive = writer
+        try:
+            if opts.launch == "spawn":
+                fleet = self._run_fleet_spawn(workload, collector,
+                                              throttles)
+            else:
+                fleet = self._run_fleet_threads(workload, collector,
+                                                throttles)
+        finally:
+            if writer is not None:
+                writer.finalize()
+                collector.archive = None
         report = self._wrap(fleet)
         self._reports.append(report)
         return report

@@ -75,6 +75,15 @@ class ProfilerOptions:
     # default ("fork" on Linux — closures work as workloads)
     mp_start_method: Optional[str] = None
     fleet_timeout_s: float = 120.0        # spawn: per-run watchdog
+    # -------------------------------------------------------- warehouse
+    # archive_dir: when set, the run's DXT segments are written into a
+    # partitioned column-segment archive (repro.warehouse) as part of
+    # collection — fleet reports as they arrive, local sessions at
+    # stop().  Valid in both modes.
+    archive_dir: Optional[str] = None
+    archive_run: str = "run"              # run id (subdir) inside the archive
+    archive_codec: str = "binary"         # "binary" | "parquet" (pyarrow)
+    archive_slice_s: Optional[float] = 60.0   # time-slice width; None=off
     # ------------------------------------------------------------- tune
     # closed-loop tuning (repro.tune): streamed findings drive policies
     # that push TuneActions back to ranks; requires insight=True (the
@@ -151,6 +160,18 @@ class ProfilerOptions:
                     raise ProfilerOptionsError(
                         f"{name_field} entries must be non-empty plugin "
                         f"names, got {n!r}")
+        if self.archive_codec not in ("binary", "parquet"):
+            raise ProfilerOptionsError(
+                f"archive_codec must be 'binary' or 'parquet', got "
+                f"{self.archive_codec!r}")
+        if self.archive_slice_s is not None and self.archive_slice_s <= 0:
+            raise ProfilerOptionsError(
+                f"archive_slice_s must be > 0 or None, got "
+                f"{self.archive_slice_s}")
+        if not self.archive_run or not isinstance(self.archive_run, str):
+            raise ProfilerOptionsError(
+                f"archive_run must be a non-empty string, got "
+                f"{self.archive_run!r}")
         if self.insight_interval_s <= 0:
             raise ProfilerOptionsError(
                 f"insight_interval_s must be > 0, got "

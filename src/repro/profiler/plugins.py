@@ -20,7 +20,7 @@ BUILTIN_DETECTORS = ("small-file-storm", "random-read-thrash",
 BUILTIN_FLEET_DETECTORS = ("rank-straggler", "load-imbalance",
                            "shared-file-contention")
 BUILTIN_EXPORTERS = ("chrome_trace", "darshan_log", "json_report",
-                     "dashboard")
+                     "dashboard", "archive")
 BUILTIN_ADVISORS = ("staging", "thread-autotune", "workload-character")
 BUILTIN_POLICIES = ("stage-hot-files", "autotune-threads",
                     "checkpoint-backoff")
@@ -65,6 +65,34 @@ def _export_dashboard(report, path: Optional[str] = None):
     # capture, because it reads only the unified Report surface
     from repro.obs.dashboard import render_dashboard
     return render_dashboard(report, path)
+
+
+def _archive_exporter_factory(opts):
+    """Exporter writing the report's segments into a partitioned
+    column-segment archive (repro.warehouse); ``path`` is the archive
+    directory.  Run id / codec / slicing come from the options."""
+    run = getattr(opts, "archive_run", None) or "run"
+    codec = getattr(opts, "archive_codec", None) or "binary"
+    slice_s = getattr(opts, "archive_slice_s", 60.0) \
+        if opts is not None else 60.0
+
+    def _export_archive(report, path: Optional[str] = None):
+        if not path:
+            raise ValueError(
+                "the 'archive' exporter writes a directory; pass a path")
+        from repro.warehouse import ArchiveWriter
+        with ArchiveWriter(path, run=run, codec=codec,
+                           slice_s=slice_s) as w:
+            w.ingest_report(report)
+        return path
+
+    _export_archive.ext = ""   # writes a directory, not a single file
+    return _export_archive
+
+
+# per-kind output extensions for ``Report.export_all`` (default "json")
+_export_darshan_log.ext = "txt"
+_export_dashboard.ext = "html"
 
 
 # -------------------------------------------------------------- advisors
@@ -146,6 +174,7 @@ def register_builtins(registries) -> None:
     exp.register("darshan_log", lambda opts: _export_darshan_log)
     exp.register("json_report", lambda opts: _export_json_report)
     exp.register("dashboard", lambda opts: _export_dashboard)
+    exp.register("archive", _archive_exporter_factory)
 
     adv = registries["advisor"]
     adv.register("staging", _StagingAdvisorPlugin)

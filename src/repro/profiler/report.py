@@ -222,15 +222,21 @@ class Report:
 
     def export_all(self, directory: str) -> Dict[str, str]:
         """Export every exporter selected in the options (or the default
-        set) into ``directory``; returns kind -> written path."""
+        set) into ``directory``; returns kind -> written path.  Each
+        exporter declares its own file extension (an ``ext`` attribute
+        on the registered callable; ``"json"`` when absent, ``""`` for
+        exporters that write a directory)."""
         import os
+
+        from repro.profiler import registry as _registry
         os.makedirs(directory, exist_ok=True)
         out: Dict[str, str] = {}
-        exts = {"darshan_log": "txt", "dashboard": "html"}
         for kind in self.exporters:
-            ext = exts.get(kind, "json")
-            path = os.path.join(directory, f"{kind}.{ext}")
-            self.export(kind, path)
+            fn = _registry.create("exporter", kind, self.options)
+            ext = getattr(fn, "ext", "json")
+            name = f"{kind}.{ext}" if ext else kind
+            path = os.path.join(directory, name)
+            fn(self, path)
             out[kind] = path
         return out
 

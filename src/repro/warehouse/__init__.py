@@ -1,0 +1,29 @@
+"""repro.warehouse: partitioned columnar trace archives + queries.
+
+The after-the-fact half of the profiler: spool captures and live
+fleets compact into partitioned column-segment archives (``archive``,
+``format``), and ``query.Scan`` runs filtered, projected, aggregated
+scans over them out-of-core — the scaling story for fleets of long
+runs whose traces no longer fit one process.
+
+    from repro.warehouse import ArchiveWriter, Archive
+
+    with ArchiveWriter("warehouse", run="exp1") as w:
+        w.ingest_spool("spool_dir")          # compaction
+    table = Archive("warehouse").scan().where(t0=10, t1=20).table()
+
+``python -m repro.warehouse`` exposes compact/stats/query on the
+command line.
+"""
+from .archive import Archive, ArchiveWriter, PartitionInfo
+from .format import (BlockInfo, FormatError, ParquetSegmentFile,
+                     ParquetSegmentWriter, SegmentFile,
+                     SegmentFileWriter, open_segment_file, writer_for)
+from .query import ArchiveReport, Scan
+
+__all__ = [
+    "Archive", "ArchiveWriter", "ArchiveReport", "BlockInfo",
+    "FormatError", "ParquetSegmentFile", "ParquetSegmentWriter",
+    "PartitionInfo", "Scan", "SegmentFile", "SegmentFileWriter",
+    "open_segment_file", "writer_for",
+]

@@ -1,0 +1,382 @@
+"""Partitioned trace archives: many runs, many ranks, time slices.
+
+An archive is a directory of *runs*; each run a directory of
+immutable part files (``format.py`` segment files) plus a
+``manifest.json`` listing every partition with its rank, time slice
+and block stats.  ``ArchiveWriter`` routes incoming batches into
+(rank, time-slice) buffers and flushes each buffer as a new part —
+parts are written complete (footer sealed, ``os.replace``-published)
+so a crash can never corrupt prior data, and a manifest written after
+the parts can at worst miss the newest ones, which ``Archive``
+salvages by globbing for stray part files and reading their footers.
+
+Ingest sources:
+
+* ``add_batch(cols, rank)`` — any ``SegmentColumns`` batch;
+* ``ingest_store(store, rank)`` — incremental drain of a live
+  ``TraceStore`` via its ``since`` cursor;
+* ``ingest_report(report)`` — a unified ``Report`` or a
+  ``FleetReport`` (one batch per rank, fleet-clock aligned);
+* ``ingest_spool(dir)`` — compaction: replay a spool capture through
+  a detector-less ``FleetCollector`` (same corrupt-line tolerance and
+  clock alignment as a live fleet) and archive the result.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import threading
+from typing import Dict, List, Optional, Tuple
+
+from repro.trace import SegmentColumns
+
+from . import format as wformat
+
+MANIFEST = "manifest.json"
+DEFAULT_RUN = "run"
+DEFAULT_SLICE_S = 60.0
+
+
+def _metrics(metrics):
+    if metrics is not None:
+        return metrics
+    from repro.obs.metrics import default_registry
+    return default_registry()
+
+
+class PartitionInfo:
+    """One part file in a run: where it lives plus the stats pushdown
+    prunes on (rank, time window, row/byte counts)."""
+
+    __slots__ = ("path", "rank", "slice", "rows", "nbytes", "t_min",
+                 "t_max", "end_max", "run")
+
+    def __init__(self, path: str, rank: int, slice_idx: int, rows: int,
+                 nbytes: int, t_min: float, t_max: float, end_max: float,
+                 run: str):
+        self.path = path
+        self.rank = rank
+        self.slice = slice_idx
+        self.rows = rows
+        self.nbytes = nbytes
+        self.t_min = t_min
+        self.t_max = t_max
+        self.end_max = end_max
+        self.run = run
+
+    def to_json(self, run_dir: str) -> dict:
+        return {"path": os.path.relpath(self.path, run_dir),
+                "rank": self.rank, "slice": self.slice,
+                "rows": self.rows, "bytes": self.nbytes,
+                "t_min": self.t_min, "t_max": self.t_max,
+                "end_max": self.end_max}
+
+    @classmethod
+    def from_json(cls, obj: dict, run_dir: str, run: str) \
+            -> "PartitionInfo":
+        return cls(os.path.join(run_dir, obj["path"]), int(obj["rank"]),
+                   int(obj["slice"]), int(obj["rows"]),
+                   int(obj["bytes"]), float(obj["t_min"]),
+                   float(obj["t_max"]), float(obj["end_max"]), run)
+
+    def overlaps(self, t0: Optional[float], t1: Optional[float],
+                 ranks=None) -> bool:
+        """Same window rule as ``BlockInfo.overlaps`` (on start)."""
+        if ranks is not None and self.rank not in ranks:
+            return False
+        if t0 is not None and self.t_max < t0:
+            return False
+        if t1 is not None and self.t_min > t1:
+            return False
+        return True
+
+
+class ArchiveWriter:
+    """Partition batches by (rank, time slice) and write part files.
+
+    ``slice_s`` is the time-slice width in seconds (``None`` disables
+    time partitioning: one slice per rank).  ``flush()`` writes every
+    buffered partition as a new immutable part and merges the run
+    manifest; ``finalize()`` is flush plus a marker that the run is
+    complete.  Thread-safe — the fleet collector appends from its
+    per-connection threads.
+    """
+
+    def __init__(self, root: str, run: str = DEFAULT_RUN,
+                 codec: str = "binary",
+                 slice_s: Optional[float] = DEFAULT_SLICE_S,
+                 metrics=None):
+        if slice_s is not None and slice_s <= 0:
+            raise ValueError("slice_s must be positive or None")
+        if codec not in ("binary", "parquet"):
+            raise ValueError(f"unknown codec {codec!r} (binary|parquet)")
+        self.root = root
+        self.run = run
+        self.codec = codec
+        self.slice_s = slice_s
+        self.run_dir = os.path.join(root, run)
+        os.makedirs(self.run_dir, exist_ok=True)
+        self.metrics = _metrics(metrics)
+        self._lock = threading.Lock()
+        # (rank, slice) -> buffered batches awaiting flush
+        self._pending: Dict[Tuple[int, int], List[SegmentColumns]] = {}
+        self._seq = len(self._existing_parts())
+        self._store_cursors: Dict[int, int] = {}
+        self.parts_written = 0
+        self.rows_written = 0
+
+    def _existing_parts(self) -> List[str]:
+        parts = []
+        for ext in (wformat.BINARY_EXT, wformat.PARQUET_EXT):
+            parts.extend(glob.glob(
+                os.path.join(self.run_dir, "part-*" + ext)))
+        return sorted(parts)
+
+    def _slice_of(self, start: float) -> int:
+        if self.slice_s is None:
+            return 0
+        return int(start // self.slice_s)
+
+    # ------------------------------------------------------------ ingest
+    def add_batch(self, cols: SegmentColumns, rank: int = 0) -> int:
+        """Buffer one batch, split across its time slices."""
+        if len(cols) == 0:
+            return 0
+        with self._lock:
+            if self.slice_s is None:
+                self._pending.setdefault((rank, 0), []).append(cols)
+            else:
+                slices = (cols.start // self.slice_s).astype(int)
+                for idx in sorted(set(slices.tolist())):
+                    part = SegmentColumns(cols.data[slices == idx],
+                                          cols.modules, cols.paths,
+                                          cols.ops)
+                    self._pending.setdefault((rank, idx),
+                                             []).append(part)
+        return len(cols)
+
+    def ingest_store(self, store, rank: int = 0) -> int:
+        """Drain new rows from a live ``TraceStore`` (incremental: each
+        call picks up where the previous one left off)."""
+        cursor = self._store_cursors.get(rank, 0)
+        cols, cursor, _dropped = store.since(cursor)
+        self._store_cursors[rank] = cursor
+        return self.add_batch(cols, rank=rank)
+
+    def ingest_fleet(self, fleet) -> int:
+        """Archive a ``FleetReport``: one batch per rank, segments on
+        the fleet clock exactly as the collector aligned them."""
+        n = 0
+        for rank, s in sorted(fleet.ranks.items()):
+            n += self.add_batch(s.segments_table(), rank=rank)
+        return n
+
+    def ingest_report(self, report) -> int:
+        """Archive a unified ``Report`` (local: rank 0; fleet: one
+        batch per rank) or a bare ``FleetReport``."""
+        mode = getattr(report, "mode", None)
+        if mode == "fleet":
+            return self.ingest_fleet(report.fleet)
+        if mode == "local":
+            return self.add_batch(report.segments_table(), rank=0)
+        if hasattr(report, "ranks"):          # bare FleetReport
+            return self.ingest_fleet(report)
+        raise TypeError(f"cannot ingest {type(report).__name__}")
+
+    def ingest_spool(self, spool_dir: str) -> int:
+        """Compaction: replay a spool capture (corrupt lines tolerated
+        and counted, clocks aligned) and buffer the result."""
+        from repro.fleet.collector import FleetCollector
+        coll = FleetCollector(detectors=[], metrics=self.metrics)
+        coll.ingest_spool(spool_dir)
+        bad = coll.stats.get("errors", 0)
+        if bad:
+            self.metrics.counter("warehouse.corrupt_lines").inc(bad)
+        return self.ingest_fleet(coll.report())
+
+    # ------------------------------------------------------------- parts
+    def flush(self) -> List[PartitionInfo]:
+        """Write every buffered partition as a new part file and merge
+        the manifest; returns the partitions written."""
+        with self._lock:
+            pending = self._pending
+            self._pending = {}
+        written: List[PartitionInfo] = []
+        for (rank, idx) in sorted(pending):
+            batches = pending[(rank, idx)]
+            with self._lock:
+                seq = self._seq
+                self._seq += 1
+            name = (f"part-{seq:05d}-r{rank:05d}-s{idx}"
+                    f"{wformat.ext_for(self.codec)}")
+            path = os.path.join(self.run_dir, name)
+            writer = wformat.writer_for(path, self.codec)
+            try:
+                for cols in batches:
+                    writer.write_block(cols, rank=rank)
+                blocks = writer.finalize()
+            except Exception:
+                writer.abort()
+                raise
+            rows = sum(b.rows for b in blocks)
+            nbytes = os.path.getsize(path)
+            info = PartitionInfo(
+                path, rank, idx, rows, nbytes,
+                min(b.t_min for b in blocks),
+                max(b.t_max for b in blocks),
+                max(b.end_max for b in blocks), self.run)
+            written.append(info)
+            self.metrics.counter("warehouse.blocks_written").inc(
+                len(blocks))
+            self.metrics.counter("warehouse.bytes_written").inc(nbytes)
+            self.metrics.counter("warehouse.rows_written").inc(rows)
+            self.parts_written += 1
+            self.rows_written += rows
+        if written:
+            self.metrics.counter("warehouse.parts_written").inc(
+                len(written))
+            self._merge_manifest(written)
+        return written
+
+    def _merge_manifest(self, new_parts: List[PartitionInfo]) -> None:
+        path = os.path.join(self.run_dir, MANIFEST)
+        doc = {"version": 1, "run": self.run, "codec": self.codec,
+               "slice_s": self.slice_s, "partitions": []}
+        if os.path.exists(path):
+            try:
+                with open(path) as fh:
+                    old = json.load(fh)
+                doc["partitions"] = list(old.get("partitions", []))
+            except (OSError, ValueError):
+                pass  # rebuilt below from what we know; strays salvage
+        known = {p["path"] for p in doc["partitions"]}
+        for info in new_parts:
+            rec = info.to_json(self.run_dir)
+            if rec["path"] not in known:
+                doc["partitions"].append(rec)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump(doc, fh, indent=1)
+        os.replace(tmp, path)
+
+    def finalize(self) -> List[PartitionInfo]:
+        """Flush all buffers and seal the manifest."""
+        return self.flush()
+
+    def __enter__(self) -> "ArchiveWriter":
+        return self
+
+    def __exit__(self, et, ev, tb) -> None:
+        if et is None:
+            self.finalize()
+
+
+class Archive:
+    """Read side of an archive directory: enumerate runs/partitions
+    (manifest plus salvage of stray parts), plan scans, and adapt to
+    the report surface the dashboard renders."""
+
+    def __init__(self, root: str, metrics=None):
+        if not os.path.isdir(root):
+            raise FileNotFoundError(f"not an archive dir: {root}")
+        self.root = root
+        self.metrics = _metrics(metrics)
+
+    def runs(self) -> List[str]:
+        out = []
+        for name in sorted(os.listdir(self.root)):
+            d = os.path.join(self.root, name)
+            if not os.path.isdir(d):
+                continue
+            if os.path.exists(os.path.join(d, MANIFEST)) or \
+                    self._stray_parts(d, set()):
+                out.append(name)
+        return out
+
+    @staticmethod
+    def _stray_parts(run_dir: str, known: set) -> List[str]:
+        parts = []
+        for ext in (wformat.BINARY_EXT, wformat.PARQUET_EXT):
+            parts.extend(glob.glob(os.path.join(run_dir, "part-*" + ext)))
+        return sorted(p for p in parts if p not in known)
+
+    def partitions(self, run: Optional[str] = None) \
+            -> List[PartitionInfo]:
+        """All partitions of ``run`` (default: every run), manifest
+        entries first, then salvaged strays (parts a crashed writer
+        sealed but never recorded — their stats come from footers)."""
+        runs = [run] if run is not None else self.runs()
+        out: List[PartitionInfo] = []
+        for r in runs:
+            run_dir = os.path.join(self.root, r)
+            known: set = set()
+            mpath = os.path.join(run_dir, MANIFEST)
+            if os.path.exists(mpath):
+                try:
+                    with open(mpath) as fh:
+                        doc = json.load(fh)
+                    for rec in doc.get("partitions", []):
+                        info = PartitionInfo.from_json(rec, run_dir, r)
+                        if os.path.exists(info.path):
+                            known.add(info.path)
+                            out.append(info)
+                except (OSError, ValueError):
+                    pass
+            for path in self._stray_parts(run_dir, known):
+                info = self._salvage(path, r)
+                if info is not None:
+                    out.append(info)
+        return out
+
+    @staticmethod
+    def _salvage(path: str, run: str) -> Optional[PartitionInfo]:
+        try:
+            with wformat.open_segment_file(path) as sf:
+                blocks = sf.blocks
+                if not blocks:
+                    return None
+                return PartitionInfo(
+                    path, blocks[0].rank, 0,
+                    sum(b.rows for b in blocks), os.path.getsize(path),
+                    min(b.t_min for b in blocks),
+                    max(b.t_max for b in blocks),
+                    max(b.end_max for b in blocks), run)
+        except (OSError, wformat.FormatError):
+            return None
+
+    # ------------------------------------------------------------- query
+    def scan(self, run: Optional[str] = None):
+        """A ``Scan`` builder over this archive (see ``query.py``)."""
+        from .query import Scan
+        return Scan(self.partitions(run), metrics=self.metrics)
+
+    def stats(self) -> dict:
+        """Cheap whole-archive summary from partition stats alone."""
+        parts = self.partitions()
+        per_run: Dict[str, dict] = {}
+        for p in parts:
+            r = per_run.setdefault(p.run, {
+                "partitions": 0, "rows": 0, "bytes": 0, "ranks": set(),
+                "t_min": float("inf"), "t_max": float("-inf")})
+            r["partitions"] += 1
+            r["rows"] += p.rows
+            r["bytes"] += p.nbytes
+            r["ranks"].add(p.rank)
+            r["t_min"] = min(r["t_min"], p.t_min)
+            r["t_max"] = max(r["t_max"], p.t_max)
+        for r in per_run.values():
+            r["ranks"] = len(r["ranks"])
+        return {
+            "root": self.root,
+            "runs": per_run,
+            "partitions": len(parts),
+            "rows": sum(p.rows for p in parts),
+            "bytes": sum(p.nbytes for p in parts),
+        }
+
+    def as_report(self, run: Optional[str] = None):
+        """Adapt one run (default: the whole archive) to the report
+        surface ``render_dashboard`` consumes."""
+        from .query import ArchiveReport
+        return ArchiveReport(self, run=run)

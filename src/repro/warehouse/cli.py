@@ -1,0 +1,132 @@
+"""``python -m repro.warehouse`` — captures usable without Python.
+
+Three subcommands::
+
+    compact <spool_dir> <archive_dir> [--run R] [--codec binary|parquet]
+                                      [--slice-s N|none]
+    stats   <archive_dir>
+    query   <archive_dir> [--run R] [--t0 S] [--t1 S] [--rank N ...]
+                          [--op OP ...] [--file-contains SUBSTR]
+                          [--by op|file|rank|module|time]
+                          [--bucket-s N]
+
+``compact`` replays a spool capture into a partitioned archive;
+``stats`` prints what an archive holds (per run) from partition stats
+alone; ``query`` runs a pushdown scan and prints the aggregate table
+plus how much the scan skipped.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from .archive import DEFAULT_SLICE_S, Archive, ArchiveWriter
+
+
+def _fmt_table(headers: List[str], rows: List[List[str]]) -> str:
+    widths = [max(len(h), *(len(r[i]) for r in rows)) if rows else len(h)
+              for i, h in enumerate(headers)]
+    def line(cells):
+        return "  ".join(c.ljust(w) for c, w in zip(cells, widths))
+    out = [line(headers), line(["-" * w for w in widths])]
+    out.extend(line(r) for r in rows)
+    return "\n".join(out)
+
+
+def _cmd_compact(args) -> int:
+    slice_s: Optional[float] = args.slice_s
+    writer = ArchiveWriter(args.archive_dir, run=args.run,
+                           codec=args.codec, slice_s=slice_s)
+    rows = writer.ingest_spool(args.spool_dir)
+    parts = writer.finalize()
+    print(f"compacted {args.spool_dir} -> {writer.run_dir}: "
+          f"{rows} segments in {len(parts)} partition(s)")
+    return 0
+
+
+def _cmd_stats(args) -> int:
+    stats = Archive(args.archive_dir).stats()
+    rows = []
+    for run, r in sorted(stats["runs"].items()):
+        rows.append([run, str(r["partitions"]), str(r["ranks"]),
+                     str(r["rows"]), str(r["bytes"]),
+                     f"{r['t_min']:.3f}", f"{r['t_max']:.3f}"])
+    print(_fmt_table(["run", "parts", "ranks", "rows", "bytes",
+                      "t_min", "t_max"], rows))
+    print(f"total: {stats['partitions']} partition(s), "
+          f"{stats['rows']} rows, {stats['bytes']} bytes")
+    return 0
+
+
+def _cmd_query(args) -> int:
+    scan = Archive(args.archive_dir).scan(args.run)
+    scan.where(t0=args.t0, t1=args.t1,
+               ranks=args.rank or None, ops=args.op or None,
+               file_contains=args.file_contains)
+    groups = scan.aggregate(by=args.by, bucket_s=args.bucket_s)
+    rows = [[str(g[args.by]), str(g["rows"]), str(g["bytes"]),
+             f"{g['busy_s']:.4f}", f"{g['avg_size']:.0f}",
+             f"{g['bw_mb_s']:.1f}",
+             f"{g['t_min']:.3f}..{g['t_max']:.3f}"]
+            for g in groups]
+    print(_fmt_table([args.by, "rows", "bytes", "busy_s", "avg_size",
+                      "bw_mb_s", "window"], rows))
+    st = scan.stats
+    print(f"scan: {st['partitions']} partition(s) read, "
+          f"{st['partitions_pruned']} pruned, "
+          f"{st['blocks_scanned']} block(s) scanned, "
+          f"{st['blocks_skipped']} skipped, "
+          f"{st['rows_matched']}/{st['rows_scanned']} rows matched")
+    return 0
+
+
+def _slice_arg(v: str) -> Optional[float]:
+    if v.lower() in ("none", "off"):
+        return None
+    return float(v)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.warehouse",
+        description="Compact, inspect, and query trace archives.")
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    c = sub.add_parser("compact", help="spool capture -> archive")
+    c.add_argument("spool_dir")
+    c.add_argument("archive_dir")
+    c.add_argument("--run", default="run")
+    c.add_argument("--codec", choices=("binary", "parquet"),
+                   default="binary")
+    c.add_argument("--slice-s", type=_slice_arg,
+                   default=DEFAULT_SLICE_S,
+                   help="time-slice width in seconds, or 'none'")
+    c.set_defaults(fn=_cmd_compact)
+
+    s = sub.add_parser("stats", help="what an archive holds")
+    s.add_argument("archive_dir")
+    s.set_defaults(fn=_cmd_stats)
+
+    q = sub.add_parser("query", help="pushdown scan + aggregate table")
+    q.add_argument("archive_dir")
+    q.add_argument("--run", default=None)
+    q.add_argument("--t0", type=float, default=None)
+    q.add_argument("--t1", type=float, default=None)
+    q.add_argument("--rank", type=int, action="append", default=[])
+    q.add_argument("--op", action="append", default=[])
+    q.add_argument("--file-contains", default=None)
+    q.add_argument("--by", default="op",
+                   choices=("op", "file", "rank", "module", "time"))
+    q.add_argument("--bucket-s", type=float, default=60.0)
+    q.set_defaults(fn=_cmd_query)
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":  # pragma: no cover - exercised via __main__
+    sys.exit(main())

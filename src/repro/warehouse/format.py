@@ -1,0 +1,528 @@
+"""Self-describing binary column-segment files (and a Parquet twin).
+
+One ``.seg`` file holds a sequence of *blocks*, each a raw columnar
+dump of one ``SegmentColumns`` batch: the eight ``SEG_DTYPE`` columns
+as little-endian numpy buffers, prefixed by a JSON meta record that
+carries the interned string tables and per-block statistics (row
+count, min/max start time, max end time, rank).  A footer record
+repeats every block's stats so a reader can plan a scan — and skip
+non-matching blocks — without touching the data bytes.
+
+Layout::
+
+    MAGIC  "RWHS"            4 bytes
+    version                  u16 little-endian
+    header_len               u32, then JSON header {"columns": [...]}
+    block*                   tag 'B', u32 meta_len, u64 data_len,
+                             meta JSON, concatenated column buffers
+    footer                   tag 'F', u32 len, JSON {"blocks": [...]}
+    trailer                  u64 footer_offset + MAGIC  (12 bytes)
+
+Files are written to a temp path and published with ``os.replace``,
+so a reader never sees a torn file; if a crash leaves a file without
+its trailer, ``SegmentFile`` falls back to a sequential scan and
+salvages every complete block (the crash-safe half of the contract).
+
+``ParquetSegmentWriter`` / ``ParquetSegmentFile`` put the same
+interface over pyarrow Parquet (one row group per block, stats in the
+file's key-value metadata) for interop with off-the-shelf tooling;
+pyarrow is optional and only imported when the codec is requested.
+``open_segment_file`` dispatches on extension.
+"""
+from __future__ import annotations
+
+import json
+import os
+import struct
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.trace import SEG_DTYPE, SegmentColumns
+
+MAGIC = b"RWHS"
+VERSION = 1
+BINARY_EXT = ".seg"
+PARQUET_EXT = ".parquet"
+
+_TAG_BLOCK = b"B"
+_TAG_FOOTER = b"F"
+_TRAILER = struct.Struct("<Q4s")         # footer offset + magic
+_BLOCK_HEAD = struct.Struct("<cIQ")      # tag, meta_len, data_len
+_FOOTER_HEAD = struct.Struct("<cI")      # tag, len
+
+COLUMNS: Tuple[str, ...] = tuple(SEG_DTYPE.names)
+_TABLE_FIELDS = (("module", "modules"), ("path", "paths"), ("op", "ops"))
+
+
+class FormatError(ValueError):
+    """Raised when a segment file is malformed beyond salvage."""
+
+
+class BlockInfo:
+    """Stats for one block — everything pushdown needs, no data."""
+
+    __slots__ = ("offset", "rows", "t_min", "t_max", "end_max", "rank",
+                 "nbytes")
+
+    def __init__(self, offset: int, rows: int, t_min: float, t_max: float,
+                 end_max: float, rank: int, nbytes: int):
+        self.offset = offset
+        self.rows = rows
+        self.t_min = t_min
+        self.t_max = t_max
+        self.end_max = end_max
+        self.rank = rank
+        self.nbytes = nbytes
+
+    def to_json(self) -> dict:
+        return {"offset": self.offset, "rows": self.rows,
+                "t_min": self.t_min, "t_max": self.t_max,
+                "end_max": self.end_max, "rank": self.rank,
+                "nbytes": self.nbytes}
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "BlockInfo":
+        return cls(int(obj["offset"]), int(obj["rows"]),
+                   float(obj["t_min"]), float(obj["t_max"]),
+                   float(obj["end_max"]), int(obj["rank"]),
+                   int(obj["nbytes"]))
+
+    def overlaps(self, t0: Optional[float], t1: Optional[float],
+                 ranks=None) -> bool:
+        """May this block contain rows with ``t0 <= start <= t1`` from
+        one of ``ranks``?  (The window rule is on *start*, matching
+        ``SegmentColumns.time_slice``.)"""
+        if ranks is not None and self.rank not in ranks:
+            return False
+        if t0 is not None and self.t_max < t0:
+            return False
+        if t1 is not None and self.t_min > t1:
+            return False
+        return True
+
+
+def _block_stats(cols: SegmentColumns, rank: int) -> Tuple[float, float,
+                                                           float]:
+    starts = cols.start
+    ends = cols.end
+    return float(starts.min()), float(starts.max()), float(ends.max())
+
+
+class SegmentFileWriter:
+    """Append ``SegmentColumns`` blocks to one ``.seg`` file.
+
+    Writes go to ``path + ".tmp"``; ``finalize()`` seals the footer
+    and publishes the file atomically.  Empty batches are ignored (a
+    zero-block file is still valid and decodes to no rows).
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self._tmp = path + ".tmp"
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._fh = open(self._tmp, "wb")
+        self.blocks: List[BlockInfo] = []
+        self.data_bytes = 0
+        header = json.dumps({"columns": [[n, SEG_DTYPE[n].str]
+                                         for n in COLUMNS]}).encode()
+        self._fh.write(MAGIC)
+        self._fh.write(struct.pack("<HI", VERSION, len(header)))
+        self._fh.write(header)
+
+    def write_block(self, cols: SegmentColumns, rank: int = 0) -> int:
+        if len(cols) == 0:
+            return 0
+        cols = cols.compact()
+        d = cols.data
+        bufs = [np.ascontiguousarray(d[n]).tobytes() for n in COLUMNS]
+        t_min, t_max, end_max = _block_stats(cols, rank)
+        meta = json.dumps({
+            "rows": len(cols),
+            "rank": int(rank),
+            "stats": {"t_min": t_min, "t_max": t_max, "end_max": end_max},
+            "tables": {"module": list(cols.modules),
+                       "path": list(cols.paths),
+                       "op": list(cols.ops)},
+            "cols": [[n, SEG_DTYPE[n].str, len(b)]
+                     for n, b in zip(COLUMNS, bufs)],
+        }).encode()
+        data_len = sum(len(b) for b in bufs)
+        offset = self._fh.tell()
+        self._fh.write(_BLOCK_HEAD.pack(_TAG_BLOCK, len(meta), data_len))
+        self._fh.write(meta)
+        for b in bufs:
+            self._fh.write(b)
+        nbytes = _BLOCK_HEAD.size + len(meta) + data_len
+        self.blocks.append(BlockInfo(offset, len(cols), t_min, t_max,
+                                     end_max, int(rank), nbytes))
+        self.data_bytes += nbytes
+        return len(cols)
+
+    def finalize(self) -> List[BlockInfo]:
+        footer = json.dumps(
+            {"blocks": [b.to_json() for b in self.blocks]}).encode()
+        footer_off = self._fh.tell()
+        self._fh.write(_FOOTER_HEAD.pack(_TAG_FOOTER, len(footer)))
+        self._fh.write(footer)
+        self._fh.write(_TRAILER.pack(footer_off, MAGIC))
+        self._fh.flush()
+        os.fsync(self._fh.fileno())
+        self._fh.close()
+        os.replace(self._tmp, self.path)
+        return self.blocks
+
+    def abort(self) -> None:
+        if not self._fh.closed:
+            self._fh.close()
+        if os.path.exists(self._tmp):
+            os.unlink(self._tmp)
+
+    def __enter__(self) -> "SegmentFileWriter":
+        return self
+
+    def __exit__(self, et, ev, tb) -> None:
+        if et is None:
+            self.finalize()
+        else:
+            self.abort()
+
+
+class SegmentFile:
+    """Read one ``.seg`` file: block stats up front, data on demand.
+
+    A sealed file is opened from its trailer (seek to the footer, no
+    data touched); a file missing its trailer — e.g. a writer died
+    before ``finalize`` — is scanned sequentially and every complete
+    block is recovered.
+    """
+
+    codec = "binary"
+
+    def __init__(self, path: str):
+        self.path = path
+        self._fh = open(path, "rb")
+        head = self._fh.read(4 + 6)
+        if len(head) < 10 or head[:4] != MAGIC:
+            raise FormatError(f"{path}: not a segment file")
+        version, header_len = struct.unpack("<HI", head[4:])
+        if version != VERSION:
+            raise FormatError(f"{path}: unsupported version {version}")
+        header = json.loads(self._fh.read(header_len))
+        self.columns = [tuple(c) for c in header["columns"]]
+        self._data_start = self._fh.tell()
+        self.salvaged = False
+        self.blocks = self._load_footer()
+        if self.blocks is None:
+            self.salvaged = True
+            self.blocks = self._scan_blocks()
+
+    def _load_footer(self) -> Optional[List[BlockInfo]]:
+        self._fh.seek(0, os.SEEK_END)
+        size = self._fh.tell()
+        if size < self._data_start + _TRAILER.size:
+            return None
+        self._fh.seek(size - _TRAILER.size)
+        footer_off, magic = _TRAILER.unpack(self._fh.read(_TRAILER.size))
+        if magic != MAGIC or not self._data_start <= footer_off < size:
+            return None
+        self._fh.seek(footer_off)
+        head = self._fh.read(_FOOTER_HEAD.size)
+        if len(head) < _FOOTER_HEAD.size:
+            return None
+        tag, flen = _FOOTER_HEAD.unpack(head)
+        if tag != _TAG_FOOTER:
+            return None
+        try:
+            footer = json.loads(self._fh.read(flen))
+            return [BlockInfo.from_json(b) for b in footer["blocks"]]
+        except (ValueError, KeyError):
+            return None
+
+    def _scan_blocks(self) -> List[BlockInfo]:
+        """Salvage path: walk block records until EOF or a torn tail."""
+        blocks: List[BlockInfo] = []
+        self._fh.seek(0, os.SEEK_END)
+        size = self._fh.tell()
+        pos = self._data_start
+        while pos + _BLOCK_HEAD.size <= size:
+            self._fh.seek(pos)
+            tag, meta_len, data_len = _BLOCK_HEAD.unpack(
+                self._fh.read(_BLOCK_HEAD.size))
+            if tag != _TAG_BLOCK:
+                break
+            end = pos + _BLOCK_HEAD.size + meta_len + data_len
+            if end > size:
+                break  # torn final block: drop it
+            try:
+                meta = json.loads(self._fh.read(meta_len))
+                stats = meta["stats"]
+                blocks.append(BlockInfo(
+                    pos, int(meta["rows"]), float(stats["t_min"]),
+                    float(stats["t_max"]), float(stats["end_max"]),
+                    int(meta.get("rank", 0)), end - pos))
+            except (ValueError, KeyError):
+                break
+            pos = end
+        return blocks
+
+    # ------------------------------------------------------------ reads
+    def __len__(self) -> int:
+        return len(self.blocks)
+
+    @property
+    def rows(self) -> int:
+        return sum(b.rows for b in self.blocks)
+
+    def read_block(self, i: int,
+                   columns: Optional[Sequence[str]] = None) \
+            -> SegmentColumns:
+        """Decode block ``i``; with ``columns`` only those buffers are
+        read (the rest decode to zeros — projection for aggregates
+        that touch a few fields of wide scans)."""
+        info = self.blocks[i]
+        self._fh.seek(info.offset)
+        tag, meta_len, _ = _BLOCK_HEAD.unpack(
+            self._fh.read(_BLOCK_HEAD.size))
+        if tag != _TAG_BLOCK:
+            raise FormatError(f"{self.path}: bad block tag at "
+                              f"{info.offset}")
+        meta = json.loads(self._fh.read(meta_len))
+        rows = int(meta["rows"])
+        data = np.zeros(rows, dtype=SEG_DTYPE)
+        want = set(columns) if columns is not None else None
+        for name, dtype_str, nbytes in meta["cols"]:
+            if want is not None and name not in want:
+                self._fh.seek(nbytes, os.SEEK_CUR)
+                continue
+            buf = self._fh.read(nbytes)
+            if len(buf) != nbytes:
+                raise FormatError(f"{self.path}: truncated block "
+                                  f"{i} column {name}")
+            data[name] = np.frombuffer(buf, dtype=np.dtype(dtype_str))
+        tables = meta.get("tables", {})
+        return SegmentColumns(data, tuple(tables.get("module", ())),
+                              tuple(tables.get("path", ())),
+                              tuple(tables.get("op", ())))
+
+    def read_all(self) -> SegmentColumns:
+        return SegmentColumns.concat(
+            [self.read_block(i) for i in range(len(self.blocks))])
+
+    def close(self) -> None:
+        self._fh.close()
+
+    def __enter__(self) -> "SegmentFile":
+        return self
+
+    def __exit__(self, et, ev, tb) -> None:
+        self.close()
+
+
+# --------------------------------------------------------------- parquet
+def _require_pyarrow():
+    try:
+        import pyarrow  # noqa: F401
+        import pyarrow.parquet  # noqa: F401
+    except ImportError as e:  # pragma: no cover - depends on env
+        raise FormatError(
+            "codec 'parquet' requires the optional pyarrow package "
+            "(pip install pyarrow)") from e
+    import pyarrow as pa
+    import pyarrow.parquet as pq
+    return pa, pq
+
+_BLOCKS_META_KEY = b"repro.warehouse.blocks"
+
+
+class ParquetSegmentWriter:
+    """``SegmentFileWriter``'s interface over a Parquet file: one row
+    group per block, string fields dictionary-encoded, block stats in
+    the file's key-value metadata under ``repro.warehouse.blocks``."""
+
+    def __init__(self, path: str):
+        pa, pq = _require_pyarrow()
+        self.path = path
+        self._tmp = path + ".tmp"
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._pa = pa
+        self._schema = pa.schema([
+            ("module", pa.dictionary(pa.int32(), pa.string())),
+            ("path", pa.dictionary(pa.int32(), pa.string())),
+            ("op", pa.dictionary(pa.int32(), pa.string())),
+            ("offset", pa.int64()),
+            ("length", pa.int64()),
+            ("start", pa.float64()),
+            ("end", pa.float64()),
+            ("thread", pa.uint64()),
+            ("rank", pa.int32()),
+        ])
+        self._writer = pq.ParquetWriter(self._tmp, self._schema)
+        self.blocks: List[BlockInfo] = []
+        self.data_bytes = 0
+
+    def write_block(self, cols: SegmentColumns, rank: int = 0) -> int:
+        if len(cols) == 0:
+            return 0
+        pa = self._pa
+        cols = cols.compact()
+        d = cols.data
+        arrays = []
+        for field, attr in _TABLE_FIELDS:
+            arrays.append(pa.DictionaryArray.from_arrays(
+                pa.array(d[field], type=pa.int32()),
+                pa.array(list(getattr(cols, attr)), type=pa.string())))
+        for name in ("offset", "length", "start", "end", "thread"):
+            arrays.append(pa.array(d[name]))
+        arrays.append(pa.array(np.full(len(cols), rank, dtype=np.int32)))
+        table = pa.Table.from_arrays(arrays, schema=self._schema)
+        self._writer.write_table(table)
+        t_min, t_max, end_max = _block_stats(cols, rank)
+        nbytes = sum(np.ascontiguousarray(d[n]).nbytes for n in COLUMNS)
+        self.blocks.append(BlockInfo(len(self.blocks), len(cols), t_min,
+                                     t_max, end_max, int(rank), nbytes))
+        self.data_bytes += nbytes
+        return len(cols)
+
+    def finalize(self) -> List[BlockInfo]:
+        blocks = json.dumps([b.to_json() for b in self.blocks])
+        self._writer.add_key_value_metadata(
+            {_BLOCKS_META_KEY.decode(): blocks})
+        self._writer.close()
+        os.replace(self._tmp, self.path)
+        return self.blocks
+
+    def abort(self) -> None:
+        try:
+            self._writer.close()
+        except Exception:
+            pass
+        if os.path.exists(self._tmp):
+            os.unlink(self._tmp)
+
+    def __enter__(self) -> "ParquetSegmentWriter":
+        return self
+
+    def __exit__(self, et, ev, tb) -> None:
+        if et is None:
+            self.finalize()
+        else:
+            self.abort()
+
+
+class ParquetSegmentFile:
+    """``SegmentFile``'s interface over a Parquet file (row group ==
+    block).  Stats come from our key-value metadata when present and
+    are rebuilt from row-group column statistics otherwise (a Parquet
+    file someone else wrote still scans, just without rank stats)."""
+
+    codec = "parquet"
+
+    def __init__(self, path: str):
+        pa, pq = _require_pyarrow()
+        self.path = path
+        self._pf = pq.ParquetFile(path)
+        self.columns = [(n, SEG_DTYPE[n].str) for n in COLUMNS]
+        self.salvaged = False
+        meta = self._pf.metadata.metadata or {}
+        raw = meta.get(_BLOCKS_META_KEY)
+        if raw is not None:
+            self.blocks = [BlockInfo.from_json(b) for b in json.loads(raw)]
+        else:
+            self.salvaged = True
+            self.blocks = self._stats_from_row_groups()
+
+    def _stats_from_row_groups(self) -> List[BlockInfo]:
+        md = self._pf.metadata
+        names = {md.schema.column(i).name: i
+                 for i in range(md.num_columns)}
+        blocks = []
+        for g in range(md.num_row_groups):
+            rg = md.row_group(g)
+            start = rg.column(names["start"]).statistics
+            end = rg.column(names["end"]).statistics
+            rank_st = rg.column(names["rank"]).statistics \
+                if "rank" in names else None
+            rank = int(rank_st.min) if rank_st is not None else 0
+            blocks.append(BlockInfo(
+                g, rg.num_rows, float(start.min), float(start.max),
+                float(end.max), rank, rg.total_byte_size))
+        return blocks
+
+    def __len__(self) -> int:
+        return len(self.blocks)
+
+    @property
+    def rows(self) -> int:
+        return sum(b.rows for b in self.blocks)
+
+    def read_block(self, i: int,
+                   columns: Optional[Sequence[str]] = None) \
+            -> SegmentColumns:
+        want = list(columns) if columns is not None else list(COLUMNS)
+        # string fields are needed to rebuild tables even under
+        # projection of scalars only when requested; zero-fill others.
+        tbl = self._pf.read_row_group(self.blocks[i].offset,
+                                      columns=want)
+        rows = tbl.num_rows
+        data = np.zeros(rows, dtype=SEG_DTYPE)
+        tables = {"module": (), "path": (), "op": ()}
+        for field, _attr in _TABLE_FIELDS:
+            if field not in want:
+                continue
+            col = tbl.column(field).combine_chunks()
+            if self._pa_is_dict(col):
+                tables[field] = tuple(col.dictionary.to_pylist())
+                data[field] = col.indices.to_numpy(zero_copy_only=False)
+            else:  # plain string column from a foreign writer
+                vals = col.to_pylist()
+                table: dict = {}
+                ids = [table.setdefault(v, len(table)) for v in vals]
+                tables[field] = tuple(table)
+                data[field] = np.asarray(ids, dtype=SEG_DTYPE[field])
+        for name in ("offset", "length", "start", "end", "thread"):
+            if name in want:
+                data[name] = tbl.column(name).to_numpy(
+                    zero_copy_only=False)
+        return SegmentColumns(data, tables["module"], tables["path"],
+                              tables["op"])
+
+    @staticmethod
+    def _pa_is_dict(col) -> bool:
+        import pyarrow as pa
+        return pa.types.is_dictionary(col.type)
+
+    def read_all(self) -> SegmentColumns:
+        return SegmentColumns.concat(
+            [self.read_block(i) for i in range(len(self.blocks))])
+
+    def close(self) -> None:
+        self._pf.close()
+
+    def __enter__(self) -> "ParquetSegmentFile":
+        return self
+
+    def __exit__(self, et, ev, tb) -> None:
+        self.close()
+
+
+# -------------------------------------------------------------- dispatch
+def writer_for(path: str, codec: str = "binary"):
+    """A block writer for ``path`` — ``codec`` is ``"binary"`` (raw
+    ``.seg``) or ``"parquet"`` (optional pyarrow)."""
+    if codec == "binary":
+        return SegmentFileWriter(path)
+    if codec == "parquet":
+        return ParquetSegmentWriter(path)
+    raise ValueError(f"unknown codec {codec!r} (binary|parquet)")
+
+
+def open_segment_file(path: str):
+    """Open a segment file, dispatching on extension."""
+    if path.endswith(PARQUET_EXT):
+        return ParquetSegmentFile(path)
+    return SegmentFile(path)
+
+
+def ext_for(codec: str) -> str:
+    return PARQUET_EXT if codec == "parquet" else BINARY_EXT

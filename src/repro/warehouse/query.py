@@ -1,0 +1,360 @@
+"""Out-of-core scans over archived trace partitions.
+
+``Scan`` is a small query builder: filters (time window, ranks,
+files, ops, modules), projection, and group-by aggregation, executed
+partition-by-partition so no more than one part file's rows are ever
+resident.  Pushdown happens at two levels before any data bytes are
+read — manifest partition stats prune whole part files, block footer
+stats prune blocks inside a file — and the row-level mask finishes
+the job on the decoded columns.  Skips are counted into
+``warehouse.*`` metrics and mirrored on ``scan.stats`` so tests (and
+users) can see pruning actually happen.
+
+``aggregate`` computes the same reductions ``extract_columns`` uses
+(numpy masked sums over length and duration) grouped by op, file,
+rank, module, or time bucket, streaming partial accumulators across
+partitions — the out-of-core twin of the insight feature extractor.
+
+``ArchiveReport`` adapts an ``Archive`` to the report surface
+``render_dashboard`` consumes, so an archive on disk renders the same
+dashboard a live run does.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import counters as C
+from repro.trace import SegmentColumns
+
+from . import format as wformat
+from .archive import PartitionInfo
+
+#: Columns each group-by key needs on top of the measure columns.
+_GROUP_COLS = {"op": ("op",), "file": ("path",), "module": ("module",),
+               "rank": (), "time": ()}
+
+
+class Scan:
+    """A reusable scan plan over a fixed list of partitions.
+
+    Builder methods return ``self``; ``batches()`` / ``table()`` /
+    ``aggregate()`` execute it.  ``stats`` reflects the most recent
+    execution.
+    """
+
+    def __init__(self, partitions: Sequence[PartitionInfo],
+                 metrics=None):
+        self._parts = sorted(partitions,
+                             key=lambda p: (p.run, p.rank, p.slice,
+                                            p.path))
+        if metrics is None:
+            from repro.obs.metrics import default_registry
+            metrics = default_registry()
+        self.metrics = metrics
+        self._t0: Optional[float] = None
+        self._t1: Optional[float] = None
+        self._ranks: Optional[frozenset] = None
+        self._files: Optional[frozenset] = None
+        self._file_contains: Optional[str] = None
+        self._ops: Optional[frozenset] = None
+        self._modules: Optional[frozenset] = None
+        self._project: Optional[Tuple[str, ...]] = None
+        self.stats = self._fresh_stats()
+
+    @staticmethod
+    def _fresh_stats() -> Dict[str, int]:
+        return {"partitions": 0, "partitions_pruned": 0,
+                "blocks_scanned": 0, "blocks_skipped": 0,
+                "rows_scanned": 0, "rows_matched": 0}
+
+    # ----------------------------------------------------------- builder
+    def where(self, t0: Optional[float] = None,
+              t1: Optional[float] = None,
+              ranks=None, files=None, file_contains: Optional[str] = None,
+              ops=None, modules=None) -> "Scan":
+        """Add filters (conjunctive with any already set).  ``t0``/
+        ``t1`` bound segment *start* times — the same window rule as
+        ``SegmentColumns.time_slice``."""
+        if t0 is not None:
+            self._t0 = t0 if self._t0 is None else max(self._t0, t0)
+        if t1 is not None:
+            self._t1 = t1 if self._t1 is None else min(self._t1, t1)
+        for attr, val in (("_ranks", ranks), ("_files", files),
+                          ("_ops", ops), ("_modules", modules)):
+            if val is not None:
+                vals = frozenset([val] if isinstance(val, (int, str))
+                                 else val)
+                prev = getattr(self, attr)
+                setattr(self, attr,
+                        vals if prev is None else prev & vals)
+        if file_contains is not None:
+            self._file_contains = file_contains
+        return self
+
+    def project(self, *columns: str) -> "Scan":
+        """Decode only ``columns`` (others read back as zeros) —
+        filter columns are always decoded on top of these."""
+        bad = set(columns) - set(wformat.COLUMNS)
+        if bad:
+            raise ValueError(f"unknown columns: {sorted(bad)}")
+        self._project = tuple(columns)
+        return self
+
+    # --------------------------------------------------------- execution
+    def _needed_columns(self,
+                        extra: Sequence[str] = ()) -> Optional[List[str]]:
+        """The physical column set one block read needs: projection +
+        filter columns + ``extra`` (aggregate measures)."""
+        if self._project is None and not extra:
+            return None  # full decode
+        # aggregates pass their measures as ``extra``: with no explicit
+        # projection they decode ONLY measures + filter columns
+        need = set(self._project) if self._project is not None else set()
+        need.update(extra)
+        if self._t0 is not None or self._t1 is not None:
+            need.add("start")
+        if self._files is not None or self._file_contains is not None:
+            need.add("path")
+        if self._ops is not None:
+            need.add("op")
+        if self._modules is not None:
+            need.add("module")
+        return [c for c in wformat.COLUMNS if c in need]
+
+    def _row_mask(self, cols: SegmentColumns) -> Optional[np.ndarray]:
+        """Boolean mask for the residual (non-pushdown) filters; None
+        means all rows match."""
+        mask: Optional[np.ndarray] = None
+
+        def conj(m):
+            nonlocal mask
+            mask = m if mask is None else (mask & m)
+
+        if self._t0 is not None:
+            conj(cols.start >= self._t0)
+        if self._t1 is not None:
+            conj(cols.start <= self._t1)
+        if self._ops is not None:
+            ids = [i for i, o in enumerate(cols.ops) if o in self._ops]
+            conj(np.isin(cols.op_ids, ids))
+        if self._modules is not None:
+            ids = [i for i, m in enumerate(cols.modules)
+                   if m in self._modules]
+            conj(np.isin(cols.module_ids, ids))
+        if self._files is not None or self._file_contains is not None:
+            ids = [i for i, p in enumerate(cols.paths)
+                   if (self._files is None or p in self._files)
+                   and (self._file_contains is None
+                        or self._file_contains in p)]
+            conj(np.isin(cols.path_ids, ids))
+        return mask
+
+    def iter_parts(self, extra_columns: Sequence[str] = ()) \
+            -> Iterator[Tuple[PartitionInfo, SegmentColumns]]:
+        """Stream (partition, filtered batch) pairs, one partition in
+        memory at a time; pruned partitions/blocks never open."""
+        self.stats = st = self._fresh_stats()
+        m = self.metrics
+        want = self._needed_columns(extra_columns)
+        for part in self._parts:
+            if not part.overlaps(self._t0, self._t1, self._ranks):
+                st["partitions_pruned"] += 1
+                m.counter("warehouse.partitions_pruned").inc()
+                continue
+            st["partitions"] += 1
+            with wformat.open_segment_file(part.path) as sf:
+                got: List[SegmentColumns] = []
+                for i, blk in enumerate(sf.blocks):
+                    if not blk.overlaps(self._t0, self._t1, self._ranks):
+                        st["blocks_skipped"] += 1
+                        m.counter("warehouse.blocks_skipped").inc()
+                        continue
+                    cols = sf.read_block(i, columns=want)
+                    st["blocks_scanned"] += 1
+                    st["rows_scanned"] += len(cols)
+                    m.counter("warehouse.blocks_scanned").inc()
+                    m.counter("warehouse.rows_scanned").inc(len(cols))
+                    mask = self._row_mask(cols)
+                    if mask is not None:
+                        cols = SegmentColumns(cols.data[mask],
+                                              cols.modules, cols.paths,
+                                              cols.ops)
+                    if len(cols):
+                        got.append(cols)
+                if got:
+                    batch = (got[0] if len(got) == 1
+                             else SegmentColumns.concat(got))
+                    st["rows_matched"] += len(batch)
+                    yield part, batch
+
+    def batches(self) -> Iterator[SegmentColumns]:
+        """Filtered ``SegmentColumns``, one per surviving partition."""
+        for _part, cols in self.iter_parts():
+            yield cols
+
+    def table(self, sort: bool = True) -> SegmentColumns:
+        """Materialize the scan as one batch (compatible with
+        ``Report.segments_table()``; ``sort`` orders by start like the
+        fleet merge does).  This is the one all-in-memory verb —
+        aggregates stream instead."""
+        out = SegmentColumns.concat(list(self.batches()))
+        return out.sorted_by_start() if sort else out
+
+    # --------------------------------------------------------- aggregate
+    def aggregate(self, by: str = "op",
+                  bucket_s: float = 60.0) -> List[dict]:
+        """Group-by reduction streamed across partitions.
+
+        ``by`` is ``op`` | ``file`` | ``module`` | ``rank`` |
+        ``time`` (buckets of ``bucket_s`` seconds).  Every group row
+        carries the ``extract_columns`` reductions: row count, bytes
+        (sum of length), busy seconds (sum of durations), start-time
+        window, mean access size, and bandwidth over busy time.
+        """
+        if by not in _GROUP_COLS:
+            raise ValueError(
+                f"unknown group key {by!r} ({sorted(_GROUP_COLS)})")
+        measures = ("length", "start", "end") + _GROUP_COLS[by]
+        acc: Dict[object, dict] = {}
+        for part, cols in self.iter_parts(extra_columns=measures):
+            keys, groups = self._group_ids(part, cols, by, bucket_s)
+            dur = cols.durations()
+            lengths = cols.length.astype(np.float64)
+            starts = cols.start
+            for g, key in enumerate(keys):
+                m = groups == g
+                n = int(m.sum())
+                if n == 0:
+                    continue
+                a = acc.setdefault(key, {
+                    by: key, "rows": 0, "bytes": 0, "busy_s": 0.0,
+                    "t_min": float("inf"), "t_max": float("-inf")})
+                a["rows"] += n
+                a["bytes"] += int(lengths[m].sum())
+                a["busy_s"] += float(dur[m].sum())
+                a["t_min"] = min(a["t_min"], float(starts[m].min()))
+                a["t_max"] = max(a["t_max"], float(starts[m].max()))
+        out = []
+        for key in sorted(acc, key=lambda k: (str(type(k)), k)):
+            a = acc[key]
+            a["avg_size"] = a["bytes"] / max(a["rows"], 1)
+            a["bw_mb_s"] = a["bytes"] / max(a["busy_s"], 1e-9) / 1e6
+            out.append(a)
+        return out
+
+    @staticmethod
+    def _group_ids(part: PartitionInfo, cols: SegmentColumns, by: str,
+                   bucket_s: float):
+        """(keys, per-row group index) for one batch."""
+        n = len(cols)
+        if by == "rank":
+            return [part.rank], np.zeros(n, dtype=np.int64)
+        if by == "time":
+            buckets = np.floor(cols.start / bucket_s).astype(np.int64)
+            keys_arr, groups = np.unique(buckets, return_inverse=True)
+            return [float(k * bucket_s) for k in keys_arr.tolist()], \
+                groups
+        field = {"op": "op", "file": "path", "module": "module"}[by]
+        table = {"op": cols.ops, "file": cols.paths,
+                 "module": cols.modules}[by]
+        ids = cols.data[field]
+        used, groups = np.unique(ids, return_inverse=True)
+        return [table[int(i)] for i in used], groups
+
+    def size_histograms(self) -> Tuple[List[int], List[int]]:
+        """Darshan access-size histograms (read, write) over the scan
+        — the ``extract_columns`` binning, streamed."""
+        nbins = len(C.SIZE_BIN_NAMES)
+        read_h = np.zeros(nbins, dtype=np.int64)
+        write_h = np.zeros(nbins, dtype=np.int64)
+        for _part, cols in self.iter_parts(
+                extra_columns=("length", "op")):
+            for op, hist in (("read", read_h), ("write", write_h)):
+                m = cols.op_mask(op)
+                if m.any():
+                    sizes = cols.length[m]
+                    bins = np.searchsorted(C.SIZE_BIN_BOUNDS, sizes,
+                                           side="right")
+                    hist += np.bincount(bins, minlength=nbins)
+        return read_h.tolist(), write_h.tolist()
+
+
+class _RankView:
+    """Per-rank slice of an archive scan — just enough surface for the
+    dashboard's per-rank heatmap."""
+
+    def __init__(self, cols: SegmentColumns):
+        self._cols = cols
+
+    def segments_table(self) -> SegmentColumns:
+        return self._cols
+
+
+class _SizeHistView:
+    """The two-histogram slice of ``ModuleSummary`` the dashboard's
+    size panel reads."""
+
+    def __init__(self, read_hist: List[int], write_hist: List[int]):
+        self.read_size_hist = read_hist
+        self.write_size_hist = write_hist
+
+
+class ArchiveReport:
+    """Adapt an ``Archive`` (one run or all of it) to the unified
+    report surface, so ``render_dashboard`` and anything else written
+    against ``Report`` renders archived data unchanged.  Findings and
+    tune audit are not archived (yet) and come back empty."""
+
+    mode = "archive"
+
+    def __init__(self, archive, run: Optional[str] = None):
+        self.archive = archive
+        self.run = run
+        self.findings: list = []
+        self.tune_audit: list = []
+        scan = archive.scan(run)
+        per_rank: Dict[int, List[SegmentColumns]] = {}
+        for part, cols in scan.iter_parts():
+            per_rank.setdefault(part.rank, []).append(cols)
+        self.ranks = {
+            r: _RankView(SegmentColumns.concat(b).sorted_by_start())
+            for r, b in sorted(per_rank.items())}
+        self._table = SegmentColumns.concat(
+            [v._cols for v in self.ranks.values()]).sorted_by_start()
+        read_h, write_h = archive.scan(run).size_histograms()
+        self.posix = _SizeHistView(read_h, write_h)
+        self.nprocs = max(len(self.ranks), 1)
+
+    def segments_table(self) -> SegmentColumns:
+        return self._table
+
+    @property
+    def elapsed_s(self) -> float:
+        t = self._table
+        if len(t) == 0:
+            return 0.0
+        return float(t.end.max() - t.start.min())
+
+    @property
+    def bandwidth_mb_s(self) -> float:
+        t = self._table
+        el = self.elapsed_s
+        if len(t) == 0 or el <= 0:
+            return 0.0
+        read_b = int(t.length[t.op_mask("read")].sum())
+        write_b = int(t.length[t.op_mask("write")].sum())
+        return (read_b + write_b) / el / 1e6
+
+    @property
+    def metrics(self) -> dict:
+        stats = self.archive.stats()
+        counters = {"warehouse.partitions": stats["partitions"],
+                    "warehouse.rows": stats["rows"],
+                    "warehouse.bytes": stats["bytes"]}
+        return {"counters": counters, "gauges": {}, "histograms": {}}
+
+    def health(self) -> dict:
+        from repro.obs.metrics import health_summary
+        return health_summary(self.metrics)

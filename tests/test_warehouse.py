@@ -1,0 +1,382 @@
+"""repro.warehouse: block format, partitioned archives, pushdown scans."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.insight.features import extract_columns
+from repro.obs.metrics import MetricsRegistry
+from repro.trace import Segment, SegmentColumns
+from repro.warehouse import (Archive, ArchiveWriter, SegmentFile,
+                             SegmentFileWriter, open_segment_file)
+from repro.warehouse import format as wformat
+
+
+def _cols(n=40, t0=0.0, dt=0.5, path_mod=3):
+    rows = [Segment("POSIX" if i % 4 else "STDIO",
+                    f"/d/f{i % path_mod}",
+                    ("read", "write", "open", "seek")[i % 4],
+                    i * 10, 100 + i, t0 + dt * i, t0 + dt * i + 0.01,
+                    i % 2)
+            for i in range(n)]
+    return SegmentColumns.from_rows(rows)
+
+
+def _same_rows(a: SegmentColumns, b: SegmentColumns):
+    assert sorted(a.iter_tuples()) == sorted(b.iter_tuples())
+
+
+# ------------------------------------------------------------- format
+def test_segment_file_roundtrip(tmp_path):
+    path = str(tmp_path / "one.seg")
+    c1, c2 = _cols(30), _cols(7, t0=100.0)
+    with SegmentFileWriter(path) as w:
+        w.write_block(c1, rank=0)
+        w.write_block(c2, rank=3)
+        w.write_block(SegmentColumns.empty())      # ignored
+    with SegmentFile(path) as sf:
+        assert not sf.salvaged
+        assert len(sf) == 2 and sf.rows == 37
+        assert sf.blocks[0].rank == 0 and sf.blocks[1].rank == 3
+        assert sf.blocks[1].t_min == pytest.approx(100.0)
+        assert sf.blocks[1].t_max == pytest.approx(103.0)
+        _same_rows(sf.read_block(0), c1)
+        assert sf.read_block(0).to_rows() == c1.to_rows()
+        _same_rows(sf.read_all(), SegmentColumns.concat([c1, c2]))
+
+
+def test_segment_file_projection_decodes_only_requested(tmp_path):
+    path = str(tmp_path / "p.seg")
+    cols = _cols(20)
+    with SegmentFileWriter(path) as w:
+        w.write_block(cols)
+    with SegmentFile(path) as sf:
+        got = sf.read_block(0, columns=("start", "length"))
+        np.testing.assert_array_equal(got.start, cols.start)
+        np.testing.assert_array_equal(got.length, cols.length)
+        # unprojected scalar columns come back zero-filled
+        assert not got.offset.any()
+
+
+def test_segment_file_salvages_torn_file(tmp_path):
+    path = str(tmp_path / "torn.seg")
+    c1, c2 = _cols(25), _cols(9, t0=50.0)
+    with SegmentFileWriter(path) as w:
+        w.write_block(c1)
+        first_block_end = w._fh.tell()
+        w.write_block(c2)
+    # chop the footer/trailer plus half of the second block: the
+    # reader must fall back to a sequential scan and keep block 1
+    with open(path, "rb") as fh:
+        data = fh.read()
+    with open(path, "wb") as fh:
+        fh.write(data[:first_block_end + 40])
+    with SegmentFile(path) as sf:
+        assert sf.salvaged
+        assert len(sf) == 1
+        _same_rows(sf.read_block(0), c1)
+
+
+def test_open_rejects_non_segment_file(tmp_path):
+    path = str(tmp_path / "junk.seg")
+    with open(path, "wb") as fh:
+        fh.write(b"definitely not a segment file")
+    with pytest.raises(wformat.FormatError):
+        SegmentFile(path)
+
+
+def test_parquet_roundtrip_same_interface(tmp_path):
+    pytest.importorskip("pyarrow")
+    path = str(tmp_path / "one.parquet")
+    c1, c2 = _cols(30), _cols(7, t0=100.0)
+    with wformat.writer_for(path, codec="parquet") as w:
+        w.write_block(c1, rank=1)
+        w.write_block(c2, rank=2)
+    with open_segment_file(path) as sf:          # extension dispatch
+        assert sf.codec == "parquet"
+        assert len(sf) == 2 and sf.rows == 37
+        assert sf.blocks[0].rank == 1
+        _same_rows(sf.read_block(0), c1)
+        _same_rows(sf.read_all(), SegmentColumns.concat([c1, c2]))
+
+
+def test_parquet_archive_scan(tmp_path):
+    pytest.importorskip("pyarrow")
+    cols = _cols(60)
+    with ArchiveWriter(str(tmp_path), run="pq", codec="parquet",
+                       slice_s=5.0) as w:
+        w.add_batch(cols, rank=0)
+    table = Archive(str(tmp_path)).scan("pq").table()
+    _same_rows(table, cols)
+
+
+# ------------------------------------------------------------ archive
+def test_archive_partitions_by_rank_and_slice(tmp_path):
+    cols = _cols(40, dt=1.0)                     # spans 0..39s
+    with ArchiveWriter(str(tmp_path), run="r", slice_s=10.0) as w:
+        w.add_batch(cols, rank=0)
+        w.add_batch(cols, rank=1)
+    parts = Archive(str(tmp_path)).partitions("r")
+    assert len(parts) == 8                       # 2 ranks x 4 slices
+    assert {(p.rank, p.slice) for p in parts} == \
+        {(r, s) for r in (0, 1) for s in range(4)}
+    for p in parts:
+        assert p.t_min >= p.slice * 10.0
+        assert p.t_max < (p.slice + 1) * 10.0
+
+
+def test_scan_pushdown_prunes_partitions_and_is_exact(tmp_path):
+    cols = _cols(40, dt=1.0)
+    with ArchiveWriter(str(tmp_path), run="r", slice_s=10.0) as w:
+        w.add_batch(cols, rank=0)
+        w.add_batch(cols.shift_time(0.25), rank=1)
+    scan = Archive(str(tmp_path)).scan("r").where(t0=12.0, t1=17.0,
+                                                  ranks=[0])
+    table = scan.table()
+    _same_rows(table, cols.time_slice(12.0, 17.0))
+    # 8 partitions exist; only rank 0 slice 1 overlaps [12, 17]
+    assert scan.stats["partitions"] == 1
+    assert scan.stats["partitions_pruned"] == 7
+    assert scan.stats["rows_matched"] == len(table)
+
+
+def test_scan_filters_ops_files_modules(tmp_path):
+    cols = _cols(48)
+    with ArchiveWriter(str(tmp_path), run="r", slice_s=None) as w:
+        w.add_batch(cols, rank=0)
+    arch = Archive(str(tmp_path))
+    reads = arch.scan("r").where(ops=["read"]).table()
+    assert len(reads) == int(cols.op_mask("read").sum())
+    assert set(reads.to_rows()[i].op for i in range(len(reads))) \
+        == {"read"}
+    one_file = arch.scan("r").where(files=["/d/f1"]).table()
+    assert all(s.path == "/d/f1" for s in one_file)
+    sub = arch.scan("r").where(file_contains="f2").table()
+    assert all("f2" in s.path for s in sub)
+    stdio = arch.scan("r").where(modules=["STDIO"]).table()
+    assert all(s.module == "STDIO" for s in stdio)
+
+
+def test_archive_incremental_append_and_store_ingest(tmp_path):
+    from repro.trace import TraceStore
+    store = TraceStore(capacity=1000)
+    for s in _cols(10).to_rows():
+        store.add(s)
+    w = ArchiveWriter(str(tmp_path), run="r", slice_s=None)
+    assert w.ingest_store(store) == 10
+    w.flush()
+    for s in _cols(5, t0=100.0).to_rows():
+        store.add(s)
+    assert w.ingest_store(store) == 5             # only the new rows
+    w.finalize()
+    arch = Archive(str(tmp_path))
+    assert arch.stats()["rows"] == 15
+    # two flushes -> two immutable parts, both in the manifest
+    assert len(arch.partitions("r")) == 2
+
+
+def test_archive_salvages_parts_missing_from_manifest(tmp_path):
+    cols = _cols(30)
+    with ArchiveWriter(str(tmp_path), run="r", slice_s=None) as w:
+        w.add_batch(cols, rank=0)
+    os.unlink(str(tmp_path / "r" / "manifest.json"))
+    arch = Archive(str(tmp_path))
+    assert arch.runs() == ["r"]
+    _same_rows(arch.scan("r").table(), cols)
+
+
+def test_spool_compaction_tolerates_corrupt_lines(tmp_path):
+    from repro.profiler import Profiler, ProfilerOptions
+    spool = str(tmp_path / "spool")
+    data = tmp_path / "data.bin"
+    data.write_bytes(os.urandom(16384))
+
+    def workload(rank, io):
+        io.read_file(str(data), chunk=4096)
+
+    fleet = Profiler(ProfilerOptions(mode="fleet", nranks=2,
+                                     spool_dir=spool)).run(workload)
+    expect = fleet.segments_table()
+    # corrupt one line mid-capture: compaction must skip it, count it,
+    # and still archive every valid report
+    victim = sorted(os.listdir(spool))[0]
+    with open(os.path.join(spool, victim), "a") as fh:
+        fh.write("this is not a wire line\n")
+    metrics = MetricsRegistry()
+    w = ArchiveWriter(str(tmp_path / "wh"), run="cap", slice_s=None,
+                      metrics=metrics)
+    assert w.ingest_spool(spool) == len(expect)
+    w.finalize()
+    snap = metrics.snapshot()["counters"]
+    assert snap.get("warehouse.corrupt_lines", 0) >= 1
+    table = Archive(str(tmp_path / "wh")).scan("cap").table()
+    assert len(table) == len(expect)
+    # times differ (each collector aligns onto its own clock) but the
+    # payload columns are identical
+    for name in ("module", "path", "op", "offset", "length"):
+        got = sorted(t[:5] for t in table.iter_tuples())
+        ref = sorted(t[:5] for t in expect.iter_tuples())
+        assert got == ref
+
+
+# -------------------------------------------------------------- query
+def test_aggregate_matches_extract_columns(tmp_path):
+    cols = _cols(80, dt=0.25)
+    with ArchiveWriter(str(tmp_path), run="r", slice_s=5.0) as w:
+        w.add_batch(cols, rank=0)
+    arch = Archive(str(tmp_path))
+    agg = {g["op"]: g for g in arch.scan("r").aggregate(by="op")}
+    f = extract_columns(cols, 0.0, float(cols.end.max()))
+    assert agg["read"]["rows"] == f.reads
+    assert agg["write"]["rows"] == f.writes
+    assert agg["read"]["bytes"] == f.bytes_read
+    assert agg["write"]["bytes"] == f.bytes_written
+    assert agg["read"]["busy_s"] == pytest.approx(f.read_busy_s)
+    assert agg["read"]["avg_size"] == pytest.approx(f.avg_read_size)
+    read_h, _write_h = arch.scan("r").size_histograms()
+    assert read_h == f.read_size_hist
+
+
+def test_aggregate_by_rank_file_and_time(tmp_path):
+    cols = _cols(40, dt=1.0)
+    with ArchiveWriter(str(tmp_path), run="r", slice_s=10.0) as w:
+        w.add_batch(cols, rank=0)
+        w.add_batch(cols, rank=1)
+    arch = Archive(str(tmp_path))
+    by_rank = arch.scan("r").aggregate(by="rank")
+    assert [g["rank"] for g in by_rank] == [0, 1]
+    assert by_rank[0]["rows"] == len(cols)
+    by_file = arch.scan("r").aggregate(by="file")
+    assert {g["file"] for g in by_file} == set(cols.paths)
+    by_time = arch.scan("r").aggregate(by="time", bucket_s=10.0)
+    assert [g["time"] for g in by_time] == [0.0, 10.0, 20.0, 30.0]
+    assert sum(g["rows"] for g in by_time) == 2 * len(cols)
+
+
+def test_dashboard_renders_from_archive(tmp_path):
+    from repro.obs.dashboard import render_dashboard
+    with ArchiveWriter(str(tmp_path), run="r", slice_s=10.0) as w:
+        w.add_batch(_cols(40, dt=1.0), rank=0)
+        w.add_batch(_cols(40, dt=1.0), rank=1)
+    arch = Archive(str(tmp_path))
+    out = str(tmp_path / "dash.html")
+    html = render_dashboard(arch, out)           # Archive as data source
+    for marker in ('id="per-file-heatmap"', 'id="per-rank-heatmap"',
+                   'id="size-hist"', 'id="health-panel"',
+                   'id="metrics"'):
+        assert marker in html
+    assert "rank 1" in html
+    assert os.path.getsize(out) > 0
+
+
+# ------------------------------------------------------------- wiring
+def test_profiler_archive_dir_local_and_exporter(tmp_path):
+    from repro.profiler import Profiler, ProfilerOptions
+    data = tmp_path / "d.bin"
+    data.write_bytes(os.urandom(8192))
+    prof = Profiler(ProfilerOptions(
+        archive_dir=str(tmp_path / "wh"), archive_run="loc",
+        archive_slice_s=None))
+    with prof:
+        with open(data, "rb") as fh:
+            while fh.read(4096):
+                pass
+    _same_rows(Archive(str(tmp_path / "wh")).scan("loc").table(),
+               prof.report.segments_table())
+    # the "archive" exporter writes a directory through export()
+    prof.report.export("archive", str(tmp_path / "wh2"))
+    assert Archive(str(tmp_path / "wh2")).stats()["rows"] \
+        == len(prof.report.segments_table())
+
+
+def test_profiler_archive_dir_fleet_collects_per_rank(tmp_path):
+    from repro.profiler import Profiler, ProfilerOptions
+    data = tmp_path / "d.bin"
+    data.write_bytes(os.urandom(8192))
+
+    def workload(rank, io):
+        io.read_file(str(data), chunk=2048)
+
+    rep = Profiler(ProfilerOptions(
+        mode="fleet", nranks=2, archive_dir=str(tmp_path / "wh"),
+        archive_run="flt")).run(workload)
+    arch = Archive(str(tmp_path / "wh"))
+    _same_rows(arch.scan("flt").table(), rep.segments_table())
+    assert {p.rank for p in arch.partitions("flt")} == {0, 1}
+
+
+def test_export_all_uses_exporter_ext_attribute(tmp_path):
+    from repro.profiler import Profiler, ProfilerOptions
+    prof = Profiler(ProfilerOptions(exporters=(
+        "json_report", "darshan_log", "dashboard", "archive")))
+    with prof:
+        pass
+    out = prof.report.export_all(str(tmp_path / "out"))
+    assert out["json_report"].endswith("json_report.json")
+    assert out["darshan_log"].endswith("darshan_log.txt")
+    assert out["dashboard"].endswith("dashboard.html")
+    # extensionless exporters (archive) get a bare directory path
+    assert out["archive"].endswith(os.path.join("out", "archive"))
+    for path in out.values():
+        assert os.path.exists(path)
+
+
+def test_harness_archive_dir_requires_collect(tmp_path):
+    from repro.fleet.collector import FleetCollector
+    from repro.fleet.harness import simulate_fleet
+    with pytest.raises(ValueError, match="collect=True"):
+        simulate_fleet(1, lambda r, io: None,
+                       FleetCollector(detectors=[]), collect=False,
+                       archive_dir=str(tmp_path / "wh"))
+
+
+def test_options_validate_archive_fields():
+    from repro.profiler import ProfilerOptions
+    from repro.profiler.options import ProfilerOptionsError
+    with pytest.raises(ProfilerOptionsError):
+        ProfilerOptions(archive_codec="csv").validate()
+    with pytest.raises(ProfilerOptionsError):
+        ProfilerOptions(archive_slice_s=0).validate()
+    with pytest.raises(ProfilerOptionsError):
+        ProfilerOptions(archive_run="").validate()
+    ProfilerOptions(archive_dir="x", archive_slice_s=None).validate()
+
+
+# ---------------------------------------------------------------- CLI
+def test_cli_compact_stats_query(tmp_path, capsys):
+    from repro.profiler import Profiler, ProfilerOptions
+    from repro.warehouse.cli import main
+    spool = str(tmp_path / "spool")
+    data = tmp_path / "d.bin"
+    data.write_bytes(os.urandom(8192))
+
+    def workload(rank, io):
+        io.read_file(str(data), chunk=2048)
+
+    Profiler(ProfilerOptions(mode="fleet", nranks=2,
+                             spool_dir=spool)).run(workload)
+    wh = str(tmp_path / "wh")
+    assert main(["compact", spool, wh, "--run", "cap",
+                 "--slice-s", "none"]) == 0
+    out1 = capsys.readouterr().out
+    assert "compacted" in out1 and "cap" in out1
+    assert main(["stats", wh]) == 0
+    out2 = capsys.readouterr().out
+    assert "cap" in out2 and "2" in out2
+    assert main(["query", wh, "--by", "op", "--op", "read"]) == 0
+    out3 = capsys.readouterr().out
+    assert "read" in out3 and "scan:" in out3
+    # the aggregate table carries real numbers
+    line = next(ln for ln in out3.splitlines()
+                if ln.startswith("read"))
+    assert int(line.split()[1]) > 0
+
+
+def test_manifest_is_valid_json_and_atomic(tmp_path):
+    with ArchiveWriter(str(tmp_path), run="r", slice_s=None) as w:
+        w.add_batch(_cols(10), rank=0)
+    mpath = tmp_path / "r" / "manifest.json"
+    doc = json.loads(mpath.read_text())
+    assert doc["version"] == 1 and len(doc["partitions"]) == 1
+    assert not list(tmp_path.glob("**/*.tmp"))
