@@ -1,0 +1,143 @@
+"""repro.relay: binary column wire size + hierarchical ingest (PR 9).
+
+Two questions, one per section:
+
+  * **wire** — how many bytes does one rank-step report cost on the
+    binary frame wire (delta-transformed, byte-shuffled, deflated
+    column buffers) versus the JSON ``segments_columns`` line every
+    release before PR 9 shipped?  Realistic tf.data-style windows
+    (sequential shard reads, monotone timestamps) and an adversarial
+    random window both report their ratio; the smoke bar holds the
+    realistic ratio at >= 5x (full-size windows target >= 10x).
+  * **ingest** — wall time to collect a whole simulated fleet flat
+    (every rank -> collector) versus through a relay tree
+    (``relay_fanout=32``) at 64 / 256 / 1000 ranks, with the zero-
+    unaccounted-drops invariant checked at every size.
+
+``--smoke`` shrinks the fleet sizes; the wire section always runs both
+shapes (it is cheap) so the ratio bar guards every push.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, cleanup, make_workspace, scaled
+
+# smoke bar: binary frame must beat the JSON columns line by at least
+# this factor on the realistic window (full-size windows target >= 10x)
+SMOKE_MIN_WIRE_RATIO = 5.0
+
+
+def _report(n_files: int, n_segments: int, adversarial: bool = False):
+    """One rank's window: per-file records + a DXT batch shaped like a
+    tf.data input pipeline (or pure noise when ``adversarial``)."""
+    from repro.core.analysis import analyze
+    from repro.core.dxt import Segment
+    from repro.core.records import FileRecord
+
+    per_file = {}
+    for i in range(n_files):
+        p = f"/data/train/shard_{i:05d}.tfrecord"
+        per_file[p] = FileRecord(p, {"POSIX_OPENS": 1, "POSIX_READS": 64,
+                                     "POSIX_BYTES_READ": 1 << 24},
+                                 {"POSIX_F_READ_TIME": 0.02})
+    rep = analyze(per_file, {}, elapsed_s=4.0, stat_sizes=False)
+    rep.file_sizes = {p: 1 << 24 for p in per_file}
+    paths = list(per_file)
+    rng = np.random.default_rng(7)
+    segs = []
+    t = 0.0
+    for i in range(n_segments):
+        if adversarial:
+            seg = Segment("POSIX", paths[int(rng.integers(n_files))],
+                          "read", int(rng.integers(0, 1 << 40)),
+                          int(rng.integers(1, 1 << 24)),
+                          float(rng.uniform(0, 1e4)),
+                          float(rng.uniform(0, 1e4)),
+                          int(rng.integers(0, 1 << 30)))
+        else:
+            t += float(rng.uniform(1e-4, 4e-4))
+            seg = Segment("POSIX", paths[i % n_files], "read",
+                          ((i // n_files) % 64) << 18, 1 << 18,
+                          t, t + 2.1e-4, i % 8)
+        segs.append(seg)
+    rep.segments = segs
+    return rep
+
+
+def _bench_wire(rows: Row) -> None:
+    from repro.fleet import payloads
+    from repro.relay import decode_frame
+
+    n_files, n_segments = scaled((200, 8000), (50, 1200))
+    for label, adversarial in (("realistic", False), ("adversarial", True)):
+        rep = _report(n_files, n_segments, adversarial)
+        t0 = time.perf_counter()
+        line = payloads.encode_report(1, rep, nprocs=64,
+                                      clock_offset_s=-0.001,
+                                      clock_rtt_s=5e-5)
+        t_json = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        frame = payloads.encode_report_frame(1, rep, nprocs=64,
+                                             clock_offset_s=-0.001,
+                                             clock_rtt_s=5e-5)
+        t_frame = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        decode_frame(frame)
+        t_decode = time.perf_counter() - t0
+        ratio = len(line) / len(frame)
+        rows.add(f"relay_wire_{label}_json_bytes", t_json * 1e6,
+                 f"bytes={len(line)}")
+        rows.add(f"relay_wire_{label}_frame_bytes", t_frame * 1e6,
+                 f"bytes={len(frame)} ratio={ratio:.2f}x "
+                 f"decode_us={t_decode * 1e6:.0f}")
+        if label == "realistic":
+            assert ratio >= SMOKE_MIN_WIRE_RATIO, (
+                f"binary frame only {ratio:.2f}x smaller than the JSON "
+                f"columns line (smoke bar {SMOKE_MIN_WIRE_RATIO}x)")
+
+
+def _bench_ingest(rows: Row) -> None:
+    import os
+
+    from repro.fleet.collector import FleetCollector
+    from repro.fleet.harness import simulate_fleet
+
+    ws = make_workspace("bench_relay_")
+    data = os.path.join(ws, "shard.bin")
+    with open(data, "wb") as f:
+        f.write(os.urandom(1 << 20))
+
+    def wl(rank, io):
+        fd = io.open(data)
+        io.pread(fd, 65536, 0)
+        io.close(fd)
+
+    try:
+        for nranks in scaled((64, 256, 1000), (64,)):
+            for shape, kw in (("flat", {}),
+                              ("tree", {"relay_fanout": 32})):
+                coll = FleetCollector()
+                t0 = time.perf_counter()
+                fr = simulate_fleet(nranks, wl, coll, dxt_capacity=512,
+                                    handshake_rounds=1, **kw)
+                dt = time.perf_counter() - t0
+                assert len(fr.ranks) == nranks, (
+                    f"{shape}@{nranks}: {len(fr.ranks)} ranks collected")
+                dropped = (fr.relay.get("dropped_reports", 0)
+                           + fr.relay.get("dropped_findings", 0))
+                assert dropped == 0, (
+                    f"{shape}@{nranks}: {dropped} unaccounted drops")
+                rows.add(f"relay_ingest_{shape}_{nranks}",
+                         dt / nranks * 1e6,
+                         f"wall_s={dt:.2f} ranks_s={nranks / dt:.0f} "
+                         f"drops=0")
+    finally:
+        cleanup(ws)
+
+
+def run(rows: Row) -> None:
+    _bench_wire(rows)
+    _bench_ingest(rows)

@@ -28,7 +28,7 @@ from benchmarks.common import Row
 
 BENCHES = ("stream", "overhead", "threads", "staging", "checkpoint",
            "kernels", "insight", "fleet", "profiler", "link", "trace",
-           "tune", "obs", "warehouse")
+           "tune", "obs", "warehouse", "relay")
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 

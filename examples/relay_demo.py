@@ -1,0 +1,142 @@
+"""repro.relay demo: a spawned 2-tier collection tree over
+authenticated TCP, with findings streaming through the relays mid-run.
+
+Six child processes each chew through a directory of tiny shards (the
+paper's small-file-storm shape).  Instead of connecting straight to the
+collector they connect to leaf ``RelayServer``s, which batch reports
+into binary-frame rollups and forward them through a middle relay tier:
+
+    rank0 rank1 ──▶ relay-t1n0 ─┐
+    rank2 rank3 ──▶ relay-t1n1 ─┼─▶ relay-t0n0 ──▶ collector
+    rank4 rank5 ──▶ relay-t1n2 ─┘
+
+Every hop requires the shared-secret HMAC handshake before the first
+payload byte, mid-run insight findings stream through the tiers
+without waiting for a rollup flush, and the final FleetReport carries
+the whole tree's drop accounting — this demo asserts it is zero.
+
+    PYTHONPATH=src python examples/relay_demo.py
+
+``--simulate-1000`` instead runs the CI scale smoke: a 1000-rank
+simulated fleet through a 2-tier in-process tree (fanout 32), asserting
+every rank arrives and nothing is dropped unaccounted.
+"""
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.profiler import Profiler, ProfilerOptions
+
+NRANKS = 6
+FILES_PER_RANK = 20
+ROUNDS = 6
+FILE_BYTES = 32 * 1024
+SECRET = "relay-demo-secret"
+
+FILES = {}
+
+
+def workload(rank, io):
+    # bursts of tiny-file opens with idle gaps between them: each burst
+    # lands inside one insight poll window (the detector sees >= 16
+    # opens per window), and the gaps stretch the run past several
+    # stream intervals so findings travel the tree mid-run
+    for _ in range(ROUNDS):
+        for p in FILES[rank]:
+            io.read_file(p, chunk=64 * 1024)
+        time.sleep(0.25)
+
+
+def scale_workload(rank, io):
+    fd = io.open(FILES[0][rank % len(FILES[0])])
+    io.pread(fd, 4096, 0)
+    io.close(fd)
+
+
+def _make_shards(root, nranks):
+    for rank in range(nranks):
+        d = os.path.join(root, f"rank{rank}")
+        os.makedirs(d)
+        FILES[rank] = []
+        for i in range(FILES_PER_RANK):
+            p = os.path.join(d, f"shard_{i:03d}.bin")
+            with open(p, "wb") as f:
+                f.write(os.urandom(FILE_BYTES))
+            FILES[rank].append(p)
+
+
+def run_spawned_tree() -> None:
+    report = Profiler(ProfilerOptions(
+        mode="fleet", launch="spawn", fleet_ranks=NRANKS,
+        relay_fanout=3, relay_depth=2, auth_secret=SECRET,
+        insight=True, insight_interval_s=0.2)).run(workload)
+    fleet = report.fleet
+
+    pids = sorted(s.pid for s in fleet.ranks.values())
+    assert len(set(pids)) == NRANKS and os.getpid() not in pids, \
+        "ranks did not run in their own processes"
+    assert sorted(fleet.ranks) == list(range(NRANKS)), \
+        f"missing ranks: {sorted(fleet.ranks)}"
+    relays = fleet.relay["relays"]
+    assert fleet.relay["dropped_reports"] == 0, fleet.relay
+    assert fleet.relay["dropped_findings"] == 0, fleet.relay
+    tiers = {n.split("n")[0] for n in relays}
+    assert tiers == {"relay-t0", "relay-t1"}, f"expected 2 tiers: {tiers}"
+    streamed = sum(s.get("findings_in", 0) for s in relays.values())
+    assert streamed > 0, "no findings streamed through the relay tiers"
+
+    print(f"spawned 2-tier tree: {NRANKS} ranks over authenticated TCP, "
+          f"{len(relays)} relays")
+    for name in sorted(relays):
+        s = relays[name]
+        print(f"  {name}: reports_in={s['reports_in']} "
+              f"rollups={s['rollups']} findings_in={s['findings_in']} "
+              f"busy={s['busy_replies']} dropped={s['dropped_reports']}")
+    kinds = sorted({f.detector for f in fleet.findings})
+    print(f"  findings through the tree: {kinds}")
+    print(f"  fleet: {fleet.posix.reads} reads, "
+          f"{fleet.posix.bytes_read / 2**20:.1f} MiB, zero drops")
+    print("OK: relay tree collected every rank, nothing unaccounted")
+
+
+def run_scale_smoke() -> None:
+    nranks = 1000
+    t0 = time.perf_counter()
+    report = Profiler(ProfilerOptions(
+        mode="fleet", nranks=nranks, relay_fanout=32, relay_depth=2,
+        dxt_capacity=512, handshake_rounds=1)).run(scale_workload)
+    dt = time.perf_counter() - t0
+    fleet = report.fleet
+    assert sorted(fleet.ranks) == list(range(nranks)), \
+        f"collected {len(fleet.ranks)}/{nranks} ranks"
+    dropped = (fleet.relay["dropped_reports"]
+               + fleet.relay["dropped_findings"])
+    assert dropped == 0, f"unaccounted drops: {fleet.relay}"
+    ntiers = len({n.split("n")[0] for n in fleet.relay["relays"]})
+    assert ntiers == 2, f"expected a 2-tier tree, got {ntiers}"
+    print(f"scale smoke: {nranks} ranks -> "
+          f"{len(fleet.relay['relays'])} relays (2 tiers) -> collector "
+          f"in {dt:.1f}s; busy={fleet.relay['busy_replies']}, "
+          f"zero unaccounted drops")
+    print("OK: 1000-rank tree collection is complete and accounted")
+
+
+def main() -> None:
+    root = tempfile.mkdtemp(prefix="relay_demo_")
+    try:
+        if "--simulate-1000" in sys.argv:
+            _make_shards(root, 1)
+            run_scale_smoke()
+        else:
+            _make_shards(root, NRANKS)
+            run_spawned_tree()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -80,13 +80,17 @@ class FleetCollector:
         # is attached here, every ingested rank report also appends its
         # clock-aligned segments to the archive
         self.archive = None
-        self.stats = {"lines": 0, "reports": 0, "hellos": 0,
+        self.stats = {"lines": 0, "frames": 0, "reports": 0, "hellos": 0,
                       "clock_probes": 0, "findings": 0, "errors": 0,
-                      "bytes": 0}
+                      "bytes": 0, "relay_rollups": 0}
+        # per-relay stats shipped inside relay_report rollups (the drop
+        # accounting for the whole tree): relay name -> stats dict
+        self.relay_stats: Dict[str, dict] = {}
         self.endpoint = Endpoint(context=self, handlers={
             "hello": FleetCollector._msg_hello,
             "clock": FleetCollector._msg_clock,
             "report": FleetCollector._msg_report,
+            "relay_report": FleetCollector._msg_relay_report,
             "findings": FleetCollector._msg_findings,
             "bye": FleetCollector._msg_ack,
             # replies that loop back (e.g. replayed captures of a full
@@ -122,6 +126,21 @@ class FleetCollector:
         self._bump("bytes", len(line))
         return self.endpoint.dispatch_line(line)
 
+    def ingest_frame(self, frame: bytes) -> Optional[str]:
+        """Process one binary column frame (``repro.relay.frames``);
+        the decoded message dispatches through the same endpoint as a
+        line, so frames and lines are behaviorally identical — only
+        the bytes differ.  Raises WireError on malformed frames."""
+        from repro.relay import frames as relay_frames
+        self._bump("frames")
+        self._bump("bytes", len(frame))
+        result = self.endpoint.dispatch(relay_frames.decode_frame(frame))
+        if result is None:
+            return None
+        if isinstance(result, Message):
+            return result.encode()
+        return result
+
     def ingest_spool(self, directory_or_reader) -> int:
         """Drain a spool (directory path or ``SpoolReader``) into this
         collector; returns the number of lines ingested.  Call
@@ -153,20 +172,24 @@ class FleetCollector:
     def _msg_hello(endpoint, msg: Message) -> str:
         self = endpoint.context
         check_hello(msg.payload, side=f"rank {msg.rank}")
-        with self._lock:
-            s = self._slice(msg.rank)
-            s.nprocs = int(msg.payload.get("nprocs", 1))
-            s.host = str(msg.payload.get("host", ""))
-            s.pid = int(msg.payload.get("pid", 0))
+        if not msg.payload.get("relay"):
+            # a relay's hello carries no rank identity: opening a slice
+            # for it would invent a phantom rank 0
+            with self._lock:
+                s = self._slice(msg.rank)
+                s.nprocs = int(msg.payload.get("nprocs", 1))
+                s.host = str(msg.payload.get("host", ""))
+                s.pid = int(msg.payload.get("pid", 0))
+            self._mark_seen(msg.rank)
         self._bump("hellos")
-        self._mark_seen(msg.rank)
         # caps advertises optional payload shapes this collector can
         # decode; a reporter downgrades to the legacy row wire when the
         # cap is missing (an old collector would otherwise silently
-        # read zero segments out of a columnar report)
+        # read zero segments out of a columnar report), and only sends
+        # binary frames when "frames" is advertised
         return encode("hello", msg.rank,
                       {"link_v": LINK_VERSION,
-                       "caps": ["segments_columns"]})
+                       "caps": ["segments_columns", "frames"]})
 
     @staticmethod
     def _msg_clock(endpoint, msg: Message) -> str:
@@ -181,6 +204,29 @@ class FleetCollector:
         self._ingest_report(msg)
         self._bump("reports")
         self._mark_seen(msg.rank)
+        return "ok"
+
+    @staticmethod
+    def _msg_relay_report(endpoint, msg: Message) -> str:
+        """A relay tier's batched rollup: every entry is one rank's
+        report payload (already aligned onto the relay's clock and
+        re-offset onto ours), ingested exactly like a direct report;
+        the relay's shipped stats keep the tree's drop accounting
+        visible at the root (``FleetReport.relay``)."""
+        self = endpoint.context
+        p = msg.payload
+        relay_info = p.get("relay") or {}
+        name = str(relay_info.get("name") or f"relay@{msg.rank}")
+        with self._lock:
+            self.relay_stats[name] = dict(relay_info.get("stats") or {})
+            for child, stats in (relay_info.get("children") or {}).items():
+                self.relay_stats[str(child)] = dict(stats or {})
+        for entry in p.get("reports", []):
+            rank = int(entry.get("rank", 0))
+            self._ingest_report(Message("report", rank, entry))
+            self._bump("reports")
+            self._mark_seen(rank)
+        self._bump("relay_rollups")
         return "ok"
 
     @staticmethod
@@ -238,6 +284,11 @@ class FleetCollector:
         with self._lock:
             s = self._slice(msg.rank)
             s.nprocs = max(s.nprocs, int(p.get("nprocs", 1)))
+            # identity normally arrives in the hello; a relayed report
+            # carries it inline (the relay consumed the rank's hello)
+            if "pid" in p and not s.pid:
+                s.pid = int(p.get("pid", 0))
+                s.host = str(p.get("host", "")) or s.host
             s.elapsed_s = float(p.get("elapsed_s", 0.0))
             s.clock_offset_s = offset
             s.clock_rtt_s = float(clock.get("rtt_s") or 0.0)
@@ -293,6 +344,22 @@ class FleetCollector:
         nprocs = max([len(ranks)] + [s.nprocs for s in ranks.values()])
         controller = self.tune_controller
         metrics = self._metrics_rollup(ranks, controller)
+        with self._lock:
+            relay_stats = {k: dict(v) for k, v in self.relay_stats.items()}
+        relay = {}
+        if relay_stats:
+            relay = {
+                "relays": relay_stats,
+                "dropped_reports": sum(
+                    int(s.get("dropped_reports", 0))
+                    for s in relay_stats.values()),
+                "dropped_findings": sum(
+                    int(s.get("dropped_findings", 0))
+                    for s in relay_stats.values()),
+                "busy_replies": sum(
+                    int(s.get("busy_replies", 0))
+                    for s in relay_stats.values()),
+            }
         return FleetReport(
             nprocs=nprocs,
             ranks=ranks,
@@ -309,7 +376,8 @@ class FleetCollector:
                         if controller is not None else []),
             tune_stats=(dict(controller.stats)
                         if controller is not None else {}),
-            metrics=metrics)
+            metrics=metrics,
+            relay=relay)
 
     def _metrics_rollup(self, ranks: Dict[int, RankSlice],
                         controller) -> dict:
@@ -348,11 +416,17 @@ class CollectorServer:
     (plumbed from ``ProfilerOptions.idle_timeout_s`` by the façade)."""
 
     def __init__(self, collector: Optional[FleetCollector] = None,
-                 port: int = 0, idle_timeout_s: float = 5.0):
+                 port: int = 0, idle_timeout_s: float = 5.0,
+                 auth_secret: Optional[str] = None,
+                 ssl_context=None, ssl_certfile: Optional[str] = None,
+                 ssl_keyfile: Optional[str] = None):
         self.collector = collector or FleetCollector()
         self._server = LineServer(
             self.collector.ingest_line, port=port, backlog=64,
             idle_timeout_s=idle_timeout_s,
+            frame_handler=self.collector.ingest_frame,
+            auth_secret=auth_secret, ssl_context=ssl_context,
+            ssl_certfile=ssl_certfile, ssl_keyfile=ssl_keyfile,
             on_error=lambda e: self.collector._bump("errors"))
         self.port = self._server.port
 

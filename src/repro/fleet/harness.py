@@ -131,7 +131,11 @@ def simulate_fleet(
         tune_controller=None,
         make_applier: Optional[Callable[[int], object]] = None,
         tune_interval_s: float = 0.1,
-        archive_dir: Optional[str] = None) -> Optional[FleetReport]:
+        archive_dir: Optional[str] = None,
+        relay_fanout: Optional[int] = None,
+        relay_depth: Optional[int] = None,
+        relay_flush_interval_s: float = 0.05,
+        dxt_capacity: Optional[int] = None) -> Optional[FleetReport]:
     """Run ``workload(rank, io)`` on ``nranks`` threads, each with a
     private runtime + RankReporter, ship every window through the wire
     protocol into ``collector``, and return the aggregated FleetReport.
@@ -162,7 +166,26 @@ def simulate_fleet(
     partitioned column-segment warehouse (repro.warehouse) as it is
     collected; needs ``collect=True`` (with ``collect=False`` the
     caller owns collection — attach an ``ArchiveWriter`` to
-    ``collector.archive`` and finalize it after draining)."""
+    ``collector.archive`` and finalize it after draining).
+
+    ``relay_fanout`` / ``relay_depth`` interpose an in-process
+    hierarchical collection tree (``repro.relay.RelayTree``): ranks
+    ship to leaf relays over loopback, relays batch and forward
+    rollups, and the collector ingests one merged stream per tier-0
+    relay.  ``dxt_capacity`` bounds each simulated rank's DXT ring —
+    at 1000 ranks the default (1M segments/rank) would be gigabytes."""
+    relay_tree = None
+    if relay_fanout is not None or relay_depth is not None:
+        if make_transport is not None:
+            raise ValueError(
+                "relay_fanout/relay_depth build the rank transports; "
+                "they cannot be combined with make_transport")
+        from repro.relay import RelayTree, plan_tree
+        relay_tree = RelayTree.build(
+            collector, plan_tree(nranks, fanout=relay_fanout,
+                                 depth=relay_depth),
+            flush_interval_s=relay_flush_interval_s)
+        make_transport = relay_tree.transport_for
     archive_writer = None
     if archive_dir is not None:
         if not collect:
@@ -176,7 +199,8 @@ def simulate_fleet(
         tune_controller.attach(collector)
     reporters: List[RankReporter] = []
     for r in range(nranks):
-        rt = DarshanRuntime()
+        rt = (DarshanRuntime(dxt_capacity=dxt_capacity)
+              if dxt_capacity is not None else DarshanRuntime())
         if clock_skew_s:
             rt._t0 -= clock_skew_s[r]
         insight = make_insight() if make_insight is not None else False
@@ -251,6 +275,10 @@ def simulate_fleet(
             rep.ship(transport, handshake_rounds=handshake_rounds)
         finally:
             transport.close()
+    if relay_tree is not None:
+        # leaf-to-root flush: every pending rollup must reach the
+        # collector before it aggregates
+        relay_tree.close()
     report = collector.report() if collect else None
     if archive_writer is not None:
         archive_writer.finalize()

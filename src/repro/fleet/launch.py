@@ -70,7 +70,8 @@ def _child_main(rank: int, nranks: int, workload, transport_spec,
                 handshake_rounds: int, stream_interval_s: float,
                 segments_wire: str = "columns",
                 tune_spec: Optional[dict] = None,
-                ship_metrics: bool = True) -> None:
+                ship_metrics: bool = True,
+                dxt_capacity: Optional[int] = None) -> None:
     """One rank: profile the workload against a private runtime, stream
     findings mid-run, ship the window, exit 0 on success.
 
@@ -79,7 +80,8 @@ def _child_main(rank: int, nranks: int, workload, transport_spec,
     process-wide for the workload to bind knobs onto, and polls the
     collector for actions over the duplex transport."""
     try:
-        rt = DarshanRuntime()
+        rt = (DarshanRuntime(dxt_capacity=dxt_capacity)
+              if dxt_capacity is not None else DarshanRuntime())
         if clock_skew:
             rt._t0 -= clock_skew
         insight = _build_insight(insight_spec, fast_tier_mb_s)
@@ -90,7 +92,13 @@ def _child_main(rank: int, nranks: int, workload, transport_spec,
                                 ship_metrics=ship_metrics)
         kind = transport_spec[0]
         if kind == "tcp":
-            transport = TcpTransport(transport_spec[1], transport_spec[2])
+            # optional 4th element: security options (plain data so the
+            # spec crosses the process boundary under any start method)
+            sec = transport_spec[3] if len(transport_spec) > 3 else {}
+            transport = TcpTransport(
+                transport_spec[1], transport_spec[2],
+                auth_secret=sec.get("auth_secret"),
+                tls_ca=sec.get("tls_ca"))
         elif kind == "spool":
             transport = SpoolTransport(transport_spec[1],
                                        name=f"rank{rank:05d}")
@@ -151,7 +159,15 @@ def run_spawned_fleet(
         ship_metrics: bool = True,
         tune_controller=None,
         tune_interval_s: float = 0.1,
-        archive_dir: Optional[str] = None) -> FleetReport:
+        archive_dir: Optional[str] = None,
+        relay_fanout: Optional[int] = None,
+        relay_depth: Optional[int] = None,
+        relay_flush_interval_s: float = 0.05,
+        dxt_capacity: Optional[int] = None,
+        auth_secret: Optional[str] = None,
+        tls_certfile: Optional[str] = None,
+        tls_keyfile: Optional[str] = None,
+        tls_ca: Optional[str] = None) -> FleetReport:
     """Run ``workload(rank, io)`` on ``nranks`` OS processes and return
     the aggregated FleetReport.
 
@@ -169,7 +185,17 @@ def run_spawned_fleet(
     as a dry run instead (``mark_one_way``).
 
     ``archive_dir`` archives every rank report into a partitioned
-    column-segment warehouse (repro.warehouse) as it is collected."""
+    column-segment warehouse (repro.warehouse) as it is collected.
+
+    ``relay_fanout`` / ``relay_depth`` interpose a hierarchical
+    collection tree (repro.relay): over tcp the ranks connect to
+    ``RelayServer`` leaves instead of the collector; over spool each
+    rank writes into its leaf relay's directory and the tree pumps
+    rollups toward the collector.  ``auth_secret`` requires every TCP
+    connection (rank->relay, relay->relay, relay->collector) to open
+    with a valid HMAC handshake; ``tls_certfile``/``tls_keyfile`` wrap
+    the listeners in TLS and ``tls_ca`` pins the certificate clients
+    verify (tcp only)."""
     import tempfile
 
     collector = collector if collector is not None else FleetCollector()
@@ -186,16 +212,54 @@ def run_spawned_fleet(
     own_server: Optional[CollectorServer] = None
     reader: Optional[SpoolReader] = None
     own_spool: Optional[str] = None
+    relay_tree = None
+    tree_spec = None
+    if relay_fanout is not None or relay_depth is not None:
+        from repro.relay import plan_tree
+        tree_spec = plan_tree(nranks, fanout=relay_fanout,
+                              depth=relay_depth)
     if transport == "tcp":
         if server is None:
             server = own_server = CollectorServer(
-                collector, idle_timeout_s=idle_timeout_s)
-        transport_spec = ("tcp", "127.0.0.1", server.port)
+                collector, idle_timeout_s=idle_timeout_s,
+                auth_secret=auth_secret, ssl_certfile=tls_certfile,
+                ssl_keyfile=tls_keyfile)
+        sec = {"auth_secret": auth_secret, "tls_ca": tls_ca}
+        if tree_spec is not None:
+            from repro.relay import RelayServerTree
+            relay_tree = RelayServerTree.build(
+                "127.0.0.1", server.port, tree_spec,
+                flush_interval_s=relay_flush_interval_s,
+                auth_secret=auth_secret, tls_ca=tls_ca,
+                ssl_certfile=tls_certfile, ssl_keyfile=tls_keyfile,
+                idle_timeout_s=idle_timeout_s)
+
+            def spec_for(rank: int):
+                return ("tcp", "127.0.0.1", relay_tree.port_for(rank), sec)
+        else:
+            def spec_for(rank: int):
+                return ("tcp", "127.0.0.1", server.port, sec)
     elif transport == "spool":
+        if auth_secret or tls_certfile or tls_ca:
+            raise ValueError(
+                "auth_secret/tls_* apply to tcp transports only; a "
+                "spool is gated by directory permissions")
         if spool_dir is None:
             spool_dir = own_spool = tempfile.mkdtemp(prefix="fleet_spool_")
-        transport_spec = ("spool", spool_dir)
-        reader = SpoolReader(spool_dir)
+        if tree_spec is not None:
+            from repro.relay import SpoolRelayTree
+            relay_tree = SpoolRelayTree.build(
+                spool_dir, tree_spec,
+                flush_interval_s=relay_flush_interval_s)
+            reader = SpoolReader(relay_tree.collector_dir)
+
+            def spec_for(rank: int):
+                return ("spool", relay_tree.spool_dir_for(rank))
+        else:
+            reader = SpoolReader(spool_dir)
+
+            def spec_for(rank: int):
+                return ("spool", spool_dir)
     else:
         raise ValueError(
             f"transport must be 'tcp' or 'spool' for spawned fleets, "
@@ -209,12 +273,12 @@ def run_spawned_fleet(
             p = ctx.Process(
                 target=_child_main,
                 name=f"fleet-rank-{r}",
-                args=(r, nranks, workload, transport_spec,
+                args=(r, nranks, workload, spec_for(r),
                       (clock_skew_s[r] if clock_skew_s else 0.0),
                       (throttles or {}).get(r), insight, fast_tier_mb_s,
                       insight_interval_s, trace, handshake_rounds,
                       stream_interval_s, segments_wire, tune_spec,
-                      ship_metrics))
+                      ship_metrics, dxt_capacity))
             p.start()
             procs.append(p)
 
@@ -226,6 +290,8 @@ def run_spawned_fleet(
         while (any(p.is_alive() for p in procs)
                and time.perf_counter() < deadline):
             if reader is not None:
+                if relay_tree is not None and transport == "spool":
+                    relay_tree.pump()
                 collector.ingest_spool(reader)
             alive = next((p for p in procs if p.is_alive()), None)
             if alive is not None:
@@ -241,6 +307,12 @@ def run_spawned_fleet(
         failed = [p.name for p in procs if p.exitcode != 0]
         if failed:
             raise RuntimeError(f"fleet ranks failed: {failed}")
+        if relay_tree is not None:
+            # leaf-to-root flush (spool close() cascades the pumps);
+            # every pending rollup must reach the collector's wire
+            # before the final drain / report
+            relay_tree.close()
+            relay_tree = None
         if reader is not None:
             collector.ingest_spool(reader)     # final drain
     finally:
@@ -248,6 +320,8 @@ def run_spawned_fleet(
             if p.is_alive():
                 p.terminate()
                 p.join(_JOIN_GRACE_S)
+        if relay_tree is not None:             # error path only
+            relay_tree.close()
         if own_server is not None:
             own_server.close()
         if own_spool is not None:

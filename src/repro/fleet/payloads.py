@@ -62,6 +62,10 @@ def encode_segments_columns(segments) -> dict:
 
 
 def decode_segments_columns(obj: dict) -> SegmentColumns:
+    # a payload that rode a binary frame (repro.relay.frames) carries
+    # the decoded batch itself — the codec already validated it
+    if isinstance(obj, SegmentColumns):
+        return obj
     # OverflowError included: numpy raises it (not ValueError) for
     # values outside the column dtype, and one corrupt line must stay
     # a WireError so a spool drain survives it
@@ -149,6 +153,34 @@ def encode_report(rank: int, report, nprocs: int = 1,
     if segments_wire not in ("columns", "rows"):
         raise ValueError(f"segments_wire must be 'columns' or 'rows', "
                          f"got {segments_wire!r}")
+    payload = report_payload_base(
+        report, nprocs=nprocs, clock_offset_s=clock_offset_s,
+        clock_rtt_s=clock_rtt_s,
+        clock_wall_offset_s=clock_wall_offset_s, metrics=metrics)
+    if segments_wire == "columns":
+        payload["segments_columns"] = encode_segments_columns(
+            _report_segments(report))
+    else:
+        payload["segments"] = encode_segments(
+            getattr(report, "segments", []) or [])
+    return encode("report", rank, payload)
+
+
+def _report_segments(report):
+    cols = getattr(report, "segments_columns", None)
+    if cols is None:
+        cols = getattr(report, "segments", []) or []
+    return cols
+
+
+def report_payload_base(report, nprocs: int = 1,
+                        clock_offset_s: Optional[float] = None,
+                        clock_rtt_s: Optional[float] = None,
+                        clock_wall_offset_s: Optional[float] = None,
+                        metrics: Optional[dict] = None) -> dict:
+    """Everything in a report payload EXCEPT the segments batch — the
+    part shared by the JSON line wire (``encode_report``) and the
+    binary frame wire (``encode_report_frame``)."""
     # SessionReport carries POSIX per-file records; STDIO rides as the
     # module rollup only (mirrors what analyze() retains).
     payload = {
@@ -165,15 +197,29 @@ def encode_report(rank: int, report, nprocs: int = 1,
     }
     if metrics:
         payload["metrics"] = metrics
-    if segments_wire == "columns":
-        cols = getattr(report, "segments_columns", None)
-        if cols is None:
-            cols = getattr(report, "segments", []) or []
-        payload["segments_columns"] = encode_segments_columns(cols)
-    else:
-        payload["segments"] = encode_segments(
-            getattr(report, "segments", []) or [])
-    return encode("report", rank, payload)
+    return payload
+
+
+def encode_report_frame(rank: int, report, nprocs: int = 1,
+                        clock_offset_s: Optional[float] = None,
+                        clock_rtt_s: Optional[float] = None,
+                        clock_wall_offset_s: Optional[float] = None,
+                        metrics: Optional[dict] = None) -> bytes:
+    """The binary-frame twin of ``encode_report``: same payload, but
+    the DXT batch rides as a raw column buffer inside a
+    ``repro.relay.frames`` frame instead of JSON text.  Only ship this
+    to peers that advertised the ``frames`` cap in their hello."""
+    # lazy: the fleet package must stay importable without repro.relay
+    from repro.relay import frames as relay_frames
+    payload = report_payload_base(
+        report, nprocs=nprocs, clock_offset_s=clock_offset_s,
+        clock_rtt_s=clock_rtt_s,
+        clock_wall_offset_s=clock_wall_offset_s, metrics=metrics)
+    segments = _report_segments(report)
+    if not isinstance(segments, SegmentColumns):
+        segments = SegmentColumns.from_rows(segments)
+    payload["segments_columns"] = segments
+    return relay_frames.encode_frame("report", rank, payload)
 
 
 def encode_findings(rank: int, findings, streaming: bool = False) -> str:

@@ -100,6 +100,12 @@ class FleetReport:
     # fleet-level self-telemetry rollup (repro.obs): every rank's
     # shipped snapshot merged with the collector's own registry
     metrics: dict = field(default_factory=dict)
+    # hierarchical collection (repro.relay): per-relay stats shipped in
+    # rollups plus tree-wide drop totals (dropped_reports /
+    # dropped_findings / busy_replies); empty for flat fleets.  The
+    # "zero unaccounted drops" contract: reports that never reached
+    # this collector appear here as dropped_reports, never vanish.
+    relay: dict = field(default_factory=dict)
 
     # ------------------------------------------------------------ queries
     @property
@@ -187,6 +193,7 @@ class FleetReport:
             "tune": {"audit": [dict(e) for e in self.tune_audit],
                      "stats": dict(self.tune_stats)},
             "metrics": dict(self.metrics),
+            "relay": dict(self.relay),
         }
 
     def summary(self) -> str:

@@ -89,6 +89,10 @@ class RankReporter:
         # out of a columnar payload — silently).
         self.segments_wire = segments_wire
         self._negotiated_wire: Optional[str] = None
+        # hello negotiation outcome: the peer advertised the binary
+        # frame cap (repro.relay.frames); the report still only rides a
+        # frame when the transport can carry one (supports_frames)
+        self._peer_frames = False
         # ship the rank's self-telemetry snapshot (repro.obs) inside
         # the report payload; the collector rolls the fleet up
         self.ship_metrics = ship_metrics
@@ -166,6 +170,7 @@ class RankReporter:
             self._negotiated_wire = (
                 self.segments_wire if "segments_columns" in caps
                 else "rows")
+            self._peer_frames = "frames" in caps
 
     def handshake(self, transport, rounds: int = 5) -> float:
         """Measure this rank's clock offset against the collector.
@@ -271,9 +276,17 @@ class RankReporter:
 
     def ship(self, transport,
              report: Optional[SessionReport] = None,
-             handshake_rounds: int = 5) -> None:
+             handshake_rounds: int = 5,
+             busy_retries: int = 40) -> None:
         """hello -> clock handshake (duplex: reply-based; one-way spool:
-        file-mtime) -> report -> bye, over one transport."""
+        file-mtime) -> report -> bye, over one transport.
+
+        The report rides a binary column frame when hello negotiation
+        advertised the ``frames`` cap AND the transport can carry one;
+        otherwise the JSON line wire, at whatever segments shape was
+        negotiated.  A ``busy`` reply (relay backpressure — its rollup
+        queue is full) is retried after the relay's suggested delay, up
+        to ``busy_retries`` times; a relay that never drains raises."""
         t = as_transport(transport)
         self.hello(t)
         if t.duplex:
@@ -284,14 +297,48 @@ class RankReporter:
             if not self.reports:
                 raise RuntimeError("no stopped window to ship")
             report = self.reports[-1]
-        t(payloads.encode_report(
-            self.rank, report, nprocs=self.nprocs,
-            clock_offset_s=self.clock_offset_s,
-            clock_rtt_s=self.clock_rtt_s,
-            clock_wall_offset_s=self.clock_wall_offset_s,
-            segments_wire=self.effective_segments_wire,
-            metrics=self._collect_metrics(report, transport=t)))
+        metrics = self._collect_metrics(report, transport=t)
+        use_frames = self._peer_frames and t.supports_frames \
+            and self.effective_segments_wire == "columns"
+        if use_frames:
+            data = payloads.encode_report_frame(
+                self.rank, report, nprocs=self.nprocs,
+                clock_offset_s=self.clock_offset_s,
+                clock_rtt_s=self.clock_rtt_s,
+                clock_wall_offset_s=self.clock_wall_offset_s,
+                metrics=metrics)
+            send = lambda: t.send_frame(data)     # noqa: E731
+        else:
+            line = payloads.encode_report(
+                self.rank, report, nprocs=self.nprocs,
+                clock_offset_s=self.clock_offset_s,
+                clock_rtt_s=self.clock_rtt_s,
+                clock_wall_offset_s=self.clock_wall_offset_s,
+                segments_wire=self.effective_segments_wire,
+                metrics=metrics)
+            send = lambda: t(line)                # noqa: E731
+        self._send_with_busy_retry(send, busy_retries)
         t(encode("bye", self.rank, {}))
+
+    def _send_with_busy_retry(self, send, busy_retries: int):
+        """Drive one send through relay backpressure: a ``busy`` reply
+        means 'queue full, retry after retry_after_s' — obeyed up to
+        ``busy_retries`` times before raising."""
+        import time as _time
+        for _ in range(max(busy_retries, 1)):
+            reply = send()
+            if reply is None or not reply.startswith("{"):
+                return reply
+            try:
+                msg = decode(reply)
+            except WireError:
+                return reply
+            if msg.kind != "busy":
+                return reply
+            _time.sleep(float(msg.payload.get("retry_after_s", 0.05)))
+        raise RuntimeError(
+            f"rank {self.rank}: peer stayed busy after "
+            f"{busy_retries} retries")
 
     def ship_socket(self, host: str, port: int,
                     report: Optional[SessionReport] = None) -> None:

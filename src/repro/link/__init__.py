@@ -18,11 +18,16 @@ Layers (each usable alone):
   * ``endpoint``  — ``Endpoint``: string-keyed verb handlers with
     global extension through the plugin registry.
   * ``transport`` — ``Transport`` ABC with ``LoopbackTransport``
-    (in-process), ``TcpTransport`` (sockets), and ``SpoolTransport``
-    (append-only files; ``SpoolReader`` tails them) +
-    the shared line framing (``recv_lines`` / ``recv_reply``).
+    (in-process), ``TcpTransport`` (sockets; optional TLS via
+    ``tls_ca`` and shared-secret auth via ``auth_secret``), and
+    ``SpoolTransport`` (append-only files; ``SpoolReader`` tails them)
+    + the shared line framing (``recv_lines`` / ``recv_reply``) and
+    the binary frame framing (``FRAME_MAGIC`` prefix, ``recv_units``
+    for mixed line/frame streams — frame *content* lives in
+    ``repro.relay.frames``).
   * ``server``    — ``LineServer``, the one threaded TCP front end
-    behind both ``ProfileServer`` and ``CollectorServer``.
+    behind both ``ProfileServer`` and ``CollectorServer``; opt-in
+    ``frame_handler`` / ``auth_secret`` / ``ssl_certfile``.
 
 The verb registry contract
 --------------------------
@@ -56,19 +61,27 @@ Handlers run on server connection threads: keep them non-blocking and
 route state through ``endpoint.context``.
 """
 from repro.link.endpoint import Endpoint
-from repro.link.messages import (KINDS, LINK_VERSION, Message, WireError,
-                                 check_hello, decode, encode,
+from repro.link.messages import (KINDS, LINK_VERSION, AuthError, Message,
+                                 WireError, check_auth, check_hello,
+                                 decode, encode, encode_auth,
                                  encode_message, known_kind)
 from repro.link.server import LineServer
-from repro.link.transport import (MAX_LINE_BYTES, CallableTransport,
+from repro.link.transport import (FRAME_HEAD, FRAME_MAGIC, MAX_FRAME_BYTES,
+                                  MAX_LINE_BYTES, CallableTransport,
                                   LoopbackTransport, SpoolReader,
                                   SpoolTransport, TcpTransport, Transport,
-                                  as_transport, recv_lines, recv_reply)
+                                  as_transport, frame_total_len,
+                                  make_client_ssl_context,
+                                  make_server_ssl_context, recv_lines,
+                                  recv_reply, recv_units)
 
 __all__ = [
-    "Endpoint", "KINDS", "LINK_VERSION", "Message", "WireError",
-    "check_hello", "decode", "encode", "encode_message", "known_kind",
-    "LineServer", "MAX_LINE_BYTES", "CallableTransport",
-    "LoopbackTransport", "SpoolReader", "SpoolTransport", "TcpTransport",
-    "Transport", "as_transport", "recv_lines", "recv_reply",
+    "Endpoint", "KINDS", "LINK_VERSION", "AuthError", "Message",
+    "WireError", "check_auth", "check_hello", "decode", "encode",
+    "encode_auth", "encode_message", "known_kind",
+    "LineServer", "FRAME_HEAD", "FRAME_MAGIC", "MAX_FRAME_BYTES",
+    "MAX_LINE_BYTES", "CallableTransport", "LoopbackTransport",
+    "SpoolReader", "SpoolTransport", "TcpTransport", "Transport",
+    "as_transport", "frame_total_len", "make_client_ssl_context",
+    "make_server_ssl_context", "recv_lines", "recv_reply", "recv_units",
 ]

@@ -29,16 +29,25 @@ from the exception alone.
 """
 from __future__ import annotations
 
+import hashlib
+import hmac as _hmac
 import json
+import os
+import time
 from dataclasses import dataclass, field
 from typing import Optional
 
 LINK_VERSION = 1
 
 # Built-in message kinds.  Fleet collection: hello/clock/clock_reply/
-# report/findings/bye.  ProfileServer control: start/stop/status (+
-# report/findings/clock shared with fleet).  Generic replies: ok/error.
+# report/findings/bye (+ relay_report, a relay tier's batched upstream
+# rollup, and busy, the backpressure reply a full relay answers a
+# report with).  ProfileServer control: start/stop/status (+
+# report/findings/clock shared with fleet).  Connection setup: auth
+# (transport-level shared-secret handshake — see encode_auth).
+# Generic replies: ok/error.
 KINDS = ("hello", "clock", "clock_reply", "report", "findings", "bye",
+         "relay_report", "busy", "auth",
          "start", "stop", "status", "ok", "error")
 
 _SNIPPET_LEN = 120
@@ -46,6 +55,14 @@ _SNIPPET_LEN = 120
 
 class WireError(ValueError):
     """Malformed or version-incompatible wire line."""
+
+
+class AuthError(WireError):
+    """Authentication failed at connection setup.
+
+    Deliberately carries NO secret material: not the shared secret, not
+    the MAC the peer presented — an auth failure logged or shipped in an
+    error reply must never leak what it was checked against."""
 
 
 @dataclass(frozen=True)
@@ -158,3 +175,48 @@ def check_hello(payload: dict, side: str = "peer") -> int:
             f"{side} requires link protocol >= v{min_v}; this process "
             f"supports <= v{LINK_VERSION}")
     return min(v, LINK_VERSION)
+
+
+# ------------------------------------------------------------------ auth
+# Shared-secret connection auth: the client opens every connection with
+# one ``auth`` message carrying a fresh nonce, a wall-clock timestamp,
+# and an HMAC-SHA256 over both keyed by the shared secret.  The secret
+# itself never rides the wire (so auth is meaningful even without TLS,
+# though TLS is what protects the payloads that follow); the timestamp
+# window bounds replay of a captured handshake.
+
+AUTH_WINDOW_S = 600.0
+
+
+def _auth_mac(secret: str, nonce: str, ts: float) -> str:
+    return _hmac.new(secret.encode("utf-8"),
+                     f"{nonce}:{ts:.3f}".encode("ascii"),
+                     hashlib.sha256).hexdigest()
+
+
+def encode_auth(secret: str, rank: int = 0) -> str:
+    """The client's opening ``auth`` line for one connection."""
+    nonce = os.urandom(16).hex()
+    ts = time.time()
+    return encode("auth", rank, {"nonce": nonce, "ts": round(ts, 3),
+                                 "mac": _auth_mac(secret, nonce, ts)})
+
+
+def check_auth(secret: str, payload: dict,
+               window_s: float = AUTH_WINDOW_S) -> None:
+    """Verify an ``auth`` payload against the shared secret.
+
+    Raises ``AuthError`` on a missing/invalid MAC or a timestamp
+    outside ``window_s`` of this host's clock (replay bound).  The
+    error message carries no secret material."""
+    nonce = payload.get("nonce")
+    ts = payload.get("ts")
+    mac = payload.get("mac")
+    if not isinstance(nonce, str) or not isinstance(mac, str) \
+            or not isinstance(ts, (int, float)) or isinstance(ts, bool):
+        raise AuthError("authentication failed: malformed auth payload")
+    if abs(time.time() - float(ts)) > window_s:
+        raise AuthError("authentication failed: timestamp outside the "
+                        "accepted window")
+    if not _hmac.compare_digest(_auth_mac(secret, nonce, float(ts)), mac):
+        raise AuthError("authentication failed")

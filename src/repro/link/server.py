@@ -13,22 +13,50 @@ callable (typically ``Endpoint.dispatch_line`` or
 A handler exception is answered with an ``error: ...`` line (and
 reported through ``on_error``) instead of killing the connection —
 a malformed message from one client must not take down the server.
+
+Three opt-ins complete the multi-host story (all default off, so the
+in-container paths pay nothing):
+
+  * ``frame_handler`` — binary frames (``FRAME_MAGIC``-prefixed, mixed
+    freely with lines on one connection via ``recv_units``) dispatch to
+    it instead of ``handler``;
+  * ``auth_secret`` — every connection must open with a valid ``auth``
+    line (HMAC handshake, ``repro.link.messages.check_auth``) before
+    any other unit is dispatched; failures are answered with a scrubbed
+    error line and the connection is dropped;
+  * ``ssl_context`` / ``ssl_certfile`` — TLS-wrap every accepted
+    connection (handshake runs in the per-connection thread, so a
+    slow-handshaking client cannot stall the accept loop).
 """
 from __future__ import annotations
 
 import socket
+import ssl as _ssl
 import threading
 from typing import Callable, Optional
 
-from repro.link.transport import recv_lines
+from repro.link.messages import AuthError, check_auth, decode, encode
+from repro.link.transport import (make_server_ssl_context, recv_lines,
+                                  recv_units)
 
 
 class LineServer:
     def __init__(self, handler: Callable[[str], Optional[str]],
                  port: int = 0, host: str = "127.0.0.1",
                  backlog: int = 16, idle_timeout_s: float = 2.0,
-                 on_error: Optional[Callable[[Exception], None]] = None):
+                 on_error: Optional[Callable[[Exception], None]] = None,
+                 frame_handler: Optional[
+                     Callable[[bytes], Optional[str]]] = None,
+                 auth_secret: Optional[str] = None,
+                 ssl_context: Optional[_ssl.SSLContext] = None,
+                 ssl_certfile: Optional[str] = None,
+                 ssl_keyfile: Optional[str] = None):
         self.handler = handler
+        self.frame_handler = frame_handler
+        self.auth_secret = auth_secret
+        self._ssl = (ssl_context if ssl_context is not None
+                     else (make_server_ssl_context(ssl_certfile, ssl_keyfile)
+                           if ssl_certfile is not None else None))
         self.idle_timeout_s = idle_timeout_s
         self.on_error = on_error
         self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
@@ -68,27 +96,96 @@ class LineServer:
                 self._conns.add(conn)
             t.start()
 
+    def _check_auth_line(self, line: str) -> bool:
+        """True iff ``line`` is a valid ``auth`` handshake.  Raises
+        ``AuthError`` (message scrubbed of secret material) otherwise."""
+        try:
+            msg = decode(line)
+        except ValueError as e:
+            raise AuthError(
+                "authentication required before any other message") from e
+        if msg.kind != "auth":
+            raise AuthError(
+                "authentication required before any other message")
+        check_auth(self.auth_secret, msg.payload)
+        return True
+
     def _handle(self, conn: socket.socket) -> None:
         try:
-            with conn:
+            if self._ssl is not None:
+                # handshake here, not in the accept loop: a client that
+                # stalls mid-handshake only costs its own thread.  The
+                # wrap DETACHES the raw socket's fd into the SSLSocket,
+                # so the registered connection must be swapped too or
+                # close() would shut down a dead handle.
+                raw = conn
                 try:
-                    for line in recv_lines(conn, self.idle_timeout_s):
-                        if self._stop.is_set():
-                            break
-                        try:
-                            reply = self.handler(line)
-                        except Exception as e:  # noqa: BLE001 — answered
-                            if self.on_error is not None:
-                                try:
-                                    self.on_error(e)
-                                except Exception:
-                                    pass
-                            reply = f"error: {e}"
-                        if reply is not None:
-                            conn.sendall(reply.encode() + b"\n")
-                except (ValueError, OSError):
+                    conn.settimeout(self.idle_timeout_s)
+                    conn = self._ssl.wrap_socket(conn, server_side=True)
+                except (OSError, _ssl.SSLError):
+                    return
+                with self._conn_lock:
+                    self._conns.discard(raw)
+                    self._conns.add(conn)
+            authed = self.auth_secret is None
+            try:
+                units = (recv_units(conn, self.idle_timeout_s)
+                         if self.frame_handler is not None
+                         or self.auth_secret is not None
+                         else (("line", ln) for ln in
+                               recv_lines(conn, self.idle_timeout_s)))
+                for unit, body in units:
+                    if self._stop.is_set():
+                        break
+                    if not authed:
+                        # the FIRST unit of the connection must be a
+                        # valid auth line; anything else — a frame, a
+                        # fleet verb, garbage — drops the connection
+                        if unit != "line":
+                            raise AuthError(
+                                "authentication required before any "
+                                "other message")
+                        self._check_auth_line(body)
+                        authed = True
+                        conn.sendall(encode("ok").encode() + b"\n")
+                        continue
+                    try:
+                        if unit == "frame":
+                            if self.frame_handler is None:
+                                raise ValueError(
+                                    "this server does not accept "
+                                    "binary frames")
+                            reply = self.frame_handler(body)
+                        else:
+                            reply = self.handler(body)
+                    except Exception as e:  # noqa: BLE001 — answered
+                        if self.on_error is not None:
+                            try:
+                                self.on_error(e)
+                            except Exception:
+                                pass
+                        reply = f"error: {e}"
+                    if reply is not None:
+                        conn.sendall(reply.encode() + b"\n")
+            except AuthError as e:
+                # answered (scrubbed message, never the secret or the
+                # presented MAC), then the connection is dropped
+                try:
+                    conn.sendall(f"error: {e}".encode() + b"\n")
+                except OSError:
                     pass
+                if self.on_error is not None:
+                    try:
+                        self.on_error(e)
+                    except Exception:
+                        pass
+            except (ValueError, OSError):
+                pass
         finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
             with self._conn_lock:
                 self._conns.discard(conn)
                 # prune finished handlers so a reconnect-per-probe

@@ -29,12 +29,42 @@ from __future__ import annotations
 import abc
 import os
 import socket
+import ssl as _ssl
+import struct
 import threading
-from typing import Callable, Dict, Iterator, List, Optional
+import time
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
-from repro.link.messages import Message, decode
+from repro.link.messages import AuthError, Message, decode, encode_auth
 
 MAX_LINE_BYTES = 1 << 24     # one rank's serialized report fits comfortably
+
+# ------------------------------------------------------------ frame wire
+# Binary frames share the line wire: a frame opens with FRAME_MAGIC,
+# whose first byte can never start a JSON line, so a server reading a
+# mixed stream tells the two apart from one byte.  The 24-byte header
+# is the length prefix — magic, version, flags, reserved, meta_len,
+# data_len, crc32 — and the frame *content* codec (what the meta and
+# column buffers mean) lives in ``repro.relay.frames``; this module
+# only owns the framing so every transport/server can carry frames.
+FRAME_MAGIC = b"RFR1"
+FRAME_HEAD = struct.Struct("<4sBBHIQI")   # magic,ver,flags,rsvd,meta,data,crc
+MAX_FRAME_BYTES = 1 << 28
+
+
+def frame_total_len(header: bytes) -> int:
+    """Total frame length (header included) from its 24-byte header.
+
+    Raises ``ValueError`` on a bad magic or a declared length beyond
+    ``MAX_FRAME_BYTES`` — a corrupt length prefix must fail the stream,
+    not allocate gigabytes."""
+    magic, _v, _f, _r, meta_len, data_len, _crc = FRAME_HEAD.unpack(header)
+    if magic != FRAME_MAGIC:
+        raise ValueError(f"bad frame magic: {magic!r}")
+    total = FRAME_HEAD.size + meta_len + data_len
+    if total > MAX_FRAME_BYTES:
+        raise ValueError(f"frame of {total} bytes exceeds MAX_FRAME_BYTES")
+    return total
 
 
 def recv_lines(conn: socket.socket, idle_timeout: float = 2.0):
@@ -74,10 +104,72 @@ def recv_lines(conn: socket.socket, idle_timeout: float = 2.0):
             raise ValueError("protocol line exceeds MAX_LINE_BYTES")
 
 
-def recv_reply(sock: socket.socket) -> str:
-    """Client side: read one newline-terminated reply (or until EOF)."""
+def recv_units(conn: socket.socket, idle_timeout: float = 2.0):
+    """Yield ``("line", str)`` / ``("frame", bytes)`` units from a mixed
+    stream — the frame-capable successor to ``recv_lines``.
+
+    A unit starting with ``FRAME_MAGIC`` is a length-prefixed binary
+    frame (yielded whole, header included); anything else accumulates to
+    the next newline like ``recv_lines`` always did, so JSON-line peers
+    and binary-frame peers share one port and even one connection.  A
+    corrupt frame length raises ``ValueError`` (the server answers with
+    an error line and drops the connection — resync inside a binary
+    stream is not possible)."""
+    conn.settimeout(idle_timeout)
+    buf = b""
+    while True:
+        head = buf[:len(FRAME_MAGIC)]
+        if buf and head == FRAME_MAGIC[:len(head)]:
+            # inside a frame: need the header, then the whole frame
+            if len(buf) >= FRAME_HEAD.size:
+                total = frame_total_len(buf[:FRAME_HEAD.size])
+                if len(buf) >= total:
+                    frame, buf = buf[:total], buf[total:]
+                    yield ("frame", frame)
+                    continue
+        else:
+            nl = buf.find(b"\n")
+            if nl >= 0:
+                line, buf = buf[:nl], buf[nl + 1:]
+                yield ("line", line.decode())
+                continue
+        try:
+            chunk = conn.recv(65536)
+        except socket.timeout:
+            # an idle client that sent a newline-less command and kept
+            # the connection open still deserves its reply
+            if buf and buf[:1] != FRAME_MAGIC[:1]:
+                yield ("line", buf.decode())
+                buf = b""
+                continue
+            return
+        except OSError:
+            return
+        if not chunk:
+            if buf and buf[:1] != FRAME_MAGIC[:1]:
+                yield ("line", buf.decode())
+            return
+        buf += chunk
+        if len(buf) > max(MAX_LINE_BYTES, MAX_FRAME_BYTES):
+            raise ValueError("protocol unit exceeds the wire bound")
+
+
+def recv_reply(sock: socket.socket,
+               timeout: Optional[float] = None) -> str:
+    """Client side: read one newline-terminated reply (or until EOF).
+
+    ``timeout`` bounds the WHOLE read as a deadline (each recv already
+    inherits the socket timeout, but a peer dripping bytes could extend
+    forever without one) — a dead relay must not hang a reporter;
+    ``socket.timeout`` (an OSError) is raised on expiry."""
+    deadline = (time.monotonic() + timeout) if timeout is not None else None
     buf = b""
     while b"\n" not in buf:
+        if deadline is not None:
+            left = deadline - time.monotonic()
+            if left <= 0:
+                raise socket.timeout("reply deadline exceeded")
+            sock.settimeout(min(left, sock.gettimeout() or left))
         chunk = sock.recv(65536)
         if not chunk:
             break
@@ -87,6 +179,28 @@ def recv_reply(sock: socket.socket) -> str:
     return buf.split(b"\n", 1)[0].decode().strip()
 
 
+# -------------------------------------------------------------------- TLS
+def make_server_ssl_context(certfile: str,
+                            keyfile: Optional[str] = None) -> _ssl.SSLContext:
+    """A server-side TLS context from a PEM cert (+ key) — what
+    ``LineServer(ssl_certfile=...)`` builds internally."""
+    ctx = _ssl.SSLContext(_ssl.PROTOCOL_TLS_SERVER)
+    ctx.load_cert_chain(certfile, keyfile)
+    return ctx
+
+
+def make_client_ssl_context(cafile: Optional[str] = None) -> _ssl.SSLContext:
+    """A client-side TLS context.  ``cafile`` pins the server's cert
+    (self-signed deployments: point it at the server's own PEM); with
+    no cafile the system trust store applies."""
+    ctx = _ssl.create_default_context(cafile=cafile)
+    if cafile is not None:
+        # fleet deployments address collectors/relays by IP, and the
+        # pinned cert (not a public CA hierarchy) is the trust anchor
+        ctx.check_hostname = False
+    return ctx
+
+
 class Transport(abc.ABC):
     """One line out, optionally one reply line back."""
 
@@ -94,10 +208,20 @@ class Transport(abc.ABC):
     #: e.g. the clock handshake — are only possible when True)
     duplex: bool = True
 
+    #: whether the medium can carry binary frames (``send_frame``);
+    #: reporters fall back to the JSON line wire when False
+    supports_frames: bool = False
+
     @abc.abstractmethod
     def send_line(self, line: str) -> Optional[str]:
         """Ship one wire line; return the peer's reply line (duplex
         transports) or None."""
+
+    def send_frame(self, frame: bytes) -> Optional[str]:
+        """Ship one binary frame; return the peer's reply line.  Only
+        valid when ``supports_frames`` is True."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not carry binary frames")
 
     def request(self, msg: Message) -> Optional[Message]:
         """Typed convenience: encode, send, decode the reply."""
@@ -151,14 +275,27 @@ class LoopbackTransport(Transport):
     share every byte of codec and aggregation code."""
 
     def __init__(self, target):
-        dispatch = getattr(target, "dispatch_line", None)
+        dispatch = (getattr(target, "dispatch_line", None)
+                    or getattr(target, "ingest_line", None))
         self._dispatch = dispatch if dispatch is not None else target
         if not callable(self._dispatch):
             raise TypeError(f"loopback target is not dispatchable: "
                             f"{target!r}")
+        # binary frames dispatch straight into the target's frame
+        # ingester when it has one (FleetCollector / RelayNode); a
+        # bound-method target (legacy collector.ingest_line) resolves
+        # through its owner
+        owner = getattr(target, "__self__", target)
+        self._dispatch_frame = getattr(owner, "ingest_frame", None)
+        self.supports_frames = callable(self._dispatch_frame)
 
     def send_line(self, line: str) -> Optional[str]:
         return self._dispatch(line)
+
+    def send_frame(self, frame: bytes) -> Optional[str]:
+        if self._dispatch_frame is None:
+            return super().send_frame(frame)
+        return self._dispatch_frame(frame)
 
 
 class TcpTransport(Transport):
@@ -188,17 +325,32 @@ class TcpTransport(Transport):
     #: subsystem label for shipped telemetry (``link.tcp.*``)
     stats_name = "tcp"
 
+    supports_frames = True
+
     def __init__(self, host: str = "127.0.0.1", port: int = 0,
-                 timeout: float = 5.0, metrics=None):
+                 timeout: float = 5.0, metrics=None,
+                 auth_secret: Optional[str] = None,
+                 ssl_context: Optional[_ssl.SSLContext] = None,
+                 tls_ca: Optional[str] = None):
         self.host, self.port = host, port
         self.timeout = timeout
+        # ``auth_secret`` opens EVERY connection — the first and each
+        # idle-reap reconnect — with a shared-secret handshake inside
+        # ``_connect``, so the self-healing retry path re-authenticates
+        # by construction.  ``tls_ca`` (a PEM path pinning the server
+        # cert) or a ready ``ssl_context`` wraps the socket in TLS
+        # before any byte of protocol (auth included) is sent.
+        self.auth_secret = auth_secret
+        self._ssl = (ssl_context if ssl_context is not None
+                     else (make_client_ssl_context(tls_ca)
+                           if tls_ca is not None else None))
         self._sock: Optional[socket.socket] = None
         self._lock = threading.Lock()
         # Plain per-transport counts, maintained even with no registry
         # attached: the request path's at-least-once retries must stay
         # auditable from the transport object alone.
         self.stats = {"connects": 0, "reconnects": 0, "resends": 0,
-                      "bytes_out": 0, "bytes_in": 0}
+                      "bytes_out": 0, "bytes_in": 0, "auths": 0}
         if metrics is None:
             # lazy: repro.link stays importable without repro.obs
             from repro.obs.metrics import default_registry
@@ -209,8 +361,32 @@ class TcpTransport(Transport):
         self._m_bytes_in = metrics.counter("link.tcp.bytes_in")
 
     def _connect(self) -> socket.socket:
-        self._sock = socket.create_connection((self.host, self.port),
-                                              timeout=self.timeout)
+        sock = socket.create_connection((self.host, self.port),
+                                        timeout=self.timeout)
+        if self._ssl is not None:
+            try:
+                sock = self._ssl.wrap_socket(sock,
+                                             server_hostname=self.host)
+            except (OSError, _ssl.SSLError):
+                sock.close()
+                raise
+        if self.auth_secret is not None:
+            try:
+                sock.sendall(encode_auth(self.auth_secret).encode()
+                             + b"\n")
+                reply = recv_reply(sock, timeout=self.timeout)
+            except OSError:
+                sock.close()
+                raise
+            if reply != "ok" and '"kind":"ok"' not in reply:
+                sock.close()
+                # no secret material in the raised message (satellite
+                # contract); the server's error line is equally scrubbed
+                raise AuthError(
+                    f"peer {self.host}:{self.port} rejected "
+                    f"authentication")
+            self.stats["auths"] += 1
+        self._sock = sock
         self.stats["connects"] += 1
         return self._sock
 
@@ -228,7 +404,9 @@ class TcpTransport(Transport):
         # recv_reply returns "" on EOF: the peer closed between our
         # send and its reply — surface it as a connection error so the
         # retry path (or the caller) sees the truth, not an empty ack.
-        reply = recv_reply(sock)
+        # The deadline bounds the whole read: a wedged relay dripping
+        # bytes (or nothing) cannot hang a reporter forever.
+        reply = recv_reply(sock, timeout=self.timeout)
         if reply == "":
             raise ConnectionResetError("peer closed the connection")
         self.stats["bytes_out"] += len(data)
@@ -237,12 +415,13 @@ class TcpTransport(Transport):
         self._m_bytes_in.inc(len(reply))
         return reply
 
-    def send_line(self, line: str) -> Optional[str]:
-        data = line.encode() + b"\n"
+    def _send_retrying(self, data: bytes) -> str:
         with self._lock:
             reused = self._sock is not None
             try:
                 return self._exchange(data)
+            except AuthError:
+                raise           # a rejected credential will not improve
             except OSError:
                 self._drop()
                 if not reused:
@@ -254,6 +433,14 @@ class TcpTransport(Transport):
                 self._m_reconnects.inc()
                 self._m_resends.inc()
                 return self._exchange(data)
+
+    def send_line(self, line: str) -> Optional[str]:
+        return self._send_retrying(line.encode() + b"\n")
+
+    def send_frame(self, frame: bytes) -> Optional[str]:
+        # frames are self-delimiting (length-prefixed header), so the
+        # bytes go out as-is; the reply still rides the line wire
+        return self._send_retrying(frame)
 
     def close(self) -> None:
         with self._lock:

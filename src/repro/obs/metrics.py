@@ -313,6 +313,10 @@ _HEALTH_CHECKS: Tuple[Tuple[str, Tuple[str, ...], str], ...] = (
     ("tune-failures", ("tune.rejected", "tune.applier.failed",
                        "tune.applier.rejected"),
      "tune actions failed or were rejected"),
+    ("relay-drops", ("relay.dropped_reports", "relay.dropped_findings",
+                     "relay.forward_errors"),
+     "a relay tier dropped payloads or failed to forward upstream "
+     "(raise max_pending or shorten relay_flush_interval_s)"),
 )
 
 

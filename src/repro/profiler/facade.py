@@ -366,23 +366,56 @@ class Profiler:
             trace=opts.trace, segments_wire=opts.segments_wire,
             ship_metrics=opts.metrics,
             tune_controller=self._make_tune_controller(),
-            tune_interval_s=opts.tune_interval_s)
+            tune_interval_s=opts.tune_interval_s,
+            dxt_capacity=opts.dxt_capacity)
+        use_relay = (opts.relay_fanout is not None
+                     or opts.relay_depth is not None)
         transport = opts.resolved_transport()
         if transport == "loopback":
-            return simulate_fleet(opts.nranks, workload, collector,
-                                  **kwargs)
+            # simulate_fleet builds the in-process RelayTree itself
+            return simulate_fleet(
+                opts.nranks, workload, collector,
+                relay_fanout=opts.relay_fanout,
+                relay_depth=opts.relay_depth,
+                relay_flush_interval_s=opts.relay_flush_interval_s,
+                **kwargs)
         if transport == "tcp":
             from repro.fleet.collector import CollectorServer
             from repro.link import TcpTransport
             server = CollectorServer(collector,
-                                     idle_timeout_s=opts.idle_timeout_s)
+                                     idle_timeout_s=opts.idle_timeout_s,
+                                     auth_secret=opts.auth_secret,
+                                     ssl_certfile=opts.tls_certfile,
+                                     ssl_keyfile=opts.tls_keyfile)
+            tree = None
             try:
+                if use_relay:
+                    from repro.relay import RelayServerTree, plan_tree
+                    tree = RelayServerTree.build(
+                        "127.0.0.1", server.port,
+                        plan_tree(opts.nranks, fanout=opts.relay_fanout,
+                                  depth=opts.relay_depth),
+                        flush_interval_s=opts.relay_flush_interval_s,
+                        auth_secret=opts.auth_secret, tls_ca=opts.tls_ca,
+                        ssl_certfile=opts.tls_certfile,
+                        ssl_keyfile=opts.tls_keyfile,
+                        idle_timeout_s=opts.idle_timeout_s)
+
+                    def mk(r):
+                        return TcpTransport("127.0.0.1", tree.port_for(r),
+                                            auth_secret=opts.auth_secret,
+                                            tls_ca=opts.tls_ca)
+                else:
+                    def mk(r):
+                        return TcpTransport("127.0.0.1", server.port,
+                                            auth_secret=opts.auth_secret,
+                                            tls_ca=opts.tls_ca)
                 simulate_fleet(
                     opts.nranks, workload, collector, collect=False,
-                    make_transport=lambda r: TcpTransport("127.0.0.1",
-                                                          server.port),
-                    **kwargs)
+                    make_transport=mk, **kwargs)
             finally:
+                if tree is not None:
+                    tree.close()   # leaf-to-root flush into the server
                 server.close()
             return collector.report()
         # spool: ranks append to a shared dir, the façade drains it
@@ -391,12 +424,27 @@ class Profiler:
         from repro.link import SpoolTransport
         spool = opts.spool_dir or tempfile.mkdtemp(prefix="fleet_spool_")
         try:
-            simulate_fleet(
-                opts.nranks, workload, collector, collect=False,
-                make_transport=lambda r: SpoolTransport(
-                    spool, name=f"rank{r:05d}"),
-                **kwargs)
-            collector.ingest_spool(spool)
+            if use_relay:
+                from repro.relay import SpoolRelayTree, plan_tree
+                tree = SpoolRelayTree.build(
+                    spool,
+                    plan_tree(opts.nranks, fanout=opts.relay_fanout,
+                              depth=opts.relay_depth),
+                    flush_interval_s=opts.relay_flush_interval_s)
+                simulate_fleet(
+                    opts.nranks, workload, collector, collect=False,
+                    make_transport=lambda r: SpoolTransport(
+                        tree.spool_dir_for(r), name=f"rank{r:05d}"),
+                    **kwargs)
+                tree.close()        # cascading pumps: leaf -> collector
+                collector.ingest_spool(tree.collector_dir)
+            else:
+                simulate_fleet(
+                    opts.nranks, workload, collector, collect=False,
+                    make_transport=lambda r: SpoolTransport(
+                        spool, name=f"rank{r:05d}"),
+                    **kwargs)
+                collector.ingest_spool(spool)
         finally:
             if opts.spool_dir is None:
                 shutil.rmtree(spool, ignore_errors=True)
@@ -420,11 +468,22 @@ class Profiler:
             segments_wire=opts.segments_wire,
             ship_metrics=opts.metrics,
             tune_controller=self._make_tune_controller(),
-            tune_interval_s=opts.tune_interval_s)
+            tune_interval_s=opts.tune_interval_s,
+            relay_fanout=opts.relay_fanout,
+            relay_depth=opts.relay_depth,
+            relay_flush_interval_s=opts.relay_flush_interval_s,
+            dxt_capacity=opts.dxt_capacity)
         if opts.resolved_transport() == "tcp":
             from repro.fleet.collector import CollectorServer
+            kwargs.update(auth_secret=opts.auth_secret,
+                          tls_certfile=opts.tls_certfile,
+                          tls_keyfile=opts.tls_keyfile,
+                          tls_ca=opts.tls_ca)
             server = CollectorServer(collector,
-                                     idle_timeout_s=opts.idle_timeout_s)
+                                     idle_timeout_s=opts.idle_timeout_s,
+                                     auth_secret=opts.auth_secret,
+                                     ssl_certfile=opts.tls_certfile,
+                                     ssl_keyfile=opts.tls_keyfile)
             try:
                 return run_spawned_fleet(
                     opts.nranks, workload, collector, transport="tcp",

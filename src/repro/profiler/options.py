@@ -93,6 +93,25 @@ class ProfilerOptions:
     tune_dry_run: bool = False            # deliver + audit, change nothing
     tune_cooldown_s: float = 2.0          # per (policy, kind, rank) pacing
     tune_interval_s: float = 0.1          # rank poll / local loop cadence
+    # ------------------------------------------------------------ relay
+    # hierarchical collection (repro.relay): interpose a tree of relay
+    # nodes between the ranks and the collector — ``relay_fanout``
+    # bounds children per node, ``relay_depth`` fixes the tier count
+    # (either alone plans a balanced tree).  Fleet mode only.
+    relay_fanout: Optional[int] = None
+    relay_depth: Optional[int] = None
+    relay_flush_interval_s: float = 0.05  # per-tier rollup cadence
+    # per-rank DXT ring capacity for simulated fleets (None = runtime
+    # default, 1M segments — cap it when simulating hundreds of ranks)
+    dxt_capacity: Optional[int] = None
+    # transport security (tcp only): ``auth_secret`` requires an HMAC
+    # handshake to open every connection; ``tls_certfile``/
+    # ``tls_keyfile`` wrap listeners in TLS, ``tls_ca`` pins the cert
+    # clients verify (self-signed deployments pass the same cert file)
+    auth_secret: Optional[str] = None
+    tls_certfile: Optional[str] = None
+    tls_keyfile: Optional[str] = None
+    tls_ca: Optional[str] = None
 
     def __post_init__(self):
         # fleet_ranks is the public alias the spawn path documents;
@@ -227,6 +246,28 @@ class ProfilerOptions:
         if self.fleet_timeout_s <= 0:
             raise ProfilerOptionsError(
                 f"fleet_timeout_s must be > 0, got {self.fleet_timeout_s}")
+        if self.relay_fanout is not None and self.relay_fanout < 2:
+            raise ProfilerOptionsError(
+                f"relay_fanout must be >= 2, got {self.relay_fanout}")
+        if self.relay_depth is not None and self.relay_depth < 1:
+            raise ProfilerOptionsError(
+                f"relay_depth must be >= 1, got {self.relay_depth}")
+        if self.relay_flush_interval_s <= 0:
+            raise ProfilerOptionsError(
+                f"relay_flush_interval_s must be > 0, got "
+                f"{self.relay_flush_interval_s}")
+        if self.dxt_capacity is not None and self.dxt_capacity < 1:
+            raise ProfilerOptionsError(
+                f"dxt_capacity must be >= 1, got {self.dxt_capacity}")
+        if (self.tls_certfile is None) != (self.tls_keyfile is None):
+            raise ProfilerOptionsError(
+                "tls_certfile and tls_keyfile must be set together")
+        if (self.auth_secret is not None or self.tls_certfile is not None
+                or self.tls_ca is not None):
+            if self.mode != "fleet" or self.resolved_transport() != "tcp":
+                raise ProfilerOptionsError(
+                    "auth_secret/tls_* secure the tcp transport; they "
+                    "require mode='fleet' with transport='tcp'")
         if self.mode == "fleet":
             if self.nranks < 1:
                 raise ProfilerOptionsError(
@@ -247,7 +288,8 @@ class ProfilerOptions:
         else:
             for fleet_only in ("fleet_detectors", "clock_skew_s",
                                "fleet_ranks", "transport", "spool_dir",
-                               "mp_start_method"):
+                               "mp_start_method", "relay_fanout",
+                               "relay_depth", "dxt_capacity"):
                 if getattr(self, fleet_only) is not None:
                     raise ProfilerOptionsError(
                         f"{fleet_only} is a fleet-mode option but "

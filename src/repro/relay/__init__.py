@@ -1,0 +1,37 @@
+"""repro.relay — hierarchical collection trees and the binary column
+wire.
+
+tf-Darshan's analysis plane aggregates every rank's instrumentation;
+at the ROADMAP's target scale the flat JSON-line collection path is
+the bottleneck (the codec dominates transport cost — ``bench_link``).
+This package is the scaling story from dozens of ranks to thousands:
+
+  * ``frames``   — binary column frames: fleet messages whose
+    ``SegmentColumns`` batches ride as raw little-endian numpy buffers
+    (delta-transformed + byte-shuffled + zlib'd), length-prefixed,
+    checksummed, negotiated via the hello ``caps`` mechanism with a
+    JSON-columns fallback for old peers.
+  * ``node``     — ``RelayNode`` / ``RelayServer``: an intermediate
+    collector tier that accepts N downstream reporters (or relays),
+    aligns and merges their columnar batches, and forwards compacted
+    ``relay_report`` rollups upstream on a cadence — bounded queues,
+    ``busy`` backpressure, and every drop accounted in ``relay.*``
+    counters and ``FleetReport.relay``.
+  * ``topology`` — ``plan_tree`` + tree builders for every launch
+    path: loopback (``RelayTree``), TCP with TLS + shared-secret auth
+    (``RelayServerTree``), and spool directories (``SpoolRelayTree``).
+
+Plumbed through ``ProfilerOptions(relay_fanout=..., relay_depth=...)``,
+``simulate_fleet``, and ``run_spawned_fleet``.
+"""
+from repro.relay.frames import (FRAME_VERSION, WIRE_DTYPE, decode_frame,
+                                encode_frame, is_frame)
+from repro.relay.node import RelayNode, RelayServer
+from repro.relay.topology import (RelayServerTree, RelayTree,
+                                  SpoolRelayTree, TreeSpec, plan_tree)
+
+__all__ = [
+    "FRAME_VERSION", "WIRE_DTYPE", "decode_frame", "encode_frame",
+    "is_frame", "RelayNode", "RelayServer", "RelayServerTree",
+    "RelayTree", "SpoolRelayTree", "TreeSpec", "plan_tree",
+]

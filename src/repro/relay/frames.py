@@ -1,0 +1,315 @@
+"""Binary column frames: fleet messages with raw segment buffers.
+
+The JSON line wire serializes every trace segment's eight fields into
+decimal text — ``bench_link`` shows that codec, not the socket, is
+where collection time goes at scale.  A *frame* keeps the message
+envelope (kind / rank / payload) as a small JSON meta block but ships
+each ``SegmentColumns`` batch as its structured numpy buffer, raw
+little-endian, straight out of ``TraceStore``'s ring: encode is one
+``tobytes`` per batch (a no-op view on little-endian hosts), decode is
+one ``frombuffer`` — near-zero-copy in both directions.
+
+Frame layout (framing constants live in ``repro.link.transport`` so
+every transport/server can carry frames without importing this
+module)::
+
+    FRAME_HEAD (24 B): magic "RFR1" | ver u8 | flags u8 | rsvd u16
+                       | meta_len u32 | data_len u64 | crc32 u32
+    meta block  (meta_len B): JSON — {v, kind, rank, payload, batches}
+    data block  (data_len B): concatenated SEG_DTYPE column buffers
+
+``SegmentColumns`` values inside the payload are replaced by
+``{"__frame_batch__": i}`` markers; ``batches[i]`` in the meta block
+carries the row count, the interned string tables, and the buffer's
+[off, len) within the data block.  ``flags`` bit0 / bit1 mark the meta
+/ data blocks as zlib-compressed (on by default: segment columns are
+highly repetitive, and compression is where the wire's ~10x size win
+over JSON columns comes from).  The crc32 covers header[4:20] + both
+stored blocks, so any bit flip — header, meta, or data — fails loudly.
+
+Every malformation decodes to ``WireError`` (the contract shared with
+the line codec): bad magic, unsupported version, truncation, checksum
+mismatch, non-JSON meta, unknown kind, or batch descriptors that don't
+tile the data block.
+"""
+from __future__ import annotations
+
+import json
+import zlib
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.link.messages import LINK_VERSION, Message, WireError, known_kind
+from repro.link.transport import (FRAME_HEAD, FRAME_MAGIC, MAX_FRAME_BYTES,
+                                  frame_total_len)
+from repro.trace import SEG_DTYPE, SegmentColumns
+
+FRAME_VERSION = 1
+
+#: the on-wire layout: SEG_DTYPE pinned little-endian (a zero-copy view
+#: on LE hosts, i.e. every platform this repo targets; a byteswapping
+#: astype on BE ones)
+WIRE_DTYPE = np.dtype([(name, SEG_DTYPE[name].newbyteorder("<"))
+                       for name in SEG_DTYPE.names])
+
+_F_META_Z = 0x01
+_F_DATA_Z = 0x02
+_F_DELTA = 0x04
+
+#: compress blocks only when it actually shrinks them beyond this many
+#: bytes of savings — tiny control frames skip the zlib round-trip
+_COMPRESS_MIN_GAIN = 64
+
+MARKER = "__frame_batch__"
+
+_DELTA_INT_FIELDS = ("offset", "length", "thread")
+_DELTA_FLOAT_FIELDS = ("start", "end")
+
+
+def _delta_encode(data: np.ndarray) -> np.ndarray:
+    """Column-wise delta transform (bit-exact reversible) that turns the
+    near-arithmetic sequences trace columns actually are — monotonic
+    offsets, ticking timestamps — into low-entropy byte runs zlib can
+    crush.  Ints become wrapping first differences; floats become
+    XOR-deltas of their raw bit patterns (Gorilla-style), which is
+    exactly invertible where a float subtraction would not be."""
+    out = data.copy()
+    with np.errstate(over="ignore"):
+        for f in _DELTA_INT_FIELDS:
+            col = data[f]
+            out[f][1:] = col[1:] - col[:-1]
+    for f in _DELTA_FLOAT_FIELDS:
+        bits = data[f].view(np.uint64)
+        d = out[f].view(np.uint64)
+        d[1:] = np.bitwise_xor(bits[1:], bits[:-1])
+    return out
+
+
+def _delta_decode(data: np.ndarray) -> np.ndarray:
+    out = data.copy()
+    with np.errstate(over="ignore"):
+        for f in _DELTA_INT_FIELDS:
+            np.cumsum(data[f], out=out[f])
+    for f in _DELTA_FLOAT_FIELDS:
+        d = out[f].view(np.uint64)
+        np.bitwise_xor.accumulate(data[f].view(np.uint64), out=d)
+    return out
+
+
+def _pack_transformed(arr: np.ndarray) -> bytes:
+    """The compressed-path batch layout: delta-encoded columns stored
+    field-major with their bytes transposed (Blosc-style shuffle), so
+    each delta's near-constant high bytes form long runs for zlib.
+    Same total size as the row-major layout (n * itemsize)."""
+    out = _delta_encode(arr)
+    n = len(arr)
+    parts = []
+    for name in SEG_DTYPE.names:
+        col = np.ascontiguousarray(out[name].astype(
+            WIRE_DTYPE[name], copy=False))
+        w = col.dtype.itemsize
+        parts.append(np.ascontiguousarray(
+            col.view(np.uint8).reshape(n, w).T).tobytes())
+    return b"".join(parts)
+
+
+def _unpack_transformed(buf: bytes, n: int) -> np.ndarray:
+    arr = np.empty(n, dtype=SEG_DTYPE)
+    off = 0
+    for name in SEG_DTYPE.names:
+        w = SEG_DTYPE[name].itemsize
+        shuffled = np.frombuffer(buf, dtype=np.uint8, count=n * w,
+                                 offset=off)
+        off += n * w
+        col = np.ascontiguousarray(shuffled.reshape(w, n).T)
+        arr[name] = col.reshape(-1).view(WIRE_DTYPE[name])
+    return _delta_decode(arr)
+
+
+def _extract_batches(obj, batches: List[SegmentColumns]):
+    """payload with every SegmentColumns replaced by a MARKER dict;
+    the batches list collects them in marker order."""
+    if isinstance(obj, SegmentColumns):
+        batches.append(obj)
+        return {MARKER: len(batches) - 1}
+    if isinstance(obj, dict):
+        return {k: _extract_batches(v, batches) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_extract_batches(v, batches) for v in obj]
+    return obj
+
+
+def _restore_batches(obj, batches: List[SegmentColumns]):
+    if isinstance(obj, dict):
+        if MARKER in obj:
+            i = obj[MARKER]
+            if not isinstance(i, int) or not 0 <= i < len(batches):
+                raise WireError(f"frame meta references batch {i!r}, "
+                                f"frame carries {len(batches)}")
+            return batches[i]
+        return {k: _restore_batches(v, batches) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_restore_batches(v, batches) for v in obj]
+    return obj
+
+
+def _maybe_compress(block: bytes) -> Tuple[bytes, bool]:
+    z = zlib.compress(block, 6)
+    if len(z) + _COMPRESS_MIN_GAIN < len(block):
+        return z, True
+    return block, False
+
+
+def encode_frame(kind: str, rank: int = 0, payload: Optional[dict] = None,
+                 compress: bool = True) -> bytes:
+    """One binary frame.  ``payload`` may carry ``SegmentColumns``
+    values anywhere (nested in dicts/lists); each rides as a raw column
+    buffer in the data block instead of JSON text."""
+    if not known_kind(kind):
+        raise WireError(f"unknown kind: {kind!r}")
+    batches: List[SegmentColumns] = []
+    wire_payload = _extract_batches(
+        payload if payload is not None else {}, batches)
+    descs = []
+    parts = []
+    off = 0
+    for b in batches:
+        c = b.compact()
+        arr = np.ascontiguousarray(c.data)
+        buf = (_pack_transformed(arr) if compress
+               else arr.astype(WIRE_DTYPE, copy=False).tobytes())
+        descs.append({"n": len(c), "off": off, "len": len(buf),
+                      "tables": {"module": list(c.modules),
+                                 "path": list(c.paths),
+                                 "op": list(c.ops)}})
+        parts.append(buf)
+        off += len(buf)
+    data = b"".join(parts)
+    meta = json.dumps({"v": LINK_VERSION, "kind": kind, "rank": rank,
+                       "payload": wire_payload, "batches": descs},
+                      separators=(",", ":")).encode("utf-8")
+    flags = 0
+    if compress:
+        meta, mz = _maybe_compress(meta)
+        data, dz = _maybe_compress(data)
+        flags = ((_F_META_Z if mz else 0) | (_F_DATA_Z if dz else 0)
+                 | (_F_DELTA if batches else 0))
+    total = FRAME_HEAD.size + len(meta) + len(data)
+    if total > MAX_FRAME_BYTES:
+        raise WireError(f"frame of {total} bytes exceeds MAX_FRAME_BYTES")
+    head = FRAME_HEAD.pack(FRAME_MAGIC, FRAME_VERSION, flags, 0,
+                           len(meta), len(data), 0)
+    crc = zlib.crc32(head[4:20])
+    crc = zlib.crc32(meta, crc)
+    crc = zlib.crc32(data, crc)
+    return FRAME_HEAD.pack(FRAME_MAGIC, FRAME_VERSION, flags, 0,
+                           len(meta), len(data), crc) + meta + data
+
+
+def _decode_batch(desc, data: bytes, delta: bool) -> SegmentColumns:
+    if not isinstance(desc, dict):
+        raise WireError(f"bad batch descriptor: {desc!r}")
+    n, off, length = desc.get("n"), desc.get("off"), desc.get("len")
+    if not all(isinstance(v, int) and v >= 0 for v in (n, off, length)):
+        raise WireError(f"bad batch descriptor: {desc!r}")
+    if off + length > len(data):
+        raise WireError(
+            f"batch [{off}:{off + length}) overruns the {len(data)}-byte "
+            f"data block")
+    if n * WIRE_DTYPE.itemsize != length:
+        raise WireError(
+            f"batch declares {n} rows but {length} bytes "
+            f"({WIRE_DTYPE.itemsize} B/row)")
+    if delta:
+        arr = _unpack_transformed(data[off:off + length], n)
+    else:
+        arr = np.frombuffer(data, dtype=WIRE_DTYPE, count=n,
+                            offset=off).astype(SEG_DTYPE, copy=False)
+    tables = desc.get("tables") or {}
+    cols = SegmentColumns(arr, tuple(tables.get("module", ())),
+                          tuple(tables.get("path", ())),
+                          tuple(tables.get("op", ())))
+    if n:
+        # the same id-range validation SegmentColumns.from_wire applies:
+        # a corrupt table must fail here, not index-error in a consumer
+        for field, table in (("module", cols.modules),
+                             ("path", cols.paths), ("op", cols.ops)):
+            ids = arr[field]
+            lo, hi = int(ids.min()), int(ids.max())
+            if lo < 0 or hi >= len(table):
+                raise WireError(
+                    f"{field} id out of range: [{lo}, {hi}] vs table "
+                    f"of {len(table)}")
+    return cols
+
+
+def decode_frame(frame: bytes) -> Message:
+    """Parse one frame into a ``Message`` whose payload carries real
+    ``SegmentColumns`` instances.  Raises ``WireError`` on any
+    malformation — truncation, checksum mismatch, bad meta, bad batch
+    geometry."""
+    if len(frame) < FRAME_HEAD.size:
+        raise WireError(
+            f"truncated frame: {len(frame)} bytes < {FRAME_HEAD.size}-byte "
+            f"header")
+    try:
+        total = frame_total_len(frame[:FRAME_HEAD.size])
+    except ValueError as e:
+        raise WireError(str(e)) from e
+    magic, ver, flags, _rsvd, meta_len, data_len, crc = \
+        FRAME_HEAD.unpack(frame[:FRAME_HEAD.size])
+    if ver > FRAME_VERSION:
+        raise WireError(
+            f"unsupported frame version v{ver}, this process supports "
+            f"<= v{FRAME_VERSION}")
+    if len(frame) != total:
+        raise WireError(
+            f"frame length mismatch: header declares {total} bytes, "
+            f"got {len(frame)}")
+    meta = frame[FRAME_HEAD.size:FRAME_HEAD.size + meta_len]
+    data = frame[FRAME_HEAD.size + meta_len:total]
+    want = zlib.crc32(frame[4:20])
+    want = zlib.crc32(meta, want)
+    want = zlib.crc32(data, want)
+    if want != crc:
+        raise WireError(
+            f"frame checksum mismatch: header says {crc:#010x}, "
+            f"content is {want:#010x}")
+    try:
+        if flags & _F_META_Z:
+            meta = zlib.decompress(meta)
+        if flags & _F_DATA_Z:
+            data = zlib.decompress(data)
+    except zlib.error as e:
+        raise WireError(f"bad frame compression: {e}") from e
+    try:
+        obj = json.loads(meta.decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise WireError(f"bad frame meta (not JSON: {e})") from e
+    if not isinstance(obj, dict):
+        raise WireError("frame meta is not a message object")
+    v = obj.get("v")
+    if not isinstance(v, int) or v < 1 or v > LINK_VERSION:
+        raise WireError(f"bad frame meta field 'v': {v!r}")
+    kind = obj.get("kind")
+    if not isinstance(kind, str) or not known_kind(kind):
+        raise WireError(f"unknown kind in frame meta: {kind!r}")
+    rank = obj.get("rank")
+    if not isinstance(rank, int) or isinstance(rank, bool) or rank < 0:
+        raise WireError(f"bad frame meta field 'rank': {rank!r}")
+    payload = obj.get("payload")
+    if not isinstance(payload, dict):
+        raise WireError("bad frame meta field 'payload': must be an object")
+    descs = obj.get("batches", [])
+    if not isinstance(descs, list):
+        raise WireError("bad frame meta field 'batches': must be a list")
+    batches = [_decode_batch(d, data, bool(flags & _F_DELTA))
+               for d in descs]
+    return Message(kind=kind, rank=rank,
+                   payload=_restore_batches(payload, batches), v=v)
+
+
+def is_frame(buf: bytes) -> bool:
+    """True when ``buf`` opens with the frame magic."""
+    return buf[:len(FRAME_MAGIC)] == FRAME_MAGIC

@@ -1,0 +1,490 @@
+"""RelayNode: an intermediate collection tier.
+
+A flat fleet points every rank at one ``FleetCollector``; past a few
+hundred ranks the collector's ingest thread pool and the root link
+become the bottleneck (ROADMAP item 1 — aggregation topology, not
+instrumentation, is what limits observability at scale).  A
+``RelayNode`` sits between: it speaks the collector's wire downstream
+(hello / clock / report / findings / bye, lines or binary frames), so
+a ``RankReporter`` cannot tell a relay from the real collector, and it
+speaks a reporter's wire upstream, so a collector (or another relay —
+trees compose) cannot tell a relay from a rank.  What changes is the
+shape of the traffic: N downstream reports become batched
+``relay_report`` rollups on a cadence, segments ride merged/compacted
+columnar batches, and the root link carries one connection per relay
+instead of one per rank.
+
+Clock alignment composes tier by tier: ranks handshake against their
+relay (the relay answers ``clock`` on its own clock), the relay aligns
+their segments onto its clock at ingest, handshakes against ITS
+upstream, and forwards with the relay->upstream offset — so segments
+arrive at the root on the root's clock no matter how deep the tree.
+One-way (spool) reports carrying wall offsets are forwarded unshifted:
+wall time is tier-independent, and the root pivots them exactly as a
+flat fleet would.
+
+Backpressure and drop accounting: the pending-rollup queue is bounded.
+A ``report`` that arrives while it is full is answered with ``busy``
+(+ ``retry_after_s``) and NOT enqueued — the reporter retries, and a
+relay whose upstream has stalled propagates ``busy`` downstream within
+one flush interval.  Nothing is dropped silently: every payload that
+is lost (upstream send failed and the re-queue overflowed, or close()
+could not flush) is counted in ``stats`` / ``relay.*`` obs counters,
+shipped upstream inside every rollup, and surfaced in
+``FleetReport.relay`` — the "zero unaccounted drops" invariant CI
+checks at 1000 ranks.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional
+
+from repro.link import (LINK_VERSION, Endpoint, LineServer, Message,
+                        WireError, as_transport, check_hello, decode, encode)
+from repro.relay import frames as relay_frames
+
+_STAT_KEYS = ("reports_in", "reports_forwarded", "findings_in",
+              "findings_forwarded", "busy_replies", "dropped_reports",
+              "dropped_findings", "forward_errors", "errors", "frames_in",
+              "lines_in", "hellos", "byes", "proxied", "rollups")
+
+
+class RelayNode:
+    """One relay tier node.  ``upstream`` is any ``repro.link``
+    transport (or legacy callable) pointing at the parent collector or
+    relay; ``start()`` negotiates with it and begins the flush cadence,
+    ``close()`` flushes what is pending and accounts every failure."""
+
+    def __init__(self, upstream=None, name: str = "relay0",
+                 flush_interval_s: float = 0.25, max_pending: int = 256,
+                 max_batch: int = 64, metrics=None):
+        self.name = name
+        self.upstream = as_transport(upstream) if upstream is not None \
+            else None
+        self.flush_interval_s = flush_interval_s
+        self.max_pending = max_pending
+        self.max_batch = max_batch
+        self._t0 = time.perf_counter()
+        #: wall-clock anchor: time.time() at this relay's clock zero —
+        #: relay clock + wall_t0 = wall time (the one-way upstream path)
+        self.wall_t0 = time.time()
+        self.stats: Dict[str, int] = {k: 0 for k in _STAT_KEYS}
+        if metrics is None:
+            from repro.obs.metrics import default_registry
+            metrics = default_registry()
+        self.metrics = metrics
+        self._pending: List[dict] = []
+        self._lock = threading.Lock()
+        # stats shipped by DOWNSTREAM relays, merged into our rollups so
+        # the root sees the whole tree's accounting: name -> stats dict
+        self._child_stats: Dict[str, dict] = {}
+        # rank identity (pid/host) arrives only in the hello; stamp it
+        # into rollup entries or the collector would lose it behind a
+        # relay tier: rank -> {"pid": ..., "host": ...}
+        self._idents: Dict[int, dict] = {}
+        self._up_caps: tuple = ()
+        self._up_offset: Optional[float] = None
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.endpoint = Endpoint(context=self, handlers={
+            "hello": RelayNode._msg_hello,
+            "clock": RelayNode._msg_clock,
+            "report": RelayNode._msg_report,
+            "findings": RelayNode._msg_findings,
+            "relay_report": RelayNode._msg_relay_report,
+            "bye": RelayNode._msg_bye,
+            "clock_reply": RelayNode._msg_ack,
+            "ok": RelayNode._msg_ack,
+        }, default=RelayNode._msg_proxy)
+
+    # ------------------------------------------------------------- clock
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def _bump(self, key: str, by: int = 1) -> None:
+        with self._lock:
+            self.stats[key] += by
+        self.metrics.counter(f"relay.{key}").inc(by)
+
+    # --------------------------------------------------------- lifecycle
+    def start(self) -> "RelayNode":
+        """Negotiate with the upstream (hello caps + clock handshake on
+        duplex transports) and start the flush cadence."""
+        if self.upstream is not None:
+            self._hello_upstream()
+            if self.upstream.duplex:
+                self._handshake_upstream()
+        if self._thread is None:
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self._flush_loop, name=f"relay-{self.name}",
+                daemon=True)
+            self._thread.start()
+        return self
+
+    def close(self) -> None:
+        """Stop the cadence, flush what is pending, account what could
+        not be flushed (``dropped_reports``) — never silently."""
+        if self._thread is not None:
+            self._stop.set()
+            self._thread.join(timeout=10)
+            self._thread = None
+        self.flush()
+        with self._lock:
+            leftovers = len(self._pending)
+            self._pending = []
+        if leftovers:
+            self._bump("dropped_reports", leftovers)
+        if self.upstream is not None:
+            try:
+                self.upstream.send_line(encode("bye", 0,
+                                               {"relay": self.name}))
+            except (OSError, ValueError):
+                pass
+
+    def __enter__(self) -> "RelayNode":
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # ---------------------------------------------------------- upstream
+    def _hello_upstream(self) -> None:
+        import os
+        import socket as _socket
+        line = encode("hello", 0, {
+            "nprocs": 0, "pid": os.getpid(),
+            "host": _socket.gethostname(),
+            "link_v": LINK_VERSION,
+            # relays do not own a rank: the collector must not open a
+            # rank slice for this hello
+            "relay": True, "relay_name": self.name})
+        reply = self.upstream.send_line(line)
+        if reply is None:
+            return                       # one-way (spool) upstream
+        if not reply.startswith("{"):
+            if reply.startswith("error"):
+                raise WireError(
+                    f"upstream rejected relay {self.name!r} hello: "
+                    f"{reply}")
+            return                       # bare legacy ack: v1, no caps
+        msg = decode(reply)
+        if msg.kind == "error":
+            raise WireError(f"upstream rejected relay {self.name!r} "
+                            f"hello: {msg.payload.get('error')}")
+        if msg.kind == "hello":
+            check_hello(msg.payload, side="upstream")
+            self._up_caps = tuple(msg.payload.get("caps") or ())
+
+    def _handshake_upstream(self, rounds: int = 5) -> float:
+        best_rtt = float("inf")
+        best = 0.0
+        for _ in range(max(rounds, 1)):
+            t_send = self.now()
+            reply = self.upstream.send_line(
+                encode("clock", 0, {"t_send": t_send}))
+            t_recv = self.now()
+            if not reply or not reply.startswith("{"):
+                continue
+            msg = decode(reply)
+            if msg.kind != "clock_reply":
+                continue
+            rtt = t_recv - t_send
+            if rtt < best_rtt:
+                best_rtt = rtt
+                best = float(msg.payload["t_coll"]) - (t_send + t_recv) / 2
+        if best_rtt == float("inf"):
+            raise RuntimeError(
+                f"relay {self.name!r}: upstream clock handshake failed")
+        self._up_offset = best
+        return best
+
+    @property
+    def _up_frames(self) -> bool:
+        return (self.upstream is not None and self.upstream.supports_frames
+                and "frames" in self._up_caps)
+
+    # ------------------------------------------------------------ ingest
+    def ingest_line(self, line: str) -> Optional[str]:
+        self._bump("lines_in")
+        return self.endpoint.dispatch_line(line)
+
+    def ingest_frame(self, frame: bytes) -> Optional[str]:
+        """One binary frame from downstream (LineServer ``frame_handler``
+        / loopback ``send_frame``); the decoded message dispatches
+        through the same endpoint as a line."""
+        self._bump("frames_in")
+        result = self.endpoint.dispatch(relay_frames.decode_frame(frame))
+        if result is None:
+            return None
+        if isinstance(result, Message):
+            return result.encode()
+        return result
+
+    def pump_spool(self, reader) -> int:
+        """Drain a downstream spool tier (replies are meaningless on a
+        one-way medium and discarded).  Corrupt lines are counted, not
+        fatal — exactly the collector's drain contract."""
+        n = 0
+        for line in reader.poll():
+            try:
+                self.ingest_line(line)
+            except WireError:
+                self._bump("errors")
+                continue
+            n += 1
+        return n
+
+    # ------------------------------------------------------------- verbs
+    @staticmethod
+    def _msg_hello(endpoint, msg: Message) -> str:
+        self = endpoint.context
+        check_hello(msg.payload, side=f"rank {msg.rank}")
+        if not msg.payload.get("relay"):
+            with self._lock:
+                self._idents[msg.rank] = {
+                    "pid": int(msg.payload.get("pid", 0)),
+                    "host": str(msg.payload.get("host", ""))}
+        self._bump("hellos")
+        return encode("hello", msg.rank,
+                      {"link_v": LINK_VERSION,
+                       "caps": ["segments_columns", "frames"]})
+
+    @staticmethod
+    def _msg_clock(endpoint, msg: Message) -> str:
+        self = endpoint.context
+        return encode("clock_reply", msg.rank, {"t_coll": self.now()})
+
+    @staticmethod
+    def _msg_report(endpoint, msg: Message):
+        self = endpoint.context
+        entry = self._make_entry(msg.rank, msg.payload)
+        self._bump("reports_in")
+        return self._enqueue([entry], busy_rank=msg.rank)
+
+    @staticmethod
+    def _msg_relay_report(endpoint, msg: Message):
+        """A downstream relay's rollup: entries are already aligned onto
+        that relay's clock and carry its offset to us — re-align onto
+        OUR clock at ingest, exactly like a report, and absorb the
+        subtree's stats so the root sees the whole tree."""
+        self = endpoint.context
+        p = msg.payload
+        relay_info = p.get("relay") or {}
+        name = str(relay_info.get("name") or f"relay@{msg.rank}")
+        with self._lock:
+            self._child_stats[name] = dict(relay_info.get("stats") or {})
+            for child, stats in (relay_info.get("children") or {}).items():
+                self._child_stats[str(child)] = dict(stats or {})
+        entries = [self._make_entry(int(e.get("rank", 0)), e)
+                   for e in p.get("reports", [])]
+        self._bump("reports_in", len(entries))
+        return self._enqueue(entries, busy_rank=msg.rank)
+
+    @staticmethod
+    def _msg_findings(endpoint, msg: Message) -> str:
+        """Streamed findings forward upstream immediately — mid-run
+        latency is their whole point; a flush-cadence delay per tier
+        would defeat it.  Best-effort: a failed forward is counted."""
+        self = endpoint.context
+        n = len(msg.payload.get("findings", []))
+        self._bump("findings_in", n)
+        if self.upstream is not None:
+            try:
+                self.upstream.send_line(msg.encode())
+                self._bump("findings_forwarded", n)
+            except (OSError, ValueError):
+                self._bump("dropped_findings", n)
+                self._bump("forward_errors")
+        return "ok"
+
+    @staticmethod
+    def _msg_bye(endpoint, msg: Message) -> str:
+        endpoint.context._bump("byes")
+        return "ok"
+
+    @staticmethod
+    def _msg_ack(endpoint, msg: Message) -> str:
+        return "ok"
+
+    @staticmethod
+    def _msg_proxy(endpoint, msg: Message):
+        """Unknown verbs (tune polls, metrics queries, third-party
+        extensions) proxy upstream synchronously and the reply comes
+        back verbatim — the closed loop works through a tree."""
+        self = endpoint.context
+        if self.upstream is None or not self.upstream.duplex:
+            return "ok"
+        self._bump("proxied")
+        try:
+            reply = self.upstream.send_line(msg.encode())
+        except (OSError, ValueError) as e:
+            self._bump("forward_errors")
+            return f"error: relay proxy failed: {e}"
+        return reply
+
+    # ----------------------------------------------------------- merging
+    def _make_entry(self, rank: int, payload: dict) -> dict:
+        """Normalize one report payload for the rollup queue: segments
+        decoded to one ``SegmentColumns`` (whatever wire shape they
+        rode), aligned onto this relay's clock when the producer
+        measured a handshake offset against us, left on wall offsets
+        (tier-independent) otherwise."""
+        from repro.fleet import payloads
+        entry = {k: v for k, v in payload.items()
+                 if k not in ("segments", "segments_columns")}
+        entry["rank"] = rank
+        ident = self._idents.get(rank)
+        if ident is not None and "pid" not in entry:
+            entry.update(ident)
+        segments = payloads.decode_report_segments(payload)
+        clock = payload.get("clock") or {}
+        offset = clock.get("offset_s")
+        if offset is not None:
+            entry["segments_columns"] = segments.shift_time(
+                float(offset)).sorted_by_start().compact()
+            entry["_aligned"] = True
+        else:
+            entry["segments_columns"] = segments.compact()
+            entry["_aligned"] = False
+        return entry
+
+    def _enqueue(self, entries: List[dict], busy_rank: int = 0):
+        with self._lock:
+            room = self.max_pending - len(self._pending)
+            if room < len(entries):
+                accepted = False
+            else:
+                self._pending.extend(entries)
+                accepted = True
+        if not accepted:
+            self._bump("busy_replies")
+            return encode("busy", busy_rank,
+                          {"retry_after_s": self.flush_interval_s,
+                           "relay": self.name})
+        return "ok"
+
+    # ------------------------------------------------------------- flush
+    def _flush_loop(self) -> None:
+        while not self._stop.wait(self.flush_interval_s):
+            self.flush()
+
+    def flush(self) -> int:
+        """Ship pending rollups upstream; returns how many report
+        entries went out.  On failure the batch re-queues (bounded) and
+        the overflow is counted as dropped."""
+        if self.upstream is None:
+            return 0
+        sent = 0
+        while True:
+            with self._lock:
+                batch = self._pending[:self.max_batch]
+                del self._pending[:len(batch)]
+            if not batch:
+                return sent
+            if not self._ship_rollup(batch):
+                with self._lock:
+                    room = self.max_pending - len(self._pending)
+                    requeued = batch[:room]
+                    self._pending[:0] = requeued
+                dropped = len(batch) - len(requeued)
+                if dropped:
+                    self._bump("dropped_reports", dropped)
+                return sent
+            sent += len(batch)
+            self._bump("reports_forwarded", len(batch))
+            self._bump("rollups")
+
+    def _rollup_payload(self, batch: List[dict], wire: str) -> dict:
+        from repro.fleet import payloads
+        reports = []
+        for entry in batch:
+            e = {k: v for k, v in entry.items() if k != "_aligned"}
+            if entry["_aligned"]:
+                # aligned onto our clock at ingest: forward with OUR
+                # offset to the upstream (duplex) or our wall anchor
+                # (one-way) so alignment composes tier by tier
+                if self._up_offset is not None:
+                    e["clock"] = {"offset_s": self._up_offset}
+                else:
+                    e["clock"] = {"wall_offset_s": self.wall_t0}
+            if wire == "json":
+                e["segments_columns"] = payloads.encode_segments_columns(
+                    e["segments_columns"])
+            reports.append(e)
+        with self._lock:
+            stats = dict(self.stats)
+            children = {k: dict(v) for k, v in self._child_stats.items()}
+        # the shipped snapshot counts the batch it rides with (the
+        # counters bump after a confirmed send; without this the root
+        # would always lag one rollup behind)
+        stats["reports_forwarded"] += len(batch)
+        stats["rollups"] += 1
+        return {"reports": reports,
+                "relay": {"name": self.name, "stats": stats,
+                          "children": children}}
+
+    def _ship_rollup(self, batch: List[dict]) -> bool:
+        try:
+            if self._up_frames:
+                frame = relay_frames.encode_frame(
+                    "relay_report", 0, self._rollup_payload(batch, "cols"))
+                reply = self.upstream.send_frame(frame)
+            else:
+                reply = self.upstream.send_line(encode(
+                    "relay_report", 0, self._rollup_payload(batch, "json")))
+        except (OSError, ValueError):
+            self._bump("forward_errors")
+            return False
+        if reply is not None and reply.startswith("{"):
+            try:
+                msg = decode(reply)
+            except WireError:
+                return True
+            if msg.kind == "busy":
+                # upstream backpressure: hold the batch; our own queue
+                # fills and we answer busy downstream in turn
+                return False
+            if msg.kind == "error":
+                self._bump("forward_errors")
+                return False
+        elif reply is not None and reply.startswith("error"):
+            self._bump("forward_errors")
+            return False
+        return True
+
+
+class RelayServer:
+    """TCP front end for a RelayNode — ranks (or child relays) connect
+    here exactly as they would to a ``CollectorServer``; lines and
+    binary frames share the port, and ``auth_secret`` /
+    ``ssl_certfile`` gate it for multi-host trees."""
+
+    def __init__(self, node: Optional[RelayNode] = None, port: int = 0,
+                 host: str = "127.0.0.1", idle_timeout_s: float = 5.0,
+                 auth_secret: Optional[str] = None,
+                 ssl_context=None, ssl_certfile: Optional[str] = None,
+                 ssl_keyfile: Optional[str] = None, **node_kw):
+        self.node = node if node is not None else RelayNode(**node_kw)
+        self._server = LineServer(
+            self.node.ingest_line, port=port, host=host, backlog=64,
+            idle_timeout_s=idle_timeout_s,
+            frame_handler=self.node.ingest_frame,
+            auth_secret=auth_secret, ssl_context=ssl_context,
+            ssl_certfile=ssl_certfile, ssl_keyfile=ssl_keyfile,
+            on_error=lambda e: self.node._bump("errors"))
+        self.port = self._server.port
+
+    def close(self) -> None:
+        self._server.close()
+        self.node.close()
+
+    def __enter__(self) -> "RelayServer":
+        self.node.start()
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

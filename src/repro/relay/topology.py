@@ -1,0 +1,287 @@
+"""Declarative collection trees: plan a topology, build it on any path.
+
+``plan_tree`` turns ``(nranks, fanout, depth)`` — or an explicit
+per-tier host list — into a ``TreeSpec``: how many relays each tier
+holds, which leaf relay a rank reports to, which parent a relay
+forwards to.  The spec is pure arithmetic (balanced contiguous blocks)
+so every launch path places the same rank on the same leaf:
+
+  * ``RelayTree``       — in-process tiers over ``LoopbackTransport``
+    (what ``simulate_fleet(relay_fanout=...)`` builds);
+  * ``RelayServerTree`` — one ``RelayServer`` per relay, children
+    connect over TCP (optionally TLS + shared-secret auth) — spawned
+    fleets and real multi-host deployments;
+  * ``SpoolRelayTree``  — one spool directory per relay, relays pump
+    their children's directories and append upstream — no network at
+    any tier.
+
+Tree shape convention: ``tiers[0]`` is the tier next to the collector,
+``tiers[-1]`` is the leaf tier ranks talk to; ``depth`` is the number
+of relay tiers (0 = flat fleet, no relays).
+"""
+from __future__ import annotations
+
+import math
+import os
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from repro.link import (LoopbackTransport, SpoolReader, SpoolTransport,
+                        TcpTransport)
+from repro.relay.node import RelayNode, RelayServer
+
+
+@dataclass(frozen=True)
+class TreeSpec:
+    """A planned collection tree: ``tiers[t]`` relays at tier ``t``
+    (0 = next to the collector), ranks report to tier ``depth-1``."""
+    nranks: int
+    fanout: int
+    tiers: tuple = ()
+
+    @property
+    def depth(self) -> int:
+        return len(self.tiers)
+
+    @property
+    def nrelays(self) -> int:
+        return sum(self.tiers)
+
+    def leaf_of(self, rank: int) -> int:
+        """Which leaf-tier relay ``rank`` reports to (balanced
+        contiguous blocks, so block boundaries match every path)."""
+        if not self.tiers:
+            return 0
+        leaves = self.tiers[-1]
+        return min(rank * leaves // max(self.nranks, 1), leaves - 1)
+
+    def parent_of(self, tier: int, index: int) -> int:
+        """Which tier ``tier - 1`` relay the ``index``-th relay of
+        ``tier`` forwards to (tier 0 forwards to the collector)."""
+        if tier <= 0:
+            return 0
+        prev = self.tiers[tier - 1]
+        return min(index * prev // max(self.tiers[tier], 1), prev - 1)
+
+
+def plan_tree(nranks: int, fanout: Optional[int] = None,
+              depth: Optional[int] = None) -> TreeSpec:
+    """Plan a tree for ``nranks`` ranks.
+
+    ``fanout`` bounds how many children any node accepts (ranks per
+    leaf relay, relays per upper relay, tier-0 relays at the
+    collector); ``depth`` is the relay tier count (default: the
+    shallowest tree that respects the fanout).  ``depth=0`` (or a
+    fanout that already fits every rank directly on the collector with
+    ``depth=None`` unset) still returns a one-tier tree when fanout is
+    given — callers asking for a tree get a tree."""
+    if nranks <= 0:
+        raise ValueError(f"nranks must be positive, got {nranks}")
+    if fanout is None and depth is None:
+        return TreeSpec(nranks=nranks, fanout=nranks, tiers=())
+    if fanout is None:
+        # depth given without fanout: balance it — the fanout that makes
+        # `depth` tiers sufficient (ceil of the (depth+1)-th root)
+        fanout = max(2, math.ceil(nranks ** (1.0 / (depth + 1))))
+    if fanout < 2:
+        raise ValueError(f"relay fanout must be >= 2, got {fanout}")
+    tiers: List[int] = [math.ceil(nranks / fanout)]    # leaf tier
+    if depth is None:
+        while tiers[-1] > fanout:
+            tiers.append(math.ceil(tiers[-1] / fanout))
+    else:
+        if depth < 1:
+            raise ValueError(f"relay depth must be >= 1, got {depth}")
+        for _ in range(depth - 1):
+            tiers.append(math.ceil(tiers[-1] / fanout))
+    tiers.reverse()                                    # [root .. leaf]
+    return TreeSpec(nranks=nranks, fanout=fanout, tiers=tuple(tiers))
+
+
+@dataclass
+class RelayTree:
+    """An in-process tree of ``RelayNode``s over loopback transports.
+    ``transport_for(rank)`` is what each simulated rank ships through;
+    ``close()`` flushes leaf-to-root so nothing pends when the
+    collector reports."""
+    spec: TreeSpec
+    nodes: List[List[RelayNode]] = field(default_factory=list)
+
+    @classmethod
+    def build(cls, collector, spec: TreeSpec,
+              flush_interval_s: float = 0.05,
+              max_pending: int = 256, max_batch: int = 64) -> "RelayTree":
+        tree = cls(spec=spec)
+        for t, count in enumerate(spec.tiers):
+            tier: List[RelayNode] = []
+            for i in range(count):
+                if t == 0:
+                    upstream = LoopbackTransport(collector)
+                else:
+                    parent = tree.nodes[t - 1][spec.parent_of(t, i)]
+                    upstream = LoopbackTransport(parent)
+                node = RelayNode(upstream=upstream, name=f"relay-t{t}n{i}",
+                                 flush_interval_s=flush_interval_s,
+                                 max_pending=max_pending,
+                                 max_batch=max_batch)
+                node.start()
+                tier.append(node)
+            tree.nodes.append(tier)
+        return tree
+
+    @property
+    def leaves(self) -> List[RelayNode]:
+        return self.nodes[-1] if self.nodes else []
+
+    def transport_for(self, rank: int) -> LoopbackTransport:
+        return LoopbackTransport(self.leaves[self.spec.leaf_of(rank)])
+
+    def all_nodes(self) -> List[RelayNode]:
+        return [n for tier in self.nodes for n in tier]
+
+    def stats(self) -> dict:
+        return {n.name: dict(n.stats) for n in self.all_nodes()}
+
+    def close(self) -> None:
+        # leaf tier first: each close() flushes into its parent, which
+        # must still be running to accept (and then flush) the rollup
+        for tier in reversed(self.nodes):
+            for node in tier:
+                node.close()
+
+
+@dataclass
+class RelayServerTree:
+    """A tree of ``RelayServer``s (TCP at every tier).  The servers run
+    in THIS process; children — spawned rank processes, or reporters on
+    other hosts pointed at ``leaf_ports`` — connect over TCP, with
+    optional TLS + shared-secret auth on every hop."""
+    spec: TreeSpec
+    servers: List[List[RelayServer]] = field(default_factory=list)
+
+    @classmethod
+    def build(cls, collector_host: str, collector_port: int,
+              spec: TreeSpec, flush_interval_s: float = 0.05,
+              max_pending: int = 256, max_batch: int = 64,
+              auth_secret: Optional[str] = None,
+              tls_ca: Optional[str] = None,
+              ssl_certfile: Optional[str] = None,
+              ssl_keyfile: Optional[str] = None,
+              idle_timeout_s: float = 5.0) -> "RelayServerTree":
+        tree = cls(spec=spec)
+        for t, count in enumerate(spec.tiers):
+            tier: List[RelayServer] = []
+            for i in range(count):
+                if t == 0:
+                    host, port = collector_host, collector_port
+                else:
+                    host = "127.0.0.1"
+                    port = tree.servers[t - 1][spec.parent_of(t, i)].port
+                upstream = TcpTransport(host, port,
+                                        auth_secret=auth_secret,
+                                        tls_ca=tls_ca)
+                node = RelayNode(upstream=upstream, name=f"relay-t{t}n{i}",
+                                 flush_interval_s=flush_interval_s,
+                                 max_pending=max_pending,
+                                 max_batch=max_batch)
+                server = RelayServer(node, idle_timeout_s=idle_timeout_s,
+                                     auth_secret=auth_secret,
+                                     ssl_certfile=ssl_certfile,
+                                     ssl_keyfile=ssl_keyfile)
+                node.start()
+                tier.append(server)
+            tree.servers.append(tier)
+        return tree
+
+    @property
+    def leaf_ports(self) -> List[int]:
+        return [s.port for s in self.servers[-1]] if self.servers else []
+
+    def port_for(self, rank: int) -> int:
+        return self.leaf_ports[self.spec.leaf_of(rank)]
+
+    def all_nodes(self) -> List[RelayNode]:
+        return [s.node for tier in self.servers for s in tier]
+
+    def stats(self) -> dict:
+        return {n.name: dict(n.stats) for n in self.all_nodes()}
+
+    def close(self) -> None:
+        for tier in reversed(self.servers):
+            for server in tier:
+                server.close()
+
+
+@dataclass
+class SpoolRelayTree:
+    """A tree over spool directories — no network at any tier.  Each
+    relay owns ``<root>/t<tier>n<index>/`` and pumps it; ranks write
+    into their leaf relay's directory (``spool_dir_for``), relays
+    append rollups into their parent's, and tier-0 relays append into
+    ``collector_dir``, which the owner drains into the collector."""
+    spec: TreeSpec
+    root: str
+    collector_dir: str
+    nodes: List[List[RelayNode]] = field(default_factory=list)
+    readers: List[List[SpoolReader]] = field(default_factory=list)
+
+    @classmethod
+    def build(cls, root: str, spec: TreeSpec,
+              flush_interval_s: float = 0.05, max_pending: int = 256,
+              max_batch: int = 64) -> "SpoolRelayTree":
+        collector_dir = os.path.join(root, "collector")
+        os.makedirs(collector_dir, exist_ok=True)
+        tree = cls(spec=spec, root=root, collector_dir=collector_dir)
+        for t, count in enumerate(spec.tiers):
+            tier_nodes: List[RelayNode] = []
+            tier_readers: List[SpoolReader] = []
+            for i in range(count):
+                own_dir = os.path.join(root, f"t{t}n{i}")
+                os.makedirs(own_dir, exist_ok=True)
+                if t == 0:
+                    up_dir = collector_dir
+                else:
+                    p = spec.parent_of(t, i)
+                    up_dir = os.path.join(root, f"t{t - 1}n{p}")
+                upstream = SpoolTransport(up_dir, name=f"relay-t{t}n{i}")
+                node = RelayNode(upstream=upstream, name=f"relay-t{t}n{i}",
+                                 flush_interval_s=flush_interval_s,
+                                 max_pending=max_pending,
+                                 max_batch=max_batch)
+                node.start()
+                tier_nodes.append(node)
+                tier_readers.append(SpoolReader(own_dir))
+            tree.nodes.append(tier_nodes)
+            tree.readers.append(tier_readers)
+        return tree
+
+    def spool_dir_for(self, rank: int) -> str:
+        t = len(self.spec.tiers) - 1
+        return os.path.join(self.root,
+                            f"t{t}n{self.spec.leaf_of(rank)}")
+
+    def pump(self) -> int:
+        """One pump round, leaf tier first so a line can traverse the
+        whole tree across a few rounds; returns lines moved."""
+        n = 0
+        for t in range(len(self.nodes) - 1, -1, -1):
+            for node, reader in zip(self.nodes[t], self.readers[t]):
+                n += node.pump_spool(reader)
+        return n
+
+    def all_nodes(self) -> List[RelayNode]:
+        return [n for tier in self.nodes for n in tier]
+
+    def stats(self) -> dict:
+        return {n.name: dict(n.stats) for n in self.all_nodes()}
+
+    def close(self) -> None:
+        # drain + flush leaf-to-root; each tier's rollups must be
+        # pumped by the tier above before that tier closes
+        for t in range(len(self.nodes) - 1, -1, -1):
+            for node, reader in zip(self.nodes[t], self.readers[t]):
+                node.pump_spool(reader)
+                node.close()
+            for up in range(t - 1, -1, -1):
+                for node, reader in zip(self.nodes[up], self.readers[up]):
+                    node.pump_spool(reader)

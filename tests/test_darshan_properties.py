@@ -286,3 +286,79 @@ def test_eof_pattern_detector_threshold():
     rep = analyze(rt.posix.snapshot(), {}, elapsed_s=1.0, stat_sizes=False)
     assert rep.has_eof_double_read_pattern()
     assert rep.zero_read_frac == pytest.approx(0.5)
+
+
+# ----------------------------------------------------- relay frame codec
+# arbitrary segment rows: wide int/float ranges so the delta + shuffle
+# transforms face adversarial, not just realistic, inputs
+segment_rows = st.lists(
+    st.tuples(st.sampled_from(["POSIX", "STDIO"]),
+              st.integers(0, 9),                      # path id
+              st.sampled_from(["read", "write", "open"]),
+              st.integers(0, (1 << 62) - 1),          # offset
+              st.integers(0, (1 << 62) - 1),          # length
+              st.floats(0.0, 1e6, allow_nan=False),   # start
+              st.floats(0.0, 1e6, allow_nan=False),   # end
+              st.integers(0, (1 << 63) - 1)),         # thread
+    min_size=0, max_size=50)
+
+
+def _to_columns(rows):
+    from repro.core.dxt import Segment
+    from repro.trace import SegmentColumns
+    return SegmentColumns.from_rows(
+        [Segment(m, f"/data/f{p}", op, off, ln, s, e, t)
+         for m, p, op, off, ln, s, e, t in rows])
+
+
+@given(segment_rows, st.booleans())
+@settings(**SETTINGS)
+def test_relay_frame_roundtrip(rows, compress):
+    """encode_frame/decode_frame is the identity on any batch — every
+    column byte-exact (floats included: the XOR-delta transform must be
+    lossless on raw f64 bit patterns)."""
+    from repro.relay import decode_frame, encode_frame
+    cols = _to_columns(rows)
+    payload = {"elapsed_s": 1.0, "segments_columns": cols}
+    msg = decode_frame(encode_frame("report", 5, payload,
+                                    compress=compress))
+    got = msg.payload["segments_columns"]
+    assert len(got) == len(cols)
+    for name in ("module", "path", "op", "offset", "length", "start",
+                 "end", "thread"):
+        assert (getattr(got, name).tobytes()
+                == getattr(cols, name).tobytes()), name
+    assert list(got) == list(cols)
+
+
+@given(segment_rows, st.data())
+@settings(**SETTINGS)
+def test_relay_frame_truncation_never_crashes(rows, data):
+    """Any prefix of a valid frame must raise WireError — never an
+    unhandled struct/zlib/numpy error, never a silent partial decode."""
+    from repro.link import WireError
+    from repro.relay import decode_frame, encode_frame
+    frame = encode_frame("report", 0,
+                         {"segments_columns": _to_columns(rows)})
+    cut = data.draw(st.integers(0, len(frame) - 1))
+    with pytest.raises(WireError):
+        decode_frame(frame[:cut])
+
+
+@given(segment_rows, st.data())
+@settings(**SETTINGS)
+def test_relay_frame_corruption_detected_or_equal(rows, data):
+    """Flipping any byte either raises WireError or (for the rare CRC
+    collision — none at these sizes) decodes to something; it must
+    never crash with a non-wire error."""
+    from repro.link import WireError
+    from repro.relay import decode_frame, encode_frame
+    frame = bytearray(encode_frame("report", 0,
+                                   {"segments_columns": _to_columns(rows)}))
+    pos = data.draw(st.integers(0, len(frame) - 1))
+    bit = data.draw(st.integers(0, 7))
+    frame[pos] ^= (1 << bit)
+    try:
+        decode_frame(bytes(frame))
+    except WireError:
+        pass

@@ -1,0 +1,605 @@
+"""repro.relay: binary column frames, relay tiers, collection trees,
+backpressure/drop accounting, and the authenticated/TLS transport."""
+import os
+import shutil
+import socket
+import subprocess
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.runtime import DarshanRuntime
+from repro.fleet.collector import CollectorServer, FleetCollector
+from repro.fleet.harness import RankIO, simulate_fleet
+from repro.fleet.launch import run_spawned_fleet
+from repro.fleet.reporter import RankReporter
+from repro.link import (AuthError, LoopbackTransport, TcpTransport,
+                        WireError, check_auth, encode, encode_auth)
+from repro.relay import (RelayNode, RelayServer, RelayServerTree, RelayTree,
+                         SpoolRelayTree, TreeSpec, decode_frame,
+                         encode_frame, is_frame, plan_tree)
+from repro.trace import SegmentColumns
+
+SECRET = "test-relay-secret"
+
+
+def _columns(n=64, seed=0):
+    rng = np.random.default_rng(seed)
+    rows = []
+    t = 0.0
+    for i in range(n):
+        t += float(rng.uniform(1e-5, 1e-3))
+        length = int(rng.choice([4096, 65536, 1 << 20]))
+        rows.append(("POSIX", f"/data/shard_{i % 7:03d}.bin", "read",
+                     int(i) * 4096, length, t,
+                     t + float(rng.uniform(1e-5, 1e-3)), i % 4))
+    from repro.core.dxt import Segment
+    return SegmentColumns.from_rows([Segment(*r) for r in rows])
+
+
+def _workload(paths):
+    def wl(rank, io):
+        fd = io.open(paths[rank % len(paths)])
+        for _ in range(4):
+            io.pread(fd, 65536, 0)
+        io.close(fd)
+    return wl
+
+
+@pytest.fixture(scope="module")
+def data_file(tmp_path_factory):
+    p = tmp_path_factory.mktemp("relay") / "data.bin"
+    p.write_bytes(os.urandom(1 << 20))
+    return str(p)
+
+
+# ============================================================ frame codec
+class TestFrames:
+    def test_roundtrip_payload_and_batch(self):
+        cols = _columns(100)
+        payload = {"nprocs": 4, "elapsed_s": 1.5,
+                   "clock": {"offset_s": 0.25},
+                   "segments_columns": cols}
+        msg = decode_frame(encode_frame("report", 3, payload))
+        assert msg.kind == "report" and msg.rank == 3
+        assert msg.payload["nprocs"] == 4
+        got = msg.payload["segments_columns"]
+        assert isinstance(got, SegmentColumns)
+        assert len(got) == len(cols)
+        for a, b in zip(got, cols):
+            assert a == b
+
+    def test_roundtrip_uncompressed(self):
+        cols = _columns(10)
+        frame = encode_frame("report", 0, {"segments_columns": cols},
+                             compress=False)
+        got = decode_frame(frame).payload["segments_columns"]
+        assert list(got) == list(cols)
+
+    def test_roundtrip_empty_batch(self):
+        empty = SegmentColumns.from_rows([])
+        msg = decode_frame(encode_frame("report", 0,
+                                        {"segments_columns": empty}))
+        assert len(msg.payload["segments_columns"]) == 0
+
+    def test_nested_batches(self):
+        a, b = _columns(5, seed=1), _columns(9, seed=2)
+        payload = {"reports": [{"rank": 0, "segments_columns": a},
+                               {"rank": 1, "segments_columns": b}]}
+        msg = decode_frame(encode_frame("relay_report", 0, payload))
+        got = msg.payload["reports"]
+        assert len(got[0]["segments_columns"]) == 5
+        assert len(got[1]["segments_columns"]) == 9
+
+    def test_is_frame_vs_json_line(self):
+        frame = encode_frame("report", 0, {})
+        assert is_frame(frame)
+        assert not is_frame(encode("report", 0, {}).encode())
+        # the sniffing invariant: a frame can never start a JSON line
+        assert frame[:1] not in (b"{", b"[")
+
+    def test_float_times_bit_exact(self):
+        # XOR-delta on the f64 bit patterns must be exactly reversible,
+        # including awkward values
+        from repro.core.dxt import Segment
+        cols = SegmentColumns.from_rows([
+            Segment("POSIX", "/a", "read", 0, 1, 1e-308, 0.1, 0),
+            Segment("POSIX", "/a", "read", 1, 1, 0.1, float(np.pi), 0),
+            Segment("POSIX", "/a", "read", 2, 1, 1e300, 1e300, 0)])
+        got = decode_frame(
+            encode_frame("report", 0,
+                         {"segments_columns": cols})).payload[
+                             "segments_columns"]
+        assert got.start.tobytes() == cols.start.tobytes()
+        assert got.end.tobytes() == cols.end.tobytes()
+
+    def test_corruption_detected(self):
+        frame = bytearray(encode_frame("report", 1,
+                                       {"segments_columns": _columns(32)}))
+        frame[len(frame) // 2] ^= 0xFF
+        with pytest.raises(WireError):
+            decode_frame(bytes(frame))
+
+    def test_truncation_detected(self):
+        frame = encode_frame("report", 1, {"segments_columns": _columns(32)})
+        for cut in (0, 3, 10, len(frame) - 1):
+            with pytest.raises(WireError):
+                decode_frame(frame[:cut])
+
+    def test_bad_magic_and_version(self):
+        frame = bytearray(encode_frame("report", 0, {}))
+        bad = b"XXXX" + bytes(frame[4:])
+        with pytest.raises(WireError):
+            decode_frame(bad)
+        frame[4] = 99                      # version byte
+        with pytest.raises(WireError):
+            decode_frame(bytes(frame))
+
+    def test_trailing_garbage_rejected(self):
+        frame = encode_frame("report", 0, {"segments_columns": _columns(4)})
+        with pytest.raises(WireError):
+            decode_frame(frame + b"extra")
+
+    def test_fuzz_every_truncation_point(self):
+        # deterministic twin of the hypothesis fuzz (which skips when
+        # hypothesis is absent): EVERY prefix must raise WireError —
+        # never a struct/zlib/numpy error, never a partial decode
+        frame = encode_frame("report", 0, {"segments_columns": _columns(16)})
+        for cut in range(len(frame)):
+            with pytest.raises(WireError):
+                decode_frame(frame[:cut])
+
+    def test_fuzz_random_bit_flips(self):
+        rng = np.random.default_rng(1234)
+        frame = encode_frame("report", 0, {"segments_columns": _columns(16)})
+        for _ in range(300):
+            buf = bytearray(frame)
+            pos = int(rng.integers(0, len(buf)))
+            buf[pos] ^= 1 << int(rng.integers(0, 8))
+            try:
+                decode_frame(bytes(buf))
+            except WireError:
+                pass          # detected — the only acceptable failure
+
+
+# =============================================================== topology
+class TestTopology:
+    def test_plan_fanout_only(self):
+        spec = plan_tree(1000, fanout=32)
+        assert spec.tiers == (32,)
+        spec = plan_tree(1000, fanout=8)
+        assert spec.tiers == (2, 16, 125)
+
+    def test_plan_depth_only(self):
+        spec = plan_tree(1000, depth=2)
+        assert spec.depth == 2
+        assert spec.tiers[-1] * spec.fanout >= 1000
+
+    def test_plan_both(self):
+        spec = plan_tree(64, fanout=4, depth=2)
+        assert spec.tiers == (4, 16)
+
+    def test_plan_flat(self):
+        assert plan_tree(10).tiers == ()
+
+    def test_plan_errors(self):
+        with pytest.raises(ValueError):
+            plan_tree(0, fanout=4)
+        with pytest.raises(ValueError):
+            plan_tree(10, fanout=1)
+        with pytest.raises(ValueError):
+            plan_tree(10, fanout=4, depth=0)
+
+    def test_leaf_assignment_balanced(self):
+        spec = plan_tree(100, fanout=10)
+        counts = {}
+        for r in range(100):
+            leaf = spec.leaf_of(r)
+            assert 0 <= leaf < spec.tiers[-1]
+            counts[leaf] = counts.get(leaf, 0) + 1
+        assert max(counts.values()) - min(counts.values()) <= 1
+        # contiguous blocks: leaf id is monotone in rank
+        leaves = [spec.leaf_of(r) for r in range(100)]
+        assert leaves == sorted(leaves)
+
+    def test_parent_bounds(self):
+        spec = plan_tree(1000, fanout=8)
+        for t in range(1, spec.depth):
+            for i in range(spec.tiers[t]):
+                assert 0 <= spec.parent_of(t, i) < spec.tiers[t - 1]
+
+    def test_spec_is_plain_data(self):
+        spec = plan_tree(64, fanout=4)
+        assert spec == TreeSpec(nranks=64, fanout=4, tiers=(4, 16))
+
+
+# ========================================================== relay merging
+class TestRelayNode:
+    def _ship_rank(self, rank, target, data_file, nprocs=2):
+        rt = DarshanRuntime(dxt_capacity=4096)
+        io = RankIO(rt)
+        rep = RankReporter(rank, nprocs=nprocs, runtime=rt,
+                           auto_attach=False)
+        rep.start()
+        fd = io.open(data_file)
+        io.pread(fd, 65536, 0)
+        io.close(fd)
+        rep.stop()
+        t = LoopbackTransport(target)
+        rep.ship(t)
+        t.close()
+        return rep
+
+    def test_relay_merges_and_forwards(self, data_file):
+        coll = FleetCollector()
+        relay = RelayNode(upstream=LoopbackTransport(coll), name="r0",
+                          flush_interval_s=0.02)
+        relay.start()
+        for r in range(3):
+            self._ship_rank(r, relay, data_file, nprocs=3)
+        relay.close()
+        fr = coll.report()
+        assert sorted(fr.ranks) == [0, 1, 2]
+        assert all(s.posix.reads == 1 for s in fr.ranks.values())
+        assert fr.relay["relays"]["r0"]["reports_in"] == 3
+        assert fr.relay["dropped_reports"] == 0
+        # relay hello must not create a phantom rank slice
+        assert set(fr.ranks) == {0, 1, 2}
+
+    def test_clock_alignment_composes(self, data_file):
+        # a rank with a skewed clock through a relay must land on the
+        # collector clock just like a flat fleet would
+        skew = 5.0
+        coll = FleetCollector()
+        relay = RelayNode(upstream=LoopbackTransport(coll), name="r0",
+                          flush_interval_s=0.02)
+        relay.start()
+        rt = DarshanRuntime(dxt_capacity=4096)
+        rt._t0 -= skew                     # rank clock reads 5s ahead
+        io = RankIO(rt)
+        rep = RankReporter(0, nprocs=1, runtime=rt, auto_attach=False)
+        rep.start()
+        fd = io.open(data_file)
+        io.pread(fd, 4096, 0)
+        io.close(fd)
+        rep.stop()
+        t = LoopbackTransport(relay)
+        rep.ship(t)
+        t.close()
+        relay.close()
+        fr = coll.report()
+        seg = next(iter(fr.ranks[0].segments))
+        # collector clock is ~0 at test start: an unaligned segment
+        # would sit at ~+5s
+        assert abs(seg.start) < 2.0
+
+    def test_busy_when_queue_full(self):
+        relay = RelayNode(upstream=None, name="r0", max_pending=1,
+                          flush_interval_s=60)
+        line = encode("report", 0, {"nprocs": 1, "elapsed_s": 0.1,
+                                    "posix": {}, "segments": [],
+                                    "clock": {}})
+        reply = relay.ingest_line(line)
+        assert '"kind":"ok"' in reply.replace(" ", "") or reply == "ok"
+        reply = relay.ingest_line(line.replace('"rank":0', '"rank":1'))
+        assert "busy" in reply
+        assert relay.stats["busy_replies"] == 1
+        assert "retry_after_s" in reply
+
+    def test_reporter_busy_retry_exhaustion(self, data_file):
+        relay = RelayNode(upstream=None, name="r0", max_pending=0,
+                          flush_interval_s=0.01)
+        rt = DarshanRuntime(dxt_capacity=4096)
+        rep = RankReporter(0, nprocs=1, runtime=rt, auto_attach=False)
+        rep.start()
+        rep.stop()
+        t = LoopbackTransport(relay)
+        with pytest.raises(RuntimeError, match="busy"):
+            rep.ship(t, busy_retries=3)
+
+    def test_close_accounts_unflushed(self, data_file):
+        # no upstream: close() cannot flush — pending must be counted,
+        # never silently discarded
+        relay = RelayNode(upstream=None, name="r0", flush_interval_s=60)
+        self._ship_rank(0, relay, data_file, nprocs=1)
+        relay.close()
+        assert relay.stats["dropped_reports"] == 1
+
+    def test_findings_stream_through(self):
+        coll = FleetCollector()
+        relay = RelayNode(upstream=LoopbackTransport(coll), name="r0",
+                          flush_interval_s=0.02)
+        relay.start()
+        line = encode("findings", 2, {
+            "findings": [{"detector": "d", "title": "t", "severity": 0.5,
+                          "window": [0.0, 1.0], "evidence": {},
+                          "recommendation": "r"}],
+            "streaming": True})
+        relay.ingest_line(line)
+        relay.close()
+        assert relay.stats["findings_forwarded"] == 1
+        assert coll.stats["findings"] == 1
+
+    def test_corrupt_frame_counted(self):
+        relay = RelayNode(upstream=None, name="r0")
+        with pytest.raises(WireError):
+            relay.ingest_frame(b"RFR1garbage")
+
+
+# ====================================================== trees over wires
+class TestTrees:
+    def test_flat_vs_tree_equivalence(self, data_file):
+        wl = _workload([data_file])
+        flat, tree = FleetCollector(), FleetCollector()
+        fr_flat = simulate_fleet(8, wl, flat, dxt_capacity=4096)
+        fr_tree = simulate_fleet(8, wl, tree, relay_fanout=3,
+                                 dxt_capacity=4096)
+        assert sorted(fr_tree.ranks) == sorted(fr_flat.ranks)
+        assert fr_tree.posix.reads == fr_flat.posix.reads
+        assert fr_tree.posix.bytes_read == fr_flat.posix.bytes_read
+        for r in fr_flat.ranks:
+            assert (len(fr_tree.ranks[r].segments_table())
+                    == len(fr_flat.ranks[r].segments_table()))
+        assert fr_tree.relay["dropped_reports"] == 0
+        assert fr_flat.relay == {}
+
+    def test_deep_tree_loopback(self, data_file):
+        coll = FleetCollector()
+        fr = simulate_fleet(12, _workload([data_file]), coll,
+                            relay_fanout=2, relay_depth=2,
+                            dxt_capacity=4096)
+        assert sorted(fr.ranks) == list(range(12))
+        assert fr.relay["dropped_reports"] == 0
+        # depth 2: both tiers show up in the rollup stats
+        names = set(fr.relay["relays"])
+        assert any(n.startswith("relay-t0") for n in names)
+        assert any(n.startswith("relay-t1") for n in names)
+
+    def test_relay_with_make_transport_conflict(self, data_file):
+        with pytest.raises(ValueError, match="make_transport"):
+            simulate_fleet(2, _workload([data_file]), FleetCollector(),
+                           relay_fanout=2,
+                           make_transport=lambda r: None)
+
+    def test_server_tree_tcp(self, data_file):
+        coll = FleetCollector()
+        csrv = CollectorServer(coll)
+        tree = RelayServerTree.build("127.0.0.1", csrv.port,
+                                     plan_tree(4, fanout=2),
+                                     flush_interval_s=0.02)
+        try:
+            fr = simulate_fleet(
+                4, _workload([data_file]), coll, collect=False,
+                dxt_capacity=4096,
+                make_transport=lambda r: TcpTransport(
+                    "127.0.0.1", tree.port_for(r)))
+        finally:
+            tree.close()
+            csrv.close()
+        fr = coll.report()
+        assert sorted(fr.ranks) == list(range(4))
+        assert fr.relay["dropped_reports"] == 0
+
+    def test_spawned_tcp_tree(self, data_file):
+        coll = FleetCollector()
+        fr = run_spawned_fleet(4, _workload([data_file]), coll,
+                               transport="tcp", relay_fanout=2,
+                               dxt_capacity=4096, timeout_s=60)
+        assert sorted(fr.ranks) == list(range(4))
+        assert all(s.posix.reads == 4 for s in fr.ranks.values())
+        assert fr.relay["dropped_reports"] == 0
+
+    def test_spawned_spool_tree(self, data_file):
+        coll = FleetCollector()
+        fr = run_spawned_fleet(4, _workload([data_file]), coll,
+                               transport="spool", relay_fanout=2,
+                               dxt_capacity=4096, timeout_s=60)
+        assert sorted(fr.ranks) == list(range(4))
+        assert fr.relay["dropped_reports"] == 0
+
+    def test_spool_auth_rejected(self, data_file):
+        with pytest.raises(ValueError, match="tcp"):
+            run_spawned_fleet(2, _workload([data_file]), FleetCollector(),
+                              transport="spool", auth_secret="nope")
+
+
+# ===================================================== mixed-version fleet
+class TestMixedFleet:
+    def test_binary_and_json_ranks_coexist(self, data_file):
+        """Half the fleet ships binary frames (columns wire), half ships
+        legacy JSON rows through the SAME relay — the collector must see
+        an identical picture for both."""
+        coll = FleetCollector()
+        relay = RelayNode(upstream=LoopbackTransport(coll), name="r0",
+                          flush_interval_s=0.02)
+        relay.start()
+        for rank in range(4):
+            rt = DarshanRuntime(dxt_capacity=4096)
+            io = RankIO(rt)
+            rep = RankReporter(rank, nprocs=4, runtime=rt,
+                               auto_attach=False,
+                               segments_wire=("columns" if rank % 2 == 0
+                                              else "rows"))
+            rep.start()
+            fd = io.open(data_file)
+            io.pread(fd, 65536, 0)
+            io.close(fd)
+            rep.stop()
+            t = LoopbackTransport(relay)
+            rep.ship(t)
+            t.close()
+        relay.close()
+        assert relay.stats["frames_in"] == 2      # the columns ranks
+        fr = coll.report()
+        assert sorted(fr.ranks) == [0, 1, 2, 3]
+        sizes = {len(s.segments_table()) for s in fr.ranks.values()}
+        assert len(sizes) == 1                    # identical windows
+        reads = {s.posix.reads for s in fr.ranks.values()}
+        assert reads == {1}
+
+
+# ================================================================== auth
+class TestAuth:
+    def test_auth_codec_roundtrip(self):
+        line = encode_auth(SECRET, rank=7)
+        check_auth(SECRET, __import__("json").loads(line)["payload"])
+
+    def test_auth_rejects_bad_mac_and_stale(self):
+        import json
+        payload = json.loads(encode_auth(SECRET))["payload"]
+        with pytest.raises(AuthError):
+            check_auth("other-secret", payload)
+        stale = dict(payload, ts=payload["ts"] - 10_000)
+        with pytest.raises(AuthError):
+            check_auth(SECRET, stale)
+
+    def test_tcp_auth_accept_reject(self, data_file):
+        coll = FleetCollector()
+        srv = CollectorServer(coll, auth_secret=SECRET)
+        try:
+            rt = DarshanRuntime(dxt_capacity=4096)
+            io = RankIO(rt)
+            rep = RankReporter(0, nprocs=1, runtime=rt, auto_attach=False)
+            rep.start()
+            fd = io.open(data_file)
+            io.pread(fd, 4096, 0)
+            io.close(fd)
+            rep.stop()
+            good = TcpTransport("127.0.0.1", srv.port, auth_secret=SECRET)
+            rep.ship(good)
+            good.close()
+            bad = TcpTransport("127.0.0.1", srv.port,
+                               auth_secret="wrong-secret")
+            with pytest.raises(AuthError) as ei:
+                bad.send_line(encode("hello", 0, {"nprocs": 1,
+                                                  "link_v": 1}))
+            assert "wrong-secret" not in str(ei.value)  # never leak it
+            bad.close()
+            # a client that never authenticates gets an error reply and
+            # a dropped connection — its hello must not be ingested
+            hellos_before = coll.stats["hellos"]
+            unauth = TcpTransport("127.0.0.1", srv.port)
+            reply = unauth.send_line(encode("hello", 9, {"nprocs": 1,
+                                                         "link_v": 1}))
+            assert reply is None or reply.startswith("error")
+            unauth.close()
+            assert coll.stats["hellos"] == hellos_before
+            assert 9 not in coll.ranks
+        finally:
+            srv.close()
+        assert 0 in coll.ranks
+
+    def test_reconnect_reauthenticates(self):
+        coll = FleetCollector()
+        srv = CollectorServer(coll, auth_secret=SECRET, idle_timeout_s=0.2)
+        try:
+            t = TcpTransport("127.0.0.1", srv.port, auth_secret=SECRET,
+                             timeout=5.0)
+            t.send_line(encode("hello", 0, {"nprocs": 1, "link_v": 1}))
+            time.sleep(0.6)                # idle reaper kills the conn
+            t.send_line(encode("clock", 0, {"t_send": 0.0}))
+            assert t.stats["auths"] >= 2   # re-auth on reconnect
+            t.close()
+        finally:
+            srv.close()
+
+    def test_relay_server_requires_auth(self):
+        rs = RelayServer(node=RelayNode(upstream=None, name="r0"),
+                         auth_secret=SECRET)
+        try:
+            bad = TcpTransport("127.0.0.1", rs.port, auth_secret="nope")
+            with pytest.raises(AuthError):
+                bad.send_line(encode("clock", 0, {"t_send": 0.0}))
+            bad.close()
+            good = TcpTransport("127.0.0.1", rs.port, auth_secret=SECRET)
+            reply = good.send_line(encode("clock", 0, {"t_send": 0.0}))
+            assert "clock_reply" in reply
+            good.close()
+        finally:
+            rs.close()
+
+
+# =================================================================== tls
+def _have_openssl():
+    return shutil.which("openssl") is not None
+
+
+@pytest.fixture(scope="module")
+def tls_cert(tmp_path_factory):
+    if not _have_openssl():
+        pytest.skip("openssl CLI not available")
+    d = tmp_path_factory.mktemp("tls")
+    cert, key = str(d / "cert.pem"), str(d / "key.pem")
+    subprocess.run(
+        ["openssl", "req", "-x509", "-newkey", "rsa:2048", "-keyout", key,
+         "-out", cert, "-days", "2", "-nodes", "-subj", "/CN=repro-relay"],
+        check=True, capture_output=True)
+    return cert, key
+
+
+class TestTls:
+    def test_tls_auth_report_ships(self, data_file, tls_cert):
+        cert, key = tls_cert
+        coll = FleetCollector()
+        srv = CollectorServer(coll, auth_secret=SECRET, ssl_certfile=cert,
+                              ssl_keyfile=key)
+        try:
+            rt = DarshanRuntime(dxt_capacity=4096)
+            io = RankIO(rt)
+            rep = RankReporter(0, nprocs=1, runtime=rt, auto_attach=False)
+            rep.start()
+            fd = io.open(data_file)
+            io.pread(fd, 4096, 0)
+            io.close(fd)
+            rep.stop()
+            t = TcpTransport("127.0.0.1", srv.port, auth_secret=SECRET,
+                             tls_ca=cert)
+            rep.ship(t)
+            t.close()
+        finally:
+            srv.close()
+        assert 0 in coll.ranks
+        assert coll.ranks[0].posix.reads == 1
+
+    def test_plaintext_client_rejected_by_tls_server(self, tls_cert):
+        cert, key = tls_cert
+        coll = FleetCollector()
+        srv = CollectorServer(coll, ssl_certfile=cert, ssl_keyfile=key)
+        try:
+            t = TcpTransport("127.0.0.1", srv.port, timeout=2.0)
+            with pytest.raises(OSError):
+                t.send_line(encode("clock", 0, {"t_send": 0.0}))
+            t.close()
+        finally:
+            srv.close()
+
+    def test_spawned_fleet_tls_tree(self, data_file, tls_cert):
+        cert, key = tls_cert
+        coll = FleetCollector()
+        fr = run_spawned_fleet(
+            4, _workload([data_file]), coll, transport="tcp",
+            relay_fanout=2, dxt_capacity=4096, auth_secret=SECRET,
+            tls_certfile=cert, tls_keyfile=key, tls_ca=cert, timeout_s=90)
+        assert sorted(fr.ranks) == list(range(4))
+        assert fr.relay["dropped_reports"] == 0
+
+
+# ============================================================== report API
+def test_fleet_report_relay_in_dict(data_file):
+    coll = FleetCollector()
+    fr = simulate_fleet(2, _workload([data_file]), coll, relay_fanout=2,
+                        dxt_capacity=4096)
+    d = fr.to_dict()
+    assert d["relay"]["dropped_reports"] == 0
+    assert "relays" in d["relay"]
+
+
+def test_health_summary_flags_relay_drops():
+    from repro.obs.metrics import health_summary
+    snap = {"counters": {"relay.dropped_reports": 2}}
+    h = health_summary(snap)
+    assert h["checks"]["relay-drops"]["status"] == "degraded"
+    assert h["status"] == "degraded"
+    ok = health_summary({"counters": {}})
+    assert ok["checks"]["relay-drops"]["status"] == "ok"
