@@ -13,7 +13,15 @@ Every bench additionally persists a machine-readable result —
 ``BENCH_<name>.json`` in the repo root — carrying its rows, pass/fail,
 the error (if any), wall time, and whether it ran at smoke size, so CI
 artifacts and regression dashboards read structured results instead of
-scraping the CSV stream (``--no-json`` disables the files)."""
+scraping the CSV stream (``--no-json`` disables the files).
+
+``--compare`` turns those committed files into an enforced perf gate:
+before running, the committed baselines are loaded; afterwards each
+fresh row is diffed against its baseline by name, and a
+``us_per_call`` increase or an ``mb_s=`` decrease beyond
+``--compare-threshold`` (default 0.20, i.e. >20%) fails the run.
+Tiny rows (<50 us and <5 MB/s) and baselines recorded at a different
+size mode (smoke vs full) are skipped — noise, not regressions."""
 from __future__ import annotations
 
 import argparse
@@ -28,7 +36,7 @@ from benchmarks.common import Row
 
 BENCHES = ("stream", "overhead", "threads", "staging", "checkpoint",
            "kernels", "insight", "fleet", "profiler", "link", "trace",
-           "tune", "obs", "warehouse", "relay")
+           "tune", "obs", "warehouse", "relay", "io")
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
@@ -55,6 +63,66 @@ def _persist(name: str, bench_rows: Row, passed: bool,
     return path
 
 
+def _parse_mb_s(derived: str):
+    """Extract the ``mb_s=<float>`` field from a derived column."""
+    for part in str(derived).split(";"):
+        if part.startswith("mb_s="):
+            try:
+                return float(part[len("mb_s="):])
+            except ValueError:
+                return None
+    return None
+
+
+# Rows below both floors are timer noise at smoke sizes, not signal.
+COMPARE_US_FLOOR = 50.0
+COMPARE_MB_S_FLOOR = 5.0
+
+
+def _load_baselines(names) -> dict:
+    """Committed BENCH_<name>.json files, loaded BEFORE the run
+    overwrites them."""
+    baselines = {}
+    for name in names:
+        path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+        try:
+            with open(path) as f:
+                baselines[name] = json.load(f)
+        except (OSError, ValueError):
+            continue            # new bench / unreadable file: nothing to gate
+    return baselines
+
+
+def _compare(name: str, baseline: dict, fresh: Row,
+             threshold: float) -> list:
+    """Regression messages for one bench (empty = gate green)."""
+    if bool(baseline.get("smoke")) != bool(common.SMOKE):
+        return []               # different workload size: apples vs oranges
+    if not baseline.get("passed", True):
+        return []               # baseline itself was red: nothing to hold
+    old = {r["name"]: r for r in baseline.get("rows", [])}
+    problems = []
+    for row_name, us, derived in fresh.rows:
+        base = old.get(row_name)
+        if base is None:
+            continue
+        base_us = float(base.get("us_per_call", 0.0))
+        if (base_us >= COMPARE_US_FLOOR and us >= COMPARE_US_FLOOR
+                and us > base_us * (1.0 + threshold)):
+            problems.append(
+                f"{name}:{row_name} us_per_call {base_us:.1f} -> {us:.1f} "
+                f"(+{(us / base_us - 1) * 100:.0f}%)")
+        base_mb = _parse_mb_s(base.get("derived", ""))
+        fresh_mb = _parse_mb_s(derived)
+        if (base_mb is not None and fresh_mb is not None
+                and base_mb >= COMPARE_MB_S_FLOOR
+                and fresh_mb < base_mb * (1.0 - threshold)):
+            problems.append(
+                f"{name}:{row_name} mb_s {base_mb:.1f} -> {fresh_mb:.1f} "
+                f"(-{(1 - fresh_mb / base_mb) * 100:.0f}%)")
+    return problems
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -63,15 +131,21 @@ def main() -> None:
                     help="tiny workloads: regression check, not figures")
     ap.add_argument("--no-json", action="store_true",
                     help="skip writing BENCH_<name>.json result files")
+    ap.add_argument("--compare", action="store_true",
+                    help="fail on regressions vs committed BENCH_*.json")
+    ap.add_argument("--compare-threshold", type=float, default=0.20,
+                    help="relative regression tolerance (default 0.20)")
     args = ap.parse_args()
     if args.smoke:
         common.SMOKE = True
         os.environ["REPRO_BENCH_SMOKE"] = "1"
     chosen = args.only.split(",") if args.only else list(BENCHES)
+    baselines = _load_baselines(chosen) if args.compare else {}
 
     print("name,us_per_call,derived")
     rows = Row()
     failed = []
+    regressions = []
     for name in chosen:
         mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
         bench_rows = Row()
@@ -88,8 +162,21 @@ def main() -> None:
         rows.extend(bench_rows)
         if not args.no_json:
             _persist(name, bench_rows, error is None, error, elapsed)
-    if failed:
-        raise SystemExit(f"benchmarks failed: {failed}")
+        if args.compare and error is None and name in baselines:
+            regressions.extend(_compare(name, baselines[name], bench_rows,
+                                        args.compare_threshold))
+    if regressions:
+        for msg in regressions:
+            print(f"REGRESSION,{msg}", file=sys.stderr, flush=True)
+    if failed or regressions:
+        parts = []
+        if failed:
+            parts.append(f"benchmarks failed: {failed}")
+        if regressions:
+            parts.append(f"{len(regressions)} perf regression(s) beyond "
+                         f"{args.compare_threshold:.0%}: "
+                         + "; ".join(regressions))
+        raise SystemExit(" | ".join(parts))
 
 
 if __name__ == "__main__":

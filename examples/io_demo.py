@@ -1,0 +1,115 @@
+"""Fast ingest: the same small-file storm through the profiled
+pipeline twice — the seed `sized` recipe vs `repro.io` coalesced batch
+ingest — and the DXT-measured difference between them.
+
+The corpus is the paper's §V-A signature (a 16 KiB-median file storm).
+Both passes run under the façade profiler, so every syscall lands in
+the DXT trace.  At this size the per-item pipeline cost dominates:
+coalescing turns ~50 files into one pooled pipeline unit, so the fast
+pass must show a higher DXT-measured bandwidth and a faster wall
+clock, with the buffer pool recycling leases instead of allocating.
+
+    PYTHONPATH=src python examples/io_demo.py
+"""
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import reset_runtime
+from repro.data.pipeline import Pipeline
+from repro.data.readers import posix_read_file, sized_read_file
+from repro.data.synthetic import make_imagenet_like
+from repro.io import BufferPool, CoalescingReader
+from repro.obs.metrics import MetricsRegistry
+from repro.profiler import Profiler, ProfilerOptions
+
+N_FILES = 900
+THREADS = 8
+
+
+def profiled(epoch, repeats=2):
+    """Best-of-N profiled epoch; returns the fastest (report, seconds)."""
+    best = None
+    for _ in range(repeats):
+        profiler = Profiler(ProfilerOptions(mode="local"),
+                            runtime=reset_runtime())
+        t0 = time.perf_counter()
+        report = profiler.run(epoch)
+        dt = time.perf_counter() - t0
+        if best is None or dt < best[1]:
+            best = (report, dt)
+    return best
+
+
+def main():
+    tmp = tempfile.mkdtemp(prefix="io_demo_")
+    paths = sorted(make_imagenet_like(os.path.join(tmp, "storm"),
+                                      n_files=N_FILES,
+                                      median_bytes=16 * 1024, seed=11))
+    want = {p: posix_read_file(p) for p in paths}   # warm + ground truth
+    total = sum(len(v) for v in want.values())
+
+    def sized_epoch():
+        n = 0
+        for batch in (Pipeline(paths).map(sized_read_file, THREADS)
+                      .batch(32).prefetch(4)):
+            n += sum(len(x) for x in batch)
+        assert n == total
+        return n
+
+    reg = MetricsRegistry()
+    rdr = CoalescingReader(paths, batch_bytes=1 << 20,
+                           pool=BufferPool(registry=reg), registry=reg)
+
+    def coalesced_epoch():
+        n = 0
+        for group in (Pipeline(rdr.batches())
+                      .map(rdr.read_batch, THREADS)
+                      .batch(4).prefetch(4)):
+            for cb in group:
+                for path, view in cb:
+                    assert bytes(view) == want[path]
+                    n += len(view)
+                cb.release()
+        assert n == total
+        return n
+
+    base_rep, base_dt = profiled(sized_epoch)
+    fast_rep, fast_dt = profiled(coalesced_epoch)
+
+    base_mb = total / base_dt / 1e6
+    fast_mb = total / fast_dt / 1e6
+    print(f"corpus              : {N_FILES} files, {total / 2**20:.1f} MiB "
+          f"(16 KiB median)")
+    print(f"sized pipeline      : {base_dt * 1e3:7.1f} ms  "
+          f"{base_mb:7.1f} MB/s  "
+          f"DXT: {base_rep.posix.reads} reads, "
+          f"{base_rep.bandwidth_mb_s:.0f} MB/s in-syscall")
+    print(f"coalesced pipeline  : {fast_dt * 1e3:7.1f} ms  "
+          f"{fast_mb:7.1f} MB/s  "
+          f"DXT: {fast_rep.posix.reads} reads, "
+          f"{fast_rep.bandwidth_mb_s:.0f} MB/s in-syscall")
+    print(f"bandwidth delta     : {fast_mb / base_mb:.2f}x wall, "
+          f"{fast_rep.bandwidth_mb_s / max(base_rep.bandwidth_mb_s, 1e-9):.2f}x "
+          f"DXT-measured")
+    n_batches = len(rdr.batches())
+    print(f"pipeline units      : {N_FILES} per-file items -> "
+          f"{n_batches} coalesced batches "
+          f"({N_FILES / max(n_batches, 1):.0f} files per unit)")
+    hits = reg.counter("io.pool.hits").value
+    print(f"buffer pool         : {hits} lease recycles, "
+          f"{reg.counter('io.pool.misses').value} cold allocations")
+
+    assert n_batches * 4 < N_FILES, \
+        "coalescing should collapse per-file items into batch units"
+    assert hits > 0, "buffer pool recorded no recycling"
+    assert fast_dt < base_dt, \
+        f"coalesced ingest slower than sized ({fast_dt:.3f}s vs {base_dt:.3f}s)"
+    print("OK: pooled coalesced ingest wins under the profiler")
+
+
+if __name__ == "__main__":
+    main()

@@ -43,6 +43,7 @@ def attach(runtime: Optional[DarshanRuntime] = None) -> DarshanRuntime:
             "os.open": os.open,
             "os.read": os.read,
             "os.pread": os.pread,
+            "os.preadv": os.preadv,
             "os.write": os.write,
             "os.pwrite": os.pwrite,
             "os.lseek": os.lseek,
@@ -65,6 +66,7 @@ def detach() -> None:
         os.open = _ORIGINALS["os.open"]
         os.read = _ORIGINALS["os.read"]
         os.pread = _ORIGINALS["os.pread"]
+        os.preadv = _ORIGINALS["os.preadv"]
         os.write = _ORIGINALS["os.write"]
         os.pwrite = _ORIGINALS["os.pwrite"]
         os.lseek = _ORIGINALS["os.lseek"]
@@ -81,6 +83,7 @@ def originals() -> dict:
     if _ORIGINALS:
         return _ORIGINALS
     return {"os.open": os.open, "os.read": os.read, "os.pread": os.pread,
+            "os.preadv": os.preadv,
             "os.write": os.write, "os.pwrite": os.pwrite,
             "os.lseek": os.lseek, "os.close": os.close, "os.stat": os.stat,
             "os.fsync": os.fsync, "builtins.open": builtins.open}
@@ -116,6 +119,21 @@ def _install(rt: DarshanRuntime) -> None:
         data = o["os.pread"](fd, n, offset)
         rt.posix_read(fd, offset, len(data), t0, rt.now(), advance=False)
         return data
+
+    def w_preadv(fd, buffers, offset, flags=0):
+        # the repro.io pooled readers' gather entry point — one record
+        # per syscall (bytes = sum over iovecs), like Darshan's preadv
+        if rt.fd_state(fd) is None:
+            if flags:
+                return o["os.preadv"](fd, buffers, offset, flags)
+            return o["os.preadv"](fd, buffers, offset)
+        t0 = rt.now()
+        if flags:
+            n = o["os.preadv"](fd, buffers, offset, flags)
+        else:
+            n = o["os.preadv"](fd, buffers, offset)
+        rt.posix_read(fd, offset, n, t0, rt.now(), advance=False)
+        return n
 
     def w_write(fd, data):
         if rt.fd_state(fd) is None:
@@ -190,6 +208,7 @@ def _install(rt: DarshanRuntime) -> None:
     os.open = w_open
     os.read = w_read
     os.pread = w_pread
+    os.preadv = w_preadv
     os.write = w_write
     os.pwrite = w_pwrite
     os.lseek = w_lseek

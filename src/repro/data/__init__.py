@@ -1,7 +1,9 @@
 from repro.data.dataset import FileDataset
 from repro.data.pipeline import AUTOTUNE, Pipeline
-from repro.data.readers import posix_read_file, sized_read_file
+from repro.data.readers import (READERS, posix_read_file, resolve_reader,
+                                sized_read_file)
 from repro.data.tiers import StorageTier, TierManager
 
-__all__ = ["FileDataset", "AUTOTUNE", "Pipeline", "posix_read_file",
-           "sized_read_file", "StorageTier", "TierManager"]
+__all__ = ["FileDataset", "AUTOTUNE", "Pipeline", "READERS",
+           "posix_read_file", "resolve_reader", "sized_read_file",
+           "StorageTier", "TierManager"]

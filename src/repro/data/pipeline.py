@@ -16,7 +16,7 @@ import time
 import warnings
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, replace
-from typing import Any, Callable, Iterable, List, Optional, Sequence
+from typing import Any, Callable, Iterable, List, Optional, Sequence, Union
 
 AUTOTUNE = -1
 
@@ -85,7 +85,15 @@ class Pipeline:
     def __init__(self, items: Sequence, _spec: Optional[_Spec] = None):
         self.spec = _spec or _Spec(items=items)
 
-    def map(self, fn: Callable, num_parallel_calls: int = 1) -> "Pipeline":
+    def map(self, fn: Union[Callable, str],
+            num_parallel_calls: int = 1) -> "Pipeline":
+        """Map a capture function over the items.  ``fn`` may be a
+        ``READERS`` key (``"posix"``, ``"sized"``, ``"pooled"``,
+        ``"mmap"``, ``"coalesced"``, ``"adaptive"``) as well as any
+        callable: ``Pipeline(paths).map("coalesced", 16)``."""
+        if isinstance(fn, str):
+            from repro.data.readers import resolve_reader
+            fn = resolve_reader(fn)
         return Pipeline(None, replace(self.spec, map_fn=fn,
                                       num_parallel_calls=num_parallel_calls))
 
@@ -161,29 +169,65 @@ class Pipeline:
             yield from self._mapped()
 
     def _prefetched(self, source):
-        """Background thread keeps a bounded queue of ready elements."""
+        """Background thread keeps a bounded queue of ready elements.
+
+        The feeder must not outlive the consumer: when the consumer
+        abandons the iterator early (``break``, GC, generator
+        ``close()``), a plain blocking ``q.put`` would park the daemon
+        thread forever with the source — and whatever files/pools it
+        holds — pinned.  So puts poll a stop event, the consumer's
+        ``finally`` (run on close/GC) sets it and drains the queue,
+        and the feeder closes the source generator from its own thread
+        so upstream ``finally`` blocks (thread pools, leases) run."""
         spec = self.spec
         cap = max(spec.prefetch_depth * max(spec.batch_size or 1, 1), 1)
         q: "queue.Queue" = queue.Queue(maxsize=cap)
         DONE, ERR = object(), object()
+        stop = threading.Event()
+
+        def put(x) -> bool:
+            while not stop.is_set():
+                try:
+                    q.put(x, timeout=0.05)
+                    return True
+                except queue.Full:
+                    continue
+            return False
 
         def feed():
             try:
-                for x in source:
-                    q.put(x)
-                q.put(DONE)
+                try:
+                    for x in source:
+                        if not put(x):
+                            break
+                    else:
+                        put(DONE)
+                finally:
+                    close = getattr(source, "close", None)
+                    if close is not None:
+                        close()
             except BaseException as e:  # noqa: BLE001
-                q.put((ERR, e))
+                put((ERR, e))
 
-        t = threading.Thread(target=feed, daemon=True)
+        t = threading.Thread(target=feed, daemon=True,
+                             name="repro-prefetch-feeder")
         t.start()
-        while True:
-            x = q.get()
-            if x is DONE:
-                break
-            if isinstance(x, tuple) and len(x) == 2 and x[0] is ERR:
-                raise x[1]
-            yield x
+        try:
+            while True:
+                x = q.get()
+                if x is DONE:
+                    break
+                if isinstance(x, tuple) and len(x) == 2 and x[0] is ERR:
+                    raise x[1]
+                yield x
+        finally:
+            stop.set()
+            try:                      # wake a feeder parked on a full queue
+                while True:
+                    q.get_nowait()
+            except queue.Empty:
+                pass
+            t.join(timeout=5.0)
 
     def _mapped(self):
         spec = self.spec

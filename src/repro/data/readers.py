@@ -10,13 +10,26 @@ which is where the paper's "2x reads vs files opened, 50 % of reads are
 §8): stat first, then issue exactly the reads needed — no zero-length
 tail read.
 
-Both go through ``os.open/os.pread`` so the attach layer (the GOT-patch
-analogue) instruments them transparently; neither imports repro.core.
+The ``repro.io`` ingest engine adds the fast paths: ``pooled`` (buffer-
+pool + ``preadv`` gather, zero per-chunk allocation), ``mmap`` (page-
+cache mapping), ``coalesced`` (many small files per pooled buffer —
+the paper's ImageNet/malware shape), and ``adaptive`` (pooled with a
+bandwidth-hill-climbed chunk size/io depth, drivable by ``repro.tune``
+``io-chunk`` actions).  All entries keep the same signature and are
+byte-exact with ``posix_read_file`` (property-tested), and all still go
+through ``os.open/os.pread(v)`` so the attach layer (the GOT-patch
+analogue) instruments them transparently; this module never imports
+repro.core.
 """
 from __future__ import annotations
 
 import os
-from typing import Optional
+from typing import Callable, Optional, Union
+
+from repro.io.adaptive import adaptive_read_file
+from repro.io.buffers import pooled_read_file
+from repro.io.coalesce import coalesced_read_file
+from repro.io.readahead import mmap_read_file
 
 DEFAULT_CHUNK = 1 << 20          # 1 MiB, like TF's ReadFile buffering
 
@@ -62,4 +75,28 @@ def sized_read_file(path: str, chunk_size: int = DEFAULT_CHUNK,
         os.close(fd)
 
 
-READERS = {"posix": posix_read_file, "sized": sized_read_file}
+READERS = {
+    "posix": posix_read_file,        # paper-faithful (zero-length tail)
+    "sized": sized_read_file,        # profile-guided exact reads
+    "pooled": pooled_read_file,      # buffer pool + preadv gather
+    "mmap": mmap_read_file,          # page-cache mapping, large files
+    "coalesced": coalesced_read_file,  # many small files per buffer
+    "adaptive": adaptive_read_file,  # pooled + bandwidth hill-climb
+}
+
+
+def resolve_reader(reader: Union[str, Callable, None],
+                   default: Callable = posix_read_file) -> Callable:
+    """Accept a ``READERS`` key or a callable; ``None`` → ``default``.
+
+    This is what lets ``Pipeline.map("coalesced", 16)`` and
+    ``make_tiered_reader(tm, reader="pooled")`` take plain strings."""
+    if reader is None:
+        return default
+    if callable(reader):
+        return reader
+    try:
+        return READERS[reader]
+    except KeyError:
+        raise KeyError(f"unknown reader {reader!r} "
+                       f"(one of {sorted(READERS)})") from None

@@ -128,9 +128,11 @@ def default_tiers(base: str, throttled: bool = False) -> TierManager:
 
 def make_tiered_reader(tm: TierManager, reader=None, resolver=None):
     """Reader that applies tier throttling/seek penalties and an optional
-    path resolver (e.g. StagingManager.resolve for staged files)."""
-    from repro.data.readers import posix_read_file
-    reader = reader or posix_read_file
+    path resolver (e.g. StagingManager.resolve for staged files).
+    ``reader`` may be a callable or a ``READERS`` key ("pooled",
+    "coalesced", ...); default is the paper-faithful posix reader."""
+    from repro.data.readers import posix_read_file, resolve_reader
+    reader = resolve_reader(reader, default=posix_read_file)
     def read(path: str):
         p = resolver(path) if resolver else path
         tier = tm.tier_of(p)

@@ -1,0 +1,45 @@
+"""repro.io — the high-throughput ingest engine behind ``READERS``.
+
+The paper's whole diagnosis is that ML ingest is syscall- and
+allocation-bound, not disk-bound: TensorFlow's ReadFile loop costs
+``ceil(size/chunk)+1`` preads and a fresh ``bytes`` per chunk, and the
+small-file tail turns every epoch into a metadata storm (§V-A).  This
+package is the mechanical fix, one layer per failure mode:
+
+  * :mod:`repro.io.buffers`   — a thread-safe reusable :class:`BufferPool`
+    plus ``preadv``/readinto zero-copy readers: one pooled ``bytearray``
+    per file, gather-read in ``io_depth`` chunk iovecs per syscall, a
+    single final ``memoryview`` assembly.  Pool hit/miss/resize counters
+    land in ``repro.obs``.
+  * :mod:`repro.io.readahead` — ``posix_fadvise`` hints (sequential /
+    willneed / dontneed) and an ``mmap`` reader; every hint degrades to
+    a no-op on platforms without it.
+  * :mod:`repro.io.coalesce`  — the small-file batch scheduler: sort a
+    corpus, read many small files back-to-back into one pooled buffer,
+    yield per-file views (the paper's ImageNet/malware shape — staging
+    advice realized without a fast tier).
+  * :mod:`repro.io.adaptive`  — a chunk-size / io-depth controller that
+    hill-climbs on observed bandwidth and is drivable mid-run through
+    the ``repro.tune`` closed loop (``io-chunk`` actions).
+
+Everything still issues plain ``os.open``/``os.preadv``/``os.pread``
+calls, so the attach layer (the GOT-patch analogue) instruments the fast
+paths exactly like the slow ones and DXT traces show the gains.
+"""
+from repro.io.buffers import (DEFAULT_CHUNK, DEFAULT_IO_DEPTH, BufferPool,
+                              PooledData, default_pool, pooled_read_file,
+                              pooled_read_view, read_into)
+from repro.io.coalesce import (CoalescedBatch, CoalescingReader,
+                               coalesced_read_file, plan_coalesced,
+                               read_coalesced)
+from repro.io.readahead import fadvise, mmap_read_file
+from repro.io.adaptive import (AdaptiveChunker, adaptive_read_file,
+                               default_chunker)
+
+__all__ = [
+    "DEFAULT_CHUNK", "DEFAULT_IO_DEPTH", "BufferPool", "PooledData",
+    "default_pool", "pooled_read_file", "pooled_read_view", "read_into",
+    "CoalescedBatch", "CoalescingReader", "coalesced_read_file",
+    "plan_coalesced", "read_coalesced", "fadvise", "mmap_read_file",
+    "AdaptiveChunker", "adaptive_read_file", "default_chunker",
+]

@@ -1,0 +1,87 @@
+"""Kernel readahead hints + an mmap reader, all gracefully optional.
+
+``posix_fadvise`` tells the page cache what the access pattern will be
+(SEQUENTIAL doubles the readahead window, WILLNEED starts asynchronous
+population, DONTNEED evicts spent pages after a one-pass scan so a big
+streaming epoch stops thrashing everyone else's cache).  None of it
+changes read results — so every helper returns ``True``/``False`` and
+degrades to a no-op on platforms (or filesystems) without the call.
+
+``mmap_read_file`` is the page-cache fast path for large files: map,
+madvise sequential, one copy out of the mapping — no intermediate chunk
+buffers at all.  Its ``os.open``/``os.stat``/``os.close`` still run
+through the attach layer, so opens and metadata stay visible in DXT
+traces; the mapped access itself is not a read syscall and is recorded
+only at that granularity (documented in the reader matrix).
+"""
+from __future__ import annotations
+
+import mmap
+import os
+
+_FADV_MODES = {}
+for _name, _attr in (("normal", "POSIX_FADV_NORMAL"),
+                     ("sequential", "POSIX_FADV_SEQUENTIAL"),
+                     ("random", "POSIX_FADV_RANDOM"),
+                     ("willneed", "POSIX_FADV_WILLNEED"),
+                     ("dontneed", "POSIX_FADV_DONTNEED")):
+    if hasattr(os, _attr):
+        _FADV_MODES[_name] = getattr(os, _attr)
+
+_HAVE_FADVISE = hasattr(os, "posix_fadvise") and bool(_FADV_MODES)
+
+
+def fadvise(fd: int, mode: str, offset: int = 0, length: int = 0) -> bool:
+    """Advise the kernel about the coming access pattern on ``fd``.
+
+    ``mode`` is one of ``normal | sequential | random | willneed |
+    dontneed``; ``length=0`` means "to EOF".  Returns True when the
+    hint was delivered, False when the platform/filesystem lacks the
+    call or rejected it — callers never need to care."""
+    if not _HAVE_FADVISE:
+        return False
+    flag = _FADV_MODES.get(mode)
+    if flag is None:
+        raise ValueError(f"unknown fadvise mode {mode!r} "
+                         f"(one of {sorted(_FADV_MODES)})")
+    try:
+        os.posix_fadvise(fd, offset, length, flag)
+        return True
+    except OSError:
+        return False
+
+
+def _madvise(mm: mmap.mmap, attr: str) -> bool:
+    flag = getattr(mmap, attr, None)
+    if flag is None or not hasattr(mm, "madvise"):
+        return False
+    try:
+        mm.madvise(flag)
+        return True
+    except OSError:
+        return False
+
+
+def mmap_read_file(path: str, chunk_size=None, throttle=None) -> bytes:
+    """Read a whole file through a private read-only mapping.
+
+    Signature-compatible with the ``READERS`` contract (``chunk_size``
+    is accepted and ignored — a mapping has no chunks).  ``throttle``
+    is charged once with the full size, like one giant read."""
+    size = os.stat(path).st_size
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        if size == 0:
+            return b""
+        mm = mmap.mmap(fd, size, prot=mmap.PROT_READ)
+        try:
+            _madvise(mm, "MADV_SEQUENTIAL")
+            _madvise(mm, "MADV_WILLNEED")
+            data = mm[:size]
+        finally:
+            mm.close()
+        if throttle is not None:
+            throttle(size)
+        return data
+    finally:
+        os.close(fd)

@@ -1,32 +1,148 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Perf hillclimbing (EXPERIMENTS.md §Perf) + the generic 1-D climber.
 
-"""Perf hillclimbing driver (EXPERIMENTS.md §Perf).
+Two things live here:
 
-Compiles named variants of the three chosen cells on the single-pod mesh
-and records the trip-count-corrected roofline terms for each, so every
-hypothesis -> change -> before -> after row in EXPERIMENTS.md is backed
-by a JSON artifact.
+  * :class:`HillClimb1D` — a dependency-free discrete hill-climb over a
+    ladder of candidate values, with the same improve/back-off
+    semantics as ``core.advisor.ThreadAutotuneAdvisor`` (move while the
+    new measurement beats the best by >5%, retreat on a >5% regression,
+    settle otherwise).  ``repro.io.adaptive`` coordinate-descends two
+    of these over chunk size and io depth.
+  * the XLA variant-compile driver: compiles named variants of the
+    chosen cells on the single-pod mesh and records trip-count-
+    corrected roofline terms, so every hypothesis -> change -> before
+    -> after row in EXPERIMENTS.md is backed by a JSON artifact.
 
-    PYTHONPATH=src python -m repro.perf.hillclimb --cell llama
-    PYTHONPATH=src python -m repro.perf.hillclimb --list
+        PYTHONPATH=src python -m repro.perf.hillclimb --cell llama
+        PYTHONPATH=src python -m repro.perf.hillclimb --list
+
+The driver's jax / mesh / config imports (and the
+``xla_force_host_platform_device_count`` flag) are confined to the
+CLI path so the module itself is import-light — the ingest engine
+imports it in-process.
 """
-import argparse
 import dataclasses
 import json
+import os
 import time
-
-import jax
-
-from repro.configs import SHAPES_BY_NAME, get_config
-from repro.distributed import sharding as shd
-from repro.launch.dryrun import build_cell
-from repro.launch.mesh import make_production_mesh
-from repro.perf.hlo_analysis import analyze_hlo_text
-from repro.perf.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS,
-                                 model_flops_per_device)
+from typing import Optional, Sequence
 
 
+class HillClimb1D:
+    """Discrete hill-climb over an ordered ladder of candidate values.
+
+    Feed it measurements with ``observe(score)`` (higher is better,
+    e.g. bytes/sec); read the value to try next from ``.value``.  The
+    climber probes neighbours one step at a time: it keeps moving in a
+    direction while each probe improves on the best seen by
+    ``improve_ratio``, backs off when a probe regresses past
+    ``regress_ratio``, and flips direction / settles otherwise.  Once
+    both directions are exhausted it pins the best index until
+    ``reset()``.
+    """
+
+    def __init__(self, ladder: Sequence, start_index: Optional[int] = None,
+                 improve_ratio: float = 1.05, regress_ratio: float = 0.95):
+        if not ladder:
+            raise ValueError("ladder must be non-empty")
+        self.ladder = list(ladder)
+        self.improve_ratio = float(improve_ratio)
+        self.regress_ratio = float(regress_ratio)
+        self._idx = (len(self.ladder) // 2 if start_index is None
+                     else max(0, min(int(start_index), len(self.ladder) - 1)))
+        self._best_idx = self._idx
+        self._best_score: Optional[float] = None
+        self._dir = 1 if self._idx < len(self.ladder) - 1 else -1
+        self._tried_flip = False
+        self._settled = len(self.ladder) == 1
+        self.probes = 0
+
+    @property
+    def value(self):
+        return self.ladder[self._idx]
+
+    @property
+    def best(self):
+        return self.ladder[self._best_idx]
+
+    @property
+    def settled(self) -> bool:
+        return self._settled
+
+    def _step_or_settle(self) -> None:
+        """Move one rung in the current direction, flipping once; when
+        both directions are spent, pin the best index."""
+        nxt = self._idx + self._dir
+        if 0 <= nxt < len(self.ladder):
+            self._idx = nxt
+            return
+        if not self._tried_flip:
+            self._tried_flip = True
+            self._dir = -self._dir
+            self._idx = self._best_idx
+            nxt = self._idx + self._dir
+            if 0 <= nxt < len(self.ladder):
+                self._idx = nxt
+                return
+        self._settled = True
+        self._idx = self._best_idx
+
+    def observe(self, score: float):
+        """Record the measurement for the current ``value``; returns
+        the next value to run with."""
+        self.probes += 1
+        if self._settled:
+            return self.value
+        if self._best_score is None:
+            self._best_score = float(score)
+            self._step_or_settle()
+            return self.value
+        if score > self._best_score * self.improve_ratio:
+            self._best_score = float(score)
+            self._best_idx = self._idx
+            self._step_or_settle()
+        elif score < self._best_score * self.regress_ratio:
+            # clear regression — retreat to best and try the other way
+            if self._tried_flip:
+                self._settled = True
+                self._idx = self._best_idx
+            else:
+                self._tried_flip = True
+                self._dir = -self._dir
+                self._idx = self._best_idx
+                self._step_or_settle()
+        else:
+            # flat: not worth moving further this way
+            if score > self._best_score:
+                self._best_score = float(score)
+                self._best_idx = self._idx
+            if self._tried_flip:
+                self._settled = True
+                self._idx = self._best_idx
+            else:
+                self._tried_flip = True
+                self._dir = -self._dir
+                self._idx = self._best_idx
+                self._step_or_settle()
+        return self.value
+
+    def reset(self, start_index: Optional[int] = None) -> None:
+        """Forget history and climb again (workload shifted)."""
+        if start_index is not None:
+            self._idx = max(0, min(int(start_index), len(self.ladder) - 1))
+        else:
+            self._idx = self._best_idx
+        self._best_idx = self._idx
+        self._best_score = None
+        self._dir = 1 if self._idx < len(self.ladder) - 1 else -1
+        self._tried_flip = False
+        self._settled = len(self.ladder) == 1
+        self.probes = 0
+
+
+# --------------------------------------------------------------------------
+# XLA variant-compile driver (CLI only from here down)
+# --------------------------------------------------------------------------
 def _variant(cfg, *, ssm_chunk=None, ssm_intra=None, **cfg_overrides):
     ssm_kw = {}
     if ssm_chunk:
@@ -86,6 +202,14 @@ def layer_trips_variant(cfg) -> set:
 
 
 def run_variant(arch, shape_name, name, overrides, mb, out_dir):
+    from repro.configs import SHAPES_BY_NAME, get_config
+    from repro.distributed import sharding as shd
+    from repro.launch.dryrun import build_cell
+    from repro.launch.mesh import make_production_mesh
+    from repro.perf.hlo_analysis import analyze_hlo_text
+    from repro.perf.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS,
+                                     model_flops_per_device)
+
     cfg = get_config(arch)
     overrides = dict(overrides)
     if overrides.pop("moe_ep", False):
@@ -145,6 +269,10 @@ def run_variant(arch, shape_name, name, overrides, mb, out_dir):
 
 
 def main():
+    # Must land before jax initializes — which is why the driver path
+    # only imports jax from inside run_variant()/main().
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", action="append", default=None,
                     choices=list(CELLS))

@@ -222,8 +222,8 @@ class Profiler:
 
     def bind_tune(self, **knobs) -> bool:
         """Bind knob objects (tier_manager=, dataset=,
-        checkpoint_manager=, pipeline_control=) onto the local tune
-        applier; no-op returning False when tune is off."""
+        checkpoint_manager=, pipeline_control=, io_chunker=) onto the
+        local tune applier; no-op returning False when tune is off."""
         if not self.options.tune or self.options.mode != "local":
             return False
         self._ensure_tune()

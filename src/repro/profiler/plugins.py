@@ -23,7 +23,7 @@ BUILTIN_EXPORTERS = ("chrome_trace", "darshan_log", "json_report",
                      "dashboard", "archive")
 BUILTIN_ADVISORS = ("staging", "thread-autotune", "workload-character")
 BUILTIN_POLICIES = ("stage-hot-files", "autotune-threads",
-                    "checkpoint-backoff")
+                    "checkpoint-backoff", "adaptive-io")
 
 
 # ------------------------------------------------------------- exporters

@@ -37,6 +37,12 @@ class ServeEngine:
         # one profiling window (tune=True closes the loop on the
         # serving fleet's I/O knobs too — paper §VII applied to serving)
         self.profiler = profiler
+        if profiler is not None \
+                and getattr(getattr(profiler, "options", None),
+                            "tune", False):
+            # io-chunk actions steer weight/cache ingest for this engine
+            from repro.io.adaptive import default_chunker
+            profiler.bind_tune(io_chunker=default_chunker())
         self.slots = batch_slots
         self.max_len = max_len
         self.cache = init_cache(cfg, batch_slots, max_len)

@@ -85,10 +85,13 @@ class Trainer:
             self.profiler_facade.step_callback()
             if self.profiler_facade is not None else None)
         # closed-loop tuning: throttle-checkpoint actions need the
-        # checkpoint manager bound on the applier (no-op if tune is off)
+        # checkpoint manager bound on the applier, io-chunk actions the
+        # ingest engine's adaptive chunker (no-op if tune is off)
         if self.profiler_facade is not None \
                 and getattr(self.profiler_facade.options, "tune", False):
-            self.profiler_facade.bind_tune(checkpoint_manager=self.ckpt)
+            from repro.io.adaptive import default_chunker
+            self.profiler_facade.bind_tune(checkpoint_manager=self.ckpt,
+                                           io_chunker=default_chunker())
         # Distributed profiling: a repro.fleet.RankReporter profiles this
         # process's whole run and ships it to the FleetCollector (the
         # shipping — reporter.ship / ship_socket — is the caller's call,

@@ -19,6 +19,11 @@ recommendation.  Three kinds cover the paper's optimization surface:
   * ``throttle-checkpoint``  — back off async checkpoint writes to a
                                minimum interval when checkpoint stalls
                                dominate a window.
+  * ``io-chunk``             — steer the ``repro.io`` ingest engine's
+                               :class:`~repro.io.adaptive.AdaptiveChunker`:
+                               force/pin a chunk size and io depth, or
+                               reset it so the bandwidth hill-climb
+                               re-runs after a workload shift.
 
 Actions ride ``repro.link`` as a ``tune`` verb registered through the
 plugin registry (``register_verb`` surface — the same drop-in path a
@@ -39,7 +44,8 @@ from repro.link.messages import Message, WireError, encode
 
 TUNE_VERSION = 1
 
-ACTION_KINDS = ("migrate-file", "resize-threads", "throttle-checkpoint")
+ACTION_KINDS = ("migrate-file", "resize-threads", "throttle-checkpoint",
+                "io-chunk")
 
 # Terminal ack statuses a rank can report for one action.
 ACK_STATUSES = ("applied", "rejected", "failed", "skipped", "dry-run")

@@ -16,6 +16,10 @@ carrying the knob's before/after state:
     scales the rank's *current* count — rank-side state stays
     rank-side.
   * ``throttle-checkpoint`` -> ``CheckpointManager.set_throttle``.
+  * ``io-chunk``            -> ``repro.io.adaptive.AdaptiveChunker``:
+    pin a chunk size / io depth ({chunk_size, io_depth}), or
+    ({reset: true}) restart its bandwidth hill-climb after a workload
+    shift.
 
 Idempotency: transports deliver at-least-once and the controller
 re-delivers until acked, so the applier keeps a seen-set by
@@ -42,7 +46,7 @@ from typing import Dict, List, Optional
 from repro.tune.actions import TuneAck, TuneAction
 
 _BINDABLE = ("tier_manager", "pipeline_control", "checkpoint_manager",
-             "dataset")
+             "dataset", "io_chunker")
 
 _local = threading.local()
 _process_applier: Optional["TuneApplier"] = None
@@ -68,13 +72,14 @@ def current_applier() -> Optional["TuneApplier"]:
 class TuneApplier:
     def __init__(self, rank: int = 0,
                  tier_manager=None, pipeline_control=None,
-                 checkpoint_manager=None,
+                 checkpoint_manager=None, io_chunker=None,
                  dataset: Optional[List[str]] = None,
                  staging_subdir: str = "tune_staged"):
         self.rank = rank
         self.tier_manager = tier_manager
         self.pipeline_control = pipeline_control
         self.checkpoint_manager = checkpoint_manager
+        self.io_chunker = io_chunker
         self.dataset = list(dataset) if dataset else []
         self.staging_subdir = staging_subdir
         self._lock = threading.Lock()
@@ -149,6 +154,8 @@ class TuneApplier:
                     ack = self._apply_resize(action)
                 elif action.kind == "throttle-checkpoint":
                     ack = self._apply_throttle(action)
+                elif action.kind == "io-chunk":
+                    ack = self._apply_io_chunk(action)
                 else:
                     ack = TuneAck(action.action_id, self.rank, "rejected",
                                   detail=f"unknown kind {action.kind!r}")
@@ -171,6 +178,9 @@ class TuneApplier:
             ckpt = self.checkpoint_manager
             return {"min_interval_s": (getattr(ckpt, "min_interval_s", 0.0)
                                        if ckpt is not None else None)}
+        if kind == "io-chunk":
+            ch = self.io_chunker
+            return dict(ch.snapshot()) if ch is not None else {}
         return {}
 
     # ---------------------------------------------------- action kinds
@@ -263,3 +273,33 @@ class TuneApplier:
                        after={"min_interval_s": interval},
                        detail=f"async checkpoint saves throttled to "
                               f">= {interval:.3f}s apart")
+
+    def _apply_io_chunk(self, action: TuneAction) -> TuneAck:
+        chunker = self.io_chunker
+        if chunker is None:
+            return TuneAck(action.action_id, self.rank, "rejected",
+                           detail="no io_chunker bound on this rank")
+        before = self._snapshot(action.kind)
+        if action.params.get("reset"):
+            after = chunker.reset()
+            return TuneAck(action.action_id, self.rank, "applied",
+                           before=before, after=dict(after),
+                           detail="adaptive chunker reset — bandwidth "
+                                  "hill-climb restarts")
+        chunk = action.params.get("chunk_size")
+        depth = action.params.get("io_depth")
+        if chunk is None and depth is None:
+            return TuneAck(action.action_id, self.rank, "rejected",
+                           before=before,
+                           detail="io-chunk needs chunk_size, io_depth, "
+                                  "or reset")
+        after = chunker.set(
+            chunk_size=int(chunk) if chunk is not None else None,
+            io_depth=int(depth) if depth is not None else None,
+            pin=bool(action.params.get("pin", True)))
+        return TuneAck(action.action_id, self.rank, "applied",
+                       before=before, after=dict(after),
+                       detail=f"io chunker set to chunk="
+                              f"{after['chunk_size']} depth="
+                              f"{after['io_depth']}"
+                              f"{' (pinned)' if after['pinned'] else ''}")

@@ -23,6 +23,13 @@ The built-ins mirror the existing advisory layer, turned active:
   * ``checkpoint-backoff`` — checkpoint stalls throttle the async
                              checkpoint writer to a minimum interval
                              scaled by severity.
+  * ``adaptive-io``        — steers the ``repro.io`` ingest engine:
+                             a straggler read tail widens the adaptive
+                             chunk size (fewer, larger syscalls),
+                             random-read thrash shrinks it, and a
+                             small-file storm resets the chunker so
+                             the bandwidth hill-climb re-fits the new
+                             shape.
 """
 from __future__ import annotations
 
@@ -32,7 +39,7 @@ from repro.insight.detectors import Finding
 from repro.tune.actions import TuneAction
 
 BUILTIN_POLICIES = ("stage-hot-files", "autotune-threads",
-                    "checkpoint-backoff")
+                    "checkpoint-backoff", "adaptive-io")
 
 # Matches StagingAdvisor's default small-file bar (2 MiB).
 DEFAULT_SIZE_THRESHOLD = 2 * 1024 * 1024
@@ -120,6 +127,33 @@ class CheckpointBackoffPolicy(TunePolicy):
             rank=finding.rank)]
 
 
+class AdaptiveIoPolicy(TunePolicy):
+    name = "adaptive-io"
+    widen = ("straggler-read-tail",)
+    shrink = ("random-read-thrash",)
+    refit = ("small-file-storm",)
+
+    def __init__(self, wide_chunk: int = 4 << 20,
+                 narrow_chunk: int = 256 << 10):
+        self.wide_chunk = int(wide_chunk)
+        self.narrow_chunk = int(narrow_chunk)
+
+    def plan(self, finding: Finding) -> List[TuneAction]:
+        if finding.detector in self.widen:
+            params = {"chunk_size": self.wide_chunk, "pin": True}
+        elif finding.detector in self.shrink:
+            params = {"chunk_size": self.narrow_chunk, "pin": True}
+        elif finding.detector in self.refit:
+            params = {"reset": True}
+        else:
+            return []
+        return [TuneAction(
+            action_id="", kind="io-chunk", params=params,
+            policy=self.name,
+            reason=f"{finding.detector}: {finding.recommendation}",
+            rank=finding.rank)]
+
+
 def make_builtin_policy(name: str, options=None) -> TunePolicy:
     """Factory behind the registry entries; ``options`` is the active
     ProfilerOptions (or None for direct construction)."""
@@ -129,4 +163,6 @@ def make_builtin_policy(name: str, options=None) -> TunePolicy:
         return AutotuneThreadsPolicy()
     if name == "checkpoint-backoff":
         return CheckpointBackoffPolicy()
+    if name == "adaptive-io":
+        return AdaptiveIoPolicy()
     raise ValueError(f"unknown built-in policy: {name!r}")

@@ -362,3 +362,67 @@ def test_relay_frame_corruption_detected_or_equal(rows, data):
         decode_frame(bytes(frame))
     except WireError:
         pass
+
+
+# ---------------------------------------------------------------------------
+# repro.io reader parity: every fast-path reader is byte-identical to
+# posix_read_file for arbitrary file sizes (empty, sub-chunk, exact
+# chunk multiples, chunk +/- 1) and arbitrary chunk sizes.
+# ---------------------------------------------------------------------------
+import shutil  # noqa: E402
+import tempfile  # noqa: E402
+
+_chunk_sizes = st.sampled_from([1, 13, 4096, 1 << 16, 1 << 20])
+_file_sizes = st.one_of(
+    st.sampled_from([0, 1, 4095, 4096, 4097, (1 << 16) - 1, 1 << 16,
+                     (1 << 16) + 1]),
+    st.integers(0, 200_000),
+)
+
+
+@given(size=_file_sizes, chunk=_chunk_sizes, depth=st.integers(1, 16),
+       seed=st.integers(0, 2**32 - 1))
+@settings(**SETTINGS)
+def test_io_readers_byte_identical_to_posix(size, chunk, depth, seed):
+    import random
+
+    from repro.data.readers import posix_read_file
+    from repro.io import (BufferPool, CoalescingReader, mmap_read_file,
+                          pooled_read_file, pooled_read_view)
+    from repro.io.adaptive import AdaptiveChunker, adaptive_read_file
+    from repro.obs.metrics import MetricsRegistry
+
+    root = tempfile.mkdtemp(prefix="io_prop_")
+    try:
+        path = os.path.join(root, "f.bin")
+        payload = bytes(random.Random(seed).getrandbits(8)
+                        for _ in range(min(size, 4096)))
+        with open(path, "wb") as f:
+            # repeat a random block out to `size` (cheap at 200 KB max)
+            while f.tell() < size:
+                f.write(payload[:size - f.tell()] if payload else b"\0")
+                if not payload:
+                    break
+            f.truncate(size)
+        want = posix_read_file(path)
+        assert len(want) == size
+
+        pool = BufferPool(registry=MetricsRegistry())
+        assert pooled_read_file(path, chunk_size=chunk, io_depth=depth,
+                                pool=pool) == want
+        lease = pooled_read_view(path, chunk_size=chunk, io_depth=depth,
+                                 pool=pool)
+        assert bytes(lease) == want
+        lease.release()
+
+        assert mmap_read_file(path) == want
+
+        rdr = CoalescingReader([path], chunk_size=chunk, io_depth=depth,
+                               pool=pool, registry=MetricsRegistry())
+        assert rdr(path) == want
+
+        ch = AdaptiveChunker(registry=MetricsRegistry())
+        ch.set(chunk_size=chunk, io_depth=depth)
+        assert adaptive_read_file(path, chunker=ch, pool=pool) == want
+    finally:
+        shutil.rmtree(root, ignore_errors=True)

@@ -1,0 +1,496 @@
+"""repro.io ingest engine: buffer pool semantics + obs counters, zero-
+copy readers, readahead no-op guarantees, small-file coalescing,
+adaptive chunking through the tune closed loop, attach-layer preadv
+instrumentation, and the Pipeline prefetch feeder lifecycle fix."""
+import gc
+import os
+import threading
+import time
+
+import pytest
+
+from repro.data.pipeline import Pipeline
+from repro.data.readers import READERS, posix_read_file, resolve_reader
+from repro.io import (BufferPool, CoalescingReader, PooledData,
+                      fadvise, mmap_read_file, plan_coalesced,
+                      pooled_read_file, pooled_read_view, read_coalesced,
+                      read_into)
+from repro.io.adaptive import (CHUNK_LADDER, DEPTH_LADDER, AdaptiveChunker,
+                               adaptive_read_file)
+from repro.io.buffers import _size_class
+from repro.obs.metrics import MetricsRegistry
+from repro.perf.hillclimb import HillClimb1D
+
+
+def make_files(root, sizes, seed=0):
+    paths = []
+    for i, n in enumerate(sizes):
+        p = os.path.join(str(root), f"f{i:04d}.bin")
+        with open(p, "wb") as f:
+            f.write(bytes((i + j) % 251 for j in range(n)))
+        paths.append(p)
+    return paths
+
+
+# ---------------------------------------------------------------- buffers
+class TestBufferPool:
+    def test_size_classes_are_powers_of_two(self):
+        assert _size_class(1) == 4096
+        assert _size_class(4096) == 4096
+        assert _size_class(4097) == 8192
+        assert _size_class(1 << 20) == 1 << 20
+        assert _size_class((1 << 20) + 1) == 1 << 21
+
+    def test_hit_miss_resize_counters(self):
+        reg = MetricsRegistry()
+        pool = BufferPool(registry=reg)
+        b1 = pool.acquire(10_000)            # miss + resize (new class)
+        assert len(b1) == 16384
+        pool.release(b1)
+        b2 = pool.acquire(12_000)            # same class: hit
+        assert b2 is b1
+        assert reg.counter("io.pool.misses").value == 1
+        assert reg.counter("io.pool.hits").value == 1
+        assert reg.counter("io.pool.resizes").value == 1
+        pool.acquire(1 << 20)                # new class: miss + resize
+        assert reg.counter("io.pool.misses").value == 2
+        assert reg.counter("io.pool.resizes").value == 2
+
+    def test_release_bounds_and_evictions(self):
+        reg = MetricsRegistry()
+        pool = BufferPool(max_per_class=2, registry=reg)
+        bufs = [bytearray(4096) for _ in range(4)]
+        for b in bufs:
+            pool.release(b)
+        assert reg.counter("io.pool.evictions").value == 2
+        assert pool.held_bytes == 2 * 4096
+
+    def test_max_bytes_cap(self):
+        pool = BufferPool(max_bytes=8192, max_per_class=100,
+                          registry=MetricsRegistry())
+        pool.release(bytearray(8192))
+        pool.release(bytearray(8192))        # would exceed the cap
+        assert pool.held_bytes == 8192
+
+    def test_foreign_buffers_never_pooled(self):
+        pool = BufferPool(registry=MetricsRegistry())
+        pool.release(bytearray(1000))        # not a size class
+        pool.release(bytearray(100))         # below the min class
+        assert pool.held_bytes == 0
+
+    def test_clear(self):
+        pool = BufferPool(registry=MetricsRegistry())
+        pool.release(pool.acquire(4096))
+        assert pool.held_bytes > 0
+        pool.clear()
+        assert pool.held_bytes == 0
+
+
+class TestPooledReaders:
+    @pytest.mark.parametrize("size", [0, 1, 4095, 4096, 4097,
+                                      (1 << 20) - 1, 1 << 20,
+                                      (1 << 20) + 1, 3 * (1 << 20) + 17])
+    def test_pooled_read_byte_exact(self, tmp_path, size):
+        [p] = make_files(tmp_path, [size])
+        want = posix_read_file(p)
+        pool = BufferPool(registry=MetricsRegistry())
+        assert pooled_read_file(p, pool=pool) == want
+        assert pooled_read_file(p, chunk_size=4096, io_depth=3,
+                                pool=pool) == want
+
+    def test_read_into_short_on_eof(self, tmp_path):
+        [p] = make_files(tmp_path, [1000])
+        fd = os.open(p, os.O_RDONLY)
+        try:
+            buf = bytearray(4096)
+            got = read_into(fd, memoryview(buf), 4096, chunk_size=256)
+            assert got == 1000
+            assert bytes(buf[:got]) == posix_read_file(p)
+        finally:
+            os.close(fd)
+
+    def test_pooled_view_lease_lifecycle(self, tmp_path):
+        [p] = make_files(tmp_path, [10_000])
+        pool = BufferPool(registry=MetricsRegistry())
+        lease = pooled_read_view(p, pool=pool)
+        assert isinstance(lease, PooledData)
+        assert len(lease) == 10_000
+        assert bytes(lease) == posix_read_file(p)
+        assert pool.held_bytes == 0          # buffer still leased out
+        lease.release()
+        assert pool.held_bytes == _size_class(10_000)
+        lease.release()                      # double release is a no-op
+        with pytest.raises(ValueError):
+            lease.view                       # view is gone after release
+
+    def test_view_buffer_recycled_between_reads(self, tmp_path):
+        paths = make_files(tmp_path, [5000, 6000])
+        pool = BufferPool(registry=MetricsRegistry())
+        a = pooled_read_view(paths[0], pool=pool)
+        data_a = bytes(a)
+        a.release()
+        b = pooled_read_view(paths[1], pool=pool)
+        assert bytes(b) == posix_read_file(paths[1])
+        assert data_a == posix_read_file(paths[0])   # copy unaffected
+        b.release()
+
+    def test_throttle_sees_all_bytes(self, tmp_path):
+        [p] = make_files(tmp_path, [100_000])
+        seen = []
+        pooled_read_file(p, chunk_size=16_384, throttle=seen.append,
+                         pool=BufferPool(registry=MetricsRegistry()))
+        assert sum(seen) == 100_000
+
+
+# -------------------------------------------------------------- readahead
+class TestReadahead:
+    def test_fadvise_modes(self, tmp_path):
+        [p] = make_files(tmp_path, [8192])
+        fd = os.open(p, os.O_RDONLY)
+        try:
+            for mode in ("normal", "sequential", "random", "willneed",
+                         "dontneed"):
+                assert fadvise(fd, mode) in (True, False)
+            with pytest.raises(ValueError):
+                fadvise(fd, "psychic")
+        finally:
+            os.close(fd)
+
+    @pytest.mark.parametrize("size", [0, 1, 4096, 100_000])
+    def test_mmap_read_byte_exact(self, tmp_path, size):
+        [p] = make_files(tmp_path, [size])
+        assert mmap_read_file(p) == posix_read_file(p)
+
+    def test_mmap_throttle_charged_once(self, tmp_path):
+        [p] = make_files(tmp_path, [50_000])
+        seen = []
+        mmap_read_file(p, throttle=seen.append)
+        assert seen == [50_000]
+
+
+# --------------------------------------------------------------- coalesce
+class TestCoalesce:
+    def test_plan_respects_batch_bytes(self, tmp_path):
+        paths = make_files(tmp_path, [1000] * 10)
+        batches = plan_coalesced(paths, batch_bytes=3500)
+        assert [len(b) for b in batches] == [3, 3, 3, 1]
+        assert [p for b in batches for p, _ in b] == sorted(paths)
+
+    def test_oversized_file_gets_own_batch(self, tmp_path):
+        paths = make_files(tmp_path, [100, 10_000, 100])
+        batches = plan_coalesced(paths, batch_bytes=1000)
+        assert [len(b) for b in batches] == [1, 1, 1]
+
+    def test_read_coalesced_views_byte_exact(self, tmp_path):
+        sizes = [0, 1, 5000, 4096, 12_345]
+        paths = make_files(tmp_path, sizes)
+        pool = BufferPool(registry=MetricsRegistry())
+        for batch in plan_coalesced(paths, batch_bytes=16_384):
+            cb = read_coalesced(batch, pool=pool, chunk_size=4096)
+            for p, view in cb:
+                assert bytes(view) == posix_read_file(p), p
+            cb.release()
+        assert pool.held_bytes > 0           # releases landed back
+
+    def test_dropin_reader_serves_whole_corpus(self, tmp_path):
+        paths = make_files(tmp_path, [3000] * 9)
+        reg = MetricsRegistry()
+        rdr = CoalescingReader(paths, batch_bytes=10_000,
+                               pool=BufferPool(registry=reg), registry=reg)
+        for p in sorted(paths):
+            assert rdr(p) == posix_read_file(p)
+        # 9 files at ~3 per batch: 3 gather reads, everything coalesced
+        assert reg.counter("io.coalesce.batched_reads").value == 3
+        assert reg.counter("io.coalesce.coalesced_files").value == 9
+        assert reg.counter("io.coalesce.fallbacks").value == 0
+
+    def test_dropin_reader_any_order(self, tmp_path):
+        paths = make_files(tmp_path, [2000] * 8, seed=3)
+        import random
+        rng = random.Random(5)
+        shuffled = list(paths)
+        rng.shuffle(shuffled)
+        rdr = CoalescingReader(paths, batch_bytes=5000,
+                               registry=MetricsRegistry(),
+                               pool=BufferPool(registry=MetricsRegistry()))
+        for p in shuffled:
+            assert rdr(p) == posix_read_file(p)
+
+    def test_unknown_path_falls_back(self, tmp_path):
+        paths = make_files(tmp_path, [1000, 1000])
+        reg = MetricsRegistry()
+        rdr = CoalescingReader(paths[:1], registry=reg,
+                               pool=BufferPool(registry=MetricsRegistry()))
+        assert rdr(paths[1]) == posix_read_file(paths[1])
+        assert reg.counter("io.coalesce.fallbacks").value == 1
+
+    def test_cache_bytes_bounded(self, tmp_path):
+        paths = make_files(tmp_path, [4000] * 10)
+        rdr = CoalescingReader(paths, batch_bytes=40_000, cache_bytes=8000,
+                               registry=MetricsRegistry(),
+                               pool=BufferPool(registry=MetricsRegistry()))
+        rdr(sorted(paths)[0])                # one batch read caches siblings
+        assert rdr._cache_held <= 8000
+
+    def test_ambient_reader_entry(self, tmp_path):
+        from repro.io.coalesce import (coalesced_read_file,
+                                       reset_ambient_readers)
+        paths = make_files(tmp_path, [1500] * 6)
+        reset_ambient_readers()
+        try:
+            for p in sorted(paths):
+                assert coalesced_read_file(p) == posix_read_file(p)
+        finally:
+            reset_ambient_readers()
+
+
+# --------------------------------------------------------------- adaptive
+class TestHillClimb:
+    def test_climbs_toward_better_scores(self):
+        hc = HillClimb1D([1, 2, 4, 8, 16], start_index=0)
+        # score grows with the value: climber should end at the top rung
+        for _ in range(32):
+            if hc.settled:
+                break
+            hc.observe(float(hc.value))
+        assert hc.settled and hc.best == 16
+
+    def test_retreats_on_regression(self):
+        hc = HillClimb1D([1, 2, 4, 8, 16], start_index=2)
+        # scores peak at the starting value
+        for _ in range(32):
+            if hc.settled:
+                break
+            hc.observe(100.0 if hc.value == 4 else 10.0)
+        assert hc.settled and hc.best == 4
+
+    def test_reset_restarts(self):
+        hc = HillClimb1D([1, 2, 4], start_index=1)
+        while not hc.settled:
+            hc.observe(1.0)
+        hc.reset()
+        assert not hc.settled
+
+
+class TestAdaptiveChunker:
+    def test_window_advances_knobs(self):
+        ch = AdaptiveChunker(window_bytes=1000, registry=MetricsRegistry())
+        snaps = set()
+        for _ in range(64):
+            ch.note(1000, 0.001)
+            snaps.add((ch.chunk_size, ch.io_depth))
+        assert len(snaps) > 1                # the climb actually moved
+        assert all(c in CHUNK_LADDER and d in DEPTH_LADDER
+                   for c, d in snaps)
+
+    def test_set_pins_and_reset_unpins(self):
+        ch = AdaptiveChunker(window_bytes=100, registry=MetricsRegistry())
+        snap = ch.set(chunk_size=4 << 20, io_depth=2)
+        assert snap["pinned"] and snap["settled"]
+        assert ch.chunk_size == 4 << 20 and ch.io_depth == 2
+        for _ in range(16):
+            ch.note(1000, 0.001)             # pinned: windows can't move it
+        assert ch.chunk_size == 4 << 20 and ch.io_depth == 2
+        snap = ch.reset()
+        assert not snap["pinned"]
+
+    def test_adaptive_read_feeds_chunker(self, tmp_path):
+        [p] = make_files(tmp_path, [60_000])
+        ch = AdaptiveChunker(window_bytes=50_000,
+                             registry=MetricsRegistry())
+        assert adaptive_read_file(
+            p, chunker=ch,
+            pool=BufferPool(registry=MetricsRegistry())) \
+            == posix_read_file(p)
+        assert ch.snapshot()["windows"] == 1
+
+    def test_io_chunk_action_through_applier(self):
+        from repro.tune.actions import TuneAction
+        from repro.tune.applier import TuneApplier
+        ch = AdaptiveChunker(registry=MetricsRegistry())
+        app = TuneApplier(rank=0).bind(io_chunker=ch)
+        ack = app.apply(TuneAction(
+            action_id="io1", kind="io-chunk",
+            params={"chunk_size": 2 << 20, "io_depth": 4}))
+        assert ack.status == "applied"
+        assert ack.after["chunk_size"] == 2 << 20
+        assert ch.chunk_size == 2 << 20 and ch.io_depth == 4
+        ack = app.apply(TuneAction(action_id="io2", kind="io-chunk",
+                                   params={"reset": True}))
+        assert ack.status == "applied" and not ack.after["pinned"]
+        ack = app.apply(TuneAction(action_id="io3", kind="io-chunk",
+                                   params={}))
+        assert ack.status == "rejected"
+        unbound = TuneApplier(rank=1)
+        assert unbound.apply(TuneAction(
+            action_id="io4", kind="io-chunk",
+            params={"reset": True})).status == "rejected"
+
+    def test_adaptive_io_policy_plans(self):
+        from repro.insight.detectors import Finding
+        from repro.tune.policies import make_builtin_policy
+        pol = make_builtin_policy("adaptive-io")
+
+        def finding(det):
+            return Finding(detector=det, title=det, severity=0.7,
+                           window=(0.0, 1.0), evidence={},
+                           recommendation="", rank=0)
+
+        widen = pol.plan(finding("straggler-read-tail"))
+        assert widen[0].kind == "io-chunk"
+        assert widen[0].params["chunk_size"] > \
+            pol.plan(finding("random-read-thrash"))[0].params["chunk_size"]
+        assert pol.plan(finding("small-file-storm"))[0].params == \
+            {"reset": True}
+        assert pol.plan(finding("checkpoint-stall")) == []
+
+
+# ----------------------------------------------------- attach + pipeline
+class TestInstrumentation:
+    def test_preadv_recorded_by_attach_layer(self, tmp_path):
+        from repro.core.attach import attach, detach, is_attached
+        from repro.core.runtime import DarshanRuntime
+        size = 3 * (1 << 20) + 123
+        [p] = make_files(tmp_path, [size])
+        rt = DarshanRuntime()
+        rt.enabled = True
+        attach(rt)
+        try:
+            data = pooled_read_file(
+                p, chunk_size=1 << 20, io_depth=2,
+                pool=BufferPool(registry=MetricsRegistry()))
+        finally:
+            detach()
+        assert not is_attached()
+        assert len(data) == size
+        rec = rt.posix.snapshot()[p]
+        # 3 MiB + tail at io_depth=2 x 1 MiB iovecs = exactly 2 preadv
+        assert rec.get("POSIX_READS") == 2
+        assert rec.get("POSIX_BYTES_READ") == size
+        assert rec.get("POSIX_OPENS") == 1
+
+    def test_detach_restores_preadv(self):
+        from repro.core.attach import attach, detach
+        from repro.core.runtime import DarshanRuntime
+        orig = os.preadv
+        attach(DarshanRuntime())
+        assert os.preadv is not orig
+        detach()
+        assert os.preadv is orig
+
+
+class TestReaderRegistry:
+    def test_readers_table_complete(self):
+        assert set(READERS) == {"posix", "sized", "pooled", "mmap",
+                                "coalesced", "adaptive"}
+
+    def test_resolve_reader(self):
+        assert resolve_reader("pooled") is READERS["pooled"]
+        assert resolve_reader(posix_read_file) is posix_read_file
+        assert resolve_reader(None) is posix_read_file
+        with pytest.raises(KeyError):
+            resolve_reader("teleport")
+
+    def test_all_readers_byte_exact(self, tmp_path):
+        sizes = [0, 1, 4096, 100_000, (1 << 20) + 7]
+        paths = make_files(tmp_path, sizes)
+        from repro.io.coalesce import reset_ambient_readers
+        reset_ambient_readers()
+        try:
+            for p in paths:
+                want = posix_read_file(p)
+                for key, reader in READERS.items():
+                    assert reader(p) == want, (key, p)
+        finally:
+            reset_ambient_readers()
+
+    def test_tiered_reader_accepts_names(self, tmp_path):
+        from repro.data.tiers import StorageTier, TierManager, \
+            make_tiered_reader
+        root = str(tmp_path / "ssd")
+        tm = TierManager({"ssd": StorageTier("ssd", root)})
+        paths = make_files(tmp_path / "ssd", [2000])
+        read = make_tiered_reader(tm, reader="pooled")
+        assert read(paths[0]) == posix_read_file(paths[0])
+
+
+# ---------------------------------------------- prefetch feeder lifecycle
+def _feeder_threads():
+    return [t for t in threading.enumerate()
+            if t.name == "repro-prefetch-feeder"]
+
+
+def _wait_no_feeders(timeout=5.0):
+    deadline = time.perf_counter() + timeout
+    while time.perf_counter() < deadline:
+        if not _feeder_threads():
+            return True
+        time.sleep(0.02)
+    return not _feeder_threads()
+
+
+class TestPrefetchLifecycle:
+    def test_feeder_exits_when_consumer_abandons(self):
+        """Regression: an abandoned prefetch iterator used to leave its
+        daemon feeder blocked forever on the bounded queue's put."""
+        assert not _feeder_threads()
+        it = iter(Pipeline(list(range(10_000))).map(lambda x: x, 2)
+                  .batch(4).prefetch(2))
+        next(it)
+        assert _feeder_threads(), "prefetch should run a feeder thread"
+        it.close()                          # abandon mid-stream
+        assert _wait_no_feeders(), "feeder thread leaked after close()"
+
+    def test_feeder_exits_on_gc_abandonment(self):
+        it = iter(Pipeline(list(range(10_000))).map(lambda x: x, 2)
+                  .batch(4).prefetch(2))
+        next(it)
+        del it
+        gc.collect()
+        assert _wait_no_feeders(), "feeder thread leaked after GC"
+
+    def test_abandonment_closes_upstream_source(self):
+        """The consumer going away must run the upstream generator's
+        ``finally`` (pools, leases, files) — not just kill the queue."""
+        closed = threading.Event()
+
+        def items():
+            try:
+                for i in range(10_000):
+                    yield i
+            finally:
+                closed.set()
+
+        it = iter(Pipeline(items()).map(lambda x: x, 1).prefetch(1))
+        next(it)
+        it.close()
+        assert closed.wait(5.0), "upstream generator finally never ran"
+        assert _wait_no_feeders()
+
+    def test_errors_and_completion_still_work(self):
+        def boom(x):
+            if x == 7:
+                raise RuntimeError("x7")
+            return x
+
+        with pytest.raises(RuntimeError, match="x7"):
+            list(Pipeline(list(range(16))).map(boom, 2).prefetch(2))
+        assert _wait_no_feeders()
+        out = list(Pipeline(list(range(16))).map(lambda x: x * 2, 2)
+                   .prefetch(3))
+        assert out == [x * 2 for x in range(16)]
+        assert _wait_no_feeders()
+
+    def test_map_accepts_reader_names(self, tmp_path):
+        paths = [str(p) for p in
+                 (tmp_path / f"r{i}.bin" for i in range(6))]
+        for i, p in enumerate(paths):
+            with open(p, "wb") as f:
+                f.write(os.urandom(3000 + i))
+        want = [posix_read_file(p) for p in sorted(paths)]
+        for key in READERS:
+            got = [bytes(x)
+                   for x in Pipeline(sorted(paths)).map(key, 2)]
+            assert got == want, key
+        with pytest.raises(KeyError):
+            Pipeline(paths).map("warp-drive")

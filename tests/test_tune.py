@@ -449,4 +449,4 @@ class TestOptions:
 
     def test_action_kinds_stable(self):
         assert ACTION_KINDS == ("migrate-file", "resize-threads",
-                                "throttle-checkpoint")
+                                "throttle-checkpoint", "io-chunk")
